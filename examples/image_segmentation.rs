@@ -1,0 +1,121 @@
+//! END-TO-END DRIVER — the Fig. 3 workload on the full production stack.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example image_segmentation -- \
+//!     [--trials 20] [--backend xla|native] [--sweep 10,20,50,100]
+//! ```
+//!
+//! This is the system's flagship run: the segmentation dataset (real UCI
+//! file at data/segmentation.csv if present, else the documented
+//! synthetic substitute: n = 2310, p = 19, K = 7, unit-ℓ2 rows,
+//! homogeneous quadratic kernel), streamed through the XLA artifacts
+//! (Pallas gram kernel + Pallas FWHT, PJRT CPU client) by the rust
+//! coordinator, with the full method comparison of Fig. 3(a)/(b) and the
+//! paper's headline memory ratio. Results land in results/ and are
+//! recorded in EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use rkc::config::{Backend, Cli, ExperimentConfig, Method};
+use rkc::coordinator::{build_dataset, run_trials};
+use rkc::metrics::{MemoryModel, Table};
+use rkc::runtime::ArtifactRegistry;
+
+fn main() -> anyhow::Result<()> {
+    let cli = Cli::parse(std::env::args().skip(1), &[]).map_err(anyhow::Error::msg)?;
+    let mut cfg = ExperimentConfig::default(); // Fig. 3 protocol
+    cfg.trials = cli.get_usize("trials").map_err(anyhow::Error::msg)?.unwrap_or(20);
+    if let Some(b) = cli.get("backend") {
+        cfg.set("backend", b).map_err(anyhow::Error::msg)?;
+    } else {
+        cfg.backend = Backend::Xla; // production path by default
+    }
+    let registry = match cfg.backend {
+        Backend::Xla => Some(ArtifactRegistry::open(&cfg.artifacts_dir)?),
+        Backend::Native => None,
+    };
+    let sweep: Vec<usize> = cli
+        .get("sweep")
+        .unwrap_or("10,20,30,50,70,100")
+        .split(',')
+        .map(|s| s.parse().expect("--sweep takes comma-separated ints"))
+        .collect();
+
+    let t0 = Instant::now();
+    let ds = build_dataset(&cfg)?;
+    println!(
+        "workload: {} | kernel {} | r={} l={} (r'={}) | backend {:?} | trials {}",
+        ds.name,
+        cfg.kernel.describe(),
+        cfg.rank,
+        cfg.oversample,
+        cfg.sketch_width(),
+        cfg.backend,
+        cfg.trials
+    );
+    if let Some(reg) = &registry {
+        println!("pjrt platform: {}", reg.platform());
+    }
+
+    // ---- reference methods ----
+    let mut table = Table::new(
+        "Fig. 3 — image segmentation workload",
+        &["method", "m", "approx err", "accuracy", "nmi", "peak MiB", "time_s"],
+    );
+    let mut push = |agg: &rkc::coordinator::TrialAggregate, m: &str| {
+        table.row(vec![
+            agg.method.clone(),
+            m.to_string(),
+            if agg.error_mean.is_nan() { "–".into() } else { format!("{:.3}", agg.error_mean) },
+            format!("{:.3}", agg.accuracy_mean),
+            format!("{:.3}", agg.nmi_mean),
+            format!("{:.2}", agg.peak_memory_bytes as f64 / (1024.0 * 1024.0)),
+            format!("{:.1}", agg.total_time.as_secs_f64()),
+        ]);
+    };
+
+    for method in [Method::Exact, Method::OnePass, Method::FullKernel, Method::PlainKmeans] {
+        let mut c = cfg.clone();
+        c.method = method;
+        if method == Method::FullKernel {
+            c.trials = 1;
+        }
+        let agg = run_trials(&c, &ds, registry.as_ref())?;
+        eprintln!("  {} done ({:.1}s)", agg.method, agg.total_time.as_secs_f64());
+        push(&agg, "–");
+    }
+
+    // ---- the Nyström m-sweep (Fig. 3 x-axis) ----
+    let mut csv_rows = Vec::new();
+    for &m in &sweep {
+        let mut c = cfg.clone();
+        c.method = Method::Nystrom { m };
+        let agg = run_trials(&c, &ds, registry.as_ref())?;
+        eprintln!("  nystrom m={m} done ({:.1}s)", agg.total_time.as_secs_f64());
+        csv_rows.push(vec![m as f64, agg.error_mean, agg.accuracy_mean]);
+        push(&agg, &m.to_string());
+    }
+    print!("{}", table.render());
+
+    // ---- headline metric: memory at matched accuracy ----
+    let n_pad = ds.n().next_power_of_two();
+    let ours_mem = MemoryModel::one_pass(ds.n(), n_pad, cfg.sketch_width(), cfg.rank, cfg.batch);
+    let nys50 = MemoryModel::nystrom(ds.n(), 50, cfg.rank);
+    println!(
+        "\nheadline: ours r'={} persistent {:.2} MiB vs Nyström m=50 {:.2} MiB → {:.1}× lower memory \
+         (paper claims ≈10× at matched accuracy; m≈7·r' crossover)",
+        cfg.sketch_width(),
+        ours_mem.persistent as f64 / (1024.0 * 1024.0),
+        nys50.persistent as f64 / (1024.0 * 1024.0),
+        nys50.persistent as f64 / ours_mem.persistent as f64,
+    );
+
+    std::fs::create_dir_all("results")?;
+    rkc::metrics::write_csv(
+        "results/image_segmentation_sweep.csv",
+        &["m", "approx_error", "accuracy"],
+        &csv_rows,
+    )?;
+    println!("wrote results/image_segmentation_sweep.csv | total {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

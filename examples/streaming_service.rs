@@ -1,0 +1,88 @@
+//! The coordinator as a long-running clustering service.
+//!
+//! ```bash
+//! cargo run --release --example streaming_service -- [--requests 8] [--xla]
+//! ```
+//!
+//! Demonstrates the L3 system character beyond one-shot experiments: a
+//! request loop receives clustering jobs (dataset + kernel + K), pushes
+//! each through the streaming sketch pipeline with bounded-channel
+//! backpressure, and reports per-request latency percentiles and
+//! sustained throughput — the operational shape of a deployment, where
+//! the XLA artifacts are compiled once and reused across requests.
+
+use std::time::Instant;
+
+use rkc::config::{Backend, Cli, ExperimentConfig, Method};
+use rkc::coordinator::{build_dataset, run_experiment};
+use rkc::runtime::ArtifactRegistry;
+use rkc::util::percentile;
+
+fn main() -> anyhow::Result<()> {
+    let cli = Cli::parse(std::env::args().skip(1), &["xla"]).map_err(anyhow::Error::msg)?;
+    let requests = cli.get_usize("requests").map_err(anyhow::Error::msg)?.unwrap_or(8);
+    let use_xla = cli.has_flag("xla");
+    let registry = if use_xla { Some(ArtifactRegistry::open("artifacts")?) } else { None };
+
+    // a mixed job queue: alternating workloads, like a real service
+    let jobs: Vec<ExperimentConfig> = (0..requests)
+        .map(|i| {
+            let mut cfg = ExperimentConfig::default();
+            cfg.backend = if use_xla { Backend::Xla } else { Backend::Native };
+            cfg.method = Method::OnePass;
+            cfg.trials = 1;
+            cfg.seed = 1000 + i as u64;
+            match i % 3 {
+                0 => {
+                    cfg.dataset = "cross_lines".into();
+                    cfg.n = 1024;
+                    cfg.p = 2;
+                    cfg.k = 2;
+                    cfg.oversample = 10;
+                }
+                1 => {
+                    cfg.dataset = "segmentation_like".into();
+                    cfg.n = 1155;
+                    cfg.p = 19;
+                    cfg.k = 7;
+                }
+                _ => {
+                    cfg.dataset = "blobs".into();
+                    cfg.n = 900;
+                    cfg.p = 8;
+                    cfg.k = 4;
+                }
+            }
+            cfg
+        })
+        .collect();
+
+    println!("service up: backend={} queue={requests} jobs", if use_xla { "xla" } else { "native" });
+    let t_service = Instant::now();
+    let mut latencies = Vec::new();
+    for (i, cfg) in jobs.iter().enumerate() {
+        let t0 = Instant::now();
+        let ds = build_dataset(cfg)?;
+        let out = run_experiment(cfg, &ds, registry.as_ref(), cfg.seed)?;
+        let lat = t0.elapsed().as_secs_f64();
+        latencies.push(lat);
+        println!(
+            "  req {i:2}: {:24} n={:5} acc={:.3} err={:.3} latency={:.3}s (sketch {:.3}s, kmeans {:.3}s)",
+            ds.name,
+            ds.n(),
+            out.accuracy,
+            out.approx_error,
+            lat,
+            out.sketch_time.as_secs_f64(),
+            out.kmeans_time.as_secs_f64(),
+        );
+    }
+    let total = t_service.elapsed().as_secs_f64();
+    println!(
+        "served {requests} requests in {total:.2}s  |  p50 {:.3}s  p95 {:.3}s  throughput {:.2} req/s",
+        percentile(&latencies, 50.0),
+        percentile(&latencies, 95.0),
+        requests as f64 / total,
+    );
+    Ok(())
+}

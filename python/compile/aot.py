@@ -1,0 +1,177 @@
+"""AOT lowering: JAX/Pallas graphs -> HLO text artifacts + manifest.
+
+Run once at build time (`make artifacts`); the rust runtime loads the
+emitted `artifacts/*.hlo.txt` via `HloModuleProto::from_text_file` and
+executes them on the PJRT CPU client. Interchange is HLO *text*, not
+serialized protos: jax >= 0.5 emits protos with 64-bit instruction ids
+which xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+Each artifact is a fixed-shape compilation of one L2 graph. The manifest
+(artifacts/manifest.json) records, per artifact: the op, the parameter
+shapes/dtypes in call order, the output shapes, and the static params --
+the rust ArtifactRegistry is driven entirely by this file.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _shape_entry(s):
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def artifact_configs():
+    """The full artifact set: production shapes + test-scale shapes.
+
+    Production: n padded to 4096 (two_rings n=4000, segmentation n=2310),
+    column-block width b=256, embeddings r=2, K in {2, 7}.
+    Test scale: n=256, b=64 -- loaded by `cargo test` for fast runtime
+    integration tests.
+    """
+    cfgs = []
+
+    def add(name, fn, args, params):
+        cfgs.append({"name": name, "fn": fn, "args": args, "params": params})
+
+    def gram(p, n, b, kind, gamma, degree):
+        return (
+            functools.partial(model.gram_block, kind=kind, gamma=gamma,
+                              degree=degree),
+            [_spec((p, n)), _spec((p, b))],
+            {"op": "gram", "kind": kind, "gamma": gamma, "degree": degree,
+             "p": p, "n": n, "b": b},
+        )
+
+    def sketch(p, n, b, kind, gamma, degree):
+        return (
+            functools.partial(model.gram_precondition_block, kind=kind,
+                              gamma=gamma, degree=degree),
+            [_spec((p, n)), _spec((p, b)), _spec((n,))],
+            {"op": "sketch", "kind": kind, "gamma": gamma, "degree": degree,
+             "p": p, "n": n, "b": b},
+        )
+
+    def precond(n, b):
+        return (
+            model.precondition_block,
+            [_spec((n, b)), _spec((n,))],
+            {"op": "precond", "n": n, "b": b},
+        )
+
+    def kstep(r, k, n):
+        return (
+            model.kmeans_step,
+            [_spec((r, n)), _spec((r, k)), _spec((n,))],
+            {"op": "kmeans_step", "r": r, "k": k, "n": n},
+        )
+
+    # --- production shapes ---
+    for p in (2, 19):
+        fn, args, params = gram(p, 4096, 256, "poly", 0.0, 2)
+        add(f"gram_poly2h_p{p}_n4096_b256", fn, args, params)
+        fn, args, params = sketch(p, 4096, 256, "poly", 0.0, 2)
+        add(f"sketch_poly2h_p{p}_n4096_b256", fn, args, params)
+    fn, args, params = gram(2, 4096, 256, "rbf", 2.0, 0)
+    add("gram_rbf_p2_n4096_b256", fn, args, params)
+    fn, args, params = sketch(2, 4096, 256, "rbf", 2.0, 0)
+    add("sketch_rbf_p2_n4096_b256", fn, args, params)
+    fn, args, params = precond(4096, 256)
+    add("precond_n4096_b256", fn, args, params)
+    for k in (2, 7):
+        fn, args, params = kstep(2, k, 4096)
+        add(f"kmeans_step_r2_k{k}_n4096", fn, args, params)
+
+    # --- test scale (fast cargo-test integration) ---
+    for p in (2, 4):
+        fn, args, params = gram(p, 256, 64, "poly", 0.0, 2)
+        add(f"gram_poly2h_p{p}_n256_b64", fn, args, params)
+        fn, args, params = sketch(p, 256, 64, "poly", 0.0, 2)
+        add(f"sketch_poly2h_p{p}_n256_b64", fn, args, params)
+    fn, args, params = gram(2, 256, 64, "rbf", 2.0, 0)
+    add("gram_rbf_p2_n256_b64", fn, args, params)
+    fn, args, params = precond(256, 64)
+    add("precond_n256_b64", fn, args, params)
+    for k in (2, 3):
+        fn, args, params = kstep(2, k, 256)
+        add(f"kmeans_step_r2_k{k}_n256", fn, args, params)
+
+    return cfgs
+
+
+
+def lower_one(cfg):
+    lowered = jax.jit(cfg["fn"]).lower(*cfg["args"])
+    text = to_hlo_text(lowered)
+    out_list = jax.tree_util.tree_leaves(lowered.out_info)
+    return text, out_list
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact names to (re)build")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    manifest = []
+    for cfg in artifact_configs():
+        name = cfg["name"]
+        if only is not None and name not in only:
+            continue
+        text, out_list = lower_one(cfg)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entry = {
+            "name": name,
+            "file": f"{name}.hlo.txt",
+            "params": cfg["params"],
+            "inputs": [_shape_entry(s) for s in cfg["args"]],
+            "outputs": [{"shape": list(o.shape), "dtype": str(o.dtype)}
+                        for o in out_list],
+        }
+        manifest.append(entry)
+        print(f"  {name}: {len(text)} chars, "
+              f"{len(entry['inputs'])} in / {len(entry['outputs'])} out")
+
+    man_path = os.path.join(args.out_dir, "manifest.json")
+    if only is not None and os.path.exists(man_path):
+        with open(man_path) as f:
+            old = {e["name"]: e for e in json.load(f)}
+        for e in manifest:
+            old[e["name"]] = e
+        manifest = list(old.values())
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {man_path} ({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

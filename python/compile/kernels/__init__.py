@@ -1,0 +1,11 @@
+"""L1 Pallas kernels (build-time only; lowered into HLO artifacts)."""
+
+from .gram import gram_block_poly, gram_block_rbf
+from .fwht import fwht, fwht_stage
+from .kmeans import kmeans_assign
+from . import ref
+
+__all__ = [
+    "gram_block_poly", "gram_block_rbf", "fwht", "fwht_stage",
+    "kmeans_assign", "ref",
+]

@@ -1,0 +1,42 @@
+"""L1 Pallas kernel: K-means assignment step over the embedded points.
+
+After the one-pass recovery, clustering runs on Y (r, n) with r tiny
+(r = 2 in the paper). The assignment step is the O(n K r) hot loop; we
+tile n and keep the full (r, K) centroid block in VMEM per grid cell.
+The distance uses ||y - c||^2 = ||y||^2 - 2 y.c + ||c||^2 and drops the
+||y||^2 term (constant in k), matching kernels/ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _assign_kernel(y_ref, c_ref, o_ref):
+    """One tile of tn points: argmin_k of (||c_k||^2 - 2 y^T c_k)."""
+    y = y_ref[...]
+    c = c_ref[...]
+    cross = jnp.dot(y.T, c, preferred_element_type=jnp.float32)  # (tn, K)
+    cn = jnp.sum(c * c, axis=0)[None, :]
+    o_ref[...] = jnp.argmin(cn - 2.0 * cross, axis=1).astype(jnp.int32)
+
+
+def kmeans_assign(y, c, *, tn=1024, interpret=True):
+    """Nearest-centroid assignment: y (r, n), c (r, K) -> int32 (n,)."""
+    r, n = y.shape
+    rc, k = c.shape
+    assert r == rc, f"embedding dims disagree: {r} vs {rc}"
+    tn = min(tn, n)
+    assert n % tn == 0, f"tile tn={tn} must divide n={n}"
+    grid = (n // tn,)
+    return pl.pallas_call(
+        _assign_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((r, tn), lambda i: (0, i)),
+            pl.BlockSpec((r, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=interpret,
+    )(y, c)

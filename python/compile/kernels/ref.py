@@ -1,0 +1,82 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Everything here is deliberately naive and obviously-correct; the pytest
+suite asserts the Pallas kernels (gram.py / fwht.py / kmeans.py) match
+these references to float32 tolerance across shape sweeps.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def gram_poly_ref(x, xb, gamma: float = 0.0, degree: int = 2):
+    """Polynomial-kernel gram block: K[i, j] = (<x_i, xb_j> + gamma)^degree.
+
+    x: (p, n) data matrix, xb: (p, b) block of query points -> (n, b).
+    gamma = 0 gives the homogeneous polynomial kernel used in the paper.
+    """
+    return (jnp.dot(x.T, xb) + gamma) ** degree
+
+
+def gram_rbf_ref(x, xb, gamma: float = 1.0):
+    """Gaussian RBF gram block: K[i, j] = exp(-gamma * ||x_i - xb_j||^2)."""
+    xs = jnp.sum(x * x, axis=0)[:, None]
+    ys = jnp.sum(xb * xb, axis=0)[None, :]
+    cross = jnp.dot(x.T, xb)
+    return jnp.exp(-gamma * (xs + ys - 2.0 * cross))
+
+
+def hadamard_matrix(n: int) -> np.ndarray:
+    """Unnormalized Walsh-Hadamard matrix H_n (n must be a power of two).
+
+    H[i, j] = (-1)^{popcount(i & j)}; H is symmetric and H @ H = n * I.
+    """
+    assert n > 0 and (n & (n - 1)) == 0, "n must be a power of two"
+    h = np.array([[1.0]], dtype=np.float64)
+    while h.shape[0] < n:
+        h = np.block([[h, h], [h, -h]])
+    return h
+
+
+def fwht_ref(x):
+    """Unnormalized FWHT applied along axis 0 of x (n, b) via explicit H."""
+    n = x.shape[0]
+    h = jnp.asarray(hadamard_matrix(n), dtype=x.dtype)
+    return h @ x
+
+
+def precondition_ref(kb, d):
+    """Reference for the SRHT preconditioning of a block of kernel columns.
+
+    kb: (n, b) block of columns of K; d: (n,) Rademacher signs.
+    Returns (H D) @ kb, the preconditioned block whose rows the coordinator
+    subsamples (Alg. 1 step 2: W = (R^T H D K)^T, row-sampling done in rust).
+    """
+    return fwht_ref(kb * d[:, None])
+
+
+def kmeans_assign_ref(y, c):
+    """Nearest-centroid assignment. y: (r, n) points, c: (r, K) centroids.
+
+    Returns int32 (n,) of argmin_k ||y_i - c_k||^2. The ||y||^2 term is
+    constant in k and omitted, matching the Pallas kernel.
+    """
+    cross = jnp.dot(y.T, c)
+    cn = jnp.sum(c * c, axis=0)[None, :]
+    return jnp.argmin(cn - 2.0 * cross, axis=1).astype(jnp.int32)
+
+
+def kmeans_step_ref(y, c, w):
+    """One Lloyd step. y: (r, n), c: (r, K), w: (n,) 0/1 validity mask.
+
+    Returns (assign (n,) int32, sums (K, r) masked per-cluster coordinate
+    sums, counts (K,) masked member counts). Padded columns (w == 0) still
+    receive an assignment but contribute nothing to sums/counts.
+    """
+    assign = kmeans_assign_ref(y, c)
+    k = c.shape[1]
+    onehot = (assign[None, :] == jnp.arange(k)[:, None]).astype(y.dtype)
+    onehot = onehot * w[None, :]
+    sums = jnp.dot(onehot, y.T)          # (K, r)
+    counts = jnp.sum(onehot, axis=1)     # (K,)
+    return assign, sums, counts

@@ -1,0 +1,77 @@
+"""L2 JAX compute graphs for the one-pass kernel clustering pipeline.
+
+Each public function here is a fixed-shape jax computation that calls the
+L1 Pallas kernels; python/compile/aot.py lowers them once to HLO text and
+the rust coordinator (rust/src/runtime) loads and executes the artifacts
+via the PJRT C API. Python is never on the request path.
+
+Pipeline stages (Alg. 1 of the paper):
+  gram_block         columns K[:, J] of the kernel matrix, on the fly
+  precondition_block (H D) K[:, J]   -- SRHT preconditioning (step 2)
+  kmeans_step        one Lloyd iteration over the embedding Y (step 7)
+
+The small dense algebra between stages (QR of the n x r' sketch, the
+r' x r' solve + Jacobi eigendecomposition, steps 3-6) lives in rust
+(rust/src/lowrank) -- it is latency-bound and tiny, not worth a PJRT
+round trip.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import fwht as _fwht
+from .kernels import gram, kmeans
+
+
+def gram_block(x, xb, *, kind="poly", gamma=0.0, degree=2, interpret=True):
+    """Kernel-matrix column block K[:, J] = kappa(X, Xb), shape (n, b)."""
+    if kind == "poly":
+        return gram.gram_block_poly(
+            x, xb, gamma=gamma, degree=degree, interpret=interpret)
+    if kind == "rbf":
+        return gram.gram_block_rbf(x, xb, gamma=gamma, interpret=interpret)
+    raise ValueError(f"unknown kernel kind: {kind!r}")
+
+
+def precondition_block(kb, d, *, interpret=True):
+    """SRHT preconditioning of a column block: (H D) @ kb, shape (n, b).
+
+    kb: (n, b) kernel columns (n a power of two, zero-padded upstream);
+    d: (n,) Rademacher signs. The coordinator subsamples r' rows of the
+    result to build the sketch W = (R^T H D K)^T one block at a time.
+    """
+    return _fwht(kb * d[:, None], interpret=interpret)
+
+
+def gram_precondition_block(x, xb, d, *, kind="poly", gamma=0.0, degree=2,
+                            interpret=True):
+    """Fused stage: gram block + SRHT preconditioning in one HLO module.
+
+    This is the production artifact for the sketch pass -- the (n, b)
+    kernel block never leaves the device between the two stages.
+    """
+    kb = gram_block(x, xb, kind=kind, gamma=gamma, degree=degree,
+                    interpret=interpret)
+    return precondition_block(kb, d, interpret=interpret)
+
+
+def kmeans_step(y, c, w, *, interpret=True):
+    """One Lloyd iteration on the embedding. y (r, n), c (r, K), w (n,).
+
+    Returns (assign (n,) int32, sums (K, r), counts (K,)). w masks padded
+    columns out of the centroid statistics; the rust driver computes the
+    new centroids sums/counts and handles empty clusters.
+    """
+    assign = kmeans.kmeans_assign(y, c, interpret=interpret)
+    k = c.shape[1]
+    onehot = (assign[None, :] == jnp.arange(k)[:, None]).astype(y.dtype)
+    onehot = onehot * w[None, :]
+    sums = jnp.dot(onehot, y.T)
+    counts = jnp.sum(onehot, axis=1)
+    return assign, sums, counts
+
+
+def kmeans_objective(y, c, assign, w):
+    """Masked K-means objective sum_i w_i ||y_i - c_{assign_i}||^2."""
+    picked = c[:, assign]                      # (r, n)
+    diff = y - picked
+    return jnp.sum(w * jnp.sum(diff * diff, axis=0))

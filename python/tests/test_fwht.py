@@ -1,0 +1,80 @@
+"""Pallas FWHT butterfly kernel vs the explicit-Hadamard oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fwht import fwht, fwht_stage
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(
+    logn=st.integers(1, 9),
+    b=st.integers(1, 8),
+    rpb=st.sampled_from([2, 64, 1024, 4096]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fwht_matches_explicit_hadamard(logn, b, rpb, seed):
+    n = 1 << logn
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, b)).astype(np.float32)
+    got = fwht(x, rows_per_block=max(2, min(rpb, n)))
+    want = ref.fwht_ref(x)
+    np.testing.assert_allclose(got, want, rtol=1e-4,
+                               atol=1e-4 * np.abs(want).max())
+
+
+@settings(**SETTINGS)
+@given(logn=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+def test_fwht_involution(logn, seed):
+    """H (H x) = n x for the unnormalized transform."""
+    n = 1 << logn
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, 3)).astype(np.float32)
+    twice = np.asarray(fwht(np.asarray(fwht(x))))
+    np.testing.assert_allclose(twice, n * x, rtol=1e-4,
+                               atol=1e-4 * n * np.abs(x).max())
+
+
+@settings(**SETTINGS)
+@given(logn=st.integers(1, 7), seed=st.integers(0, 2**31 - 1))
+def test_fwht_is_linear(logn, seed):
+    n = 1 << logn
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, 2)).astype(np.float32)
+    y = rng.standard_normal((n, 2)).astype(np.float32)
+    lhs = np.asarray(fwht(2.0 * x + 3.0 * y))
+    rhs = 2.0 * np.asarray(fwht(x)) + 3.0 * np.asarray(fwht(y))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-3)
+
+
+def test_fwht_preserves_energy():
+    """||H x||^2 = n ||x||^2 (Parseval for the unnormalized transform)."""
+    rng = np.random.default_rng(11)
+    n = 256
+    x = rng.standard_normal((n, 5)).astype(np.float32)
+    hx = np.asarray(fwht(x), dtype=np.float64)
+    np.testing.assert_allclose((hx * hx).sum(axis=0),
+                               n * (x.astype(np.float64) ** 2).sum(axis=0),
+                               rtol=1e-5)
+
+
+def test_fwht_first_row_is_column_sum():
+    rng = np.random.default_rng(12)
+    x = rng.standard_normal((128, 4)).astype(np.float32)
+    hx = np.asarray(fwht(x))
+    np.testing.assert_allclose(hx[0], x.sum(axis=0), rtol=1e-4, atol=1e-4)
+
+
+def test_single_stage_butterfly():
+    x = np.array([[1.0], [2.0], [3.0], [4.0]], np.float32)
+    got = np.asarray(fwht_stage(x, 1))
+    want = np.array([[3.0], [-1.0], [7.0], [-1.0]], np.float32)
+    np.testing.assert_allclose(got, want)
+
+
+def test_fwht_n1_identity():
+    x = np.array([[5.0, -2.0]], np.float32)
+    np.testing.assert_allclose(np.asarray(fwht(x)), x)

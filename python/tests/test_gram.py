@@ -1,0 +1,94 @@
+"""Pallas gram-block kernel vs the pure-jnp oracle (kernels/ref.py)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gram, ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _data(p, n, b, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((p, n)).astype(np.float32)
+    xb = rng.standard_normal((p, b)).astype(np.float32)
+    return x, xb
+
+
+@settings(**SETTINGS)
+@given(
+    p=st.integers(1, 24),
+    nt=st.integers(1, 4),
+    bt=st.integers(1, 4),
+    tile=st.sampled_from([8, 16, 32]),
+    degree=st.sampled_from([1, 2, 3]),
+    gamma=st.sampled_from([0.0, 0.5, 1.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gram_poly_matches_ref(p, nt, bt, tile, degree, gamma, seed):
+    n, b = nt * tile, bt * tile
+    x, xb = _data(p, n, b, seed)
+    got = gram.gram_block_poly(x, xb, gamma=gamma, degree=degree,
+                               tn=tile, tb=tile)
+    want = ref.gram_poly_ref(x, xb, gamma=gamma, degree=degree)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    p=st.integers(1, 24),
+    nt=st.integers(1, 4),
+    bt=st.integers(1, 4),
+    tile=st.sampled_from([8, 16, 32]),
+    gamma=st.sampled_from([0.1, 1.0, 2.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gram_rbf_matches_ref(p, nt, bt, tile, gamma, seed):
+    n, b = nt * tile, bt * tile
+    x, xb = _data(p, n, b, seed)
+    got = gram.gram_block_rbf(x, xb, gamma=gamma, tn=tile, tb=tile)
+    want = ref.gram_rbf_ref(x, xb, gamma=gamma)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_gram_poly_homogeneous_is_paper_kernel():
+    """gamma=0, d=2 must equal <x, y>^2 exactly (the paper's kernel)."""
+    x, xb = _data(5, 32, 16, 7)
+    got = np.asarray(gram.gram_block_poly(x, xb, gamma=0.0, degree=2,
+                                          tn=16, tb=16))
+    want = np.dot(x.T, xb) ** 2
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_gram_block_of_self_is_symmetric_psd():
+    """K = gram(X, X) must be symmetric PSD for the poly kernel."""
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((4, 64)).astype(np.float32)
+    k = np.asarray(gram.gram_block_poly(x, x, gamma=0.0, degree=2,
+                                        tn=32, tb=32), dtype=np.float64)
+    np.testing.assert_allclose(k, k.T, atol=1e-4)
+    evals = np.linalg.eigvalsh((k + k.T) / 2)
+    assert evals.min() > -1e-3 * max(1.0, evals.max())
+
+
+def test_gram_rbf_diagonal_is_one():
+    rng = np.random.default_rng(4)
+    x = rng.standard_normal((6, 32)).astype(np.float32)
+    k = np.asarray(gram.gram_block_rbf(x, x, gamma=0.8, tn=16, tb=16))
+    np.testing.assert_allclose(np.diag(k), np.ones(32), rtol=1e-5)
+    assert k.max() <= 1.0 + 1e-5
+
+
+def test_gram_rejects_mismatched_feature_dims():
+    x = np.zeros((3, 16), np.float32)
+    xb = np.zeros((4, 16), np.float32)
+    with pytest.raises(AssertionError):
+        gram.gram_block_poly(x, xb, tn=16, tb=16)
+
+
+def test_gram_rejects_nondividing_tiles():
+    x = np.zeros((3, 24), np.float32)
+    xb = np.zeros((3, 24), np.float32)
+    with pytest.raises(AssertionError):
+        gram.gram_block_poly(x, xb, tn=16, tb=16)

@@ -1,0 +1,98 @@
+"""Pallas K-means assignment kernel and the L2 Lloyd step vs oracles."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import kmeans, ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(
+    r=st.integers(1, 8),
+    k=st.integers(1, 9),
+    nt=st.integers(1, 6),
+    tile=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_assign_matches_ref(r, k, nt, tile, seed):
+    n = nt * tile
+    rng = np.random.default_rng(seed)
+    y = rng.standard_normal((r, n)).astype(np.float32)
+    c = rng.standard_normal((r, k)).astype(np.float32)
+    got = np.asarray(kmeans.kmeans_assign(y, c, tn=tile))
+    want = np.asarray(ref.kmeans_assign_ref(y, c))
+    # ties between centroids may break differently; compare distances
+    d_got = ((y - c[:, got]) ** 2).sum(axis=0)
+    d_want = ((y - c[:, want]) ** 2).sum(axis=0)
+    np.testing.assert_allclose(d_got, d_want, rtol=1e-4, atol=1e-5)
+
+
+def test_assign_exact_on_separated_clusters():
+    rng = np.random.default_rng(0)
+    c = np.array([[0.0, 100.0], [0.0, 100.0]], np.float32)  # (r=2, K=2)
+    labels = rng.integers(0, 2, 128)
+    y = c[:, labels] + 0.1 * rng.standard_normal((2, 128)).astype(np.float32)
+    got = np.asarray(kmeans.kmeans_assign(y, c, tn=64))
+    np.testing.assert_array_equal(got, labels)
+
+
+@settings(**SETTINGS)
+@given(
+    k=st.integers(1, 7),
+    pad=st.integers(0, 60),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kmeans_step_masks_padding(k, pad, seed):
+    """Padded columns must not contribute to sums/counts."""
+    n = 128
+    rng = np.random.default_rng(seed)
+    y = rng.standard_normal((2, n)).astype(np.float32)
+    y[:, n - pad:] = 0.0  # padded embedding columns are zero
+    c = rng.standard_normal((2, k)).astype(np.float32)
+    w = np.ones(n, np.float32)
+    if pad:
+        w[n - pad:] = 0.0
+    assign, sums, counts = (np.asarray(o) for o in model.kmeans_step(y, c, w))
+    ra, rs, rc = (np.asarray(o) for o in ref.kmeans_step_ref(y, c, w))
+    np.testing.assert_allclose(sums, rs, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(counts, rc)
+    assert counts.sum() == n - pad
+    # recompute sums from the masked assignment directly
+    manual = np.zeros_like(sums)
+    for i in range(n - pad):
+        manual[assign[i]] += y[:, i]
+    np.testing.assert_allclose(sums, manual, rtol=1e-4, atol=1e-4)
+
+
+def test_kmeans_objective_matches_manual():
+    rng = np.random.default_rng(5)
+    y = rng.standard_normal((3, 64)).astype(np.float32)
+    c = rng.standard_normal((3, 4)).astype(np.float32)
+    w = np.ones(64, np.float32)
+    w[50:] = 0.0
+    assign = np.asarray(ref.kmeans_assign_ref(y, c))
+    got = float(model.kmeans_objective(y, c, assign, w))
+    want = sum(((y[:, i] - c[:, assign[i]]) ** 2).sum() for i in range(50))
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_lloyd_iterations_decrease_objective():
+    """Full Lloyd loop through the L2 step must monotonically improve."""
+    rng = np.random.default_rng(9)
+    centers = rng.standard_normal((2, 3)).astype(np.float32) * 4
+    labels = rng.integers(0, 3, 256)
+    y = (centers[:, labels]
+         + 0.3 * rng.standard_normal((2, 256))).astype(np.float32)
+    w = np.ones(256, np.float32)
+    c = y[:, :3].copy()
+    prev = np.inf
+    for _ in range(8):
+        assign, sums, counts = model.kmeans_step(y, c, w)
+        obj = float(model.kmeans_objective(y, c, np.asarray(assign), w))
+        assert obj <= prev + 1e-3
+        prev = obj
+        counts = np.maximum(np.asarray(counts), 1e-9)
+        c = (np.asarray(sums) / counts[:, None]).T.astype(np.float32)

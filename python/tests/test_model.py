@@ -1,0 +1,114 @@
+"""L2 model graphs: SRHT preconditioning properties + fused-stage equality."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def _rademacher(n, rng):
+    return rng.choice([-1.0, 1.0], size=n).astype(np.float32)
+
+
+@settings(**SETTINGS)
+@given(
+    logn=st.integers(2, 9),
+    b=st.sampled_from([1, 4, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_precondition_matches_ref(logn, b, seed):
+    n = 1 << logn
+    rng = np.random.default_rng(seed)
+    kb = rng.standard_normal((n, b)).astype(np.float32)
+    d = _rademacher(n, rng)
+    got = np.asarray(model.precondition_block(kb, d))
+    want = np.asarray(ref.precondition_ref(kb, d))
+    np.testing.assert_allclose(got, want, rtol=1e-4,
+                               atol=1e-4 * np.abs(want).max())
+
+
+@settings(**SETTINGS)
+@given(
+    p=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_sketch_equals_composition(p, seed):
+    """gram_precondition_block == precondition_block(gram_block(.))."""
+    n, b = 128, 32
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((p, n)).astype(np.float32)
+    xb = rng.standard_normal((p, b)).astype(np.float32)
+    d = _rademacher(n, rng)
+    fused = np.asarray(model.gram_precondition_block(
+        x, xb, d, kind="poly", gamma=0.0, degree=2))
+    kb = model.gram_block(x, xb, kind="poly", gamma=0.0, degree=2)
+    comp = np.asarray(model.precondition_block(np.asarray(kb), d))
+    np.testing.assert_allclose(fused, comp, rtol=1e-4,
+                               atol=1e-3 * max(1.0, np.abs(comp).max()))
+
+
+def test_precondition_is_orthogonal_up_to_scale():
+    """(HD) is orthogonal up to sqrt(n): preconditioning preserves the
+    gram/eigen structure, which is why subsampling after it works."""
+    n = 64
+    rng = np.random.default_rng(21)
+    kb = rng.standard_normal((n, 8)).astype(np.float32)
+    d = _rademacher(n, rng)
+    pre = np.asarray(model.precondition_block(kb, d), dtype=np.float64)
+    gram_pre = pre.T @ pre
+    gram_orig = n * (kb.astype(np.float64).T @ kb)
+    np.testing.assert_allclose(gram_pre, gram_orig, rtol=1e-4,
+                               atol=1e-3 * np.abs(gram_orig).max())
+
+
+def test_precondition_row_norm_equilibration():
+    """The paper's motivation for SRHT: HD flattens coherent structure.
+    A kernel block with one dominant row spreads over all rows after HD."""
+    n = 256
+    rng = np.random.default_rng(2)
+    kb = np.zeros((n, 4), np.float32)
+    kb[17, :] = 10.0  # a single spiked row: maximally coherent
+    d = _rademacher(n, rng)
+    pre = np.asarray(model.precondition_block(kb, d))
+    row_energy = (pre ** 2).sum(axis=1)
+    # all rows end up with identical energy (|H_ij| = 1 for all i, j)
+    np.testing.assert_allclose(row_energy, row_energy[0], rtol=1e-4)
+
+
+def test_streaming_sketch_assembles_full_transform():
+    """Processing K in column blocks then stacking rows of W must equal the
+    one-shot transform of the full matrix — the coordinator's core loop."""
+    n, b = 64, 16
+    rng = np.random.default_rng(33)
+    x = rng.standard_normal((3, n)).astype(np.float32)
+    k = (x.T @ x) ** 2  # full homogeneous quadratic kernel
+    d = _rademacher(n, rng)
+    full = np.asarray(model.precondition_block(k.astype(np.float32), d))
+    blocks = [
+        np.asarray(model.precondition_block(
+            k[:, j:j + b].astype(np.float32), d))
+        for j in range(0, n, b)
+    ]
+    np.testing.assert_allclose(np.hstack(blocks), full, rtol=1e-4,
+                               atol=1e-3 * np.abs(full).max())
+
+
+def test_sampled_rows_give_sketch_w():
+    """Subsampling r' rows of (HD)K and transposing gives W = K (DHR):
+    checks the rust-side convention Omega[i, j] = d_i * H[i, idx_j]."""
+    n, rp = 32, 5
+    rng = np.random.default_rng(44)
+    x = rng.standard_normal((3, n)).astype(np.float32)
+    k = ((x.T @ x) ** 2).astype(np.float32)
+    d = _rademacher(n, rng)
+    idx = rng.choice(n, size=rp, replace=False)
+    pre = np.asarray(model.precondition_block(k, d), dtype=np.float64)
+    w_stream = pre[idx, :].T                      # (n, r')
+    h = ref.hadamard_matrix(n)
+    omega = (d[:, None].astype(np.float64)) * h[:, idx]
+    w_direct = k.astype(np.float64) @ omega
+    np.testing.assert_allclose(w_stream, w_direct, rtol=1e-6,
+                               atol=1e-6 * np.abs(w_direct).max())

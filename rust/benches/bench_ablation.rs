@@ -1,0 +1,163 @@
+//! Bench: ablations of the design choices DESIGN.md calls out.
+//!
+//! 1. SRHT preconditioning ON vs OFF (off = sample kernel columns
+//!    directly — degenerates toward Nyström-quality sketches);
+//! 2. SRHT vs dense Gaussian test matrix (accuracy parity, memory gap);
+//! 3. oversampling l sweep;
+//! 4. streaming batch size sweep (throughput vs transient memory).
+
+use rkc::config::{ExperimentConfig, Method};
+use rkc::coordinator::{build_dataset, run_trials};
+use rkc::kernels::{column_batches, BlockSource, NativeBlockSource};
+use rkc::lowrank::{one_pass_recovery, streamed_frobenius_error, OnePassSketch};
+use rkc::metrics::{MemoryModel, Table};
+use rkc::rng::Pcg64;
+use rkc::sketch::Srht;
+
+fn main() {
+    let trials: usize = std::env::var("RKC_TRIALS").ok().and_then(|v| v.parse().ok()).unwrap_or(5);
+    let mut cfg = ExperimentConfig::table1();
+    cfg.n = 2000; // keep the ablation grid affordable
+    cfg.trials = trials;
+    let ds = build_dataset(&cfg).expect("dataset");
+    let n = ds.n();
+    let n_pad = n.next_power_of_two();
+
+    // ---- 1. preconditioning on/off ----
+    let mut t = Table::new(
+        "Ablation: SRHT preconditioning (HD) on vs off (r'=12)",
+        &["variant", "approx err (mean over trials)"],
+    );
+    for precondition in [true, false] {
+        let mut errs = Vec::new();
+        for trial in 0..trials {
+            let mut rng = Pcg64::seed(500 + trial as u64);
+            let mut srht = Srht::draw(&mut rng, n_pad, cfg.sketch_width());
+            srht.mask_padding(n);
+            if !precondition {
+                // identity preconditioner: d = 1 everywhere (real rows),
+                // H dropped by sampling W = K[:, idx-as-rows]... i.e.
+                // rows of W are just sampled kernel entries
+                for i in 0..n {
+                    srht.d[i] = 1.0;
+                }
+            }
+            let mut src = NativeBlockSource::new(ds.x.clone(), cfg.kernel, n_pad);
+            let mut sk = OnePassSketch::new(srht.clone(), n);
+            for cols in column_batches(n, cfg.batch) {
+                let kb = src.block(&cols);
+                let rows = if precondition {
+                    srht.apply_to_block(&kb, 1)
+                } else {
+                    // no-FWHT variant: sample raw (signed) kernel rows
+                    rkc::linalg::Mat::from_fn(cols.len(), srht.samples(), |bj, s| {
+                        kb[(srht.idx[s], bj)]
+                    })
+                };
+                sk.ingest(&cols, &rows);
+            }
+            let emb = one_pass_recovery_no_h(&sk, cfg.rank, precondition);
+            errs.push(streamed_frobenius_error(&mut src, &emb, cfg.batch));
+        }
+        t.row(vec![
+            if precondition { "HD preconditioning (paper)" } else { "raw row sampling" }.into(),
+            format!("{:.3} ± {:.3}", rkc::util::mean(&errs), rkc::util::std_dev(&errs)),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // ---- 2. SRHT vs Gaussian; 3. oversampling sweep ----
+    let mut t = Table::new(
+        "Ablation: test matrix & oversampling l (accuracy parity, memory gap)",
+        &["method", "l", "approx err", "accuracy", "persistent MiB"],
+    );
+    for (method, label) in [(Method::OnePass, "srht"), (Method::GaussianOnePass, "gaussian")] {
+        for l in [0usize, 2, 5, 10, 20] {
+            let mut c = cfg.clone();
+            c.method = method;
+            c.oversample = l;
+            let agg = run_trials(&c, &ds, None).expect("run");
+            let mut mem = MemoryModel::one_pass(n, n_pad, c.sketch_width(), c.rank, c.batch);
+            if method == Method::GaussianOnePass {
+                mem.persistent += 8 * n_pad * c.sketch_width();
+            }
+            t.row(vec![
+                label.into(),
+                l.to_string(),
+                format!("{:.3}", agg.error_mean),
+                format!("{:.3}", agg.accuracy_mean),
+                format!("{:.3}", mem.persistent as f64 / (1024.0 * 1024.0)),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+
+    // ---- 4. batch size sweep ----
+    let mut t = Table::new(
+        "Ablation: streaming batch size (sketch wall time vs transient MiB)",
+        &["batch", "sketch time s", "transient MiB"],
+    );
+    for batch in [32usize, 128, 256, 1024] {
+        let mut c = cfg.clone();
+        c.method = Method::OnePass;
+        c.batch = batch;
+        c.trials = 1;
+        let ds2 = ds.clone();
+        let t0 = std::time::Instant::now();
+        let out = rkc::coordinator::run_experiment(&c, &ds2, None, 42).expect("run");
+        let _ = t0;
+        let mem = MemoryModel::one_pass(n, n_pad, c.sketch_width(), c.rank, batch);
+        t.row(vec![
+            batch.to_string(),
+            format!("{:.3}", out.sketch_time.as_secs_f64()),
+            format!("{:.2}", mem.transient as f64 / (1024.0 * 1024.0)),
+        ]);
+    }
+    print!("{}", t.render());
+}
+
+/// Recovery for both ablation variants: with preconditioning the normal
+/// path; without, Ω = R (identity columns) so QᵀΩ = (Q rows at idx)ᵀ.
+fn one_pass_recovery_no_h(
+    sketch: &OnePassSketch,
+    rank: usize,
+    preconditioned: bool,
+) -> rkc::lowrank::Embedding {
+    if preconditioned {
+        return one_pass_recovery(sketch, rank);
+    }
+    use rkc::linalg::{householder_qr, jacobi_eig, least_squares, Mat};
+    let w = sketch.w();
+    let n = w.rows();
+    let srht = sketch.srht();
+    let (q, _) = householder_qr(w); // n × r'
+    let qdim = q.cols();
+    // Ω = R: omega[i, j] = 1 iff i == idx[j] ⇒ QᵀΩ columns are Q rows
+    let rp = srht.samples();
+    let mut qt_omega = Mat::zeros(qdim, rp);
+    for (j, &i) in srht.idx.iter().enumerate() {
+        if i < n {
+            for k in 0..qdim {
+                qt_omega[(k, j)] = q[(i, k)];
+            }
+        }
+    }
+    let qt_w = q.t_matmul(w); // r' × r'
+    let bt = least_squares(&qt_omega.transpose(), &qt_w.transpose());
+    let mut b = bt.transpose();
+    b.symmetrize();
+    let (evals, v) = jacobi_eig(&b);
+    let clamped: Vec<f64> = evals.iter().take(rank).map(|&l| l.max(0.0)).collect();
+    let mut y = Mat::zeros(rank, n);
+    for i in 0..rank {
+        let s = clamped[i].sqrt();
+        for j in 0..n {
+            let mut acc = 0.0;
+            for k in 0..qdim {
+                acc += v[(k, i)] * q[(j, k)];
+            }
+            y[(i, j)] = s * acc;
+        }
+    }
+    rkc::lowrank::Embedding { y, eigenvalues: clamped }
+}

@@ -1,0 +1,45 @@
+//! Bench: regenerate Fig. 3(a) + (b) — the segmentation workload sweep.
+//!
+//! Series: Nyström error/accuracy vs m ∈ {10..100}; flat reference lines
+//! for ours (r' = 7) and the exact decomposition; full-kernel K-means
+//! accuracy reference (paper: 0.46). Paper shape: ours ≈ exact at r'=7
+//! while Nyström needs m ≈ 50 ≈ 7·r' to reach our error.
+
+use rkc::config::{ExperimentConfig, Method};
+use rkc::coordinator::{build_dataset, run_trials};
+use rkc::metrics::Table;
+
+fn main() {
+    let trials: usize = std::env::var("RKC_TRIALS").ok().and_then(|v| v.parse().ok()).unwrap_or(5);
+    let mut cfg = ExperimentConfig::default();
+    cfg.trials = trials;
+    let ds = build_dataset(&cfg).expect("dataset");
+    println!("bench_fig3: {} trials={} (RKC_TRIALS to change)", ds.name, trials);
+
+    let mut table = Table::new(
+        "Fig. 3 | x=m; ours r'=7 and exact are the flat reference lines",
+        &["series", "m", "approx err (3a)", "accuracy (3b)"],
+    );
+
+    let mut run = |method: Method, label: &str, m: &str, trials: usize| {
+        let mut c = cfg.clone();
+        c.method = method;
+        c.trials = trials;
+        let agg = run_trials(&c, &ds, None).expect("run");
+        table.row(vec![
+            label.into(),
+            m.into(),
+            if agg.error_mean.is_nan() { "-".into() } else { format!("{:.3}", agg.error_mean) },
+            format!("{:.3}", agg.accuracy_mean),
+        ]);
+        eprintln!("  {label} m={m} ({:.1}s)", agg.total_time.as_secs_f64());
+    };
+
+    run(Method::Exact, "exact", "-", 1);
+    run(Method::OnePass, "ours", "-", trials);
+    run(Method::FullKernel, "full_kernel_kmeans", "-", 1);
+    for m in [10, 20, 30, 40, 50, 70, 100] {
+        run(Method::Nystrom { m }, "nystrom", &m.to_string(), trials);
+    }
+    print!("{}", table.render());
+}

@@ -1,0 +1,50 @@
+//! Bench: FWHT throughput and thread scaling (paper §4 reports an 11×
+//! speedup on 16 pthreads for the C/mex Hadamard code).
+//!
+//! On this 1-core container the scaling series mostly demonstrates the
+//! fork-join overhead structure; the per-size single-thread series is
+//! the meaningful number (elements/s vs the O(n log n) roofline).
+
+use rkc::bench_harness::{bench, black_box};
+use rkc::rng::{Pcg64, Rng};
+use rkc::sketch::fwht_parallel;
+
+fn main() {
+    let mut rng = Pcg64::seed(1);
+    println!("bench_fwht: batch of 256 vectors per transform");
+
+    for logn in [10usize, 12, 14] {
+        let n = 1usize << logn;
+        let batch = 256usize;
+        let data: Vec<f64> = (0..n * batch).map(|_| rng.normal()).collect();
+        let r = bench(&format!("fwht n={n} x{batch} t=1"), 2, 8, || {
+            let mut d = data.clone();
+            fwht_parallel(&mut d, n, 1);
+            black_box(d)
+        });
+        let elems = (n * batch) as f64;
+        let flops = elems * logn as f64; // one add/sub pair per element per stage
+        println!(
+            "  n={n}: {:.1} Melem/s, {:.2} GFLOP/s (clone overhead included)",
+            elems / r.median_s / 1e6,
+            flops / r.median_s / 1e9
+        );
+    }
+
+    // thread scaling at the production shape
+    let n = 4096usize;
+    let batch = 256usize;
+    let data: Vec<f64> = (0..n * batch).map(|_| rng.normal()).collect();
+    let mut base = f64::NAN;
+    for threads in [1usize, 2, 4, 8, 16] {
+        let r = bench(&format!("fwht n={n} x{batch} t={threads}"), 2, 8, || {
+            let mut d = data.clone();
+            fwht_parallel(&mut d, n, threads);
+            black_box(d)
+        });
+        if threads == 1 {
+            base = r.median_s;
+        }
+        println!("  threads={threads}: speedup {:.2}x (1-core container: expect ≤1)", base / r.median_s);
+    }
+}

@@ -1,0 +1,74 @@
+//! Bench: the paper's headline — memory at matched accuracy (§1: "around
+//! 10 times lower memory" than Nyström; quadratically less than exact).
+//!
+//! For both workloads, finds the smallest Nyström m whose mean error
+//! matches ours, then reports the persistent-memory ratio.
+
+use rkc::config::{ExperimentConfig, Method};
+use rkc::coordinator::{build_dataset, run_trials};
+use rkc::metrics::{MemoryModel, Table};
+
+fn main() {
+    let trials: usize = std::env::var("RKC_TRIALS").ok().and_then(|v| v.parse().ok()).unwrap_or(5);
+    for (name, mut cfg) in [
+        ("table1/cross_lines", ExperimentConfig::table1()),
+        ("fig3/segmentation", ExperimentConfig::default()),
+    ] {
+        cfg.trials = trials;
+        let ds = build_dataset(&cfg).expect("dataset");
+        let n_pad = ds.n().next_power_of_two();
+        println!("bench_memory: {name} (n={}, r'={})", ds.n(), cfg.sketch_width());
+
+        let mut c = cfg.clone();
+        c.method = Method::OnePass;
+        let ours = run_trials(&c, &ds, None).expect("ours");
+        let ours_mem =
+            MemoryModel::one_pass(ds.n(), n_pad, cfg.sketch_width(), cfg.rank, cfg.batch);
+
+        let mut table = Table::new(
+            &format!("{name}: memory to reach ours' error ({:.3})", ours.error_mean),
+            &["method", "approx err", "persistent MiB", "ratio vs ours"],
+        );
+        let mib = |b: usize| b as f64 / (1024.0 * 1024.0);
+        table.row(vec![
+            format!("ours r'={}", cfg.sketch_width()),
+            format!("{:.3}", ours.error_mean),
+            format!("{:.3}", mib(ours_mem.persistent)),
+            "1.0x".into(),
+        ]);
+
+        let mut matched = None;
+        for m in [10, 20, 30, 50, 70, 100, 150] {
+            let mut c = cfg.clone();
+            c.method = Method::Nystrom { m };
+            let agg = run_trials(&c, &ds, None).expect("nystrom");
+            let mem = MemoryModel::nystrom(ds.n(), m, cfg.rank);
+            let ratio = mem.persistent as f64 / ours_mem.persistent as f64;
+            table.row(vec![
+                format!("nystrom m={m}"),
+                format!("{:.3}", agg.error_mean),
+                format!("{:.3}", mib(mem.persistent)),
+                format!("{ratio:.1}x"),
+            ]);
+            if matched.is_none() && agg.error_mean <= ours.error_mean * 1.02 {
+                matched = Some((m, ratio));
+            }
+        }
+        let dense = MemoryModel::exact_dense(ds.n());
+        table.row(vec![
+            "exact (dense EVD)".into(),
+            "optimal".into(),
+            format!("{:.1}", mib(dense.persistent)),
+            format!("{:.0}x", dense.persistent as f64 / ours_mem.persistent as f64),
+        ]);
+        print!("{}", table.render());
+        match matched {
+            Some((m, ratio)) => println!(
+                "=> Nyström needs m≈{m} to match our error: {ratio:.1}× our memory (paper: ≈10×)\n"
+            ),
+            None => println!("=> no m ≤ 150 matched our error: ratio > {:.1}×\n",
+                MemoryModel::nystrom(ds.n(), 150, cfg.rank).persistent as f64
+                    / ours_mem.persistent as f64),
+        }
+    }
+}

@@ -1,0 +1,61 @@
+//! Bench: end-to-end pipeline throughput per stage, on both backends.
+//!
+//! This is the L3 perf driver for EXPERIMENTS.md §Perf: wall time of the
+//! sketch pass (gram + SRHT), recovery, K-means, and the error pass, on
+//! the Fig-3 production shape. `RKC_BACKEND=xla` runs the PJRT artifact
+//! path (requires `make artifacts`).
+
+use rkc::config::{Backend, ExperimentConfig, Method};
+use rkc::coordinator::{build_dataset, run_experiment};
+use rkc::runtime::ArtifactRegistry;
+
+fn main() {
+    let backend = std::env::var("RKC_BACKEND").unwrap_or_else(|_| "both".into());
+    let iters: usize = std::env::var("RKC_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(3);
+
+    let run = |be: Backend| {
+        let mut cfg = ExperimentConfig::default();
+        cfg.backend = be;
+        cfg.method = Method::OnePass;
+        let registry = match be {
+            Backend::Xla => Some(ArtifactRegistry::open("artifacts").expect("make artifacts")),
+            Backend::Native => None,
+        };
+        let ds = build_dataset(&cfg).expect("dataset");
+        let mut sketch = Vec::new();
+        let mut recovery = Vec::new();
+        let mut kmeans = Vec::new();
+        let mut error = Vec::new();
+        for i in 0..iters {
+            let out = run_experiment(&cfg, &ds, registry.as_ref(), 100 + i as u64).expect("run");
+            sketch.push(out.sketch_time.as_secs_f64());
+            recovery.push(out.recovery_time.as_secs_f64());
+            kmeans.push(out.kmeans_time.as_secs_f64());
+            error.push(out.error_time.as_secs_f64());
+        }
+        let med = |v: &[f64]| rkc::util::percentile(v, 50.0);
+        println!(
+            "pipeline {:?}: sketch {:.3}s | recovery {:.4}s | kmeans {:.3}s | error-pass {:.3}s | total {:.3}s (n={}, batch={}, median of {iters})",
+            be,
+            med(&sketch),
+            med(&recovery),
+            med(&kmeans),
+            med(&error),
+            med(&sketch) + med(&recovery) + med(&kmeans) + med(&error),
+            ds.n(),
+            cfg.batch,
+        );
+        // kernel-columns/second through the full sketch stage
+        println!(
+            "  sketch throughput: {:.0} kernel-columns/s",
+            ds.n() as f64 / med(&sketch)
+        );
+    };
+
+    if backend == "native" || backend == "both" {
+        run(Backend::Native);
+    }
+    if backend == "xla" || backend == "both" {
+        run(Backend::Xla);
+    }
+}

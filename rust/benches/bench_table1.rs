@@ -1,0 +1,41 @@
+//! Bench: regenerate Table 1 (cross_lines synthetic, r = 2, l = 10).
+//!
+//! Paper values — exact: 0.40 / 0.99, ours: 0.40 / 0.99,
+//! Nyström m=20: 0.56 / 0.74, Nyström m=100: 0.44 / 0.75; plain 0.53.
+//! The acceptance criterion is the *shape*: ours ≈ exact in both
+//! columns, Nyström worse at matched-or-larger memory.
+
+use rkc::config::{ExperimentConfig, Method};
+use rkc::coordinator::{build_dataset, run_trials};
+use rkc::metrics::Table;
+
+fn main() {
+    let trials: usize = std::env::var("RKC_TRIALS").ok().and_then(|v| v.parse().ok()).unwrap_or(10);
+    let mut cfg = ExperimentConfig::table1();
+    cfg.trials = trials;
+    let ds = build_dataset(&cfg).expect("dataset");
+    println!("bench_table1: {} trials={} (RKC_TRIALS to change)", ds.name, trials);
+
+    let mut table = Table::new(
+        "Table 1 | paper: exact 0.40/0.99, ours 0.40/0.99, nys20 0.56/0.74, nys100 0.44/0.75, plain -/0.53",
+        &["method", "approx err", "accuracy", "time_s"],
+    );
+    for method in [
+        Method::Exact,
+        Method::OnePass,
+        Method::Nystrom { m: 20 },
+        Method::Nystrom { m: 100 },
+        Method::PlainKmeans,
+    ] {
+        let mut c = cfg.clone();
+        c.method = method;
+        let agg = run_trials(&c, &ds, None).expect("run");
+        table.row(vec![
+            agg.method.clone(),
+            if agg.error_mean.is_nan() { "-".into() } else { format!("{:.2}", agg.error_mean) },
+            format!("{:.2}", agg.accuracy_mean),
+            format!("{:.1}", agg.total_time.as_secs_f64()),
+        ]);
+    }
+    print!("{}", table.render());
+}

@@ -1,0 +1,130 @@
+//! Micro-benchmark harness (criterion substitute for this offline image).
+//!
+//! Warmup + timed iterations, reporting median / mean / p95 wall time.
+//! Every `rust/benches/*.rs` target (`harness = false`) uses this to
+//! print the paper's tables and figure series in a stable format that
+//! `cargo bench 2>&1 | tee bench_output.txt` captures.
+
+use std::time::Instant;
+
+use crate::util::{mean, percentile};
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        format!(
+            "bench {:40} iters={:4} median={} mean={} p95={} min={}",
+            self.name,
+            self.iters,
+            fmt_time(self.median_s),
+            fmt_time(self.mean_s),
+            fmt_time(self.p95_s),
+            fmt_time(self.min_s),
+        )
+    }
+}
+
+fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+/// Time `f` with `warmup` unmeasured and `iters` measured runs. The
+/// closure's return value is black-boxed to keep the optimizer honest.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    assert!(iters >= 1);
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let result = BenchResult {
+        name: name.to_string(),
+        iters,
+        median_s: percentile(&times, 50.0),
+        mean_s: mean(&times),
+        p95_s: percentile(&times, 95.0),
+        min_s: times.iter().cloned().fold(f64::INFINITY, f64::min),
+    };
+    println!("{}", result.report_line());
+    result
+}
+
+/// Adaptive variant: runs for roughly `budget_s` seconds (at least
+/// `min_iters`), for benches whose single-run cost is unknown up front.
+pub fn bench_for<T>(
+    name: &str,
+    budget_s: f64,
+    min_iters: usize,
+    mut f: impl FnMut() -> T,
+) -> BenchResult {
+    // one calibration run
+    let t0 = Instant::now();
+    black_box(f());
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((budget_s / once) as usize).clamp(min_iters, 10_000);
+    bench(name, (iters / 10).min(3), iters, f)
+}
+
+/// Prevent the optimizer from eliding the computation.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_statistics() {
+        let r = bench("sleep_1ms", 1, 5, || {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.median_s >= 0.001);
+        assert!(r.min_s <= r.median_s);
+        assert!(r.median_s <= r.p95_s + 1e-9);
+    }
+
+    #[test]
+    fn bench_for_respects_min_iters() {
+        let r = bench_for("noop", 0.0, 3, || 42);
+        assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn report_line_formats_units() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            median_s: 0.5,
+            mean_s: 2.0,
+            p95_s: 0.0005,
+            min_s: 0.0000005,
+        };
+        let line = r.report_line();
+        assert!(line.contains("500.000ms"));
+        assert!(line.contains("2.000s"));
+        assert!(line.contains("0.5us"));
+    }
+}

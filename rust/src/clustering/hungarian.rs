@@ -1,0 +1,166 @@
+//! Hungarian algorithm (Kuhn–Munkres) for minimum-cost assignment.
+//!
+//! Clustering accuracy compares predicted labels to ground truth up to
+//! the best label permutation; the confusion matrix gives a K × K cost
+//! matrix and this solver finds the optimal matching in O(K³). The
+//! implementation is the classic potentials-based shortest augmenting
+//! path formulation (e-maxx style), exact for rectangular matrices padded
+//! to square.
+
+/// Minimum-cost perfect matching on a square cost matrix given as rows of
+/// equal length. Returns `assignment[row] = col`.
+pub fn hungarian_min_cost(cost: &[Vec<f64>]) -> Vec<usize> {
+    let n = cost.len();
+    assert!(n > 0, "empty cost matrix");
+    assert!(cost.iter().all(|r| r.len() == n), "cost matrix must be square");
+    const INF: f64 = f64::INFINITY;
+
+    // 1-based potentials over rows (u) and columns (v); way[j] is the
+    // predecessor column on the augmenting path; p[j] = row matched to j.
+    let mut u = vec![0.0; n + 1];
+    let mut v = vec![0.0; n + 1];
+    let mut p = vec![0usize; n + 1];
+    let mut way = vec![0usize; n + 1];
+
+    for i in 1..=n {
+        p[0] = i;
+        let mut j0 = 0usize;
+        let mut minv = vec![INF; n + 1];
+        let mut used = vec![false; n + 1];
+        loop {
+            used[j0] = true;
+            let i0 = p[j0];
+            let mut delta = INF;
+            let mut j1 = 0usize;
+            for j in 1..=n {
+                if used[j] {
+                    continue;
+                }
+                let cur = cost[i0 - 1][j - 1] - u[i0] - v[j];
+                if cur < minv[j] {
+                    minv[j] = cur;
+                    way[j] = j0;
+                }
+                if minv[j] < delta {
+                    delta = minv[j];
+                    j1 = j;
+                }
+            }
+            for j in 0..=n {
+                if used[j] {
+                    u[p[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if p[j0] == 0 {
+                break;
+            }
+        }
+        // augment along the path
+        loop {
+            let j1 = way[j0];
+            p[j0] = p[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+
+    let mut assignment = vec![0usize; n];
+    for j in 1..=n {
+        if p[j] > 0 {
+            assignment[p[j] - 1] = j - 1;
+        }
+    }
+    assignment
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn total_cost(cost: &[Vec<f64>], asg: &[usize]) -> f64 {
+        asg.iter().enumerate().map(|(i, &j)| cost[i][j]).sum()
+    }
+
+    fn brute_force_min(cost: &[Vec<f64>]) -> f64 {
+        let n = cost.len();
+        let mut perm: Vec<usize> = (0..n).collect();
+        let mut best = f64::INFINITY;
+        // Heap's algorithm
+        fn heap(k: usize, perm: &mut Vec<usize>, cost: &[Vec<f64>], best: &mut f64) {
+            if k == 1 {
+                let c: f64 = perm.iter().enumerate().map(|(i, &j)| cost[i][j]).sum();
+                if c < *best {
+                    *best = c;
+                }
+                return;
+            }
+            for i in 0..k {
+                heap(k - 1, perm, cost, best);
+                if k % 2 == 0 {
+                    perm.swap(i, k - 1);
+                } else {
+                    perm.swap(0, k - 1);
+                }
+            }
+        }
+        heap(n, &mut perm, cost, &mut best);
+        best
+    }
+
+    #[test]
+    fn identity_when_diagonal_is_cheapest() {
+        let cost = vec![
+            vec![0.0, 9.0, 9.0],
+            vec![9.0, 0.0, 9.0],
+            vec![9.0, 9.0, 0.0],
+        ];
+        assert_eq!(hungarian_min_cost(&cost), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn picks_off_diagonal_when_better() {
+        let cost = vec![vec![10.0, 1.0], vec![1.0, 10.0]];
+        assert_eq!(hungarian_min_cost(&cost), vec![1, 0]);
+    }
+
+    #[test]
+    fn matches_brute_force_on_random_instances() {
+        use crate::rng::{Pcg64, Rng};
+        let mut rng = Pcg64::seed(7);
+        for n in 2..=7 {
+            for _ in 0..20 {
+                let cost: Vec<Vec<f64>> = (0..n)
+                    .map(|_| (0..n).map(|_| (rng.below(1000) as f64) / 10.0).collect())
+                    .collect();
+                let asg = hungarian_min_cost(&cost);
+                // valid permutation
+                let mut seen = vec![false; n];
+                for &j in &asg {
+                    assert!(!seen[j]);
+                    seen[j] = true;
+                }
+                let got = total_cost(&cost, &asg);
+                let want = brute_force_min(&cost);
+                assert!((got - want).abs() < 1e-9, "n={n}: {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn handles_negative_costs() {
+        let cost = vec![vec![-5.0, 0.0], vec![0.0, -5.0]];
+        let asg = hungarian_min_cost(&cost);
+        assert_eq!(asg, vec![0, 1]);
+    }
+
+    #[test]
+    fn single_element() {
+        assert_eq!(hungarian_min_cost(&[vec![3.0]]), vec![0]);
+    }
+}

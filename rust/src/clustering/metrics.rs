@@ -1,0 +1,160 @@
+//! Clustering evaluation: accuracy (Hungarian-matched), NMI, ARI.
+
+use super::hungarian_min_cost;
+
+/// K × K confusion matrix: `m[p][t]` counts points with predicted label
+/// `p` and true label `t`.
+pub fn confusion_matrix(pred: &[usize], truth: &[usize], k: usize) -> Vec<Vec<usize>> {
+    assert_eq!(pred.len(), truth.len());
+    let mut m = vec![vec![0usize; k]; k];
+    for (&p, &t) in pred.iter().zip(truth) {
+        assert!(p < k && t < k, "label out of range");
+        m[p][t] += 1;
+    }
+    m
+}
+
+/// Clustering accuracy: fraction of points correctly labelled under the
+/// best one-to-one mapping between predicted and true labels (the
+/// standard metric in the kernel clustering literature, incl. the paper).
+pub fn accuracy(pred: &[usize], truth: &[usize], k: usize) -> f64 {
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let conf = confusion_matrix(pred, truth, k);
+    // maximize matches == minimize (max - count)
+    let maxc = conf.iter().flatten().copied().max().unwrap_or(0) as f64;
+    let cost: Vec<Vec<f64>> =
+        conf.iter().map(|row| row.iter().map(|&c| maxc - c as f64).collect()).collect();
+    let asg = hungarian_min_cost(&cost);
+    let matched: usize = asg.iter().enumerate().map(|(p, &t)| conf[p][t]).sum();
+    matched as f64 / pred.len() as f64
+}
+
+/// Normalized mutual information (arithmetic-mean normalization).
+pub fn normalized_mutual_info(pred: &[usize], truth: &[usize], k: usize) -> f64 {
+    let n = pred.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let conf = confusion_matrix(pred, truth, k);
+    let nf = n as f64;
+    let rowsum: Vec<f64> = conf.iter().map(|r| r.iter().sum::<usize>() as f64).collect();
+    let colsum: Vec<f64> =
+        (0..k).map(|j| conf.iter().map(|r| r[j]).sum::<usize>() as f64).collect();
+    let mut mi = 0.0;
+    for i in 0..k {
+        for j in 0..k {
+            let nij = conf[i][j] as f64;
+            if nij > 0.0 {
+                mi += (nij / nf) * ((nf * nij) / (rowsum[i] * colsum[j])).ln();
+            }
+        }
+    }
+    let h = |sums: &[f64]| -> f64 {
+        sums.iter()
+            .filter(|&&s| s > 0.0)
+            .map(|&s| {
+                let p = s / nf;
+                -p * p.ln()
+            })
+            .sum()
+    };
+    let hp = h(&rowsum);
+    let ht = h(&colsum);
+    if hp + ht == 0.0 {
+        1.0 // both partitions trivial — identical
+    } else {
+        2.0 * mi / (hp + ht)
+    }
+}
+
+/// Adjusted Rand index (Hubert & Arabie 1985).
+pub fn adjusted_rand_index(pred: &[usize], truth: &[usize], k: usize) -> f64 {
+    let n = pred.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let conf = confusion_matrix(pred, truth, k);
+    let choose2 = |x: usize| -> f64 { (x as f64) * (x as f64 - 1.0) / 2.0 };
+    let sum_ij: f64 = conf.iter().flatten().map(|&c| choose2(c)).sum();
+    let rowsum: Vec<usize> = conf.iter().map(|r| r.iter().sum()).collect();
+    let colsum: Vec<usize> = (0..k).map(|j| conf.iter().map(|r| r[j]).sum()).collect();
+    let sum_a: f64 = rowsum.iter().map(|&a| choose2(a)).sum();
+    let sum_b: f64 = colsum.iter().map(|&b| choose2(b)).sum();
+    let total = choose2(n);
+    let expected = sum_a * sum_b / total;
+    let max_index = 0.5 * (sum_a + sum_b);
+    if (max_index - expected).abs() < 1e-300 {
+        return 1.0;
+    }
+    (sum_ij - expected) / (max_index - expected)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_prediction_scores_one() {
+        let truth = vec![0, 0, 1, 1, 2, 2];
+        assert_eq!(accuracy(&truth, &truth, 3), 1.0);
+        assert!((normalized_mutual_info(&truth, &truth, 3) - 1.0).abs() < 1e-12);
+        assert!((adjusted_rand_index(&truth, &truth, 3) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accuracy_is_permutation_invariant() {
+        let truth = vec![0, 0, 1, 1, 2, 2];
+        let pred = vec![2, 2, 0, 0, 1, 1]; // relabeled but identical partition
+        assert_eq!(accuracy(&pred, &truth, 3), 1.0);
+        assert!((adjusted_rand_index(&pred, &truth, 3) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn one_mistake() {
+        let truth = vec![0, 0, 0, 1, 1, 1];
+        let pred = vec![1, 1, 1, 0, 0, 1]; // one point of class 1 mislabeled
+        assert!((accuracy(&pred, &truth, 2) - 5.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_labels_score_near_half_for_two_balanced_classes() {
+        use crate::rng::{Pcg64, Rng};
+        let mut rng = Pcg64::seed(1);
+        let n = 10_000;
+        let truth: Vec<usize> = (0..n).map(|i| i % 2).collect();
+        let pred: Vec<usize> = (0..n).map(|_| rng.below(2)).collect();
+        let acc = accuracy(&pred, &truth, 2);
+        assert!(acc >= 0.5 - 1e-12 && acc < 0.54, "acc={acc}");
+        let ari = adjusted_rand_index(&pred, &truth, 2);
+        assert!(ari.abs() < 0.05, "ari={ari}");
+        let nmi = normalized_mutual_info(&pred, &truth, 2);
+        assert!(nmi < 0.05, "nmi={nmi}");
+    }
+
+    #[test]
+    fn accuracy_handles_unbalanced_and_missing_clusters() {
+        let truth = vec![0, 0, 0, 0, 1];
+        let pred = vec![0, 0, 0, 0, 0]; // predictor collapsed to one cluster
+        assert!((accuracy(&pred, &truth, 2) - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn confusion_matrix_counts() {
+        let truth = vec![0, 1, 1, 2];
+        let pred = vec![1, 1, 0, 2];
+        let m = confusion_matrix(&pred, &truth, 3);
+        assert_eq!(m[1][0], 1);
+        assert_eq!(m[1][1], 1);
+        assert_eq!(m[0][1], 1);
+        assert_eq!(m[2][2], 1);
+        assert_eq!(m.iter().flatten().sum::<usize>(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "label out of range")]
+    fn rejects_out_of_range_labels() {
+        confusion_matrix(&[3], &[0], 2);
+    }
+}

@@ -1,0 +1,136 @@
+//! Tiny CLI argument parser (clap is unavailable offline; this is the
+//! substrate replacement). Grammar:
+//!
+//! ```text
+//! rkc <subcommand> [--key value]... [--flag]... [positional]...
+//! ```
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "cli error: {}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Parsed command line.
+#[derive(Debug, Clone)]
+pub struct Cli {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    /// Parse from raw args (excluding argv[0]). `known_flags` lists
+    /// boolean options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        args: I,
+        known_flags: &[&str],
+    ) -> Result<Cli, CliError> {
+        let mut it = args.into_iter().peekable();
+        let mut cli = Cli {
+            subcommand: None,
+            options: BTreeMap::new(),
+            flags: Vec::new(),
+            positional: Vec::new(),
+        };
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                cli.subcommand = it.next();
+            }
+        }
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if name.is_empty() {
+                    // `--` terminator: the rest is positional
+                    cli.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    cli.options.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&name) {
+                    cli.flags.push(name.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| CliError(format!("--{name} expects a value")))?;
+                    cli.options.insert(name.to_string(), v);
+                }
+            } else if arg.starts_with('-') && arg.len() > 1 {
+                return Err(CliError(format!("unknown short option '{arg}'")));
+            } else {
+                cli.positional.push(arg);
+            }
+        }
+        Ok(cli)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|e| CliError(format!("--{name}: {e}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Cli {
+        Cli::parse(args.iter().map(|s| s.to_string()), &["verbose", "csv"]).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let c = parse(&["fig3", "--trials", "10", "--verbose", "--method=exact", "out.csv"]);
+        assert_eq!(c.subcommand.as_deref(), Some("fig3"));
+        assert_eq!(c.get("trials"), Some("10"));
+        assert_eq!(c.get("method"), Some("exact"));
+        assert!(c.has_flag("verbose"));
+        assert_eq!(c.positional, vec!["out.csv"]);
+    }
+
+    #[test]
+    fn no_subcommand_when_leading_dash() {
+        let c = parse(&["--trials", "5"]);
+        assert_eq!(c.subcommand, None);
+        assert_eq!(c.get_usize("trials").unwrap(), Some(5));
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let c = parse(&["run", "--", "--not-an-option"]);
+        assert_eq!(c.positional, vec!["--not-an-option"]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let r = Cli::parse(["cmd".to_string(), "--n".to_string()], &[]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn bad_usize_is_error() {
+        let c = parse(&["x", "--trials", "ten"]);
+        assert!(c.get_usize("trials").is_err());
+    }
+}

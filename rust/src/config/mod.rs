@@ -1,0 +1,268 @@
+//! Experiment configuration and CLI argument parsing.
+//!
+//! Configs load from JSON files (see `util::json`) and/or `--key value`
+//! command-line overrides, so every experiment in EXPERIMENTS.md is
+//! reproducible from a single command line.
+
+mod cli;
+
+pub use cli::{Cli, CliError};
+
+use crate::kernels::Kernel;
+use crate::util::Json;
+
+/// Which low-rank / clustering method to run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Method {
+    /// the paper's Alg. 1 (SRHT one-pass)
+    OnePass,
+    /// one-pass randomized sketch with a dense Gaussian test matrix
+    GaussianOnePass,
+    /// Nyström with uniform column sampling, parameterized by m
+    Nystrom { m: usize },
+    /// exact top-r via streamed subspace iteration
+    Exact,
+    /// full kernel K-means on the materialized kernel (O(n²) baseline)
+    FullKernel,
+    /// plain K-means on the raw input (no kernel)
+    PlainKmeans,
+}
+
+impl Method {
+    pub fn name(&self) -> String {
+        match self {
+            Method::OnePass => "one_pass".into(),
+            Method::GaussianOnePass => "gaussian_one_pass".into(),
+            Method::Nystrom { m } => format!("nystrom_m{m}"),
+            Method::Exact => "exact".into(),
+            Method::FullKernel => "full_kernel".into(),
+            Method::PlainKmeans => "plain_kmeans".into(),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        match s {
+            "one_pass" | "ours" => Some(Method::OnePass),
+            "gaussian" | "gaussian_one_pass" => Some(Method::GaussianOnePass),
+            "exact" => Some(Method::Exact),
+            "full_kernel" => Some(Method::FullKernel),
+            "plain" | "plain_kmeans" => Some(Method::PlainKmeans),
+            _ => s.strip_prefix("nystrom_m")
+                .and_then(|m| m.parse().ok())
+                .map(|m| Method::Nystrom { m }),
+        }
+    }
+}
+
+/// Execution backend for the bulk compute.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// native rust gram/FWHT (reference; always available)
+    Native,
+    /// XLA artifacts via PJRT (the production path; requires artifacts/)
+    Xla,
+}
+
+/// A full experiment specification.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub dataset: String,
+    pub n: usize,
+    pub p: usize,
+    pub k: usize,
+    pub kernel: Kernel,
+    pub method: Method,
+    pub rank: usize,
+    pub oversample: usize,
+    pub batch: usize,
+    pub trials: usize,
+    pub seed: u64,
+    pub backend: Backend,
+    pub kmeans_restarts: usize,
+    pub kmeans_iters: usize,
+    pub threads: usize,
+    pub artifacts_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    /// Fig. 3 defaults (the paper's real-data protocol).
+    fn default() -> Self {
+        ExperimentConfig {
+            dataset: "segmentation_like".into(),
+            n: 2310,
+            p: 19,
+            k: 7,
+            kernel: Kernel::paper_poly2(),
+            method: Method::OnePass,
+            rank: 2,
+            oversample: 5,
+            batch: 256,
+            trials: 100,
+            seed: 2016,
+            backend: Backend::Native,
+            kmeans_restarts: 10,
+            kmeans_iters: 20,
+            threads: 1,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Table 1 / Fig. 1–2 defaults (synthetic two-rings protocol).
+    pub fn table1() -> Self {
+        ExperimentConfig {
+            dataset: "cross_lines".into(),
+            n: 4000,
+            p: 2,
+            k: 2,
+            oversample: 10,
+            ..Default::default()
+        }
+    }
+
+    /// r' = r + l, the sketch width.
+    pub fn sketch_width(&self) -> usize {
+        self.rank + self.oversample
+    }
+
+    /// Apply a `key=value` override; unknown keys are an error so typos
+    /// fail loudly.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), String> {
+        let uint = |v: &str| v.parse::<usize>().map_err(|e| format!("{key}: {e}"));
+        match key {
+            "dataset" => self.dataset = value.into(),
+            "n" => self.n = uint(value)?,
+            "p" => self.p = uint(value)?,
+            "k" => self.k = uint(value)?,
+            "rank" | "r" => self.rank = uint(value)?,
+            "oversample" | "l" => self.oversample = uint(value)?,
+            "batch" => self.batch = uint(value)?,
+            "trials" => self.trials = uint(value)?,
+            "seed" => self.seed = value.parse().map_err(|e| format!("seed: {e}"))?,
+            "kmeans_restarts" => self.kmeans_restarts = uint(value)?,
+            "kmeans_iters" => self.kmeans_iters = uint(value)?,
+            "threads" => self.threads = uint(value)?,
+            "artifacts_dir" => self.artifacts_dir = value.into(),
+            "method" => {
+                self.method =
+                    Method::parse(value).ok_or_else(|| format!("unknown method '{value}'"))?;
+            }
+            "backend" => {
+                self.backend = match value {
+                    "native" => Backend::Native,
+                    "xla" => Backend::Xla,
+                    _ => return Err(format!("unknown backend '{value}'")),
+                };
+            }
+            "kernel" => {
+                self.kernel = match value {
+                    "poly2" => Kernel::paper_poly2(),
+                    "linear" => Kernel::Linear,
+                    _ if value.starts_with("rbf:") => {
+                        let g: f64 = value[4..].parse().map_err(|e| format!("rbf gamma: {e}"))?;
+                        Kernel::Rbf { gamma: g }
+                    }
+                    _ if value.starts_with("poly:") => {
+                        let rest = &value[5..];
+                        let (g, d) = rest.split_once(':').ok_or("poly:<gamma>:<degree>")?;
+                        Kernel::Poly {
+                            gamma: g.parse().map_err(|e| format!("poly gamma: {e}"))?,
+                            degree: d.parse().map_err(|e| format!("poly degree: {e}"))?,
+                        }
+                    }
+                    _ => return Err(format!("unknown kernel '{value}'")),
+                };
+            }
+            _ => return Err(format!("unknown config key '{key}'")),
+        }
+        Ok(())
+    }
+
+    /// Load overrides from a JSON object file: `{"n": 1000, "r": 2, ...}`.
+    pub fn apply_json(&mut self, json: &Json) -> Result<(), String> {
+        let Json::Obj(map) = json else {
+            return Err("config file must be a JSON object".into());
+        };
+        for (k, v) in map {
+            let as_text = match v {
+                Json::Str(s) => s.clone(),
+                Json::Num(x) => {
+                    if x.fract() == 0.0 {
+                        format!("{}", *x as i64)
+                    } else {
+                        format!("{x}")
+                    }
+                }
+                Json::Bool(b) => format!("{b}"),
+                _ => return Err(format!("unsupported value for '{k}'")),
+            };
+            self.set(k, &as_text)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_protocol() {
+        let c = ExperimentConfig::default();
+        assert_eq!((c.n, c.p, c.k), (2310, 19, 7));
+        assert_eq!(c.rank, 2);
+        assert_eq!(c.oversample, 5);
+        assert_eq!(c.sketch_width(), 7);
+        assert_eq!(c.trials, 100);
+        assert_eq!(c.kmeans_restarts, 10);
+        assert_eq!(c.kmeans_iters, 20);
+        let t = ExperimentConfig::table1();
+        assert_eq!((t.n, t.k, t.oversample), (4000, 2, 10));
+        assert_eq!(t.dataset, "cross_lines");
+        assert_eq!(t.sketch_width(), 12); // "equivalent of m=12 columns"
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut c = ExperimentConfig::default();
+        c.set("method", "nystrom_m50").unwrap();
+        assert_eq!(c.method, Method::Nystrom { m: 50 });
+        c.set("kernel", "rbf:2.5").unwrap();
+        assert_eq!(c.kernel, Kernel::Rbf { gamma: 2.5 });
+        c.set("kernel", "poly:1:3").unwrap();
+        assert_eq!(c.kernel, Kernel::Poly { gamma: 1.0, degree: 3 });
+        c.set("backend", "xla").unwrap();
+        assert_eq!(c.backend, Backend::Xla);
+        assert!(c.set("nope", "1").is_err());
+        assert!(c.set("backend", "gpu").is_err());
+        assert!(c.set("n", "abc").is_err());
+    }
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in [
+            Method::OnePass,
+            Method::GaussianOnePass,
+            Method::Nystrom { m: 20 },
+            Method::Exact,
+            Method::FullKernel,
+            Method::PlainKmeans,
+        ] {
+            assert_eq!(Method::parse(&m.name()), Some(m), "{}", m.name());
+        }
+        assert_eq!(Method::parse("bogus"), None);
+    }
+
+    #[test]
+    fn json_config_applies() {
+        let mut c = ExperimentConfig::default();
+        let j = Json::parse(r#"{"n": 512, "method": "exact", "seed": 7}"#).unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.n, 512);
+        assert_eq!(c.method, Method::Exact);
+        assert_eq!(c.seed, 7);
+        let bad = Json::parse(r#"{"wat": 1}"#).unwrap();
+        assert!(c.apply_json(&bad).is_err());
+    }
+}

@@ -1,0 +1,28 @@
+//! L3 coordinator: the paper's pipeline as a streaming system.
+//!
+//! ```text
+//!  data (p×n) ──► block scheduler ──► gram blocks K[:,J] ──► SRHT stage ──► sketch W
+//!                 (column batches)    (native rust or XLA     (D, FWHT,      (n × r')
+//!                                      artifact, on the fly)   row gather)
+//!                                                                 │
+//!            K-means on Y  ◄── embedding Y = Σ^½VᵀQᵀ ◄── one-pass recovery
+//!            (native or XLA artifact)                     (QR, LS solve, Jacobi)
+//! ```
+//!
+//! The full kernel matrix never exists in memory: peak usage is the
+//! sketch (`n·r'` f64) plus one in-flight block (`n_pad·b`). The native
+//! backend demonstrates the threaded producer/consumer pipeline with
+//! bounded-channel backpressure; the XLA backend routes the bulk compute
+//! through the PJRT artifacts (compiled from JAX + Pallas) on the main
+//! thread — the PJRT CPU client is not Sync, and on a real accelerator
+//! the overlap comes from device streams instead.
+
+mod driver;
+mod pipeline;
+mod sources;
+mod xla_kmeans;
+
+pub use driver::{build_dataset, run_experiment, run_trials, RunOutcome, TrialAggregate};
+pub use pipeline::{run_sketch_pass, run_sketch_pass_threaded, SketchRowProducer, StageStats};
+pub use sources::{xla_preferred_n_pad, FusedXlaSketchRows, NativeSketchRows, XlaBlockSource};
+pub use xla_kmeans::xla_kmeans;

@@ -1,0 +1,180 @@
+//! The streaming sketch pass: block scheduler + SRHT stage + accumulator.
+//!
+//! Two execution modes:
+//! - [`run_sketch_pass`] — sequential loop, works with any producer
+//!   (including the XLA-backed one, whose PJRT handles are not `Send`).
+//! - [`run_sketch_pass_threaded`] — producer/consumer with a bounded
+//!   `sync_channel`: the producer thread computes kernel blocks while the
+//!   consumer applies the FWHT and gathers sketch rows. Backpressure is
+//!   the channel bound — at most `channel_cap` blocks (each n_pad × b
+//!   f64) are ever in flight, keeping peak memory at the documented
+//!   O(n·r' + b·n_pad) regardless of producer speed.
+
+use std::sync::mpsc::sync_channel;
+use std::time::Duration;
+
+use crate::kernels::{column_batches, BlockSource, NativeBlockSource};
+use crate::linalg::Mat;
+use crate::lowrank::OnePassSketch;
+use crate::sketch::Srht;
+
+/// Per-stage wall-clock accounting for the sketch pass.
+#[derive(Clone, Debug, Default)]
+pub struct StageStats {
+    pub blocks: usize,
+    pub produce_time: Duration,
+    pub transform_time: Duration,
+    /// peak number of blocks simultaneously alive (threaded mode)
+    pub peak_in_flight: usize,
+}
+
+/// Anything that can turn a set of kernel-column indices into the
+/// corresponding rows of the sketch `W` (b × r').
+pub trait SketchRowProducer {
+    fn rows_for(&mut self, cols: &[usize]) -> Mat;
+    fn srht(&self) -> &Srht;
+}
+
+impl SketchRowProducer for super::NativeSketchRows {
+    fn rows_for(&mut self, cols: &[usize]) -> Mat {
+        let kb = self.src.block(cols);
+        self.srht.apply_to_block(&kb, self.threads)
+    }
+
+    fn srht(&self) -> &Srht {
+        &self.srht
+    }
+}
+
+/// Sequential sketch pass over all columns.
+pub fn run_sketch_pass(
+    producer: &mut dyn SketchRowProducer,
+    n_real: usize,
+    batch: usize,
+) -> (OnePassSketch, StageStats) {
+    let mut sketch = OnePassSketch::new(producer.srht().clone(), n_real);
+    let mut stats = StageStats::default();
+    for cols in column_batches(n_real, batch) {
+        let t0 = std::time::Instant::now();
+        let rows = producer.rows_for(&cols);
+        stats.produce_time += t0.elapsed();
+        let t1 = std::time::Instant::now();
+        sketch.ingest(&cols, &rows);
+        stats.transform_time += t1.elapsed();
+        stats.blocks += 1;
+    }
+    stats.peak_in_flight = 1;
+    (sketch, stats)
+}
+
+/// Threaded sketch pass (native backend): the producer thread computes
+/// raw kernel blocks; the consumer applies `D`, FWHT and the row gather.
+pub fn run_sketch_pass_threaded(
+    mut src: NativeBlockSource,
+    srht: Srht,
+    batch: usize,
+    channel_cap: usize,
+    fwht_threads: usize,
+) -> (OnePassSketch, StageStats) {
+    let n_real = src.n();
+    let mut sketch = OnePassSketch::new(srht.clone(), n_real);
+    let mut stats = StageStats::default();
+    let batches = column_batches(n_real, batch);
+    let nbatches = batches.len();
+    let (tx, rx) = sync_channel::<(Vec<usize>, Mat)>(channel_cap.max(1));
+
+    std::thread::scope(|scope| {
+        let producer = scope.spawn(move || {
+            let mut produce_time = Duration::ZERO;
+            for cols in batches {
+                let t0 = std::time::Instant::now();
+                let kb = src.block(&cols);
+                produce_time += t0.elapsed();
+                if tx.send((cols, kb)).is_err() {
+                    break; // consumer hung up (panic downstream)
+                }
+            }
+            produce_time
+        });
+
+        for (cols, kb) in rx.iter() {
+            let t1 = std::time::Instant::now();
+            let rows = srht.apply_to_block(&kb, fwht_threads);
+            sketch.ingest(&cols, &rows);
+            stats.transform_time += t1.elapsed();
+            stats.blocks += 1;
+        }
+        stats.produce_time = producer.join().expect("producer thread panicked");
+    });
+
+    assert_eq!(stats.blocks, nbatches);
+    stats.peak_in_flight = channel_cap.max(1) + 1;
+    (sketch, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::NativeSketchRows;
+    use crate::kernels::Kernel;
+    use crate::linalg::testutil::{assert_mat_close, random_mat};
+    use crate::rng::Pcg64;
+
+    fn setup(seed: u64, n: usize) -> (Mat, Srht) {
+        let mut rng = Pcg64::seed(seed);
+        let x = random_mat(&mut rng, 3, n);
+        let n_pad = n.next_power_of_two();
+        let mut srht = Srht::draw(&mut rng, n_pad, 6);
+        srht.mask_padding(n);
+        (x, srht)
+    }
+
+    #[test]
+    fn threaded_equals_sequential() {
+        let (x, srht) = setup(1, 53);
+        let kern = Kernel::paper_poly2();
+        let mut seq = NativeSketchRows {
+            src: NativeBlockSource::pow2(x.clone(), kern),
+            srht: srht.clone(),
+            threads: 1,
+        };
+        let (sk_seq, st_seq) = run_sketch_pass(&mut seq, 53, 10);
+        let (sk_thr, st_thr) = run_sketch_pass_threaded(
+            NativeBlockSource::pow2(x, kern),
+            srht,
+            10,
+            2,
+            2,
+        );
+        assert_mat_close(sk_seq.w(), sk_thr.w(), 1e-12);
+        assert_eq!(st_seq.blocks, st_thr.blocks);
+        assert!(sk_thr.is_complete());
+    }
+
+    #[test]
+    fn backpressure_bounds_in_flight_blocks() {
+        let (x, srht) = setup(2, 40);
+        let (_, stats) = run_sketch_pass_threaded(
+            NativeBlockSource::pow2(x, Kernel::paper_poly2()),
+            srht,
+            4,
+            1,
+            1,
+        );
+        assert_eq!(stats.blocks, 10);
+        assert!(stats.peak_in_flight <= 2);
+    }
+
+    #[test]
+    fn stats_account_all_blocks() {
+        let (x, srht) = setup(3, 17);
+        let mut p = NativeSketchRows {
+            src: NativeBlockSource::pow2(x, Kernel::Rbf { gamma: 0.5 }),
+            srht,
+            threads: 1,
+        };
+        let (sk, stats) = run_sketch_pass(&mut p, 17, 5);
+        assert_eq!(stats.blocks, 4); // 5+5+5+2
+        assert!(sk.is_complete());
+    }
+}

@@ -1,0 +1,238 @@
+//! Block / sketch-row producers over both backends.
+//!
+//! The sketch pass consumes *rows of W* (one per streamed kernel column);
+//! [`SketchRowProducer`](super::SketchRowProducer) abstracts who computes
+//! them:
+//! - [`NativeSketchRows`] — rust gram + rust FWHT (reference backend).
+//! - [`FusedXlaSketchRows`] — the `sketch_*` artifact (Pallas gram kernel
+//!   + Pallas FWHT butterflies fused into one HLO module) + a row gather.
+//!
+//! [`XlaBlockSource`] adapts a `gram_*` artifact to the [`BlockSource`]
+//! trait so Nyström / exact / error measurement run on the XLA backend too.
+
+use anyhow::{anyhow, Result};
+
+use crate::kernels::{BlockSource, Kernel, NativeBlockSource};
+use crate::linalg::Mat;
+use crate::runtime::{literal_to_mat, mat_to_literal, vec_to_literal, ArtifactRegistry, Executable};
+use crate::sketch::Srht;
+
+/// Pick the padded transform length for the XLA backend: the smallest
+/// `sketch` artifact (matching kernel kind and p) whose baked n is at
+/// least `next_pow2(n)`. Padding beyond the minimum is mathematically
+/// free (padded kernel rows/columns are zero) — it just buys artifact
+/// reuse across workload sizes.
+pub fn xla_preferred_n_pad(
+    registry: &ArtifactRegistry,
+    kernel: Kernel,
+    p: usize,
+    n: usize,
+) -> Option<usize> {
+    let kind = match kernel {
+        Kernel::Poly { .. } => "poly",
+        Kernel::Rbf { .. } => "rbf",
+        Kernel::Linear => "linear",
+    };
+    let min = n.next_power_of_two();
+    let mut best: Option<usize> = None;
+    for name in registry.names() {
+        let info = registry.info(&name).unwrap();
+        if info.params.get("op").map(String::as_str) == Some("sketch")
+            && info.params.get("kind").map(String::as_str) == Some(kind)
+            && info.param_usize("p").ok() == Some(p)
+        {
+            if let Ok(na) = info.param_usize("n") {
+                if na >= min && best.is_none_or(|b| na < b) {
+                    best = Some(na);
+                }
+            }
+        }
+    }
+    best
+}
+
+/// Native reference producer: gram block in rust, SRHT in rust.
+/// (The `SketchRowProducer` impl lives in `pipeline.rs`.)
+pub struct NativeSketchRows {
+    pub src: NativeBlockSource,
+    pub srht: Srht,
+    pub threads: usize,
+}
+
+/// XLA fused producer: one artifact call computes `(H D) K[:, J]` from
+/// the raw data; rust gathers the r' sampled rows.
+pub struct FusedXlaSketchRows {
+    exe: &'static Executable,
+    x_lit: xla::Literal,
+    d_lit: xla::Literal,
+    srht: Srht,
+    n_pad: usize,
+    b_art: usize,
+    p: usize,
+}
+
+impl FusedXlaSketchRows {
+    /// Find a `sketch` artifact matching (kernel, p, n_pad) in the
+    /// registry. `srht.d` must already have padded rows zeroed (see
+    /// `Srht::mask_padding`) so that non-poly kernels stay consistent.
+    pub fn new(
+        registry: &ArtifactRegistry,
+        x: &Mat,
+        kernel: Kernel,
+        srht: Srht,
+    ) -> Result<Self> {
+        let p = x.rows();
+        let n_pad = srht.n;
+        let kind = match kernel {
+            Kernel::Poly { .. } => "poly",
+            Kernel::Rbf { .. } => "rbf",
+            Kernel::Linear => "linear",
+        };
+        let info = registry
+            .find(|i| {
+                i.params.get("op").map(String::as_str) == Some("sketch")
+                    && i.params.get("kind").map(String::as_str) == Some(kind)
+                    && i.param_usize("p").ok() == Some(p)
+                    && i.param_usize("n").ok() == Some(n_pad)
+            })
+            .ok_or_else(|| {
+                anyhow!("no sketch artifact for kind={kind} p={p} n={n_pad}; run `make artifacts`")
+            })?
+            .clone();
+        let b_art = info.param_usize("b")?;
+        let exe = registry.get(&info.name)?;
+        // pad x to (p, n_pad) with zero columns
+        let x_pad = Mat::from_fn(p, n_pad, |i, j| if j < x.cols() { x[(i, j)] } else { 0.0 });
+        let x_lit = mat_to_literal(&x_pad)?;
+        let d_lit = vec_to_literal(&srht.d)?;
+        Ok(FusedXlaSketchRows { exe, x_lit, d_lit, srht, n_pad, b_art, p })
+    }
+
+    pub fn srht(&self) -> &Srht {
+        &self.srht
+    }
+
+    /// The artifact's fixed batch width (stream at exactly this size).
+    pub fn batch_width(&self) -> usize {
+        self.b_art
+    }
+
+    /// Compute W rows for `cols` (|cols| ≤ artifact batch width).
+    pub fn rows_for(&mut self, x: &Mat, cols: &[usize]) -> Result<Mat> {
+        anyhow::ensure!(cols.len() <= self.b_art, "batch exceeds artifact width");
+        // query block, zero-padded to the artifact's fixed width
+        let xb = Mat::from_fn(self.p, self.b_art, |i, bj| {
+            if bj < cols.len() {
+                x[(i, cols[bj])]
+            } else {
+                0.0
+            }
+        });
+        let xb_lit = mat_to_literal(&xb)?;
+        let outs = self.exe.run(&[
+            self.x_lit.clone(),
+            xb_lit,
+            self.d_lit.clone(),
+        ])?;
+        let pre = literal_to_mat(&outs[0], self.n_pad, self.b_art)?;
+        // gather the r' sampled rows for the real columns: row j of W
+        Ok(Mat::from_fn(cols.len(), self.srht.samples(), |bj, s| pre[(self.srht.idx[s], bj)]))
+    }
+}
+
+/// `BlockSource` over a `gram_*` artifact: streams `K[:, J]` through the
+/// compiled Pallas gram kernel. Padded *rows* are re-zeroed in rust (for
+/// the RBF kernel the artifact's padded data columns do not map to zero).
+pub struct XlaBlockSource {
+    exe: &'static Executable,
+    x: Mat,
+    x_lit: xla::Literal,
+    kernel: Kernel,
+    n_pad: usize,
+    b_art: usize,
+}
+
+impl XlaBlockSource {
+    pub fn new(
+        registry: &ArtifactRegistry,
+        x: Mat,
+        kernel: Kernel,
+        n_pad: usize,
+    ) -> Result<Self> {
+        let p = x.rows();
+        let kind = match kernel {
+            Kernel::Poly { .. } => "poly",
+            Kernel::Rbf { .. } => "rbf",
+            Kernel::Linear => "linear",
+        };
+        let info = registry
+            .find(|i| {
+                i.params.get("op").map(String::as_str) == Some("gram")
+                    && i.params.get("kind").map(String::as_str) == Some(kind)
+                    && i.param_usize("p").ok() == Some(p)
+                    && i.param_usize("n").ok() == Some(n_pad)
+            })
+            .ok_or_else(|| {
+                anyhow!("no gram artifact for kind={kind} p={p} n={n_pad}; run `make artifacts`")
+            })?
+            .clone();
+        let b_art = info.param_usize("b")?;
+        let exe = registry.get(&info.name)?;
+        let x_pad = Mat::from_fn(p, n_pad, |i, j| if j < x.cols() { x[(i, j)] } else { 0.0 });
+        let x_lit = mat_to_literal(&x_pad)?;
+        Ok(XlaBlockSource { exe, x, x_lit, kernel, n_pad, b_art })
+    }
+
+    pub fn batch_width(&self) -> usize {
+        self.b_art
+    }
+}
+
+impl BlockSource for XlaBlockSource {
+    fn n(&self) -> usize {
+        self.x.cols()
+    }
+
+    fn n_padded(&self) -> usize {
+        self.n_pad
+    }
+
+    fn block(&mut self, cols: &[usize]) -> Mat {
+        let p = self.x.rows();
+        let n = self.x.cols();
+        let mut out = Mat::zeros(self.n_pad, cols.len());
+        for (chunk_idx, chunk) in cols.chunks(self.b_art).enumerate() {
+            let xb = Mat::from_fn(p, self.b_art, |i, bj| {
+                if bj < chunk.len() {
+                    self.x[(i, chunk[bj])]
+                } else {
+                    0.0
+                }
+            });
+            let xb_lit = mat_to_literal(&xb).expect("literal conversion");
+            let outs = self
+                .exe
+                .run(&[self.x_lit.clone(), xb_lit])
+                .expect("gram artifact execution");
+            let kb = literal_to_mat(&outs[0], self.n_pad, self.b_art).expect("gram output");
+            let chunk_start = chunk_idx * self.b_art;
+            for bj in 0..chunk.len() {
+                // rows ≥ n stay zero (RBF padding correction)
+                for i in 0..n {
+                    out[(i, chunk_start + bj)] = kb[(i, bj)];
+                }
+            }
+        }
+        out
+    }
+
+    fn diag(&mut self) -> Vec<f64> {
+        let p = self.x.rows();
+        (0..self.x.cols())
+            .map(|i| {
+                let norm2: f64 = (0..p).map(|d| self.x[(d, i)].powi(2)).sum();
+                self.kernel.eval_diag(norm2)
+            })
+            .collect()
+    }
+}

@@ -1,0 +1,147 @@
+//! Lloyd K-means driven through the `kmeans_step` XLA artifact.
+//!
+//! The assignment + masked centroid statistics run in the compiled HLO
+//! module (the L1 Pallas assign kernel); rust owns the restart loop,
+//! k-means++ seeding, empty-cluster repair and convergence detection.
+//! Matches `clustering::kmeans` bit-for-bit up to f32 rounding (tested in
+//! `rust/tests/xla_integration.rs`).
+
+use anyhow::{anyhow, Result};
+
+use crate::clustering::{KmeansOpts, KmeansResult};
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
+use crate::runtime::{
+    literal_to_indices, literal_to_mat, literal_to_vec, mat_to_literal, vec_to_literal,
+    ArtifactRegistry, Executable,
+};
+
+/// K-means on `y` (r × n) using the artifact matching (r, k, n_pad).
+pub fn xla_kmeans(
+    registry: &ArtifactRegistry,
+    y: &Mat,
+    opts: &KmeansOpts,
+    rng: &mut Pcg64,
+) -> Result<KmeansResult> {
+    let (r, n) = (y.rows(), y.cols());
+    let info = registry
+        .find(|i| {
+            i.params.get("op").map(String::as_str) == Some("kmeans_step")
+                && i.param_usize("r").ok() == Some(r)
+                && i.param_usize("k").ok() == Some(opts.k)
+                && i.param_usize("n").ok().is_some_and(|np| np >= n)
+        })
+        .ok_or_else(|| anyhow!("no kmeans_step artifact for r={r} k={} n>={n}", opts.k))?
+        .clone();
+    let n_pad = info.param_usize("n")?;
+    let exe = registry.get(&info.name)?;
+
+    // pad the embedding with zero columns and mask them out
+    let y_pad = Mat::from_fn(r, n_pad, |i, j| if j < n { y[(i, j)] } else { 0.0 });
+    let y_lit = mat_to_literal(&y_pad)?;
+    let mut w = vec![1.0; n_pad];
+    for wj in w.iter_mut().skip(n) {
+        *wj = 0.0;
+    }
+    let w_lit = vec_to_literal(&w)?;
+
+    let mut best: Option<KmeansResult> = None;
+    for t in 0..opts.restarts.max(1) {
+        let mut run_rng = rng.split(t as u64 + 1);
+        let run = lloyd_once(exe, &y_lit, &w_lit, y, opts, n_pad, &mut run_rng)?;
+        if best.as_ref().is_none_or(|b| run.objective < b.objective) {
+            best = Some(run);
+        }
+    }
+    Ok(best.unwrap())
+}
+
+fn lloyd_once(
+    exe: &'static Executable,
+    y_lit: &xla::Literal,
+    w_lit: &xla::Literal,
+    y: &Mat,
+    opts: &KmeansOpts,
+    _n_pad: usize,
+    rng: &mut Pcg64,
+) -> Result<KmeansResult> {
+    let (r, n) = (y.rows(), y.cols());
+    let k = opts.k;
+    // seed with k-means++ on the native side (cheap, O(nk))
+    let seed_run = crate::clustering::kmeans_once(
+        y,
+        &KmeansOpts { k, restarts: 1, max_iters: 0, tol: 0.0 },
+        rng,
+    );
+    let mut centroids = seed_run.centroids;
+    let mut labels = vec![0usize; n];
+    let mut iterations = 0;
+
+    let mut prev_obj = f64::INFINITY;
+    for it in 0..opts.max_iters.max(1) {
+        iterations = it + 1;
+        let c_lit = mat_to_literal(&centroids)?;
+        let outs = exe.run(&[y_lit.clone(), c_lit, w_lit.clone()])?;
+        let assign = literal_to_indices(&outs[0])?;
+        let sums = literal_to_mat(&outs[1], k, r)?;
+        let counts = literal_to_vec(&outs[2])?;
+        labels.copy_from_slice(&assign[..n]);
+        // objective under current centroids (native, O(rn))
+        let mut obj = 0.0;
+        for j in 0..n {
+            let c = labels[j];
+            for i in 0..r {
+                let d = y[(i, j)] - centroids[(i, c)];
+                obj += d * d;
+            }
+        }
+        // update step with empty-cluster repair
+        for c in 0..k {
+            if counts[c] < 0.5 {
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        let da: f64 =
+                            (0..r).map(|i| (y[(i, a)] - centroids[(i, labels[a])]).powi(2)).sum();
+                        let db: f64 =
+                            (0..r).map(|i| (y[(i, b)] - centroids[(i, labels[b])]).powi(2)).sum();
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap();
+                for i in 0..r {
+                    centroids[(i, c)] = y[(i, far)];
+                }
+            } else {
+                for i in 0..r {
+                    centroids[(i, c)] = sums[(c, i)] / counts[c];
+                }
+            }
+        }
+        if (prev_obj - obj).abs() <= opts.tol * obj.max(1e-300) && it > 0 {
+            prev_obj = obj;
+            break;
+        }
+        prev_obj = obj;
+    }
+
+    // final consistent assignment + objective
+    let mut obj = 0.0;
+    for j in 0..n {
+        let mut best_c = 0;
+        let mut best_d = f64::INFINITY;
+        for c in 0..k {
+            let mut d = 0.0;
+            for i in 0..r {
+                let t = y[(i, j)] - centroids[(i, c)];
+                d += t * t;
+            }
+            if d < best_d {
+                best_d = d;
+                best_c = c;
+            }
+        }
+        labels[j] = best_c;
+        obj += best_d;
+    }
+    let _ = prev_obj;
+    Ok(KmeansResult { labels, centroids, objective: obj, iterations })
+}

@@ -1,0 +1,314 @@
+//! Kernel functions and streaming gram-block production.
+//!
+//! The coordinator never materializes the full n × n kernel matrix: it
+//! consumes column blocks `K[:, J]` through the [`BlockSource`] trait.
+//! `NativeBlockSource` computes blocks in rust (reference path, used by
+//! tests and small problems); the XLA-artifact-backed source lives in
+//! `runtime`/`coordinator` and runs the L1 Pallas gram kernel instead.
+
+use crate::linalg::Mat;
+
+/// Mercer kernel functions used in the paper's experiments.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Kernel {
+    /// `(<x, y> + gamma)^degree`; `gamma = 0` is the homogeneous
+    /// polynomial kernel `<x, y>^d` used for Table 1 and Fig. 3 (d = 2).
+    Poly { gamma: f64, degree: u32 },
+    /// `exp(-gamma ||x - y||²)`.
+    Rbf { gamma: f64 },
+    /// plain inner product (kernel K-means degenerates to K-means).
+    Linear,
+}
+
+impl Kernel {
+    /// The paper's kernel: homogeneous quadratic.
+    pub fn paper_poly2() -> Self {
+        Kernel::Poly { gamma: 0.0, degree: 2 }
+    }
+
+    pub fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), y.len());
+        match *self {
+            Kernel::Poly { gamma, degree } => (dot(x, y) + gamma).powi(degree as i32),
+            Kernel::Rbf { gamma } => {
+                let d2: f64 = x.iter().zip(y).map(|(a, b)| (a - b) * (a - b)).sum();
+                (-gamma * d2).exp()
+            }
+            Kernel::Linear => dot(x, y),
+        }
+    }
+
+    /// `κ(x, x)` from the squared norm alone (diagonal of K).
+    pub fn eval_diag(&self, norm2: f64) -> f64 {
+        match *self {
+            Kernel::Poly { gamma, degree } => (norm2 + gamma).powi(degree as i32),
+            Kernel::Rbf { .. } => 1.0,
+            Kernel::Linear => norm2,
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        match *self {
+            Kernel::Poly { gamma, degree } => format!("poly(gamma={gamma},d={degree})"),
+            Kernel::Rbf { gamma } => format!("rbf(gamma={gamma})"),
+            Kernel::Linear => "linear".to_string(),
+        }
+    }
+}
+
+#[inline]
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Produces column blocks of the (implicit, possibly padded) kernel
+/// matrix. `n_padded` rows per block; columns indexed by the *unpadded*
+/// sample index. Implementations must be deterministic.
+pub trait BlockSource {
+    /// number of real (unpadded) samples
+    fn n(&self) -> usize;
+    /// padded row count (power of two for the SRHT path; == n otherwise)
+    fn n_padded(&self) -> usize;
+    /// compute `K[:, cols]` as an (n_padded × cols.len()) matrix; padded
+    /// rows are zero.
+    fn block(&mut self, cols: &[usize]) -> Mat;
+    /// the diagonal entries `K_ii` for i in 0..n (cheap: O(n p)).
+    fn diag(&mut self) -> Vec<f64>;
+    /// bytes of working memory a single `block` call requires (for the
+    /// memory-accounting model; excludes the returned block itself).
+    fn working_bytes(&self, block_cols: usize) -> usize {
+        // default: the returned block dominates
+        self.n_padded() * block_cols * std::mem::size_of::<f64>()
+    }
+}
+
+/// Reference rust block source: gram blocks computed directly from the
+/// data matrix (p × n) with the requested padding.
+pub struct NativeBlockSource {
+    x: Mat,
+    kernel: Kernel,
+    n_padded: usize,
+}
+
+impl NativeBlockSource {
+    pub fn new(x: Mat, kernel: Kernel, n_padded: usize) -> Self {
+        assert!(n_padded >= x.cols(), "padding smaller than data");
+        NativeBlockSource { x, kernel, n_padded }
+    }
+
+    /// Convenience: pad to the next power of two (SRHT requirement).
+    pub fn pow2(x: Mat, kernel: Kernel) -> Self {
+        let n_padded = x.cols().next_power_of_two();
+        Self::new(x, kernel, n_padded)
+    }
+
+    pub fn x(&self) -> &Mat {
+        &self.x
+    }
+
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
+    }
+}
+
+impl BlockSource for NativeBlockSource {
+    fn n(&self) -> usize {
+        self.x.cols()
+    }
+
+    fn n_padded(&self) -> usize {
+        self.n_padded
+    }
+
+    fn block(&mut self, cols: &[usize]) -> Mat {
+        let n = self.x.cols();
+        let p = self.x.rows();
+        let b = cols.len();
+        // Gram core as a blocked matmul: out[i, bj] = Σ_d x[d, i]·xb[d, bj]
+        // accumulated row-of-x by row-of-x (d outer) — both operands
+        // stream sequentially, ~6× faster than per-entry kernel eval
+        // (EXPERIMENTS.md §Perf). The kernel nonlinearity is applied
+        // elementwise afterwards.
+        let mut out = Mat::zeros(self.n_padded, b);
+        let xb = Mat::from_fn(p, b, |d, bj| {
+            let j = cols[bj];
+            assert!(j < n, "column index {j} out of range (n={n})");
+            self.x[(d, j)]
+        });
+        // i-outer: the (b)-wide output row stays in L1 and the inner
+        // axpy vectorizes over b; xb (p × b) is L2-resident throughout.
+        for i in 0..n {
+            let orow = out.row_mut(i);
+            for d in 0..p {
+                let xi = self.x[(d, i)];
+                if xi == 0.0 {
+                    continue;
+                }
+                let brow = xb.row(d);
+                for (o, &q) in orow.iter_mut().zip(brow) {
+                    *o += xi * q;
+                }
+            }
+        }
+        // elementwise kernel nonlinearity on the real rows
+        match self.kernel {
+            Kernel::Linear => {}
+            Kernel::Poly { gamma, degree } => {
+                let e = degree as i32;
+                for i in 0..n {
+                    for v in out.row_mut(i) {
+                        *v = (*v + gamma).powi(e);
+                    }
+                }
+            }
+            Kernel::Rbf { gamma } => {
+                // ||x−y||² = ||x||² + ||y||² − 2⟨x,y⟩ from the dot block
+                let xs: Vec<f64> =
+                    (0..n).map(|i| (0..p).map(|d| self.x[(d, i)].powi(2)).sum()).collect();
+                let ys: Vec<f64> =
+                    (0..b).map(|bj| (0..p).map(|d| xb[(d, bj)].powi(2)).sum()).collect();
+                for i in 0..n {
+                    let orow = out.row_mut(i);
+                    for (bj, v) in orow.iter_mut().enumerate() {
+                        *v = (-gamma * (xs[i] + ys[bj] - 2.0 * *v)).exp();
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn diag(&mut self) -> Vec<f64> {
+        let p = self.x.rows();
+        (0..self.x.cols())
+            .map(|i| {
+                let norm2: f64 = (0..p).map(|d| self.x[(d, i)].powi(2)).sum();
+                self.kernel.eval_diag(norm2)
+            })
+            .collect()
+    }
+}
+
+/// Materialize the full (unpadded) kernel matrix — baselines and tests
+/// only; the O(n²) cost is the problem the paper solves.
+pub fn full_kernel_matrix(x: &Mat, kernel: Kernel) -> Mat {
+    let n = x.cols();
+    let p = x.rows();
+    let cols: Vec<Vec<f64>> =
+        (0..n).map(|j| (0..p).map(|d| x[(d, j)]).collect()).collect();
+    let mut k = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            let v = kernel.eval(&cols[i], &cols[j]);
+            k[(i, j)] = v;
+            k[(j, i)] = v;
+        }
+    }
+    k
+}
+
+/// Split `0..n` into consecutive batches of at most `batch` columns.
+pub fn column_batches(n: usize, batch: usize) -> Vec<Vec<usize>> {
+    assert!(batch > 0);
+    (0..n)
+        .step_by(batch)
+        .map(|start| (start..(start + batch).min(n)).collect())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::testutil::{assert_mat_close, random_mat};
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn kernel_evals() {
+        let x = [1.0, 2.0];
+        let y = [3.0, -1.0];
+        assert_eq!(Kernel::Linear.eval(&x, &y), 1.0);
+        assert_eq!(Kernel::paper_poly2().eval(&x, &y), 1.0);
+        assert_eq!(Kernel::Poly { gamma: 1.0, degree: 3 }.eval(&x, &y), 8.0);
+        let rbf = Kernel::Rbf { gamma: 0.5 }.eval(&x, &y);
+        assert!((rbf - (-0.5f64 * 13.0).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diag_matches_eval() {
+        let x = [0.5, -2.0, 1.0];
+        let n2: f64 = x.iter().map(|v| v * v).sum();
+        for k in [Kernel::Linear, Kernel::paper_poly2(), Kernel::Rbf { gamma: 0.7 }] {
+            assert!((k.eval(&x, &x) - k.eval_diag(n2)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn native_block_source_matches_full_matrix() {
+        let mut rng = Pcg64::seed(1);
+        let x = random_mat(&mut rng, 3, 20);
+        let kern = Kernel::paper_poly2();
+        let full = full_kernel_matrix(&x, kern);
+        let mut src = NativeBlockSource::new(x, kern, 32);
+        let cols: Vec<usize> = vec![0, 5, 19, 7];
+        let block = src.block(&cols);
+        assert_eq!((block.rows(), block.cols()), (32, 4));
+        for (bj, &j) in cols.iter().enumerate() {
+            for i in 0..20 {
+                assert!((block[(i, bj)] - full[(i, j)]).abs() < 1e-12);
+            }
+            for i in 20..32 {
+                assert_eq!(block[(i, bj)], 0.0, "padding must be zero");
+            }
+        }
+    }
+
+    #[test]
+    fn diag_matches_full_matrix() {
+        let mut rng = Pcg64::seed(2);
+        let x = random_mat(&mut rng, 4, 15);
+        let kern = Kernel::Rbf { gamma: 1.3 };
+        let full = full_kernel_matrix(&x, kern);
+        let mut src = NativeBlockSource::pow2(x, kern);
+        let d = src.diag();
+        for i in 0..15 {
+            assert!((d[i] - full[(i, i)]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn full_kernel_is_symmetric_psd_for_poly() {
+        let mut rng = Pcg64::seed(3);
+        let x = random_mat(&mut rng, 2, 12);
+        let k = full_kernel_matrix(&x, Kernel::paper_poly2());
+        assert_mat_close(&k.transpose(), &k, 1e-12);
+        let (evals, _) = crate::linalg::jacobi_eig(&k);
+        assert!(evals.iter().all(|&l| l > -1e-9 * evals[0].max(1.0)));
+    }
+
+    #[test]
+    fn column_batches_cover_everything() {
+        let batches = column_batches(10, 4);
+        assert_eq!(batches, vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7], vec![8, 9]]);
+        let flat: Vec<usize> = batches.into_iter().flatten().collect();
+        assert_eq!(flat, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn streamed_blocks_reassemble_full_kernel() {
+        let mut rng = Pcg64::seed(4);
+        let x = random_mat(&mut rng, 3, 17);
+        let kern = Kernel::paper_poly2();
+        let full = full_kernel_matrix(&x, kern);
+        let mut src = NativeBlockSource::new(x, kern, 17);
+        let mut rebuilt = Mat::zeros(17, 17);
+        for batch in column_batches(17, 5) {
+            let blk = src.block(&batch);
+            for (bj, &j) in batch.iter().enumerate() {
+                for i in 0..17 {
+                    rebuilt[(i, j)] = blk[(i, bj)];
+                }
+            }
+        }
+        assert_mat_close(&rebuilt, &full, 1e-12);
+    }
+}

@@ -1,0 +1,32 @@
+//! # rkc — Randomized Kernel Clustering
+//!
+//! Production reproduction of *"A Randomized Approach to Efficient Kernel
+//! Clustering"* (Pourkamali-Anaraki & Becker, IEEE GlobalSIP 2016): one-pass
+//! SRHT-preconditioned randomized low-rank kernel approximation followed by
+//! standard K-means on the embedded points, with Nyström / exact-EVD /
+//! full-kernel baselines, a streaming rust coordinator, and XLA-compiled
+//! JAX+Pallas compute artifacts (see DESIGN.md for the full architecture).
+//!
+//! Layer map:
+//! - [`coordinator`] — L3: the streaming pipeline (scheduler, sketch
+//!   accumulator, recovery, K-means driver, metrics).
+//! - [`runtime`] — PJRT wrapper loading `artifacts/*.hlo.txt` (L2/L1
+//!   compute compiled from JAX + Pallas by `python/compile/aot.py`).
+//! - [`lowrank`], [`sketch`], [`kernels`], [`clustering`], [`linalg`],
+//!   [`rng`], [`data`], [`metrics`], [`config`], [`bench_harness`],
+//!   [`util`] — the substrates, all implemented from scratch.
+
+pub mod clustering;
+pub mod data;
+pub mod kernels;
+pub mod linalg;
+pub mod lowrank;
+pub mod rng;
+pub mod sketch;
+pub mod util;
+
+pub mod bench_harness;
+pub mod config;
+pub mod coordinator;
+pub mod metrics;
+pub mod runtime;

@@ -1,0 +1,233 @@
+//! Symmetric eigendecomposition (cyclic Jacobi) and power iteration.
+//!
+//! Jacobi is exact-to-roundoff, unconditionally stable, and ideal for the
+//! tiny matrices this crate diagonalizes on the hot path (the `r × r`
+//! core of the one-pass recovery, the `m × m` Nyström inner matrix with
+//! m ≤ ~150, and test-scale full kernels). Power/subspace iteration
+//! provides spectral norms and the "exact" top-r baseline at n = 4096
+//! without ever materializing K (see lowrank::exact).
+
+use super::Mat;
+
+/// Cyclic Jacobi eigendecomposition of a symmetric matrix.
+/// Returns `(eigenvalues, eigenvectors)` sorted by *descending*
+/// eigenvalue; eigenvectors are the columns of the returned matrix.
+pub fn jacobi_eig(a: &Mat) -> (Vec<f64>, Mat) {
+    assert_eq!(a.rows(), a.cols(), "jacobi_eig needs a square matrix");
+    let n = a.rows();
+    let mut m = a.clone();
+    m.symmetrize();
+    let mut v = Mat::identity(n);
+
+    let max_sweeps = 64;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        let scale = m.frobenius_norm().max(1e-300);
+        if off.sqrt() <= 1e-14 * scale {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() <= 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Rotate rows/cols p and q of m.
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                // Accumulate the rotation into v.
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    let mut order: Vec<usize> = (0..n).collect();
+    let evals: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    order.sort_by(|&i, &j| evals[j].partial_cmp(&evals[i]).unwrap());
+    let sorted_evals: Vec<f64> = order.iter().map(|&i| evals[i]).collect();
+    let sorted_vecs = Mat::from_fn(n, n, |i, j| v[(i, order[j])]);
+    (sorted_evals, sorted_vecs)
+}
+
+/// Largest-magnitude eigenvalue estimate of a symmetric operator given as
+/// a matvec closure, via power iteration with a deterministic start.
+pub fn power_iteration(
+    n: usize,
+    matvec: impl Fn(&[f64]) -> Vec<f64>,
+    iters: usize,
+) -> f64 {
+    let mut v: Vec<f64> = (0..n)
+        .map(|i| ((i * 2654435761 + 1) % 1000) as f64 / 1000.0 - 0.5)
+        .collect();
+    normalize(&mut v);
+    let mut lambda = 0.0;
+    for _ in 0..iters {
+        let mut w = matvec(&v);
+        lambda = super::dot(&v, &w);
+        let nw = norm(&w);
+        if nw < 1e-300 {
+            return 0.0;
+        }
+        for x in &mut w {
+            *x /= nw;
+        }
+        v = w;
+    }
+    lambda
+}
+
+/// Spectral norm of an explicit matrix (`||A||_2`) via power iteration on
+/// `AᵀA` (handles non-symmetric and rectangular inputs).
+pub fn spectral_norm(a: &Mat, iters: usize) -> f64 {
+    let lambda = power_iteration(
+        a.cols(),
+        |v| {
+            // AᵀA v
+            let av: Vec<f64> = (0..a.rows()).map(|i| super::dot(a.row(i), v)).collect();
+            let mut out = vec![0.0; a.cols()];
+            for i in 0..a.rows() {
+                let r = a.row(i);
+                let s = av[i];
+                for (o, &x) in out.iter_mut().zip(r) {
+                    *o += s * x;
+                }
+            }
+            out
+        },
+        iters,
+    );
+    lambda.max(0.0).sqrt()
+}
+
+fn norm(v: &[f64]) -> f64 {
+    v.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+fn normalize(v: &mut [f64]) {
+    let n = norm(v);
+    if n > 0.0 {
+        for x in v.iter_mut() {
+            *x /= n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::testutil::{assert_mat_close, random_mat};
+    use crate::rng::Pcg64;
+
+    fn random_symmetric(seed: u64, n: usize) -> Mat {
+        let mut rng = Pcg64::seed(seed);
+        let mut a = random_mat(&mut rng, n, n);
+        a.symmetrize();
+        a
+    }
+
+    #[test]
+    fn eig_reconstructs_matrix() {
+        for (seed, n) in [(1, 2), (2, 5), (3, 16), (4, 40)] {
+            let a = random_symmetric(seed, n);
+            let (evals, v) = jacobi_eig(&a);
+            // A = V diag(evals) Vᵀ
+            let mut lv = v.clone();
+            for i in 0..n {
+                for j in 0..n {
+                    lv[(i, j)] *= evals[j];
+                }
+            }
+            assert_mat_close(&lv.matmul_t(&v), &a, 1e-9);
+            // V orthonormal
+            assert_mat_close(&v.t_matmul(&v), &Mat::identity(n), 1e-10);
+            // descending order
+            for w in evals.windows(2) {
+                assert!(w[0] >= w[1] - 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn eig_known_2x2() {
+        let a = Mat::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let (evals, _) = jacobi_eig(&a);
+        assert!((evals[0] - 3.0).abs() < 1e-12);
+        assert!((evals[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eig_diagonal_is_identity_decomposition() {
+        let a = Mat::from_vec(3, 3, vec![5., 0., 0., 0., -2., 0., 0., 0., 9.]);
+        let (evals, v) = jacobi_eig(&a);
+        assert_eq!(evals, vec![9.0, 5.0, -2.0]);
+        // each eigenvector is a signed canonical basis vector
+        for j in 0..3 {
+            let col = v.col(j);
+            let nnz = col.iter().filter(|x| x.abs() > 1e-12).count();
+            assert_eq!(nnz, 1);
+        }
+    }
+
+    #[test]
+    fn eig_psd_gram_has_nonnegative_spectrum() {
+        let mut rng = Pcg64::seed(8);
+        let b = random_mat(&mut rng, 12, 6);
+        let g = b.t_matmul(&b); // 6x6 PSD
+        let (evals, _) = jacobi_eig(&g);
+        assert!(evals.iter().all(|&l| l > -1e-10), "{evals:?}");
+    }
+
+    #[test]
+    fn spectral_norm_matches_eig() {
+        let a = random_symmetric(9, 10);
+        let (evals, _) = jacobi_eig(&a);
+        let want = evals.iter().fold(0.0f64, |m, l| m.max(l.abs()));
+        let got = spectral_norm(&a, 300);
+        assert!((got - want).abs() < 1e-6 * want.max(1.0), "{got} vs {want}");
+    }
+
+    #[test]
+    fn trace_norm_of_psd_equals_trace() {
+        let mut rng = Pcg64::seed(10);
+        let b = random_mat(&mut rng, 15, 7);
+        let g = b.t_matmul(&b);
+        assert!((g.trace_norm_symmetric() - g.trace()).abs() < 1e-8);
+    }
+
+    #[test]
+    fn power_iteration_on_closure() {
+        // operator = diag(1, 2, 7)
+        let lambda = power_iteration(
+            3,
+            |v| vec![v[0], 2.0 * v[1], 7.0 * v[2]],
+            200,
+        );
+        assert!((lambda - 7.0).abs() < 1e-9);
+    }
+}

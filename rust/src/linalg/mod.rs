@@ -1,0 +1,311 @@
+//! Small dense linear algebra, from scratch.
+//!
+//! The one-pass recovery (Alg. 1 steps 3–6) needs: a thin Householder QR
+//! of the `n × r'` sketch, an `r' × r` least-squares solve, and a Jacobi
+//! eigendecomposition of the tiny `r × r` core. Baselines additionally
+//! need PSD pseudo-inverses (Nyström) and full symmetric
+//! eigendecompositions at test scale. All of it is latency-bound small
+//! algebra, so it lives in rust next to the coordinator instead of paying
+//! a PJRT round trip; the O(n²) bulk work stays on the XLA artifacts.
+//!
+//! Storage is row-major `f64` — the accuracy of the recovery step matters
+//! more than memory here (the matrices are `n × r'` at most).
+
+mod eig;
+mod qr;
+mod solve;
+
+pub use eig::{jacobi_eig, power_iteration, spectral_norm};
+pub use qr::{householder_qr, leading_left_singular_vectors, orthonormal_columns};
+pub use solve::{cholesky, least_squares, pinv, pinv_psd, pinv_psd_rank, solve_lower, solve_upper};
+
+/// Dense row-major matrix of `f64`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer/shape mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        Mat::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
+    }
+
+    /// `self @ other` with the cache-friendly i-k-j loop order.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            let orow = out.row_mut(i);
+            for (k, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = other.row(k);
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += aik * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// `self^T @ other` without materializing the transpose.
+    pub fn t_matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
+        let mut out = Mat::zeros(self.cols, other.cols);
+        for k in 0..self.rows {
+            let arow = self.row(k);
+            let brow = other.row(k);
+            for (i, &aki) in arow.iter().enumerate() {
+                if aki == 0.0 {
+                    continue;
+                }
+                let orow = out.row_mut(i);
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += aki * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// `self @ other^T` without materializing the transpose.
+    pub fn matmul_t(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_t shape mismatch");
+        Mat::from_fn(self.rows, other.rows, |i, j| {
+            dot(self.row(i), other.row(j))
+        })
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Symmetrize in place: `A <- (A + A^T) / 2` (square only).
+    pub fn symmetrize(&mut self) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                let m = 0.5 * (self[(i, j)] + self[(j, i)]);
+                self[(i, j)] = m;
+                self[(j, i)] = m;
+            }
+        }
+    }
+
+    pub fn frobenius_norm(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    pub fn trace(&self) -> f64 {
+        assert_eq!(self.rows, self.cols);
+        (0..self.rows).map(|i| self[(i, i)]).sum()
+    }
+
+    /// Trace norm `||A||_* = sum |lambda_i|` of a symmetric matrix.
+    pub fn trace_norm_symmetric(&self) -> f64 {
+        let (evals, _) = jacobi_eig(self);
+        evals.iter().map(|l| l.abs()).sum()
+    }
+
+    /// Gather a subset of rows into a new matrix.
+    pub fn select_rows(&self, idx: &[usize]) -> Mat {
+        Mat::from_fn(idx.len(), self.cols, |i, j| self[(idx[i], j)])
+    }
+
+    /// Gather a subset of columns into a new matrix.
+    pub fn select_cols(&self, idx: &[usize]) -> Mat {
+        Mat::from_fn(self.rows, idx.len(), |i, j| self[(i, idx[j])])
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, v| m.max(v.abs()))
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Test-only helpers shared across the crate's unit tests.
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::Mat;
+    use crate::rng::{Pcg64, Rng};
+
+    pub(crate) fn random_mat(rng: &mut Pcg64, rows: usize, cols: usize) -> Mat {
+        Mat::from_fn(rows, cols, |_, _| rng.normal())
+    }
+
+    pub(crate) fn assert_mat_close(a: &Mat, b: &Mat, tol: f64) {
+        assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()));
+        let diff = a.sub(b).max_abs();
+        assert!(diff < tol, "matrices differ by {diff} > {tol}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use testutil::{assert_mat_close, random_mat};
+
+    #[test]
+    fn matmul_matches_manual_small() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Mat::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_variants_agree() {
+        let mut rng = Pcg64::seed(1);
+        let a = random_mat(&mut rng, 7, 5);
+        let b = random_mat(&mut rng, 5, 6);
+        let base = a.matmul(&b);
+        assert_mat_close(&a.transpose().t_matmul(&b), &base, 1e-12);
+        assert_mat_close(&a.matmul_t(&b.transpose()), &base, 1e-12);
+    }
+
+    #[test]
+    fn matmul_identity_is_noop() {
+        let mut rng = Pcg64::seed(2);
+        let a = random_mat(&mut rng, 6, 6);
+        assert_mat_close(&a.matmul(&Mat::identity(6)), &a, 1e-15);
+        assert_mat_close(&Mat::identity(6).matmul(&a), &a, 1e-15);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg64::seed(3);
+        let a = random_mat(&mut rng, 4, 9);
+        assert_mat_close(&a.transpose().transpose(), &a, 0.0 + 1e-300);
+    }
+
+    #[test]
+    fn select_rows_cols() {
+        let a = Mat::from_fn(5, 4, |i, j| (i * 10 + j) as f64);
+        let r = a.select_rows(&[4, 0]);
+        assert_eq!(r.row(0), &[40., 41., 42., 43.]);
+        assert_eq!(r.row(1), &[0., 1., 2., 3.]);
+        let c = a.select_cols(&[3, 1]);
+        assert_eq!(c.row(2), &[23., 21.]);
+    }
+
+    #[test]
+    fn frobenius_and_trace() {
+        let a = Mat::from_vec(2, 2, vec![3., 0., 4., 2.]);
+        assert!((a.frobenius_norm() - (9.0f64 + 16. + 4.).sqrt()).abs() < 1e-12);
+        assert_eq!(a.trace(), 5.0);
+    }
+
+    #[test]
+    fn symmetrize_produces_symmetric() {
+        let mut rng = Pcg64::seed(4);
+        let mut a = random_mat(&mut rng, 8, 8);
+        a.symmetrize();
+        assert_mat_close(&a.transpose(), &a, 1e-15);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul shape mismatch")]
+    fn matmul_shape_mismatch_panics() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(2, 3);
+        let _ = a.matmul(&b);
+    }
+}

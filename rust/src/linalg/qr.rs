@@ -1,0 +1,189 @@
+//! Thin Householder QR.
+//!
+//! Used for: the orthonormal basis `Q` of the sketch `W` (Alg. 1 step 3),
+//! the least-squares solve of `B (Qᵀ Ω) = Qᵀ W` (step 4), and the
+//! re-orthonormalization inside subspace iteration (exact-EVD baseline).
+//! Householder reflections give unconditional orthogonality — classical
+//! Gram–Schmidt on a preconditioned random sketch would be asking for
+//! trouble at r' ≈ 20.
+
+use super::Mat;
+
+/// Thin QR of `a` (m × n, m >= n): returns `(q, r)` with `q` m × n having
+/// orthonormal columns and `r` n × n upper-triangular, `a = q r`.
+pub fn householder_qr(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = (a.rows(), a.cols());
+    assert!(m >= n, "householder_qr expects a tall matrix, got {m}x{n}");
+    let mut r = a.clone();
+    // Householder vectors, stored column by column (v[0..k] = 0 implied).
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+
+    for k in 0..n {
+        // Build the reflector annihilating r[k+1.., k].
+        let mut v: Vec<f64> = (k..m).map(|i| r[(i, k)]).collect();
+        let alpha = -v[0].signum() * norm(&v);
+        let mut vk = v.clone();
+        vk[0] -= alpha;
+        let vnorm = norm(&vk);
+        if vnorm > 0.0 {
+            for x in &mut vk {
+                *x /= vnorm;
+            }
+            // Apply I - 2 v vᵀ to the trailing block of r.
+            for j in k..n {
+                let mut s = 0.0;
+                for i in k..m {
+                    s += vk[i - k] * r[(i, j)];
+                }
+                s *= 2.0;
+                for i in k..m {
+                    r[(i, j)] -= s * vk[i - k];
+                }
+            }
+        }
+        v.clear();
+        vs.push(vk);
+    }
+
+    // Accumulate thin Q by applying the reflectors to the first n columns
+    // of the identity, in reverse order.
+    let mut q = Mat::zeros(m, n);
+    for j in 0..n {
+        q[(j, j)] = 1.0;
+    }
+    for k in (0..n).rev() {
+        let vk = &vs[k];
+        if vk.iter().all(|&x| x == 0.0) {
+            continue;
+        }
+        for j in 0..n {
+            let mut s = 0.0;
+            for i in k..m {
+                s += vk[i - k] * q[(i, j)];
+            }
+            s *= 2.0;
+            for i in k..m {
+                q[(i, j)] -= s * vk[i - k];
+            }
+        }
+    }
+
+    // Zero the strictly-lower part of r and return the n × n block.
+    let rr = Mat::from_fn(n, n, |i, j| if j >= i { r[(i, j)] } else { 0.0 });
+    (q, rr)
+}
+
+/// Orthonormal basis for the column space of `a`, truncated to the first
+/// `k` columns. NOTE: the first k QR columns span the first k *input*
+/// columns, not the dominant subspace — use
+/// [`leading_left_singular_vectors`] when the best rank-k basis matters
+/// (Alg. 1 step 3 explicitly allows either; the SVD variant is what
+/// makes oversampling pay off).
+pub fn orthonormal_columns(a: &Mat, k: usize) -> Mat {
+    assert!(k <= a.cols(), "cannot take {k} basis vectors from {} cols", a.cols());
+    let (q, _) = householder_qr(a);
+    Mat::from_fn(a.rows(), k, |i, j| q[(i, j)])
+}
+
+/// The `k` leading left singular vectors of a tall matrix `a` (m × n,
+/// m ≥ n, k ≤ n), via QR + eigendecomposition of the small `R Rᵀ`:
+/// `a = Q R`, `R Rᵀ = U Σ² Uᵀ` ⇒ left singular vectors are `Q U`.
+/// This is Alg. 1 step 3's "r leading left singular vectors of W".
+pub fn leading_left_singular_vectors(a: &Mat, k: usize) -> Mat {
+    assert!(k <= a.cols(), "cannot take {k} singular vectors from {} cols", a.cols());
+    let (q, r) = householder_qr(a);
+    let rrt = r.matmul_t(&r); // n × n, symmetric PSD
+    let (_evals, u) = super::jacobi_eig(&rrt); // descending
+    let uk = Mat::from_fn(u.rows(), k, |i, j| u[(i, j)]);
+    q.matmul(&uk)
+}
+
+fn norm(v: &[f64]) -> f64 {
+    v.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::testutil::{assert_mat_close, random_mat};
+    use crate::rng::Pcg64;
+
+    fn check_qr(m: usize, n: usize, seed: u64) {
+        let mut rng = Pcg64::seed(seed);
+        let a = random_mat(&mut rng, m, n);
+        let (q, r) = householder_qr(&a);
+        assert_eq!((q.rows(), q.cols()), (m, n));
+        assert_eq!((r.rows(), r.cols()), (n, n));
+        // reconstruction
+        assert_mat_close(&q.matmul(&r), &a, 1e-10);
+        // orthonormality
+        assert_mat_close(&q.t_matmul(&q), &Mat::identity(n), 1e-12);
+        // upper-triangularity
+        for i in 0..n {
+            for j in 0..i {
+                assert_eq!(r[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn qr_reconstructs_various_shapes() {
+        check_qr(5, 5, 1);
+        check_qr(20, 7, 2);
+        check_qr(100, 12, 3);
+        check_qr(64, 1, 4);
+    }
+
+    #[test]
+    fn qr_handles_rank_deficiency_gracefully() {
+        // two identical columns: Q must still be orthonormal
+        let mut rng = Pcg64::seed(5);
+        let base = random_mat(&mut rng, 30, 1);
+        let a = Mat::from_fn(30, 3, |i, j| if j < 2 { base[(i, 0)] } else { i as f64 });
+        let (q, r) = householder_qr(&a);
+        assert_mat_close(&q.t_matmul(&q), &Mat::identity(3), 1e-10);
+        assert_mat_close(&q.matmul(&r), &a, 1e-9);
+    }
+
+    #[test]
+    fn orthonormal_columns_spans_leading_subspace() {
+        let mut rng = Pcg64::seed(6);
+        let a = random_mat(&mut rng, 40, 10);
+        let q = orthonormal_columns(&a, 4);
+        assert_eq!((q.rows(), q.cols()), (40, 4));
+        assert_mat_close(&q.t_matmul(&q), &Mat::identity(4), 1e-12);
+        // the first column of a is in span(q): ||(I - QQᵀ) a_0|| ≈ 0
+        let a0 = Mat::from_fn(40, 1, |i, _| a[(i, 0)]);
+        let proj = q.matmul(&q.t_matmul(&a0));
+        assert_mat_close(&proj, &a0, 1e-10);
+    }
+
+    #[test]
+    fn leading_singular_vectors_beat_qr_truncation() {
+        // a = [weak strong strong]: the dominant 1-dim subspace is NOT
+        // spanned by the first column, so QR truncation misses it
+        let mut rng = Pcg64::seed(7);
+        let strong = random_mat(&mut rng, 50, 1);
+        let weak = random_mat(&mut rng, 50, 1);
+        let a = Mat::from_fn(50, 3, |i, j| match j {
+            0 => 0.1 * weak[(i, 0)],
+            1 => 10.0 * strong[(i, 0)],
+            _ => 10.0 * strong[(i, 0)] + 0.05 * weak[(i, 0)],
+        });
+        let u = leading_left_singular_vectors(&a, 1);
+        assert_mat_close(&u.t_matmul(&u), &Mat::identity(1), 1e-10);
+        // u aligns with `strong`, not with the first column
+        let s_norm = strong.frobenius_norm();
+        let align: f64 = (0..50).map(|i| u[(i, 0)] * strong[(i, 0)] / s_norm).sum();
+        assert!(align.abs() > 0.99, "alignment {align}");
+        // and the projection residual of the strong direction is tiny
+        let proj = u.matmul(&u.t_matmul(&strong));
+        assert!(proj.sub(&strong).frobenius_norm() < 0.02 * s_norm);
+    }
+
+    #[test]
+    #[should_panic(expected = "tall matrix")]
+    fn qr_rejects_wide() {
+        let _ = householder_qr(&Mat::zeros(3, 5));
+    }
+}

@@ -1,0 +1,249 @@
+//! Triangular solves, least squares, Cholesky, and PSD pseudo-inverse.
+//!
+//! `least_squares` is the engine of Alg. 1 step 4 (`B (QᵀΩ) = QᵀW` is
+//! solved as a transposed least-squares problem); `pinv_psd` is the inner
+//! inverse of the Nyström baseline.
+
+use super::{householder_qr, jacobi_eig, Mat};
+
+/// Solve `L x = b` with `L` lower-triangular (forward substitution).
+pub fn solve_lower(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert_eq!(l.cols(), n);
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for j in 0..i {
+            s -= l[(i, j)] * x[j];
+        }
+        let d = l[(i, i)];
+        assert!(d.abs() > 1e-300, "singular lower-triangular solve");
+        x[i] = s / d;
+    }
+    x
+}
+
+/// Solve `U x = b` with `U` upper-triangular (back substitution).
+pub fn solve_upper(u: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = u.rows();
+    assert_eq!(u.cols(), n);
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        for j in (i + 1)..n {
+            s -= u[(i, j)] * x[j];
+        }
+        let d = u[(i, i)];
+        assert!(d.abs() > 1e-300, "singular upper-triangular solve");
+        x[i] = s / d;
+    }
+    x
+}
+
+/// Minimum-norm least-squares solution of `A X = B` (A m × n tall,
+/// full column rank) via QR: `X = R⁻¹ Qᵀ B`, one column of B at a time.
+pub fn least_squares(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows(), b.rows(), "least_squares row mismatch");
+    let (q, r) = householder_qr(a);
+    let qtb = q.t_matmul(b); // n × k
+    let mut x = Mat::zeros(a.cols(), b.cols());
+    for j in 0..b.cols() {
+        let col: Vec<f64> = (0..qtb.rows()).map(|i| qtb[(i, j)]).collect();
+        let sol = solve_upper(&r, &col);
+        for (i, v) in sol.into_iter().enumerate() {
+            x[(i, j)] = v;
+        }
+    }
+    x
+}
+
+/// Cholesky factor `L` (lower) of a symmetric positive-definite matrix.
+pub fn cholesky(a: &Mat) -> Option<Mat> {
+    let n = a.rows();
+    assert_eq!(a.cols(), n);
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[(i, j)];
+            for k in 0..j {
+                s -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None; // not positive definite
+                }
+                l[(i, i)] = s.sqrt();
+            } else {
+                l[(i, j)] = s / l[(j, j)];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Moore–Penrose pseudo-inverse of a symmetric PSD matrix via its
+/// eigendecomposition, inverting only eigenvalues above a relative
+/// threshold (the Nyström inner inverse `W_m⁺`).
+pub fn pinv_psd(a: &Mat, rel_tol: f64) -> Mat {
+    let (evals, v) = jacobi_eig(a);
+    let lmax = evals.first().copied().unwrap_or(0.0).max(0.0);
+    let tol = rel_tol * lmax.max(1e-300);
+    let n = a.rows();
+    // V diag(1/l where l > tol) Vᵀ
+    let mut scaled = v.clone();
+    for j in 0..n {
+        let inv = if evals[j] > tol { 1.0 / evals[j] } else { 0.0 };
+        for i in 0..n {
+            scaled[(i, j)] *= inv;
+        }
+    }
+    scaled.matmul_t(&v)
+}
+
+/// Moore–Penrose pseudo-inverse of a general (possibly rank-deficient)
+/// matrix via the eigendecomposition of `MᵀM`: `M⁺ = V Σ⁻¹ Uᵀ` with
+/// `MᵀM = V Σ² Vᵀ`, `U = M V Σ⁻¹`, inverting only singular values above
+/// `rel_tol · σ_max`. Used by the one-pass recovery where `QᵀΩ` can be
+/// numerically rank-deficient (rank(W) < r' when K itself has low rank).
+pub fn pinv(m: &Mat, rel_tol: f64) -> Mat {
+    let mtm = m.t_matmul(m); // n × n PSD
+    let (evals, v) = jacobi_eig(&mtm);
+    let smax = evals.first().copied().unwrap_or(0.0).max(0.0).sqrt();
+    let tol = rel_tol * smax.max(1e-300);
+    let n = m.cols();
+    // M⁺ = Σ_i (1/σ_i) v_i u_iᵀ where u_i = M v_i / σ_i
+    let mut out = Mat::zeros(n, m.rows());
+    for i in 0..n {
+        let sigma = evals[i].max(0.0).sqrt();
+        if sigma <= tol {
+            continue;
+        }
+        // u = M v_i / σ
+        let mut u = vec![0.0; m.rows()];
+        for (row, uval) in u.iter_mut().enumerate() {
+            let mut s = 0.0;
+            for k in 0..n {
+                s += m[(row, k)] * v[(k, i)];
+            }
+            *uval = s / sigma;
+        }
+        for r in 0..n {
+            let coef = v[(r, i)] / sigma;
+            for (c, &uval) in u.iter().enumerate() {
+                out[(r, c)] += coef * uval;
+            }
+        }
+    }
+    out
+}
+
+/// Rank-limited PSD pseudo-inverse: invert only the top `r` eigenvalues
+/// (the rank-restricted Nyström variant used for the paper's r = 2).
+pub fn pinv_psd_rank(a: &Mat, r: usize, rel_tol: f64) -> Mat {
+    let (evals, v) = jacobi_eig(a);
+    let lmax = evals.first().copied().unwrap_or(0.0).max(0.0);
+    let tol = rel_tol * lmax.max(1e-300);
+    let n = a.rows();
+    let mut scaled = v.clone();
+    for j in 0..n {
+        let inv = if j < r && evals[j] > tol { 1.0 / evals[j] } else { 0.0 };
+        for i in 0..n {
+            scaled[(i, j)] *= inv;
+        }
+    }
+    scaled.matmul_t(&v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::testutil::{assert_mat_close, random_mat};
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn triangular_solves_roundtrip() {
+        let l = Mat::from_vec(3, 3, vec![2., 0., 0., 1., 3., 0., 4., 5., 6.]);
+        let x = vec![1.0, -2.0, 0.5];
+        let b: Vec<f64> = (0..3).map(|i| super::super::dot(l.row(i), &x)).collect();
+        let got = solve_lower(&l, &b);
+        for (g, w) in got.iter().zip(&x) {
+            assert!((g - w).abs() < 1e-12);
+        }
+        let u = l.transpose();
+        let b: Vec<f64> = (0..3).map(|i| super::super::dot(u.row(i), &x)).collect();
+        let got = solve_upper(&u, &b);
+        for (g, w) in got.iter().zip(&x) {
+            assert!((g - w).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn least_squares_exact_when_consistent() {
+        let mut rng = Pcg64::seed(1);
+        let a = random_mat(&mut rng, 12, 4);
+        let x_true = random_mat(&mut rng, 4, 3);
+        let b = a.matmul(&x_true);
+        let x = least_squares(&a, &b);
+        assert_mat_close(&x, &x_true, 1e-10);
+    }
+
+    #[test]
+    fn least_squares_minimizes_residual() {
+        // overdetermined inconsistent system: residual must be orthogonal
+        // to the column space (normal equations)
+        let mut rng = Pcg64::seed(2);
+        let a = random_mat(&mut rng, 20, 5);
+        let b = random_mat(&mut rng, 20, 2);
+        let x = least_squares(&a, &b);
+        let resid = a.matmul(&x).sub(&b);
+        let atr = a.t_matmul(&resid);
+        assert!(atr.max_abs() < 1e-10, "AᵀR = {}", atr.max_abs());
+    }
+
+    #[test]
+    fn cholesky_roundtrip_and_rejects_indefinite() {
+        let mut rng = Pcg64::seed(3);
+        let b = random_mat(&mut rng, 10, 6);
+        let mut a = b.t_matmul(&b);
+        for i in 0..6 {
+            a[(i, i)] += 0.5; // well-conditioned SPD
+        }
+        let l = cholesky(&a).expect("SPD must factor");
+        assert_mat_close(&l.matmul_t(&l), &a, 1e-10);
+
+        let indef = Mat::from_vec(2, 2, vec![1., 2., 2., 1.]); // eigenvalues 3, -1
+        assert!(cholesky(&indef).is_none());
+    }
+
+    #[test]
+    fn pinv_psd_is_inverse_on_range() {
+        let mut rng = Pcg64::seed(4);
+        let b = random_mat(&mut rng, 8, 3);
+        let a = b.t_matmul(&b); // full-rank 3x3 PSD
+        let p = pinv_psd(&a, 1e-12);
+        assert_mat_close(&p.matmul(&a), &Mat::identity(3), 1e-8);
+    }
+
+    #[test]
+    fn pinv_psd_handles_rank_deficiency() {
+        let mut rng = Pcg64::seed(5);
+        let b = random_mat(&mut rng, 6, 2);
+        let bb = b.matmul_t(&b); // 6x6, rank 2
+        let p = pinv_psd(&bb, 1e-10);
+        // A P A = A (Moore–Penrose condition 1)
+        assert_mat_close(&bb.matmul(&p).matmul(&bb), &bb, 1e-8);
+        // P A P = P (condition 2)
+        assert_mat_close(&p.matmul(&bb).matmul(&p), &p, 1e-8);
+    }
+
+    #[test]
+    fn pinv_rank_restricts_spectrum() {
+        let a = Mat::from_vec(3, 3, vec![4., 0., 0., 0., 2., 0., 0., 0., 1.]);
+        let p = pinv_psd_rank(&a, 2, 1e-12);
+        assert!((p[(0, 0)] - 0.25).abs() < 1e-12);
+        assert!((p[(1, 1)] - 0.5).abs() < 1e-12);
+        assert_eq!(p[(2, 2)], 0.0);
+    }
+}

@@ -1,0 +1,101 @@
+//! Approximation-error measurement.
+//!
+//! The paper reports the normalized kernel approximation error
+//! `‖K − K̂‖_F / ‖K‖_F` (Table 1, Fig. 3a) and Theorem 1 bounds the
+//! clustering suboptimality by `2‖E‖_*` / `tr(E)`. The streamed variant
+//! recomputes kernel blocks on the fly and compares them to `YᵀY` block
+//! by block, so the measurement itself respects the O(r'n) memory budget.
+
+use crate::kernels::BlockSource;
+use crate::linalg::Mat;
+
+use super::Embedding;
+
+/// Dense `‖K − K̂‖_F / ‖K‖_F` with `K̂ = YᵀY` (test scale).
+pub fn normalized_frobenius_error(kmat: &Mat, emb: &Embedding) -> f64 {
+    let khat = emb.y.t_matmul(&emb.y);
+    kmat.sub(&khat).frobenius_norm() / kmat.frobenius_norm().max(1e-300)
+}
+
+/// Streamed `‖K − K̂‖_F / ‖K‖_F`: one extra pass over kernel blocks,
+/// never holding more than one block.
+pub fn streamed_frobenius_error(
+    src: &mut dyn BlockSource,
+    emb: &Embedding,
+    batch: usize,
+) -> f64 {
+    let n = src.n();
+    assert_eq!(emb.n(), n, "embedding size mismatch");
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for cols in crate::kernels::column_batches(n, batch) {
+        let kb = src.block(&cols); // n_padded × b
+        let khat_b = emb.reconstruct_block(&cols); // n × b
+        for (bj, _) in cols.iter().enumerate() {
+            for i in 0..n {
+                let kij = kb[(i, bj)];
+                let d = kij - khat_b[(i, bj)];
+                num += d * d;
+                den += kij * kij;
+            }
+        }
+    }
+    (num / den.max(1e-300)).sqrt()
+}
+
+/// Trace-norm of the error `E = K − K̂` for a PSD pair at test scale
+/// (Theorem 1's right-hand side). Uses the symmetric eigendecomposition
+/// of the dense error matrix.
+pub fn trace_norm_error_psd(kmat: &Mat, emb: &Embedding) -> f64 {
+    let khat = emb.y.t_matmul(&emb.y);
+    let e = kmat.sub(&khat);
+    e.trace_norm_symmetric()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{full_kernel_matrix, Kernel, NativeBlockSource};
+    use crate::linalg::testutil::random_mat;
+    use crate::lowrank::exact_topr_dense;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn streamed_equals_dense_error() {
+        let mut rng = Pcg64::seed(1);
+        let x = random_mat(&mut rng, 3, 40);
+        let kern = Kernel::Rbf { gamma: 0.8 };
+        let k = full_kernel_matrix(&x, kern);
+        let emb = exact_topr_dense(&k, 3);
+        let dense = normalized_frobenius_error(&k, &emb);
+        let mut src = NativeBlockSource::pow2(x, kern);
+        for batch in [1, 7, 40] {
+            let streamed = streamed_frobenius_error(&mut src, &emb, batch);
+            assert!((dense - streamed).abs() < 1e-10, "batch {batch}: {dense} vs {streamed}");
+        }
+    }
+
+    #[test]
+    fn perfect_embedding_has_zero_error() {
+        let mut rng = Pcg64::seed(2);
+        let x = random_mat(&mut rng, 2, 25);
+        let k = full_kernel_matrix(&x, Kernel::paper_poly2()); // rank 3
+        let emb = exact_topr_dense(&k, 3);
+        assert!(normalized_frobenius_error(&k, &emb) < 1e-8);
+        assert!(trace_norm_error_psd(&k, &emb).abs() < 1e-6 * k.trace());
+    }
+
+    #[test]
+    fn trace_norm_equals_trace_gap_for_best_rank_r() {
+        // for the best rank-r approx of a PSD matrix, E is PSD and
+        // ‖E‖_* = tr(E) = Σ_{i>r} λ_i
+        let mut rng = Pcg64::seed(3);
+        let x = random_mat(&mut rng, 4, 20);
+        let k = full_kernel_matrix(&x, Kernel::Rbf { gamma: 0.5 });
+        let emb = exact_topr_dense(&k, 4);
+        let (evals, _) = crate::linalg::jacobi_eig(&k);
+        let tail: f64 = evals[4..].iter().map(|l| l.max(0.0)).sum();
+        let tn = trace_norm_error_psd(&k, &emb);
+        assert!((tn - tail).abs() < 1e-7 * k.trace().max(1.0), "{tn} vs {tail}");
+    }
+}

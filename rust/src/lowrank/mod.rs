@@ -1,0 +1,48 @@
+//! Low-rank kernel approximation: the paper's one-pass randomized method
+//! and every baseline it is evaluated against.
+//!
+//! All methods produce an [`Embedding`] `Y` (r × n) with `K ≈ YᵀY`, so
+//! standard K-means on `Y` approximates kernel K-means on `K`
+//! (Theorem 1). Approximation error is measured *streamed* — blocks of
+//! `K` are recomputed on the fly and compared to `YᵀY` block by block —
+//! so measuring error never violates the O(r'n) memory budget.
+
+mod error;
+mod exact;
+mod nystrom;
+mod onepass;
+mod select;
+
+pub use error::{normalized_frobenius_error, streamed_frobenius_error, trace_norm_error_psd};
+pub use exact::{exact_topr_dense, exact_topr_streaming};
+pub use nystrom::{nystrom, NystromSampling};
+pub use onepass::{one_pass_recovery, OnePassSketch};
+pub use select::{infer_clusters_by_eigengap, probe_spectrum, select_rank_by_subset};
+
+use crate::linalg::Mat;
+
+/// A rank-r PSD factorization `K ≈ YᵀY` restricted to the unpadded
+/// samples. Columns of `y` are the embedded points fed to K-means.
+#[derive(Clone, Debug)]
+pub struct Embedding {
+    /// r × n embedding (n = real sample count, padding already dropped)
+    pub y: Mat,
+    /// recovered eigenvalues (descending, clamped at zero), length r
+    pub eigenvalues: Vec<f64>,
+}
+
+impl Embedding {
+    pub fn rank(&self) -> usize {
+        self.y.rows()
+    }
+
+    pub fn n(&self) -> usize {
+        self.y.cols()
+    }
+
+    /// Reconstruct a block of the approximate kernel `K̂[:, cols] = Yᵀ Y_J`.
+    pub fn reconstruct_block(&self, cols: &[usize]) -> Mat {
+        let yj = self.y.select_cols(cols);
+        self.y.t_matmul(&yj)
+    }
+}

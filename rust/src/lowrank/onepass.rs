@@ -1,0 +1,265 @@
+//! The paper's contribution: one-pass SRHT-preconditioned randomized
+//! eigendecomposition (Alg. 1 steps 1–6).
+//!
+//! Streaming phase (owned by the coordinator): for each column block
+//! `K[:, J]` — computed on the fly, never stored — apply `D`, FWHT, and
+//! keep the `r'` sampled rows, accumulating `W = (Rᵀ H D K)ᵀ ∈ R^{n×r'}`.
+//! [`OnePassSketch`] is that accumulator.
+//!
+//! Recovery phase (this file): `Q = orth(W)[:, :r]`, solve
+//! `B (QᵀΩ) = QᵀW` by least squares without revisiting `K`, symmetrize,
+//! eigendecompose `B = VΣVᵀ`, clamp negative eigenvalues (PSD projection,
+//! required by Theorem 1), and return `Y = Σ^{1/2} Vᵀ Qᵀ` restricted to
+//! the unpadded columns.
+
+use crate::linalg::{jacobi_eig, Mat};
+use crate::sketch::Srht;
+
+use super::Embedding;
+
+/// Accumulator for the streaming sketch pass.
+pub struct OnePassSketch {
+    srht: Srht,
+    /// W = (Rᵀ H D K)ᵀ, built n_padded rows at a time… rows arrive per
+    /// *column* of K: row j of W is filled when column j streams past.
+    w: Mat,
+    filled: Vec<bool>,
+}
+
+impl OnePassSketch {
+    pub fn new(srht: Srht, n_real: usize) -> Self {
+        assert!(n_real <= srht.n, "more real samples than transform length");
+        let rp = srht.samples();
+        OnePassSketch { w: Mat::zeros(n_real, rp), srht, filled: vec![false; n_real] }
+    }
+
+    pub fn srht(&self) -> &Srht {
+        &self.srht
+    }
+
+    /// Ingest the preconditioned rows for columns `cols`: `rows[b, :]` is
+    /// the r' sampled entries of `(H D K)[:, cols[b]]` — i.e. W[cols[b], :].
+    /// `rows` is (b × r'), as produced by `Srht::apply_to_block` or by the
+    /// XLA precond artifact + row gather.
+    pub fn ingest(&mut self, cols: &[usize], rows: &Mat) {
+        assert_eq!(rows.rows(), cols.len());
+        assert_eq!(rows.cols(), self.srht.samples());
+        for (b, &j) in cols.iter().enumerate() {
+            assert!(!self.filled[j], "column {j} streamed twice");
+            self.filled[j] = true;
+            self.w.row_mut(j).copy_from_slice(rows.row(b));
+        }
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.filled.iter().all(|&f| f)
+    }
+
+    /// The sketch matrix W (n_real × r'). Padded kernel columns are all
+    /// zero, so their W rows are zero and are simply never streamed.
+    pub fn w(&self) -> &Mat {
+        &self.w
+    }
+
+    /// Peak extra memory of the streaming phase in bytes: W plus the
+    /// Rademacher signs (the per-block buffers are accounted by the
+    /// coordinator since batch size is its policy choice).
+    pub fn sketch_bytes(&self) -> usize {
+        std::mem::size_of::<f64>() * (self.w.rows() * self.w.cols() + self.srht.d.len())
+    }
+}
+
+/// Alg. 1 steps 3–6. `rank` = r; the sketch was drawn with r' = r + l.
+///
+/// The solve uses the *padded* Ω restricted to the real rows: K's padded
+/// rows/columns are identically zero, so W's padded rows are zero and the
+/// identity `W = K Ω` restricted to real rows needs Ω's real rows only.
+pub fn one_pass_recovery(sketch: &OnePassSketch, rank: usize) -> Embedding {
+    assert!(sketch.is_complete(), "recovery before the stream finished");
+    let w = sketch.w();
+    let n = w.rows();
+    let rp = w.cols();
+    assert!(rank <= rp, "rank {rank} exceeds sketch width {rp}");
+
+    // Step 3: orthonormal basis of range(W), truncated to the NUMERICAL
+    // rank q of W (but never below the requested rank). Keeping all
+    // numerically-significant directions through the solve and
+    // truncating to r only after the eigendecomposition (Halko et al.
+    // Alg. 5.6) is what makes the oversampling l pay off; dropping the
+    // below-noise directions is what keeps the solve well-conditioned
+    // when K itself has rank < r' (their singular values are O(eps) and
+    // the corresponding rows of B are pure noise amplification).
+    let (qfull, rmat) = crate::linalg::householder_qr(w); // n × r', r' × r'
+    let rrt = rmat.matmul_t(&rmat); // r' × r' = singular values² of W
+    let (sv2, u) = jacobi_eig(&rrt); // descending
+    let smax2 = sv2[0].max(0.0);
+    let numerical_rank = sv2.iter().filter(|&&s2| s2 > 1e-14 * smax2).count();
+    let qdim = numerical_rank.clamp(rank.min(rp), rp);
+    let uq = Mat::from_fn(rp, qdim, |i, j| u[(i, j)]);
+    let q = qfull.matmul(&uq); // n × q leading left singular vectors of W
+
+    // Step 4: solve B (QᵀΩ) = QᵀW without revisiting K, as the
+    // least-squares problem (QᵀΩ)ᵀ Bᵀ = (QᵀW)ᵀ over the r' × q tall
+    // (well-conditioned) transposed system.
+    let qt_omega = srht_qt_omega_real_rows(sketch, &q); // q × r'
+    let qt_w = q.t_matmul(w); // q × r'
+    let bt = crate::linalg::least_squares(&qt_omega.transpose(), &qt_w.transpose());
+    let mut b = bt.transpose(); // q × q
+
+    // Step 5: symmetric eigendecomposition of the core; keep the top r.
+    b.symmetrize();
+    let (evals, v) = jacobi_eig(&b); // descending, q pairs
+
+    // Step 6: Y = Σ_r^{1/2} V_rᵀ Qᵀ with negative eigenvalues clamped to
+    // 0 — the PSD projection that makes K̂ = YᵀY positive semidefinite.
+    // If q < rank the missing directions carry zero eigenvalues.
+    let mut clamped: Vec<f64> =
+        evals.iter().take(rank.min(qdim)).map(|&l| l.max(0.0)).collect();
+    clamped.resize(rank, 0.0);
+    let mut y = Mat::zeros(rank, n);
+    for i in 0..rank.min(qdim) {
+        let s = clamped[i].sqrt();
+        for j in 0..n {
+            // (V_rᵀ Qᵀ)[i, j] = Σ_k V[k, i] Q[j, k], k over q dims
+            let mut acc = 0.0;
+            for k in 0..qdim {
+                acc += v[(k, i)] * q[(j, k)];
+            }
+            y[(i, j)] = s * acc;
+        }
+    }
+    Embedding { y, eigenvalues: clamped }
+}
+
+/// `QᵀΩ` over the real rows only (see `one_pass_recovery` docs).
+fn srht_qt_omega_real_rows(sketch: &OnePassSketch, q: &Mat) -> Mat {
+    let srht = sketch.srht();
+    let n = q.rows();
+    let r = q.cols();
+    let rp = srht.samples();
+    let mut out = Mat::zeros(r, rp);
+    for i in 0..n {
+        for j in 0..rp {
+            let w = srht.omega_entry(i, j);
+            for k in 0..r {
+                out[(k, j)] += w * q[(i, k)];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{column_batches, full_kernel_matrix, Kernel, NativeBlockSource, BlockSource};
+    use crate::linalg::testutil::{assert_mat_close, random_mat};
+    use crate::rng::Pcg64;
+    use crate::sketch::Srht;
+
+    /// run the full streaming pipeline natively on a small problem
+    fn run_onepass(
+        x: &Mat,
+        kernel: Kernel,
+        rank: usize,
+        oversample: usize,
+        seed: u64,
+        batch: usize,
+    ) -> Embedding {
+        let mut src = NativeBlockSource::pow2(x.clone(), kernel);
+        let n = src.n();
+        let np = src.n_padded();
+        let mut rng = Pcg64::seed(seed);
+        let srht = Srht::draw(&mut rng, np, rank + oversample);
+        let mut sk = OnePassSketch::new(srht, n);
+        for cols in column_batches(n, batch) {
+            let kb = src.block(&cols);
+            let rows = sk.srht().apply_to_block(&kb, 1);
+            sk.ingest(&cols, &rows);
+        }
+        assert!(sk.is_complete());
+        one_pass_recovery(&sk, rank)
+    }
+
+    #[test]
+    fn recovers_low_rank_kernel_nearly_exactly() {
+        // data in R², homogeneous quadratic kernel ⇒ K has rank ≤ 3
+        let mut rng = Pcg64::seed(1);
+        let x = random_mat(&mut rng, 2, 60);
+        let k = full_kernel_matrix(&x, Kernel::paper_poly2());
+        let emb = run_onepass(&x, Kernel::paper_poly2(), 3, 10, 7, 16);
+        let khat = emb.y.t_matmul(&emb.y);
+        let rel = k.sub(&khat).frobenius_norm() / k.frobenius_norm();
+        assert!(rel < 1e-6, "relative error {rel}");
+    }
+
+    #[test]
+    fn rank2_matches_best_rank2_error_closely() {
+        let mut rng = Pcg64::seed(2);
+        let x = random_mat(&mut rng, 2, 80);
+        let k = full_kernel_matrix(&x, Kernel::paper_poly2());
+        let (evals, _) = crate::linalg::jacobi_eig(&k);
+        let best2: f64 = evals[2..].iter().map(|l| l * l).sum::<f64>().sqrt();
+        let emb = run_onepass(&x, Kernel::paper_poly2(), 2, 10, 3, 32);
+        let khat = emb.y.t_matmul(&emb.y);
+        let got = k.sub(&khat).frobenius_norm();
+        // randomized bound: within a modest factor of optimal
+        assert!(got < 3.0 * best2 + 1e-9 * k.frobenius_norm(), "{got} vs best {best2}");
+    }
+
+    #[test]
+    fn embedding_is_psd_and_padding_free() {
+        let mut rng = Pcg64::seed(3);
+        let x = random_mat(&mut rng, 3, 50); // pads 50 → 64
+        let emb = run_onepass(&x, Kernel::Rbf { gamma: 0.5 }, 4, 6, 11, 13);
+        assert_eq!(emb.n(), 50);
+        assert_eq!(emb.rank(), 4);
+        assert!(emb.eigenvalues.iter().all(|&l| l >= 0.0));
+        for w in emb.eigenvalues.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+    }
+
+    #[test]
+    fn batch_size_does_not_change_result() {
+        let mut rng = Pcg64::seed(4);
+        let x = random_mat(&mut rng, 2, 40);
+        let a = run_onepass(&x, Kernel::paper_poly2(), 2, 5, 99, 1);
+        let b = run_onepass(&x, Kernel::paper_poly2(), 2, 5, 99, 40);
+        assert_mat_close(&a.y, &b.y, 1e-8);
+    }
+
+    #[test]
+    #[should_panic(expected = "streamed twice")]
+    fn double_ingest_detected() {
+        let mut rng = Pcg64::seed(5);
+        let srht = Srht::draw(&mut rng, 16, 4);
+        let mut sk = OnePassSketch::new(srht, 10);
+        let rows = Mat::zeros(2, 4);
+        sk.ingest(&[0, 1], &rows);
+        sk.ingest(&[1, 2], &rows);
+    }
+
+    #[test]
+    #[should_panic(expected = "before the stream finished")]
+    fn recovery_requires_complete_stream() {
+        let mut rng = Pcg64::seed(6);
+        let srht = Srht::draw(&mut rng, 16, 4);
+        let sk = OnePassSketch::new(srht, 10);
+        let _ = one_pass_recovery(&sk, 2);
+    }
+
+    #[test]
+    fn reconstruct_block_matches_full_reconstruction() {
+        let mut rng = Pcg64::seed(7);
+        let x = random_mat(&mut rng, 2, 30);
+        let emb = run_onepass(&x, Kernel::paper_poly2(), 2, 8, 1, 10);
+        let khat = emb.y.t_matmul(&emb.y);
+        let blk = emb.reconstruct_block(&[3, 17, 29]);
+        for (bj, &j) in [3usize, 17, 29].iter().enumerate() {
+            for i in 0..30 {
+                assert!((blk[(i, bj)] - khat[(i, j)]).abs() < 1e-12);
+            }
+        }
+    }
+}

@@ -1,0 +1,173 @@
+//! Model selection: inferring the number of clusters and choosing r.
+//!
+//! The paper points at both problems without solving them: §2.3 notes
+//! that the kernel eigenvalue decomposition "can be used to infer the
+//! number of clusters" (Girolami 2002, ref. [11]), and §5 says "the
+//! parameter r is typically chosen with cross-validation on a subset of
+//! data". Both fit naturally on top of the one-pass machinery, so we
+//! ship them as first-class features:
+//!
+//! - [`infer_clusters_by_eigengap`] — the classic spectral heuristic:
+//!   K̂'s dominant eigenvalues (which the one-pass sketch recovers for
+//!   free) cluster into "signal" vs "tail"; the largest relative gap
+//!   marks the cluster count.
+//! - [`select_rank_by_subset`] — the §5 recipe: run the cheap pipeline
+//!   on a uniformly-subsampled subset for each candidate r and pick the
+//!   smallest r whose subset approximation error is within `tolerance`
+//!   of the best candidate's.
+
+use crate::kernels::{BlockSource, Kernel, NativeBlockSource};
+use crate::linalg::Mat;
+use crate::lowrank::{one_pass_recovery, streamed_frobenius_error, OnePassSketch};
+use crate::rng::{sample_without_replacement, Pcg64};
+use crate::sketch::Srht;
+
+/// Largest-relative-eigengap estimate of the cluster count from a
+/// descending nonnegative eigenvalue sequence. Considers gaps between
+/// positions 1..max_k; returns the position after which the spectrum
+/// drops the most (relative to the level before the drop).
+pub fn infer_clusters_by_eigengap(eigenvalues: &[f64], max_k: usize) -> usize {
+    let m = eigenvalues.len().min(max_k + 1);
+    assert!(m >= 2, "need at least two eigenvalues to find a gap");
+    let lambda1 = eigenvalues[0].max(1e-300);
+    // only gaps that start at a *signal-level* eigenvalue count — the
+    // relative gap at the noise floor is always ≈ 1 and meaningless
+    let min_level = 1e-2 * lambda1;
+    let mut best_k = 1;
+    let mut best_gap = f64::NEG_INFINITY;
+    for k in 1..m {
+        let hi = eigenvalues[k - 1].max(0.0);
+        let lo = eigenvalues[k].max(0.0);
+        if hi < min_level {
+            break;
+        }
+        let gap = (hi - lo) / hi.max(1e-300);
+        if gap > best_gap {
+            best_gap = gap;
+            best_k = k;
+        }
+    }
+    best_k
+}
+
+/// One-pass eigenvalue probe: run the sketch at width `probe_width` and
+/// return the recovered dominant eigenvalues (descending). O(r'n) memory,
+/// one pass — the cheap input to [`infer_clusters_by_eigengap`].
+pub fn probe_spectrum(
+    x: &Mat,
+    kernel: Kernel,
+    probe_width: usize,
+    batch: usize,
+    rng: &mut Pcg64,
+) -> Vec<f64> {
+    let mut src = NativeBlockSource::pow2(x.clone(), kernel);
+    let (n, np) = (src.n(), src.n_padded());
+    let mut srht = Srht::draw(rng, np, probe_width.min(n));
+    srht.mask_padding(n);
+    let mut sk = OnePassSketch::new(srht, n);
+    for cols in crate::kernels::column_batches(n, batch) {
+        let kb = src.block(&cols);
+        let rows = sk.srht().apply_to_block(&kb, 1);
+        sk.ingest(&cols, &rows);
+    }
+    let emb = one_pass_recovery(&sk, probe_width.min(n));
+    emb.eigenvalues
+}
+
+/// §5's cross-validation recipe: for each candidate rank, run the
+/// one-pass pipeline on a random subset of the data (size `subset`) and
+/// measure the streamed approximation error; return the smallest
+/// candidate within `tolerance` (relative) of the best error seen.
+pub fn select_rank_by_subset(
+    x: &Mat,
+    kernel: Kernel,
+    candidates: &[usize],
+    oversample: usize,
+    subset: usize,
+    tolerance: f64,
+    rng: &mut Pcg64,
+) -> usize {
+    assert!(!candidates.is_empty());
+    let n = x.cols();
+    let take = subset.min(n);
+    let idx = sample_without_replacement(rng, n, take);
+    let xs = x.select_cols(&idx);
+
+    let mut errs = Vec::with_capacity(candidates.len());
+    for &r in candidates {
+        let mut src = NativeBlockSource::pow2(xs.clone(), kernel);
+        let (ns, np) = (src.n(), src.n_padded());
+        let mut srht = Srht::draw(rng, np, (r + oversample).min(ns));
+        srht.mask_padding(ns);
+        let mut sk = OnePassSketch::new(srht, ns);
+        for cols in crate::kernels::column_batches(ns, 128) {
+            let kb = src.block(&cols);
+            let rows = sk.srht().apply_to_block(&kb, 1);
+            sk.ingest(&cols, &rows);
+        }
+        let emb = one_pass_recovery(&sk, r.min(ns));
+        errs.push(streamed_frobenius_error(&mut src, &emb, 128));
+    }
+    let best = errs.iter().cloned().fold(f64::INFINITY, f64::min);
+    for (i, &r) in candidates.iter().enumerate() {
+        if errs[i] <= best * (1.0 + tolerance) {
+            return r;
+        }
+    }
+    *candidates.last().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+
+    #[test]
+    fn eigengap_finds_block_structure() {
+        // spectrum with a clear drop after 3
+        let evals = vec![10.0, 9.0, 8.5, 0.5, 0.4, 0.3];
+        assert_eq!(infer_clusters_by_eigengap(&evals, 5), 3);
+        // monotone geometric decay: biggest relative gap is the first
+        let evals = vec![8.0, 4.0, 2.0, 1.0];
+        assert_eq!(infer_clusters_by_eigengap(&evals, 3), 1);
+    }
+
+    #[test]
+    fn probe_recovers_cluster_count_on_blobs() {
+        // well-separated blobs with a linear kernel: top-k eigenvalues
+        // dominate, gap at k
+        let mut rng = Pcg64::seed(1);
+        for k_true in [2usize, 3] {
+            let ds = data::gaussian_blobs(&mut rng, 120, 4, k_true, 0.3);
+            let mut prng = Pcg64::seed(7);
+            let evals = probe_spectrum(&ds.x, Kernel::Linear, 10, 32, &mut prng);
+            let k_hat = infer_clusters_by_eigengap(&evals, 6);
+            assert_eq!(k_hat, k_true, "evals {evals:?}");
+        }
+    }
+
+    #[test]
+    fn rank_selection_picks_the_spectral_rank() {
+        // quadratic kernel on R² data: true rank 3 — candidates beyond 3
+        // bring no error improvement, so the CV picks 3
+        let mut rng = Pcg64::seed(2);
+        let ds = data::cross_lines(&mut rng, 300);
+        let mut srng = Pcg64::seed(3);
+        let picked = select_rank_by_subset(
+            &ds.x,
+            Kernel::paper_poly2(),
+            &[1, 2, 3, 4, 6],
+            8,
+            150,
+            0.05,
+            &mut srng,
+        );
+        assert_eq!(picked, 3, "quadratic kernel on R² has rank 3");
+    }
+
+    #[test]
+    fn eigengap_rejects_degenerate_input() {
+        let r = std::panic::catch_unwind(|| infer_clusters_by_eigengap(&[1.0], 3));
+        assert!(r.is_err());
+    }
+}

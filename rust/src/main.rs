@@ -1,0 +1,102 @@
+//! `rkc` — command-line launcher for the randomized kernel clustering
+//! system (GlobalSIP 2016 reproduction).
+//!
+//! ```text
+//! rkc run      [--key value]...     one experiment (any method/backend)
+//! rkc table1   [--trials N]         regenerate Table 1
+//! rkc fig2     [--out-dir D]        dump Fig. 1/2 embedding CSVs
+//! rkc fig3     [--trials N]         regenerate Fig. 3(a)+(b) series
+//! rkc theorem1                      empirical Theorem-1 bound check
+//! rkc memory                        memory model across methods
+//! rkc artifacts                     list compiled artifacts
+//! ```
+//!
+//! Every subcommand accepts the config overrides documented in
+//! `config::ExperimentConfig::set` (e.g. `--method nystrom_m50`,
+//! `--backend xla`, `--trials 10`, `--kernel rbf:2.0`).
+
+use anyhow::{anyhow, Result};
+
+use rkc::config::{Cli, ExperimentConfig};
+use rkc::runtime::ArtifactRegistry;
+
+mod commands;
+
+const FLAGS: &[&str] = &["verbose", "csv", "help"];
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = real_main(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main(args: Vec<String>) -> Result<()> {
+    let cli = Cli::parse(args, FLAGS).map_err(|e| anyhow!("{e}"))?;
+    if cli.has_flag("help") || cli.subcommand.is_none() {
+        print_help();
+        return Ok(());
+    }
+    let sub = cli.subcommand.clone().unwrap();
+
+    // base config per subcommand, then apply --config file, then flags
+    let mut cfg = match sub.as_str() {
+        "table1" | "fig2" => ExperimentConfig::table1(),
+        _ => ExperimentConfig::default(),
+    };
+    if let Some(path) = cli.get("config") {
+        let text = std::fs::read_to_string(path)?;
+        let json = rkc::util::Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        cfg.apply_json(&json).map_err(|e| anyhow!("{e}"))?;
+    }
+    for (k, v) in &cli.options {
+        if k == "config" || k == "out-dir" {
+            continue;
+        }
+        cfg.set(k, v).map_err(|e| anyhow!("{e}"))?;
+    }
+
+    // the registry is optional: native backend works without artifacts
+    let registry = ArtifactRegistry::open(&cfg.artifacts_dir).ok();
+    if cfg.backend == rkc::config::Backend::Xla && registry.is_none() {
+        return Err(anyhow!("--backend xla needs artifacts/ (run `make artifacts`)"));
+    }
+
+    let out_dir = cli.get("out-dir").unwrap_or("results").to_string();
+    match sub.as_str() {
+        "run" => commands::cmd_run(&cfg, registry.as_ref()),
+        "table1" => commands::cmd_table1(&cfg, registry.as_ref()),
+        "fig2" => commands::cmd_fig2(&cfg, registry.as_ref(), &out_dir),
+        "fig3" => commands::cmd_fig3(&cfg, registry.as_ref(), &out_dir),
+        "theorem1" => commands::cmd_theorem1(&cfg),
+        "memory" => commands::cmd_memory(&cfg),
+        "artifacts" => commands::cmd_artifacts(registry.as_ref()),
+        other => Err(anyhow!("unknown subcommand '{other}' (try --help)")),
+    }
+}
+
+fn print_help() {
+    println!(
+        "rkc — randomized kernel clustering (one-pass SRHT kernel K-means)
+
+USAGE: rkc <subcommand> [--key value]...
+
+SUBCOMMANDS
+  run        run one experiment (method/backend/dataset configurable)
+  table1     regenerate Table 1 (cross_lines, exact/ours/nystrom)
+  fig2       dump Fig. 1/2 embedding CSVs to --out-dir
+  fig3       regenerate Fig. 3(a)(b): error + accuracy vs m sweep
+  theorem1   empirical validation of the Theorem-1 bounds
+  memory     peak-memory model across methods
+  artifacts  list the compiled XLA artifacts
+
+COMMON OPTIONS (config overrides)
+  --method one_pass|gaussian|exact|full_kernel|plain|nystrom_m<M>
+  --backend native|xla        --dataset cross_lines|segmentation_like|...
+  --n N --p P --k K           --rank R --oversample L --batch B
+  --trials T --seed S         --kernel poly2|rbf:<g>|poly:<g>:<d>
+  --threads T                 --config file.json
+  --out-dir DIR (fig2/fig3)   --artifacts_dir DIR"
+    );
+}

@@ -1,0 +1,164 @@
+//! Byte-accounting memory model.
+//!
+//! The paper's claim is about *memory*, not time: the one-pass method
+//! needs O(r'n) while Nyström needs O(mn) with m ≈ 7–8·r' for equal
+//! accuracy, and exact/full methods need O(n²). Rather than trusting an
+//! allocator high-water mark (noisy, allocator-dependent), we account
+//! the dominant data structures of each method explicitly — the same
+//! methodology the paper's complexity table uses — and verify the model
+//! against actual allocation sizes in tests.
+
+const F64: usize = std::mem::size_of::<f64>();
+
+/// Peak working-set model of one clustering method run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MethodMemory {
+    pub method: String,
+    /// bytes persistent across the whole pass (sketch W, signs d, …)
+    pub persistent: usize,
+    /// bytes of transient per-block buffers (kernel block, FWHT buffer)
+    pub transient: usize,
+    /// bytes of the recovery-phase temporaries (Q, Ω restricted, …)
+    pub recovery: usize,
+}
+
+impl MethodMemory {
+    /// Peak = persistent + max(streaming transient, recovery phase):
+    /// the block buffers are freed before recovery allocates.
+    pub fn peak(&self) -> usize {
+        self.persistent + self.transient.max(self.recovery)
+    }
+
+    pub fn peak_mib(&self) -> f64 {
+        self.peak() as f64 / (1024.0 * 1024.0)
+    }
+}
+
+/// Builders for each method's memory model. All counts are f64 words of
+/// the *minimum faithful implementation* (what our coordinator actually
+/// allocates), excluding the p × n input data shared by every method.
+pub struct MemoryModel;
+
+impl MemoryModel {
+    /// Ours (Alg. 1): sketch W (n × r'), signs d (n), per-block kernel
+    /// buffer (n_pad × b) + FWHT workspace (n_pad × b); recovery Q (n×r),
+    /// QᵀΩ + QᵀW (2 · r·r'), B/V (r²), Y (r × n).
+    pub fn one_pass(n: usize, n_pad: usize, rp: usize, r: usize, batch: usize) -> MethodMemory {
+        MethodMemory {
+            method: "one_pass".into(),
+            persistent: F64 * (n * rp + n_pad),
+            transient: F64 * (2 * n_pad * batch),
+            recovery: F64 * (n * r + 2 * r * rp + 2 * r * r + r * n),
+        }
+    }
+
+    /// Nyström: sampled columns C (n × m) held for the whole run (they
+    /// ARE the sketch), inner W_m (m × m) + its eigendecomposition
+    /// (2 m²), embedding Y (r × n).
+    pub fn nystrom(n: usize, m: usize, r: usize) -> MethodMemory {
+        MethodMemory {
+            method: format!("nystrom(m={m})"),
+            persistent: F64 * (n * m),
+            transient: 0,
+            recovery: F64 * (3 * m * m + r * n),
+        }
+    }
+
+    /// Exact streaming top-r (subspace iteration): basis V (n × r), the
+    /// product KV (n × r), per-block buffer (n_pad × b).
+    pub fn exact_streaming(n: usize, n_pad: usize, r: usize, batch: usize) -> MethodMemory {
+        MethodMemory {
+            method: "exact_streaming".into(),
+            persistent: F64 * (2 * n * r),
+            transient: F64 * (n_pad * batch),
+            recovery: F64 * (2 * r * r + r * n),
+        }
+    }
+
+    /// Exact dense EVD of the full kernel (what the paper's "exact
+    /// decomposition" costs if done directly): K (n²) + eigenvectors (n²).
+    pub fn exact_dense(n: usize) -> MethodMemory {
+        MethodMemory {
+            method: "exact_dense".into(),
+            persistent: F64 * (2 * n * n),
+            transient: 0,
+            recovery: 0,
+        }
+    }
+
+    /// Full kernel K-means: K (n²) + per-iteration cross sums (n × K).
+    pub fn full_kernel_kmeans(n: usize, k: usize) -> MethodMemory {
+        MethodMemory {
+            method: "full_kernel_kmeans".into(),
+            persistent: F64 * (n * n),
+            transient: F64 * (n * k),
+            recovery: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_pass_is_linear_in_n() {
+        let a = MemoryModel::one_pass(1000, 1024, 7, 2, 256);
+        let b = MemoryModel::one_pass(2000, 2048, 7, 2, 256);
+        // persistent part scales ~linearly
+        assert!(b.persistent < 2 * a.persistent + 4096 * F64);
+        assert!(b.persistent > (2 * a.persistent) / 2);
+    }
+
+    #[test]
+    fn paper_headline_memory_ratio_holds() {
+        // Fig. 3 setting: n = 2310, r' = 7, Nyström needs m ≈ 50 for the
+        // same error ⇒ memory ratio ≈ m / r' ≈ 7× and ≥ 10× at m = 100
+        let ours = MemoryModel::one_pass(2310, 4096, 7, 2, 256);
+        let nys50 = MemoryModel::nystrom(2310, 50, 2);
+        let nys100 = MemoryModel::nystrom(2310, 100, 2);
+        // compare the persistent (streaming-independent) footprints: the
+        // sketch-vs-columns comparison the paper makes
+        let ratio50 = nys50.persistent as f64 / ours.persistent as f64;
+        let ratio100 = nys100.persistent as f64 / ours.persistent as f64;
+        assert!(ratio50 > 4.0, "ratio50 = {ratio50}");
+        assert!(ratio100 > 9.0, "ratio100 = {ratio100}");
+    }
+
+    #[test]
+    fn quadratic_methods_dwarf_streaming_methods() {
+        let n = 4000;
+        let ours = MemoryModel::one_pass(n, 4096, 12, 2, 256);
+        let dense = MemoryModel::exact_dense(n);
+        let full = MemoryModel::full_kernel_kmeans(n, 2);
+        // peak includes the transient block buffer; persistent state is
+        // the paper's sketch-vs-matrix comparison
+        assert!(dense.peak() > 10 * ours.peak());
+        assert!(full.peak() > 5 * ours.peak());
+        assert!(dense.persistent > 500 * ours.persistent);
+    }
+
+    #[test]
+    fn peak_takes_max_of_phases() {
+        let m = MethodMemory {
+            method: "x".into(),
+            persistent: 100,
+            transient: 50,
+            recovery: 80,
+        };
+        assert_eq!(m.peak(), 180);
+    }
+
+    #[test]
+    fn model_matches_actual_sketch_allocation() {
+        // the model's W + d bytes must equal OnePassSketch::sketch_bytes
+        use crate::rng::Pcg64;
+        use crate::sketch::Srht;
+        let (n, n_pad, rp) = (100usize, 128usize, 7usize);
+        let mut rng = Pcg64::seed(1);
+        let srht = Srht::draw(&mut rng, n_pad, rp);
+        let sk = crate::lowrank::OnePassSketch::new(srht, n);
+        let model = MemoryModel::one_pass(n, n_pad, rp, 2, 16);
+        assert_eq!(model.persistent, sk.sketch_bytes());
+    }
+}

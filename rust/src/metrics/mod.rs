@@ -1,0 +1,11 @@
+//! Observability: wall-clock timers, the byte-accounting memory model
+//! (the paper's headline axis — §1: "around 10 times lower memory"), and
+//! a table reporter for the experiment harness.
+
+mod memory;
+mod report;
+mod timer;
+
+pub use memory::{MemoryModel, MethodMemory};
+pub use report::{Table, write_csv};
+pub use timer::{ScopedTimer, Stopwatch};

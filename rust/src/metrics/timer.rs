@@ -1,0 +1,96 @@
+//! Wall-clock timing helpers for the pipeline's per-stage metrics.
+
+use std::time::{Duration, Instant};
+
+/// Accumulating stopwatch: start/stop across many block iterations.
+#[derive(Debug)]
+pub struct Stopwatch {
+    total: Duration,
+    started: Option<Instant>,
+    laps: usize,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch { total: Duration::ZERO, started: None, laps: 0 }
+    }
+
+    pub fn start(&mut self) {
+        debug_assert!(self.started.is_none(), "stopwatch already running");
+        self.started = Some(Instant::now());
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.total += t0.elapsed();
+            self.laps += 1;
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        match self.started {
+            Some(t0) => self.total + t0.elapsed(),
+            None => self.total,
+        }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn laps(&self) -> usize {
+        self.laps
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// RAII timer: adds its lifetime to a cell on drop.
+pub struct ScopedTimer<'a> {
+    target: &'a mut Duration,
+    start: Instant,
+}
+
+impl<'a> ScopedTimer<'a> {
+    pub fn new(target: &'a mut Duration) -> Self {
+        ScopedTimer { target, start: Instant::now() }
+    }
+}
+
+impl Drop for ScopedTimer<'_> {
+    fn drop(&mut self) {
+        *self.target += self.start.elapsed();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates_laps() {
+        let mut sw = Stopwatch::new();
+        for _ in 0..3 {
+            sw.start();
+            std::thread::sleep(Duration::from_millis(2));
+            sw.stop();
+        }
+        assert_eq!(sw.laps(), 3);
+        assert!(sw.secs() >= 0.006);
+        assert!(sw.secs() < 1.0);
+    }
+
+    #[test]
+    fn scoped_timer_adds_on_drop() {
+        let mut total = Duration::ZERO;
+        {
+            let _t = ScopedTimer::new(&mut total);
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(total >= Duration::from_millis(2));
+    }
+}

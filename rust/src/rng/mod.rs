@@ -1,0 +1,225 @@
+//! Deterministic pseudo-randomness for the whole stack.
+//!
+//! The paper's method is randomized (Rademacher signs, uniform row
+//! sampling, K-means++ seeding, 100-trial experiment protocol), so every
+//! consumer in this crate draws from a seedable, splittable PRNG to make
+//! experiments exactly reproducible. We implement PCG-XSH-RR-64/32
+//! (O'Neill 2014) — small state, excellent statistical quality, and no
+//! external crates required on this offline image.
+
+mod pcg;
+
+pub use pcg::Pcg64;
+
+/// Source of uniform `u32`s; everything else is derived from this.
+pub trait Rng {
+    fn next_u32(&mut self) -> u32;
+
+    fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)` with 53-bit resolution.
+    fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, bound)` via Lemire's rejection method
+    /// (unbiased, at most a few retries).
+    fn below(&mut self, bound: usize) -> usize {
+        assert!(bound > 0, "below(0) is meaningless");
+        let bound = bound as u64;
+        loop {
+            let x = self.next_u64();
+            let (hi, lo) = mul_hi_lo(x, bound);
+            if lo >= bound || lo >= x.wrapping_neg() % bound {
+                return hi as usize;
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller (cached second deviate would need
+    /// state; we draw the pair fresh — clarity over the last nanosecond).
+    fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-300 {
+                let u2 = self.next_f64();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return r * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Rademacher sign: ±1 with equal probability.
+    fn rademacher(&mut self) -> f64 {
+        if self.next_u32() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+}
+
+#[inline]
+fn mul_hi_lo(a: u64, b: u64) -> (u64, u64) {
+    let wide = (a as u128) * (b as u128);
+    ((wide >> 64) as u64, wide as u64)
+}
+
+impl Rng for Pcg64 {
+    fn next_u32(&mut self) -> u32 {
+        self.next()
+    }
+}
+
+/// `len` i.i.d. Rademacher signs (the diagonal of `D` in Alg. 1).
+pub fn rademacher_vec(rng: &mut impl Rng, len: usize) -> Vec<f64> {
+    (0..len).map(|_| rng.rademacher()).collect()
+}
+
+/// `len` i.i.d. standard normals.
+pub fn normal_vec(rng: &mut impl Rng, len: usize) -> Vec<f64> {
+    (0..len).map(|_| rng.normal()).collect()
+}
+
+/// In-place Fisher–Yates shuffle.
+pub fn shuffle<T>(rng: &mut impl Rng, xs: &mut [T]) {
+    for i in (1..xs.len()).rev() {
+        xs.swap(i, rng.below(i + 1));
+    }
+}
+
+/// `k` distinct indices drawn uniformly without replacement from `0..n`
+/// (the sub-sampling matrix `R` of Alg. 1 and the Nyström column draw).
+/// Uses a partial Fisher–Yates over an index table: O(n) memory, O(n)
+/// time, exact uniformity over k-subsets.
+pub fn sample_without_replacement(rng: &mut impl Rng, n: usize, k: usize) -> Vec<usize> {
+    assert!(k <= n, "cannot sample {k} of {n} without replacement");
+    let mut idx: Vec<usize> = (0..n).collect();
+    for i in 0..k {
+        let j = i + rng.below(n - i);
+        idx.swap(i, j);
+    }
+    idx.truncate(k);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_fixed_seed() {
+        let mut a = Pcg64::seed(42);
+        let mut b = Pcg64::seed(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::seed(1);
+        let mut b = Pcg64::seed(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn f64_in_unit_interval_and_roughly_uniform() {
+        let mut rng = Pcg64::seed(7);
+        let n = 20_000;
+        let mean: f64 = (0..n)
+            .map(|_| {
+                let x = rng.next_f64();
+                assert!((0.0..1.0).contains(&x));
+                x
+            })
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_is_unbiased_over_small_range() {
+        let mut rng = Pcg64::seed(11);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[rng.below(7)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 500.0, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::seed(3);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn rademacher_is_pm_one_and_balanced() {
+        let mut rng = Pcg64::seed(5);
+        let signs = rademacher_vec(&mut rng, 10_000);
+        let plus = signs.iter().filter(|&&s| s == 1.0).count();
+        assert!(signs.iter().all(|&s| s == 1.0 || s == -1.0));
+        assert!((plus as f64 - 5_000.0).abs() < 300.0);
+    }
+
+    #[test]
+    fn sample_without_replacement_is_distinct_and_in_range() {
+        let mut rng = Pcg64::seed(9);
+        for _ in 0..50 {
+            let s = sample_without_replacement(&mut rng, 100, 17);
+            assert_eq!(s.len(), 17);
+            let mut sorted = s.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 17, "duplicates in {s:?}");
+            assert!(s.iter().all(|&i| i < 100));
+        }
+    }
+
+    #[test]
+    fn sample_without_replacement_full_is_permutation() {
+        let mut rng = Pcg64::seed(13);
+        let mut s = sample_without_replacement(&mut rng, 20, 20);
+        s.sort_unstable();
+        assert_eq!(s, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_marginals_are_uniform() {
+        // each index should appear in a k-subset with probability k/n
+        let mut rng = Pcg64::seed(17);
+        let (n, k, trials) = (30, 6, 20_000);
+        let mut hits = vec![0usize; n];
+        for _ in 0..trials {
+            for i in sample_without_replacement(&mut rng, n, k) {
+                hits[i] += 1;
+            }
+        }
+        let expect = trials as f64 * k as f64 / n as f64; // 4000
+        for &h in &hits {
+            assert!((h as f64 - expect).abs() < 350.0, "hits={hits:?}");
+        }
+    }
+
+    #[test]
+    fn shuffle_preserves_elements() {
+        let mut rng = Pcg64::seed(23);
+        let mut xs: Vec<u32> = (0..57).collect();
+        shuffle(&mut rng, &mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..57).collect::<Vec<_>>());
+        assert_ne!(xs, (0..57).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,84 @@
+//! PJRT runtime: load and execute the AOT-compiled XLA artifacts.
+//!
+//! Python runs once at build time (`make artifacts`); this module is the
+//! only bridge between the rust coordinator and the compiled L2/L1
+//! compute. Interchange is HLO *text* (see python/compile/aot.py and
+//! /opt/xla-example/README.md): `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `PjRtClient::compile` → `execute`.
+//!
+//! The [`ArtifactRegistry`] is driven entirely by `artifacts/manifest.json`
+//! and compiles lazily: an experiment that only needs the gram artifact
+//! never pays for the others.
+
+mod registry;
+
+pub use registry::{ArtifactInfo, ArtifactRegistry, Executable};
+
+use anyhow::{Context, Result};
+
+use crate::linalg::Mat;
+
+/// Shared PJRT CPU client (one per process).
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile HLO text from `path` into an executable.
+    pub fn compile_hlo_file(&self, path: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path}"))
+    }
+}
+
+/// Convert a row-major f64 [`Mat`] into an f32 PJRT literal of shape
+/// (rows, cols).
+pub fn mat_to_literal(m: &Mat) -> Result<xla::Literal> {
+    let data: Vec<f32> = m.data().iter().map(|&v| v as f32).collect();
+    let lit = xla::Literal::vec1(&data);
+    Ok(lit.reshape(&[m.rows() as i64, m.cols() as i64])?)
+}
+
+/// Convert a f64 slice into a rank-1 f32 literal.
+pub fn vec_to_literal(v: &[f64]) -> Result<xla::Literal> {
+    let data: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+    Ok(xla::Literal::vec1(&data))
+}
+
+/// Read an f32 literal of shape (rows, cols) back into a [`Mat`].
+pub fn literal_to_mat(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Mat> {
+    let v: Vec<f32> = lit.to_vec()?;
+    anyhow::ensure!(
+        v.len() == rows * cols,
+        "literal has {} elements, want {}x{}",
+        v.len(),
+        rows,
+        cols
+    );
+    Ok(Mat::from_vec(rows, cols, v.into_iter().map(|x| x as f64).collect()))
+}
+
+/// Read an f32 literal into a f64 vector.
+pub fn literal_to_vec(lit: &xla::Literal) -> Result<Vec<f64>> {
+    let v: Vec<f32> = lit.to_vec()?;
+    Ok(v.into_iter().map(|x| x as f64).collect())
+}
+
+/// Read an i32 literal into usize labels.
+pub fn literal_to_indices(lit: &xla::Literal) -> Result<Vec<usize>> {
+    let v: Vec<i32> = lit.to_vec()?;
+    Ok(v.into_iter().map(|x| x.max(0) as usize).collect())
+}

@@ -1,0 +1,167 @@
+//! Manifest-driven artifact registry with lazy compilation.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::Json;
+
+use super::PjrtRuntime;
+
+/// One entry of `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    /// static params recorded by aot.py (op, n, b, r, k, kind, …)
+    pub params: BTreeMap<String, String>,
+    /// input shapes in call order
+    pub inputs: Vec<Vec<usize>>,
+    /// output shapes in result order
+    pub outputs: Vec<Vec<usize>>,
+}
+
+impl ArtifactInfo {
+    pub fn param_usize(&self, key: &str) -> Result<usize> {
+        self.params
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .ok_or_else(|| anyhow!("artifact {}: missing numeric param '{key}'", self.name))
+    }
+
+    fn from_json(j: &Json) -> Result<ArtifactInfo> {
+        let name = j.str_field("name").map_err(|e| anyhow!("{e}"))?.to_string();
+        let file = j.str_field("file").map_err(|e| anyhow!("{e}"))?.to_string();
+        let mut params = BTreeMap::new();
+        if let Some(Json::Obj(map)) = j.get("params") {
+            for (k, v) in map {
+                let text = match v {
+                    Json::Str(s) => s.clone(),
+                    Json::Num(x) => {
+                        if x.fract() == 0.0 {
+                            format!("{}", *x as i64)
+                        } else {
+                            format!("{x}")
+                        }
+                    }
+                    other => other.to_string(),
+                };
+                params.insert(k.clone(), text);
+            }
+        }
+        let shapes = |key: &str| -> Result<Vec<Vec<usize>>> {
+            j.get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact {name}: missing '{key}'"))?
+                .iter()
+                .map(|e| {
+                    e.get("shape")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| anyhow!("artifact {name}: bad shape entry"))?
+                        .iter()
+                        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                        .collect()
+                })
+                .collect()
+        };
+        Ok(ArtifactInfo { inputs: shapes("inputs")?, outputs: shapes("outputs")?, name, file, params })
+    }
+}
+
+/// A compiled artifact plus its manifest metadata.
+pub struct Executable {
+    pub info: ArtifactInfo,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with the given input literals; returns the flattened
+    /// output tuple (aot.py lowers with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        anyhow::ensure!(
+            inputs.len() == self.info.inputs.len(),
+            "artifact {} expects {} inputs, got {}",
+            self.info.name,
+            self.info.inputs.len(),
+            inputs.len()
+        );
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.info.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.info.name))?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// Loads `manifest.json`, compiles artifacts on first use, and caches
+/// the executables for the lifetime of the process.
+pub struct ArtifactRegistry {
+    runtime: PjrtRuntime,
+    dir: String,
+    infos: BTreeMap<String, ArtifactInfo>,
+    compiled: Mutex<BTreeMap<String, &'static Executable>>,
+}
+
+impl ArtifactRegistry {
+    /// Open the registry at `dir` (must contain manifest.json).
+    pub fn open(dir: &str) -> Result<Self> {
+        let manifest_path = format!("{dir}/manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path} (run `make artifacts`)"))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("parsing manifest: {e}"))?;
+        let arr = json.as_arr().ok_or_else(|| anyhow!("manifest must be a JSON array"))?;
+        let mut infos = BTreeMap::new();
+        for entry in arr {
+            let info = ArtifactInfo::from_json(entry)?;
+            infos.insert(info.name.clone(), info);
+        }
+        Ok(ArtifactRegistry {
+            runtime: PjrtRuntime::cpu()?,
+            dir: dir.to_string(),
+            infos,
+            compiled: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.infos.keys().cloned().collect()
+    }
+
+    pub fn info(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.infos.get(name)
+    }
+
+    /// Find an artifact by params predicate (e.g. op == "gram" with the
+    /// right shape) — how the coordinator picks shape-compatible modules.
+    pub fn find(&self, pred: impl Fn(&ArtifactInfo) -> bool) -> Option<&ArtifactInfo> {
+        self.infos.values().find(|i| pred(i))
+    }
+
+    /// Get (compiling if needed) an executable by name. The returned
+    /// reference lives as long as the process (executables are leaked
+    /// intentionally: they are few, large, and used until exit).
+    pub fn get(&self, name: &str) -> Result<&'static Executable> {
+        let mut cache = self.compiled.lock().unwrap();
+        if let Some(exe) = cache.get(name) {
+            return Ok(exe);
+        }
+        let info = self
+            .infos
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}' (have: {:?})", self.names()))?
+            .clone();
+        let path = format!("{}/{}", self.dir, info.file);
+        let exe = self.runtime.compile_hlo_file(&path)?;
+        let boxed: &'static Executable = Box::leak(Box::new(Executable { info, exe }));
+        cache.insert(name.to_string(), boxed);
+        Ok(boxed)
+    }
+
+    pub fn platform(&self) -> String {
+        self.runtime.platform()
+    }
+}

@@ -1,0 +1,236 @@
+//! Randomized sketching: FWHT, the SRHT operator, and Gaussian sketches.
+//!
+//! The paper's structured test matrix is `Ω = D H R` (Rademacher diagonal,
+//! Walsh–Hadamard, uniform column subsampling). The coordinator applies
+//! it *implicitly* to streamed kernel columns — scale by `D`, FWHT,
+//! subsample r' entries — so `H` is never stored (§4 of the paper). The
+//! explicit small matrices needed by the recovery step (`Ω` restricted to
+//! the sketch rows, `QᵀΩ`) are generated entry-wise from the same seed.
+
+mod fwht;
+
+pub use fwht::{fwht_inplace, fwht_parallel, fwht_columns};
+
+use crate::linalg::Mat;
+use crate::rng::{normal_vec, rademacher_vec, sample_without_replacement, Pcg64};
+
+/// Next power of two (FWHT length requirement; data is zero-padded).
+pub fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+/// The paper's structured random test matrix `Ω = D H R`, held implicitly:
+/// the Rademacher signs `d` and the sampled row indices `idx` (columns of
+/// the identity forming `R`). `H` is applied via FWHT only.
+#[derive(Clone, Debug)]
+pub struct Srht {
+    /// padded transform length (power of two)
+    pub n: usize,
+    /// Rademacher diagonal of `D`, length `n`
+    pub d: Vec<f64>,
+    /// the r' sampled indices (rows of `HD K` kept / columns of `R`)
+    pub idx: Vec<usize>,
+}
+
+impl Srht {
+    /// Draw a fresh SRHT for padded dimension `n` (power of two) keeping
+    /// `rp = r + l` samples.
+    pub fn draw(rng: &mut Pcg64, n: usize, rp: usize) -> Self {
+        assert!(n.is_power_of_two(), "SRHT length must be a power of two");
+        assert!(rp <= n, "cannot keep {rp} of {n} rows");
+        Srht {
+            n,
+            d: rademacher_vec(rng, n),
+            idx: sample_without_replacement(rng, n, rp),
+        }
+    }
+
+    pub fn samples(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Zero the Rademacher signs of the padded rows (`i >= n_real`).
+    /// This makes the implicit padded kernel matrix exactly zero in the
+    /// padding block for *any* kernel (the RBF gram of zero-padded data
+    /// is not zero by itself) while keeping the recovery identity
+    /// `W = K̃ Ω` exact. Must be called before any `apply_to_block` /
+    /// `omega_entry` use when `n_real < n`.
+    pub fn mask_padding(&mut self, n_real: usize) {
+        for i in n_real..self.n {
+            self.d[i] = 0.0;
+        }
+    }
+
+    /// One entry of the *explicit* `Ω = D H R`: `Ω[i, j] = d_i · H[i, idx_j]`
+    /// with the unnormalized Hadamard `H[a, b] = (-1)^{popcount(a & b)}`.
+    #[inline]
+    pub fn omega_entry(&self, i: usize, j: usize) -> f64 {
+        let sign = ((i & self.idx[j]).count_ones() & 1) as i32;
+        self.d[i] * if sign == 0 { 1.0 } else { -1.0 }
+    }
+
+    /// Materialize `Ω` (n × r') — only used by the recovery step to form
+    /// `QᵀΩ`, never by the streaming pass.
+    pub fn omega(&self) -> Mat {
+        Mat::from_fn(self.n, self.idx.len(), |i, j| self.omega_entry(i, j))
+    }
+
+    /// `Qᵀ Ω` (r × r') without materializing Ω: for each sampled column,
+    /// compute `Qᵀ (D h_idx)` where `h_idx` is a Hadamard column.
+    /// O(n · r · r') — the same cost as the matmul against explicit Ω but
+    /// with O(1) extra memory.
+    pub fn qt_omega(&self, q: &Mat) -> Mat {
+        assert_eq!(q.rows(), self.n, "basis rows must match SRHT length");
+        let r = q.cols();
+        let rp = self.idx.len();
+        let mut out = Mat::zeros(r, rp);
+        for i in 0..self.n {
+            // out[:, j] += Ω[i, j] * q[i, :]
+            for j in 0..rp {
+                let w = self.omega_entry(i, j);
+                for k in 0..r {
+                    out[(k, j)] += w * q[(i, k)];
+                }
+            }
+        }
+        out
+    }
+
+    /// Apply the streaming half of the sketch to a block of kernel columns
+    /// `kb` (n × b, already zero-padded): scale rows by `d`, FWHT each
+    /// column, and gather the sampled rows. Returns the (b × r') slab of
+    /// new sketch rows `W[J, :]` — exactly what the XLA `precond` artifact
+    /// plus a row-gather produces on the accelerated path.
+    pub fn apply_to_block(&self, kb: &Mat, threads: usize) -> Mat {
+        assert_eq!(kb.rows(), self.n, "block rows must equal SRHT length");
+        // work column-major: transpose block, FWHT along rows
+        let b = kb.cols();
+        let mut buf: Vec<Vec<f64>> = (0..b)
+            .map(|j| {
+                let mut col: Vec<f64> = (0..self.n).map(|i| kb[(i, j)] * self.d[i]).collect();
+                col.shrink_to_fit();
+                col
+            })
+            .collect();
+        fwht_columns(&mut buf, threads);
+        Mat::from_fn(b, self.idx.len(), |j, s| buf[j][self.idx[s]])
+    }
+}
+
+/// Dense Gaussian test matrix (the un-structured alternative from
+/// Halko et al. §4; ablation baseline — same accuracy, O(n r') memory
+/// for Ω itself and O(n² r') time for W = KΩ).
+pub struct GaussianSketch {
+    pub omega: Mat,
+}
+
+impl GaussianSketch {
+    pub fn draw(rng: &mut Pcg64, n: usize, rp: usize) -> Self {
+        let data = normal_vec(rng, n * rp);
+        GaussianSketch { omega: Mat::from_vec(n, rp, data) }
+    }
+
+    /// `W[J, :] = kbᵀ Ω` for a block of kernel columns.
+    pub fn apply_to_block(&self, kb: &Mat) -> Mat {
+        kb.t_matmul(&self.omega)
+    }
+}
+
+/// Zero-pad a vector to length `n` (kernel columns before FWHT).
+pub fn pad_to(v: &[f64], n: usize) -> Vec<f64> {
+    let mut out = vec![0.0; n];
+    out[..v.len()].copy_from_slice(v);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use crate::rng::Pcg64;
+
+    fn hadamard_entry(i: usize, j: usize) -> f64 {
+        if (i & j).count_ones() % 2 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    #[test]
+    fn omega_matches_explicit_dhr() {
+        let mut rng = Pcg64::seed(1);
+        let s = Srht::draw(&mut rng, 32, 5);
+        let om = s.omega();
+        for i in 0..32 {
+            for j in 0..5 {
+                let want = s.d[i] * hadamard_entry(i, s.idx[j]);
+                assert_eq!(om[(i, j)], want);
+            }
+        }
+    }
+
+    #[test]
+    fn apply_to_block_equals_k_times_omega() {
+        // the streaming path (scale, FWHT, gather) must equal K Ω exactly
+        let mut rng = Pcg64::seed(2);
+        let n = 64;
+        let s = Srht::draw(&mut rng, n, 7);
+        let kb = crate::linalg::testutil::random_mat(&mut rng, n, 9);
+        let got = s.apply_to_block(&kb, 1); // (9, 7) = rows of W
+        let want = kb.t_matmul(&s.omega()); // (9, 7)
+        crate::linalg::testutil::assert_mat_close(&got, &want, 1e-9);
+    }
+
+    #[test]
+    fn qt_omega_matches_explicit() {
+        let mut rng = Pcg64::seed(3);
+        let n = 64;
+        let s = Srht::draw(&mut rng, n, 6);
+        let q = crate::linalg::testutil::random_mat(&mut rng, n, 3);
+        let got = s.qt_omega(&q);
+        let want = q.t_matmul(&s.omega());
+        crate::linalg::testutil::assert_mat_close(&got, &want, 1e-9);
+    }
+
+    #[test]
+    fn srht_preserves_column_gram_up_to_scale() {
+        // (HD) is n-times-orthogonal: (HDx)ᵀ(HDy) = n xᵀy; sampling then
+        // estimates it. With all rows kept the identity is exact.
+        let mut rng = Pcg64::seed(4);
+        let n = 32;
+        let mut s = Srht::draw(&mut rng, n, n);
+        s.idx = (0..n).collect(); // keep every row
+        let kb = crate::linalg::testutil::random_mat(&mut rng, n, 4);
+        let w = s.apply_to_block(&kb, 1); // (4, n) rows of W
+        let got = w.matmul_t(&w); // (4, 4) = kbᵀ (HD)ᵀ(HD) kb … wait, w = kbᵀ·(DH·)… w (4,n)
+        let want = {
+            let mut g = kb.t_matmul(&kb);
+            g.scale(n as f64);
+            g
+        };
+        crate::linalg::testutil::assert_mat_close(&got, &want, 1e-8);
+    }
+
+    #[test]
+    fn gaussian_sketch_shapes_and_moments() {
+        let mut rng = Pcg64::seed(5);
+        let g = GaussianSketch::draw(&mut rng, 200, 10);
+        assert_eq!((g.omega.rows(), g.omega.cols()), (200, 10));
+        let mean: f64 = g.omega.data().iter().sum::<f64>() / 2000.0;
+        assert!(mean.abs() < 0.08, "mean={mean}");
+    }
+
+    #[test]
+    fn pad_to_extends_with_zeros() {
+        let v = pad_to(&[1.0, 2.0], 8);
+        assert_eq!(v, vec![1.0, 2.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn srht_rejects_non_pow2() {
+        let mut rng = Pcg64::seed(6);
+        let _ = Srht::draw(&mut rng, 48, 4);
+    }
+}

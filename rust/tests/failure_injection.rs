@@ -1,0 +1,175 @@
+//! Failure injection: the system must fail loudly and precisely on
+//! corrupt inputs, missing artifacts, and misuse — never silently
+//! produce wrong clusters.
+
+use rkc::config::{Backend, ExperimentConfig, Method};
+use rkc::coordinator::build_dataset;
+use rkc::runtime::ArtifactRegistry;
+use rkc::util::Json;
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("rkc_fail_{name}"));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn registry_missing_dir_is_clean_error() {
+    let err = match ArtifactRegistry::open("/nonexistent/rkc_artifacts") {
+        Err(e) => e,
+        Ok(_) => panic!("must fail"),
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("manifest.json"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn registry_corrupt_manifest_is_clean_error() {
+    let d = tmpdir("corrupt_manifest");
+    std::fs::write(d.join("manifest.json"), "{not json!").unwrap();
+    let err = match ArtifactRegistry::open(d.to_str().unwrap()) {
+        Err(e) => e,
+        Ok(_) => panic!("must fail"),
+    };
+    assert!(format!("{err:#}").contains("manifest"));
+}
+
+#[test]
+fn registry_manifest_must_be_array() {
+    let d = tmpdir("manifest_obj");
+    std::fs::write(d.join("manifest.json"), "{}").unwrap();
+    let err = match ArtifactRegistry::open(d.to_str().unwrap()) {
+        Err(e) => e,
+        Ok(_) => panic!("must fail"),
+    };
+    assert!(format!("{err:#}").contains("array"));
+}
+
+#[test]
+fn registry_unknown_artifact_lists_available() {
+    let d = tmpdir("unknown_artifact");
+    std::fs::write(
+        d.join("manifest.json"),
+        r#"[{"name":"a","file":"a.hlo.txt","params":{"op":"gram"},
+            "inputs":[{"shape":[2,2],"dtype":"float32"}],
+            "outputs":[{"shape":[2,2],"dtype":"float32"}]}]"#,
+    )
+    .unwrap();
+    let reg = ArtifactRegistry::open(d.to_str().unwrap()).unwrap();
+    let err = match reg.get("nope") {
+        Err(e) => e,
+        Ok(_) => panic!("must fail"),
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("nope") && msg.contains('a'), "{msg}");
+}
+
+#[test]
+fn registry_missing_hlo_file_is_clean_error() {
+    let d = tmpdir("missing_hlo");
+    std::fs::write(
+        d.join("manifest.json"),
+        r#"[{"name":"a","file":"a.hlo.txt","params":{"op":"gram"},
+            "inputs":[{"shape":[2,2],"dtype":"float32"}],
+            "outputs":[{"shape":[2,2],"dtype":"float32"}]}]"#,
+    )
+    .unwrap();
+    let reg = ArtifactRegistry::open(d.to_str().unwrap()).unwrap();
+    assert!(reg.get("a").is_err());
+}
+
+#[test]
+fn registry_corrupt_hlo_text_is_clean_error() {
+    let d = tmpdir("corrupt_hlo");
+    std::fs::write(
+        d.join("manifest.json"),
+        r#"[{"name":"a","file":"a.hlo.txt","params":{"op":"gram"},
+            "inputs":[{"shape":[2,2],"dtype":"float32"}],
+            "outputs":[{"shape":[2,2],"dtype":"float32"}]}]"#,
+    )
+    .unwrap();
+    std::fs::write(d.join("a.hlo.txt"), "HloModule garbage ENTRY {{{").unwrap();
+    let reg = ArtifactRegistry::open(d.to_str().unwrap()).unwrap();
+    assert!(reg.get("a").is_err());
+}
+
+#[test]
+fn executable_rejects_wrong_arity() {
+    // use the real artifacts (skip silently if not built)
+    let Ok(reg) = ArtifactRegistry::open("artifacts") else { return };
+    let Ok(exe) = reg.get("precond_n256_b64") else { return };
+    let one_input = vec![xla::Literal::vec1(&[0f32; 256 * 64])
+        .reshape(&[256, 64])
+        .unwrap()];
+    let err = match exe.run(&one_input) {
+        Err(e) => e,
+        Ok(_) => panic!("must fail"),
+    };
+    assert!(format!("{err:#}").contains("expects 2 inputs"));
+}
+
+#[test]
+fn xla_backend_without_registry_fails_loudly() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.n = 64;
+    cfg.dataset = "blobs".into();
+    cfg.p = 4;
+    cfg.k = 2;
+    cfg.backend = Backend::Xla;
+    cfg.method = Method::OnePass;
+    let ds = build_dataset(&cfg).unwrap();
+    let err = match rkc::coordinator::run_experiment(&cfg, &ds, None, 1) {
+        Err(e) => e,
+        Ok(_) => panic!("must fail"),
+    };
+    assert!(format!("{err:#}").contains("registry"));
+}
+
+#[test]
+fn config_rejects_unknown_keys_and_bad_values() {
+    let mut cfg = ExperimentConfig::default();
+    assert!(cfg.set("typo_key", "1").is_err());
+    assert!(cfg.set("rank", "-3").is_err());
+    assert!(cfg.set("kernel", "poly:abc:2").is_err());
+    assert!(cfg.set("method", "nystrom_mNaN").is_err());
+    // good values still work after failures
+    cfg.set("rank", "4").unwrap();
+    assert_eq!(cfg.rank, 4);
+}
+
+#[test]
+fn dataset_csv_with_ragged_rows_is_rejected() {
+    let d = tmpdir("ragged_csv");
+    let p = d.join("bad.csv");
+    std::fs::write(&p, "A,1.0,2.0\nB,3.0\n").unwrap();
+    assert!(rkc::data::load_segmentation_csv(p.to_str().unwrap()).is_none());
+}
+
+#[test]
+fn json_parser_does_not_panic_on_fuzz() {
+    // quick deterministic fuzz: random byte strings must error, not panic
+    use rkc::rng::{Pcg64, Rng};
+    let mut rng = Pcg64::seed(42);
+    for _ in 0..2000 {
+        let len = rng.below(40);
+        let bytes: Vec<u8> = (0..len).map(|_| (rng.below(94) + 32) as u8).collect();
+        let s = String::from_utf8(bytes).unwrap();
+        let _ = Json::parse(&s); // must not panic
+    }
+}
+
+#[test]
+fn sketch_ingest_shape_mismatch_panics_with_context() {
+    use rkc::lowrank::OnePassSketch;
+    use rkc::rng::Pcg64;
+    use rkc::sketch::Srht;
+    let mut rng = Pcg64::seed(1);
+    let srht = Srht::draw(&mut rng, 16, 4);
+    let mut sk = OnePassSketch::new(srht, 10);
+    let bad = rkc::linalg::Mat::zeros(2, 3); // wrong r' width
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        sk.ingest(&[0, 1], &bad);
+    }));
+    assert!(result.is_err());
+}
