@@ -21,14 +21,17 @@ use rkc::coordinator::{build_dataset, run_trials};
 use rkc::metrics::{MemoryModel, Table};
 use rkc::runtime::ArtifactRegistry;
 
-fn main() -> anyhow::Result<()> {
-    let cli = Cli::parse(std::env::args().skip(1), &[]).map_err(anyhow::Error::msg)?;
+fn main() -> rkc::error::Result<()> {
+    let cli = Cli::parse(std::env::args().skip(1), &[])?;
     let mut cfg = ExperimentConfig::default(); // Fig. 3 protocol
-    cfg.trials = cli.get_usize("trials").map_err(anyhow::Error::msg)?.unwrap_or(20);
+    cfg.trials = cli.get_usize("trials")?.unwrap_or(20);
     if let Some(b) = cli.get("backend") {
-        cfg.set("backend", b).map_err(anyhow::Error::msg)?;
+        cfg.set("backend", b)?;
     } else {
         cfg.backend = Backend::Xla; // production path by default
+    }
+    if let Some(d) = cli.get("data_dir") {
+        cfg.set("data_dir", d)?;
     }
     let registry = match cfg.backend {
         Backend::Xla => Some(ArtifactRegistry::open(&cfg.artifacts_dir)?),

@@ -1,44 +1,63 @@
-//! Quickstart: cluster non-linearly-separable data in ~40 lines.
+//! Quickstart: the library-first API in ~30 lines.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! Draws the paper's Fig-1 synthetic set (two crossing thick lines —
-//! plain K-means scores ≈ 0.5 on it), runs One-Pass Kernel K-means
-//! (Alg. 1: streaming SRHT sketch → rank-2 recovery → standard K-means),
-//! and prints the clustering accuracy plus the memory footprint.
+//! 1. Cluster the paper's Fig-1 synthetic set (two crossing thick lines —
+//!    plain K-means scores ≈ 0.5 on it) with One-Pass Kernel K-means via
+//!    the `KernelClusterer` builder: streaming SRHT sketch → rank-2
+//!    recovery → standard K-means.
+//! 2. Use the fitted model as a *model*: embed and assign held-out points
+//!    it never saw (`two_rings`), checking out-of-sample prediction
+//!    matches the in-sample accuracy.
 
-use rkc::config::{ExperimentConfig, Method};
-use rkc::coordinator::{build_dataset, run_trials};
+use rkc::api::KernelClusterer;
+use rkc::clustering::accuracy;
+use rkc::config::Method;
+use rkc::data;
+use rkc::rng::Pcg64;
 
-fn main() -> anyhow::Result<()> {
-    // Table-1 defaults: cross_lines n=4000, homogeneous quadratic kernel,
-    // r = 2, oversampling l = 10 — shrunk to keep the quickstart snappy.
-    let mut cfg = ExperimentConfig::table1();
-    cfg.n = 1000;
-    cfg.trials = 5;
+fn main() -> rkc::error::Result<()> {
+    // --- 1. builder → fit → labels on the crossing-lines workload ---
+    let train = data::cross_lines(&mut Pcg64::seed(2016), 1000);
+    println!("dataset: {}", train.name);
 
-    let ds = build_dataset(&cfg)?;
-    println!("dataset: {}", ds.name);
+    let clusterer = KernelClusterer::new(2) // k = 2 clusters
+        .rank(2) // embedding rank r (paper: 2)
+        .oversample(10) // sketch width r' = r + l (paper: 12)
+        .seed(7);
+    let model = clusterer.fit(&train.x)?;
+    let acc_ours = accuracy(model.labels(), &train.labels, 2);
 
-    // the paper's method
-    cfg.method = Method::OnePass;
-    let ours = run_trials(&cfg, &ds, None)?;
-
-    // plain K-means for contrast
-    cfg.method = Method::PlainKmeans;
-    let plain = run_trials(&cfg, &ds, None)?;
+    let plain = KernelClusterer::new(2).method(Method::PlainKmeans).seed(7).fit(&train.x)?;
+    let acc_plain = accuracy(plain.labels(), &train.labels, 2);
 
     println!(
-        "one-pass kernel k-means: accuracy {:.3} (± {:.3}), approx error {:.3}, peak memory {:.2} MiB",
-        ours.accuracy_mean,
-        ours.accuracy_std,
-        ours.error_mean,
-        ours.peak_memory_bytes as f64 / (1024.0 * 1024.0),
+        "one-pass kernel k-means: accuracy {acc_ours:.3}, approx error {:.3}, peak memory {:.2} MiB",
+        model.approx_error()?,
+        model.metrics().memory.peak_mib(),
     );
-    println!("plain k-means:           accuracy {:.3}", plain.accuracy_mean);
-    assert!(ours.accuracy_mean > plain.accuracy_mean + 0.2);
+    println!("plain k-means:           accuracy {acc_plain:.3}");
+    assert!(acc_ours > acc_plain + 0.2);
     println!("the kernel embedding separates what raw K-means cannot ✓");
+
+    // --- 2. out-of-sample prediction on two_rings ---
+    let rings = data::two_rings(&mut Pcg64::seed(11), 1000);
+    let ring_model = KernelClusterer::new(2).rank(2).oversample(10).seed(13).fit(&rings.x)?;
+    let acc_in = accuracy(ring_model.labels(), &rings.labels, 2);
+
+    let held_out = data::two_rings(&mut Pcg64::seed(17), 500);
+    let predicted = ring_model.predict(&held_out.x)?;
+    let acc_out = accuracy(&predicted, &held_out.labels, 2);
+
+    println!(
+        "two_rings: in-sample accuracy {acc_in:.3}, held-out predict accuracy {acc_out:.3}"
+    );
+    assert!(
+        (acc_in - acc_out).abs() < 0.1,
+        "out-of-sample prediction should match in-sample accuracy within noise"
+    );
+    println!("fit → predict round-trip holds out of sample ✓");
     Ok(())
 }

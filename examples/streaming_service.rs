@@ -1,80 +1,77 @@
-//! The coordinator as a long-running clustering service.
+//! The library API as a long-running clustering service.
 //!
 //! ```bash
 //! cargo run --release --example streaming_service -- [--requests 8] [--xla]
 //! ```
 //!
-//! Demonstrates the L3 system character beyond one-shot experiments: a
-//! request loop receives clustering jobs (dataset + kernel + K), pushes
-//! each through the streaming sketch pipeline with bounded-channel
-//! backpressure, and reports per-request latency percentiles and
-//! sustained throughput — the operational shape of a deployment, where
-//! the XLA artifacts are compiled once and reused across requests.
+//! Demonstrates the system character beyond one-shot experiments: a
+//! request loop receives clustering jobs (dataset + kernel + K), builds a
+//! `KernelClusterer` per job, and reports per-request latency percentiles
+//! and sustained throughput — the operational shape of a deployment. With
+//! `--xla` the artifact registry is opened once and shared across every
+//! request (artifacts compile lazily on first use and are reused after).
 
 use std::time::Instant;
 
-use rkc::config::{Backend, Cli, ExperimentConfig, Method};
-use rkc::coordinator::{build_dataset, run_experiment};
+use rkc::api::KernelClusterer;
+use rkc::clustering::accuracy;
+use rkc::config::{Backend, Cli};
+use rkc::data::{self, Dataset};
+use rkc::kernels::Kernel;
+use rkc::rng::Pcg64;
 use rkc::runtime::ArtifactRegistry;
 use rkc::util::percentile;
 
-fn main() -> anyhow::Result<()> {
-    let cli = Cli::parse(std::env::args().skip(1), &["xla"]).map_err(anyhow::Error::msg)?;
-    let requests = cli.get_usize("requests").map_err(anyhow::Error::msg)?.unwrap_or(8);
+fn main() -> rkc::error::Result<()> {
+    let cli = Cli::parse(std::env::args().skip(1), &["xla"])?;
+    let requests = cli.get_usize("requests")?.unwrap_or(8);
     let use_xla = cli.has_flag("xla");
+    let backend = if use_xla { Backend::Xla } else { Backend::Native };
+    // compiled once, reused across requests
     let registry = if use_xla { Some(ArtifactRegistry::open("artifacts")?) } else { None };
 
     // a mixed job queue: alternating workloads, like a real service
-    let jobs: Vec<ExperimentConfig> = (0..requests)
+    let jobs: Vec<(Dataset, KernelClusterer)> = (0..requests)
         .map(|i| {
-            let mut cfg = ExperimentConfig::default();
-            cfg.backend = if use_xla { Backend::Xla } else { Backend::Native };
-            cfg.method = Method::OnePass;
-            cfg.trials = 1;
-            cfg.seed = 1000 + i as u64;
-            match i % 3 {
-                0 => {
-                    cfg.dataset = "cross_lines".into();
-                    cfg.n = 1024;
-                    cfg.p = 2;
-                    cfg.k = 2;
-                    cfg.oversample = 10;
-                }
-                1 => {
-                    cfg.dataset = "segmentation_like".into();
-                    cfg.n = 1155;
-                    cfg.p = 19;
-                    cfg.k = 7;
-                }
-                _ => {
-                    cfg.dataset = "blobs".into();
-                    cfg.n = 900;
-                    cfg.p = 8;
-                    cfg.k = 4;
-                }
-            }
-            cfg
+            let seed = 1000 + i as u64;
+            let mut rng = Pcg64::seed_stream(seed, 0xda7a);
+            let (ds, clusterer) = match i % 3 {
+                0 => (
+                    data::cross_lines(&mut rng, 1024),
+                    KernelClusterer::new(2).oversample(10),
+                ),
+                1 => (
+                    data::segmentation_like(&mut rng, 1155, 19, 7),
+                    KernelClusterer::new(7),
+                ),
+                _ => (
+                    data::gaussian_blobs(&mut rng, 900, 8, 4, 0.6),
+                    KernelClusterer::new(4).kernel(Kernel::Rbf { gamma: 0.5 }),
+                ),
+            };
+            (ds, clusterer.backend(backend).seed(seed))
         })
         .collect();
 
-    println!("service up: backend={} queue={requests} jobs", if use_xla { "xla" } else { "native" });
+    println!(
+        "service up: backend={} queue={requests} jobs",
+        if use_xla { "xla" } else { "native" }
+    );
     let t_service = Instant::now();
     let mut latencies = Vec::new();
-    for (i, cfg) in jobs.iter().enumerate() {
+    for (i, (ds, clusterer)) in jobs.iter().enumerate() {
         let t0 = Instant::now();
-        let ds = build_dataset(cfg)?;
-        let out = run_experiment(cfg, &ds, registry.as_ref(), cfg.seed)?;
+        let model = clusterer.fit_with_registry(&ds.x, registry.as_ref())?;
+        let err = model.approx_error()?;
         let lat = t0.elapsed().as_secs_f64();
         latencies.push(lat);
         println!(
-            "  req {i:2}: {:24} n={:5} acc={:.3} err={:.3} latency={:.3}s (sketch {:.3}s, kmeans {:.3}s)",
+            "  req {i:2}: {:28} n={:5} acc={:.3} err={err:.3} latency={lat:.3}s (sketch {:.3}s, kmeans {:.3}s)",
             ds.name,
             ds.n(),
-            out.accuracy,
-            out.approx_error,
-            lat,
-            out.sketch_time.as_secs_f64(),
-            out.kmeans_time.as_secs_f64(),
+            accuracy(model.labels(), &ds.labels, ds.k),
+            model.metrics().sketch_time.as_secs_f64(),
+            model.metrics().kmeans_time.as_secs_f64(),
         );
     }
     let total = t_service.elapsed().as_secs_f64();

@@ -20,7 +20,7 @@ use rkc::lowrank::{exact_topr_dense, trace_norm_error_psd};
 use rkc::metrics::Table;
 use rkc::rng::Pcg64;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> rkc::error::Result<()> {
     let mut table = Table::new(
         "Theorem 1: L(Ĉ) − L(C*) vs its bounds",
         &["case", "gap", "tr(E)", "2||E||*", "gap≤tr(E)", "gap≤2||E||*"],
@@ -96,7 +96,9 @@ fn main() -> anyhow::Result<()> {
     }
 
     print!("{}", table.render());
-    anyhow::ensure!(all_hold, "a Theorem-1 bound was violated!");
+    if !all_hold {
+        return Err(rkc::error::RkcError::invalid_config("a Theorem-1 bound was violated!"));
+    }
     println!("all bounds hold ✓ (tr(E) is the tighter bound for best rank-r, as Eq. 10 states)");
     Ok(())
 }

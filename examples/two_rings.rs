@@ -20,11 +20,11 @@ use rkc::coordinator::{build_dataset, run_trials};
 use rkc::metrics::Table;
 use rkc::runtime::ArtifactRegistry;
 
-fn main() -> anyhow::Result<()> {
-    let cli = Cli::parse(std::env::args().skip(1), &["xla"]).map_err(anyhow::Error::msg)?;
+fn main() -> rkc::error::Result<()> {
+    let cli = Cli::parse(std::env::args().skip(1), &["xla"])?;
     let mut cfg = ExperimentConfig::table1();
-    cfg.n = cli.get_usize("n").map_err(anyhow::Error::msg)?.unwrap_or(4000);
-    cfg.trials = cli.get_usize("trials").map_err(anyhow::Error::msg)?.unwrap_or(20);
+    cfg.n = cli.get_usize("n")?.unwrap_or(4000);
+    cfg.trials = cli.get_usize("trials")?.unwrap_or(20);
     let registry = if cli.has_flag("xla") {
         cfg.backend = Backend::Xla;
         Some(ArtifactRegistry::open(&cfg.artifacts_dir)?)

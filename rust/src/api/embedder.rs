@@ -1,0 +1,386 @@
+//! Methods as objects: every low-rank strategy behind one trait.
+//!
+//! The experiment driver used to dispatch on `Method` with a giant match;
+//! the [`Embedder`] trait turns each strategy into a value that knows how
+//! to produce an [`Embedding`] from any [`BlockSource`] and how to account
+//! its memory. [`embedder_for`] maps a [`Method`] to its object (every
+//! method except plain K-means, which never touches the kernel).
+
+use std::time::{Duration, Instant};
+
+use crate::config::Method;
+use crate::error::{Result, RkcError};
+use crate::kernels::{column_batches, BlockSource};
+use crate::linalg::Mat;
+use crate::lowrank::{
+    exact_topr_dense, exact_topr_streaming, gaussian_one_pass_recovery, nystrom,
+    one_pass_recovery, Embedding, NystromSampling, OnePassSketch,
+};
+use crate::metrics::{MemoryModel, MethodMemory};
+use crate::rng::Pcg64;
+use crate::sketch::{GaussianSketch, Srht};
+
+/// Result of one embedding pass, with the phase split the paper reports.
+pub struct EmbedOutcome {
+    pub embedding: Embedding,
+    /// streaming / sketch phase (for Nyström and exact this is the whole
+    /// pass — there is no separate recovery solve)
+    pub sketch_time: Duration,
+    /// recovery phase (QR + solve + eigendecomposition)
+    pub recovery_time: Duration,
+}
+
+/// A low-rank kernel embedding strategy.
+///
+/// All implementors produce an [`Embedding`] `Y` (r × n) with `K ≈ YᵀY`
+/// from streamed kernel column blocks, so standard K-means on `Y`
+/// approximates kernel K-means on `K` (Theorem 1).
+pub trait Embedder {
+    /// Stable method name (matches the `Method` `Display` form).
+    fn name(&self) -> String;
+
+    /// Produce the embedding from streamed blocks of the kernel.
+    fn embed(&self, src: &mut dyn BlockSource, rng: &mut Pcg64) -> Result<EmbedOutcome>;
+
+    /// Byte-accounting model of the pass (the paper's headline axis).
+    fn memory_model(&self, n: usize, n_pad: usize) -> MethodMemory;
+}
+
+/// The paper's Alg. 1: one-pass SRHT sketch, then recovery.
+pub struct OnePassEmbedder {
+    pub rank: usize,
+    pub oversample: usize,
+    pub batch: usize,
+    /// FWHT worker threads inside the transform stage
+    pub threads: usize,
+}
+
+impl OnePassEmbedder {
+    fn width(&self) -> usize {
+        self.rank + self.oversample
+    }
+}
+
+impl Embedder for OnePassEmbedder {
+    fn name(&self) -> String {
+        Method::OnePass.to_string()
+    }
+
+    fn embed(&self, src: &mut dyn BlockSource, rng: &mut Pcg64) -> Result<EmbedOutcome> {
+        let n = src.n();
+        let n_pad = src.n_padded();
+        if !n_pad.is_power_of_two() {
+            return Err(RkcError::invalid_config(format!(
+                "SRHT needs a power-of-two padded length, got n_padded={n_pad}"
+            )));
+        }
+        let width = self.width();
+        // the sketch W is n × r' and its recovery QR needs a tall matrix
+        if width > n {
+            return Err(RkcError::invalid_config(format!(
+                "sketch width r'={width} exceeds sample count n={n}"
+            )));
+        }
+        let mut srht = Srht::draw(rng, n_pad, width);
+        srht.mask_padding(n);
+        let t0 = Instant::now();
+        let mut sketch = OnePassSketch::new(srht, n);
+        for cols in column_batches(n, self.batch) {
+            let kb = src.block(&cols);
+            let rows = sketch.srht().apply_to_block(&kb, self.threads.max(1));
+            sketch.ingest(&cols, &rows);
+        }
+        let sketch_time = t0.elapsed();
+        let t1 = Instant::now();
+        let embedding = one_pass_recovery(&sketch, self.rank);
+        Ok(EmbedOutcome { embedding, sketch_time, recovery_time: t1.elapsed() })
+    }
+
+    fn memory_model(&self, n: usize, n_pad: usize) -> MethodMemory {
+        MemoryModel::one_pass(n, n_pad, self.width(), self.rank, self.batch)
+    }
+}
+
+/// One-pass sketch with a dense Gaussian test matrix (ablation baseline:
+/// same accuracy as the SRHT, but Ω itself costs O(n_pad · r') memory —
+/// the structured-vs-Gaussian gap the paper's §4 calls out).
+pub struct GaussianOnePassEmbedder {
+    pub rank: usize,
+    pub oversample: usize,
+    pub batch: usize,
+}
+
+impl GaussianOnePassEmbedder {
+    fn width(&self) -> usize {
+        self.rank + self.oversample
+    }
+}
+
+impl Embedder for GaussianOnePassEmbedder {
+    fn name(&self) -> String {
+        Method::GaussianOnePass.to_string()
+    }
+
+    fn embed(&self, src: &mut dyn BlockSource, rng: &mut Pcg64) -> Result<EmbedOutcome> {
+        let n = src.n();
+        let n_pad = src.n_padded();
+        let width = self.width();
+        // the sketch W is n × r' and its recovery QR needs a tall matrix
+        if width > n {
+            return Err(RkcError::invalid_config(format!(
+                "sketch width r'={width} exceeds sample count n={n}"
+            )));
+        }
+        // dense Gaussian test matrix over the padded length, padded rows
+        // zeroed (same masking convention as the SRHT)
+        let gauss = {
+            let mut g = GaussianSketch::draw(rng, n_pad, width);
+            for i in n..n_pad {
+                for j in 0..width {
+                    g.omega[(i, j)] = 0.0;
+                }
+            }
+            g
+        };
+        let t0 = Instant::now();
+        let mut w = Mat::zeros(n, width);
+        for cols in column_batches(n, self.batch) {
+            let kb = src.block(&cols);
+            let rows = gauss.apply_to_block(&kb); // b × r'
+            for (bj, &j) in cols.iter().enumerate() {
+                w.row_mut(j).copy_from_slice(rows.row(bj));
+            }
+        }
+        let sketch_time = t0.elapsed();
+        let t1 = Instant::now();
+        let omega_real = Mat::from_fn(n, width, |i, j| gauss.omega[(i, j)]);
+        let embedding = gaussian_one_pass_recovery(&w, &omega_real, self.rank);
+        Ok(EmbedOutcome { embedding, sketch_time, recovery_time: t1.elapsed() })
+    }
+
+    fn memory_model(&self, n: usize, n_pad: usize) -> MethodMemory {
+        let mut mem = MemoryModel::one_pass(n, n_pad, self.width(), self.rank, self.batch);
+        mem.method = self.name();
+        // Ω itself is n_pad × r' dense and persistent
+        mem.persistent += std::mem::size_of::<f64>() * n_pad * self.width();
+        mem
+    }
+}
+
+/// Nyström with m sampled columns (the paper's main baseline).
+pub struct NystromEmbedder {
+    pub rank: usize,
+    pub m: usize,
+    pub sampling: NystromSampling,
+}
+
+impl Embedder for NystromEmbedder {
+    fn name(&self) -> String {
+        Method::Nystrom { m: self.m }.to_string()
+    }
+
+    fn embed(&self, src: &mut dyn BlockSource, rng: &mut Pcg64) -> Result<EmbedOutcome> {
+        let n = src.n();
+        if self.m > n {
+            return Err(RkcError::invalid_config(format!(
+                "nystrom m={} exceeds sample count n={n}",
+                self.m
+            )));
+        }
+        if self.rank > self.m {
+            return Err(RkcError::invalid_config(format!(
+                "rank r={} exceeds nystrom sample count m={}",
+                self.rank, self.m
+            )));
+        }
+        let t0 = Instant::now();
+        let embedding = nystrom(src, self.m, self.rank, self.sampling, rng);
+        Ok(EmbedOutcome { embedding, sketch_time: t0.elapsed(), recovery_time: Duration::ZERO })
+    }
+
+    fn memory_model(&self, n: usize, _n_pad: usize) -> MethodMemory {
+        MemoryModel::nystrom(n, self.m, self.rank)
+    }
+}
+
+/// Exact top-r via streamed subspace iteration (multi-pass, O(rn) memory).
+pub struct ExactEmbedder {
+    pub rank: usize,
+    pub iters: usize,
+    pub batch: usize,
+}
+
+impl Embedder for ExactEmbedder {
+    fn name(&self) -> String {
+        Method::Exact.to_string()
+    }
+
+    fn embed(&self, src: &mut dyn BlockSource, _rng: &mut Pcg64) -> Result<EmbedOutcome> {
+        let n = src.n();
+        if self.rank > n {
+            return Err(RkcError::invalid_config(format!(
+                "rank r={} exceeds sample count n={n}",
+                self.rank
+            )));
+        }
+        let t0 = Instant::now();
+        let embedding = exact_topr_streaming(src, self.rank, self.iters, self.batch);
+        Ok(EmbedOutcome { embedding, sketch_time: t0.elapsed(), recovery_time: Duration::ZERO })
+    }
+
+    fn memory_model(&self, n: usize, n_pad: usize) -> MethodMemory {
+        MemoryModel::exact_streaming(n, n_pad, self.rank, self.batch)
+    }
+}
+
+/// Dense exact top-r over the fully materialized kernel — the O(n²)
+/// embedding the paper avoids, kept as an embedder so the full-kernel
+/// strategy is a first-class object too. (Note: [`Method::FullKernel`]
+/// in `fit`/the experiment driver runs *kernel K-means* on the
+/// materialized matrix — the paper's baseline; this embedder is the
+/// embedding-flavored counterpart for `embed`/`predict` workflows.)
+pub struct FullKernelEmbedder {
+    pub rank: usize,
+    pub batch: usize,
+}
+
+impl Embedder for FullKernelEmbedder {
+    fn name(&self) -> String {
+        Method::FullKernel.to_string()
+    }
+
+    fn embed(&self, src: &mut dyn BlockSource, _rng: &mut Pcg64) -> Result<EmbedOutcome> {
+        let n = src.n();
+        if self.rank > n {
+            return Err(RkcError::invalid_config(format!(
+                "rank r={} exceeds sample count n={n}",
+                self.rank
+            )));
+        }
+        let t0 = Instant::now();
+        let mut kmat = Mat::zeros(n, n);
+        for cols in column_batches(n, self.batch) {
+            let kb = src.block(&cols);
+            for (bj, &j) in cols.iter().enumerate() {
+                for i in 0..n {
+                    kmat[(i, j)] = kb[(i, bj)];
+                }
+            }
+        }
+        let sketch_time = t0.elapsed();
+        let t1 = Instant::now();
+        let embedding = exact_topr_dense(&kmat, self.rank);
+        Ok(EmbedOutcome { embedding, sketch_time, recovery_time: t1.elapsed() })
+    }
+
+    fn memory_model(&self, n: usize, _n_pad: usize) -> MethodMemory {
+        MemoryModel::exact_dense(n)
+    }
+}
+
+/// Map a [`Method`] to its embedder object. Returns `None` for
+/// [`Method::PlainKmeans`], which never forms a kernel embedding.
+pub fn embedder_for(
+    method: Method,
+    rank: usize,
+    oversample: usize,
+    batch: usize,
+    threads: usize,
+) -> Option<Box<dyn Embedder>> {
+    match method {
+        Method::OnePass => Some(Box::new(OnePassEmbedder { rank, oversample, batch, threads })),
+        Method::GaussianOnePass => {
+            Some(Box::new(GaussianOnePassEmbedder { rank, oversample, batch }))
+        }
+        Method::Nystrom { m } => {
+            Some(Box::new(NystromEmbedder { rank, m, sampling: NystromSampling::Uniform }))
+        }
+        Method::Exact => Some(Box::new(ExactEmbedder { rank, iters: 40, batch })),
+        Method::FullKernel => Some(Box::new(FullKernelEmbedder { rank, batch })),
+        Method::PlainKmeans => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{full_kernel_matrix, Kernel, NativeBlockSource};
+    use crate::lowrank::normalized_frobenius_error;
+    use crate::rng::Rng;
+
+    fn random_x(seed: u64, p: usize, n: usize) -> Mat {
+        let mut rng = Pcg64::seed(seed);
+        Mat::from_fn(p, n, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn every_embedder_reconstructs_a_low_rank_kernel() {
+        // R² quadratic kernel has rank ≤ 3: rank-3 embedders are near-exact
+        let x = random_x(1, 2, 48);
+        let kern = Kernel::paper_poly2();
+        let k = full_kernel_matrix(&x, kern);
+        for method in [
+            Method::OnePass,
+            Method::GaussianOnePass,
+            Method::Nystrom { m: 48 },
+            Method::Exact,
+            Method::FullKernel,
+        ] {
+            let e = embedder_for(method, 3, 10, 16, 1).unwrap();
+            let mut src = NativeBlockSource::pow2(x.clone(), kern);
+            let mut rng = Pcg64::seed(7);
+            let out = e.embed(&mut src, &mut rng).unwrap();
+            let err = normalized_frobenius_error(&k, &out.embedding);
+            assert!(err < 1e-5, "{}: err {err}", e.name());
+            assert_eq!(out.embedding.rank(), 3);
+            assert_eq!(out.embedding.n(), 48);
+        }
+    }
+
+    #[test]
+    fn plain_kmeans_has_no_embedder() {
+        assert!(embedder_for(Method::PlainKmeans, 2, 5, 64, 1).is_none());
+    }
+
+    #[test]
+    fn embedder_names_match_method_display() {
+        for method in [
+            Method::OnePass,
+            Method::GaussianOnePass,
+            Method::Nystrom { m: 17 },
+            Method::Exact,
+            Method::FullKernel,
+        ] {
+            let e = embedder_for(method, 2, 5, 64, 1).unwrap();
+            assert_eq!(e.name(), method.to_string());
+        }
+    }
+
+    #[test]
+    fn nystrom_embedder_rejects_bad_geometry() {
+        let x = random_x(2, 2, 20);
+        let mut src = NativeBlockSource::pow2(x, Kernel::paper_poly2());
+        let mut rng = Pcg64::seed(1);
+        let too_many = NystromEmbedder { rank: 2, m: 50, sampling: NystromSampling::Uniform };
+        assert!(too_many.embed(&mut src, &mut rng).is_err());
+        let rank_over_m = NystromEmbedder { rank: 6, m: 4, sampling: NystromSampling::Uniform };
+        assert!(rank_over_m.embed(&mut src, &mut rng).is_err());
+    }
+
+    #[test]
+    fn one_pass_embedder_rejects_non_pow2_padding() {
+        let x = random_x(3, 2, 20);
+        let mut src = NativeBlockSource::new(x, Kernel::paper_poly2(), 20); // not pow2
+        let mut rng = Pcg64::seed(1);
+        let e = OnePassEmbedder { rank: 2, oversample: 4, batch: 8, threads: 1 };
+        let err = e.embed(&mut src, &mut rng).unwrap_err();
+        assert!(err.to_string().contains("power-of-two"));
+    }
+
+    #[test]
+    fn gaussian_memory_model_exceeds_srht() {
+        let srht = OnePassEmbedder { rank: 2, oversample: 5, batch: 64, threads: 1 };
+        let gauss = GaussianOnePassEmbedder { rank: 2, oversample: 5, batch: 64 };
+        assert!(gauss.memory_model(1000, 1024).persistent > srht.memory_model(1000, 1024).persistent);
+    }
+}

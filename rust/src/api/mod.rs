@@ -1,0 +1,691 @@
+//! Library-first public API: builder → fit → model.
+//!
+//! The experiment CLI (`rkc run …`) is one client of this layer; embed it
+//! directly for services, sharding, and anything else that needs the
+//! paper's one-pass kernel clustering without the experiment harness.
+//!
+//! # Quickstart
+//!
+//! ```
+//! use rkc::api::KernelClusterer;
+//! use rkc::data;
+//! use rkc::rng::Pcg64;
+//!
+//! // the paper's Fig-1 synthetic set: plain K-means scores ~0.5 on it
+//! let ds = data::cross_lines(&mut Pcg64::seed(7), 512);
+//!
+//! let model = KernelClusterer::new(2)   // k = 2 clusters
+//!     .rank(2)                          // embedding rank r
+//!     .oversample(10)                   // sketch width r' = r + l
+//!     .seed(42)
+//!     .fit(&ds.x)?;
+//!
+//! let acc = rkc::clustering::accuracy(model.labels(), &ds.labels, 2);
+//! assert!(acc > 0.9, "kernel embedding separates the crossing lines");
+//!
+//! // out-of-sample: embed + assign points the model never saw
+//! let held_out = data::cross_lines(&mut Pcg64::seed(8), 64);
+//! let predicted = model.predict(&held_out.x)?;
+//! assert_eq!(predicted.len(), 64);
+//! # Ok::<(), rkc::error::RkcError>(())
+//! ```
+
+mod embedder;
+mod model;
+
+pub use embedder::{
+    embedder_for, EmbedOutcome, Embedder, ExactEmbedder, FullKernelEmbedder,
+    GaussianOnePassEmbedder, NystromEmbedder, OnePassEmbedder,
+};
+pub use model::{FitMetrics, FittedModel};
+
+use std::time::{Duration, Instant};
+
+use crate::clustering::{kernel_kmeans, kmeans, KmeansOpts};
+use crate::config::{Backend, ExperimentConfig, Method};
+use crate::coordinator::{
+    run_sketch_pass_threaded, xla_kmeans, xla_preferred_n_pad, FusedXlaSketchRows, XlaBlockSource,
+};
+use crate::error::{Result, RkcError};
+use crate::kernels::{column_batches, full_kernel_matrix, BlockSource, Kernel, NativeBlockSource};
+use crate::linalg::Mat;
+use crate::lowrank::{one_pass_recovery, OnePassSketch};
+use crate::metrics::{MemoryModel, MethodMemory};
+use crate::rng::Pcg64;
+use crate::runtime::ArtifactRegistry;
+use crate::sketch::Srht;
+
+use model::Assigner;
+
+/// Builder for a kernel clustering run: kernel, method, rank,
+/// oversampling, backend, seed and K-means options — typed, validated,
+/// and defaulted to the paper's protocol.
+///
+/// `fit(&x)` consumes a p × n data matrix (columns are samples) and
+/// returns a [`FittedModel`]; `fit_stream` consumes kernel blocks from
+/// any [`BlockSource`] instead, for data that never materializes.
+#[derive(Clone, Debug)]
+pub struct KernelClusterer {
+    k: usize,
+    kernel: Kernel,
+    method: Method,
+    rank: usize,
+    oversample: usize,
+    batch: usize,
+    seed: u64,
+    backend: Backend,
+    threads: usize,
+    kmeans_restarts: usize,
+    kmeans_iters: usize,
+    kmeans_tol: f64,
+    artifacts_dir: String,
+    /// strict builders reject advisory misconfigurations (l < r); the
+    /// experiment-config path relaxes this for ablation sweeps
+    strict: bool,
+}
+
+impl KernelClusterer {
+    /// A clusterer for `k` clusters with the paper's defaults: one-pass
+    /// SRHT method, homogeneous quadratic kernel, r = 2, l = 5, native
+    /// backend, 10 K-means restarts × 20 iterations.
+    pub fn new(k: usize) -> Self {
+        KernelClusterer {
+            k,
+            kernel: Kernel::paper_poly2(),
+            method: Method::OnePass,
+            rank: 2,
+            oversample: 5,
+            batch: 256,
+            seed: 2016,
+            backend: Backend::Native,
+            threads: 1,
+            kmeans_restarts: 10,
+            kmeans_iters: 20,
+            kmeans_tol: 1e-9,
+            artifacts_dir: "artifacts".into(),
+            strict: true,
+        }
+    }
+
+    /// Mirror an [`ExperimentConfig`] (the compatibility bridge the
+    /// experiment driver rides on). Advisory validation is relaxed so
+    /// ablation sweeps (e.g. oversampling l below r) still run.
+    pub fn from_config(cfg: &ExperimentConfig) -> Self {
+        KernelClusterer {
+            k: cfg.k,
+            kernel: cfg.kernel,
+            method: cfg.method,
+            rank: cfg.rank,
+            oversample: cfg.oversample,
+            batch: cfg.batch,
+            seed: cfg.seed,
+            backend: cfg.backend,
+            threads: cfg.threads,
+            kmeans_restarts: cfg.kmeans_restarts,
+            kmeans_iters: cfg.kmeans_iters,
+            kmeans_tol: 1e-9,
+            artifacts_dir: cfg.artifacts_dir.clone(),
+            strict: false,
+        }
+    }
+
+    /// Override the cluster count after construction (e.g. to adopt a
+    /// dataset's ground-truth k).
+    pub fn clusters(mut self, k: usize) -> Self {
+        self.k = k;
+        self
+    }
+
+    pub fn kernel(mut self, kernel: Kernel) -> Self {
+        self.kernel = kernel;
+        self
+    }
+
+    pub fn method(mut self, method: Method) -> Self {
+        self.method = method;
+        self
+    }
+
+    /// Embedding rank r (the number of kept eigenpairs).
+    pub fn rank(mut self, rank: usize) -> Self {
+        self.rank = rank;
+        self
+    }
+
+    /// Oversampling l; the sketch width is r' = r + l.
+    pub fn oversample(mut self, oversample: usize) -> Self {
+        self.oversample = oversample;
+        self
+    }
+
+    /// Streaming batch width (columns per kernel block).
+    pub fn batch(mut self, batch: usize) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Worker threads for the native sketch pipeline / FWHT stage.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    pub fn kmeans_restarts(mut self, restarts: usize) -> Self {
+        self.kmeans_restarts = restarts;
+        self
+    }
+
+    pub fn kmeans_iters(mut self, iters: usize) -> Self {
+        self.kmeans_iters = iters;
+        self
+    }
+
+    pub fn kmeans_tol(mut self, tol: f64) -> Self {
+        self.kmeans_tol = tol;
+        self
+    }
+
+    /// Directory holding the compiled XLA artifacts (XLA backend only).
+    pub fn artifacts_dir(mut self, dir: impl Into<String>) -> Self {
+        self.artifacts_dir = dir.into();
+        self
+    }
+
+    /// r' = r + l, the sketch width.
+    pub fn sketch_width(&self) -> usize {
+        self.rank + self.oversample
+    }
+
+    /// Check the configuration against a dataset of `n` samples.
+    pub fn validate(&self, n: usize) -> Result<()> {
+        let bad = |m: String| Err(RkcError::InvalidConfig(m));
+        if self.k == 0 {
+            return bad("k must be at least 1".into());
+        }
+        if n == 0 {
+            return bad("cannot fit an empty dataset (n = 0)".into());
+        }
+        if self.k > n {
+            return bad(format!("k={} clusters exceed n={n} samples", self.k));
+        }
+        if self.batch == 0 {
+            return bad("batch must be at least 1".into());
+        }
+        if self.method != Method::PlainKmeans {
+            if self.rank == 0 {
+                return bad("rank must be at least 1 for embedding methods".into());
+            }
+            if self.rank > n {
+                return bad(format!("rank r={} exceeds n={n} samples", self.rank));
+            }
+        }
+        match self.method {
+            Method::OnePass | Method::GaussianOnePass => {
+                if self.strict && self.oversample < self.rank {
+                    return bad(format!(
+                        "oversampling l={} must be at least rank r={} (sketch width \
+                         r' = r + l >= 2r keeps the recovery solve well-conditioned)",
+                        self.oversample, self.rank
+                    ));
+                }
+                if self.sketch_width() > n {
+                    return bad(format!(
+                        "sketch width r'={} exceeds n={n} samples",
+                        self.sketch_width()
+                    ));
+                }
+            }
+            Method::Nystrom { m } => {
+                if m < self.rank {
+                    return bad(format!("nystrom m={m} is below rank r={}", self.rank));
+                }
+                if m > n {
+                    return bad(format!("nystrom m={m} exceeds n={n} samples"));
+                }
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+
+    /// Fit on a p × n data matrix (columns are samples). Opens the
+    /// artifact registry itself when the XLA backend is selected.
+    ///
+    /// Note: with [`Backend::Xla`] every `fit` call opens a fresh
+    /// registry and (re)compiles the artifacts it touches. Long-running
+    /// services should open one [`ArtifactRegistry`] and call
+    /// [`fit_with_registry`](Self::fit_with_registry) so compiled
+    /// executables are reused across fits.
+    pub fn fit(&self, x: &Mat) -> Result<FittedModel> {
+        // plain/full-kernel baselines never touch XLA — don't demand
+        // artifacts for them even when the backend says Xla
+        let needs_backend = !matches!(self.method, Method::PlainKmeans | Method::FullKernel);
+        match self.backend {
+            Backend::Xla if needs_backend => {
+                let registry = ArtifactRegistry::open(&self.artifacts_dir)?;
+                self.fit_with_registry(x, Some(&registry))
+            }
+            _ => self.fit_with_registry(x, None),
+        }
+    }
+
+    /// Fit with a caller-managed registry (lets services compile the
+    /// artifacts once and reuse them across many fits).
+    pub fn fit_with_registry(
+        &self,
+        x: &Mat,
+        registry: Option<&ArtifactRegistry>,
+    ) -> Result<FittedModel> {
+        let n = x.cols();
+        self.validate(n)?;
+        // only the embedding methods can route compute through XLA;
+        // plain/full-kernel baselines run fine without a registry
+        let needs_backend = !matches!(self.method, Method::PlainKmeans | Method::FullKernel);
+        if needs_backend && self.backend == Backend::Xla && registry.is_none() {
+            return Err(RkcError::backend(
+                "XLA backend requires an artifact registry (run `make artifacts`)",
+            ));
+        }
+        let mut rng = Pcg64::seed_stream(self.seed, 0x7a1a1);
+        let kopts = self.kmeans_opts();
+
+        match self.method {
+            Method::PlainKmeans => {
+                let t0 = Instant::now();
+                let res = kmeans(x, &kopts, &mut rng);
+                let kmeans_time = t0.elapsed();
+                Ok(FittedModel {
+                    kernel: self.kernel,
+                    k: self.k,
+                    embedding: None,
+                    labels: res.labels,
+                    assigner: Assigner::Input { centroids: res.centroids },
+                    train_x: Some(x.clone()),
+                    n_pad: n.next_power_of_two(),
+                    batch: self.batch,
+                    metrics: FitMetrics {
+                        method: self.method.to_string(),
+                        n,
+                        rank: 0,
+                        objective: res.objective,
+                        memory: MethodMemory {
+                            method: self.method.to_string(),
+                            persistent: std::mem::size_of::<f64>() * x.rows() * self.k,
+                            transient: 0,
+                            recovery: 0,
+                        },
+                        sketch_time: Duration::ZERO,
+                        recovery_time: Duration::ZERO,
+                        kmeans_time,
+                    },
+                })
+            }
+            Method::FullKernel => {
+                let t0 = Instant::now();
+                let kmat = full_kernel_matrix(x, self.kernel);
+                let sketch_time = t0.elapsed(); // "sketch" = materialization
+                let t1 = Instant::now();
+                let res =
+                    kernel_kmeans(&kmat, self.k, self.kmeans_restarts, self.kmeans_iters, &mut rng);
+                let kmeans_time = t1.elapsed();
+                // per-cluster constants for out-of-sample assignment
+                let mut sizes = vec![0usize; self.k];
+                for &l in &res.labels {
+                    sizes[l] += 1;
+                }
+                let mut sums = vec![0.0f64; self.k];
+                for i in 0..n {
+                    for j in 0..n {
+                        if res.labels[i] == res.labels[j] {
+                            sums[res.labels[i]] += kmat[(i, j)];
+                        }
+                    }
+                }
+                let self_terms: Vec<f64> = sums
+                    .iter()
+                    .zip(&sizes)
+                    .map(|(&s, &c)| if c > 0 { s / (c * c) as f64 } else { f64::INFINITY })
+                    .collect();
+                Ok(FittedModel {
+                    kernel: self.kernel,
+                    k: self.k,
+                    embedding: None,
+                    labels: res.labels,
+                    assigner: Assigner::KernelClusters { sizes, self_terms },
+                    train_x: Some(x.clone()),
+                    n_pad: n.next_power_of_two(),
+                    batch: self.batch,
+                    metrics: FitMetrics {
+                        method: self.method.to_string(),
+                        n,
+                        rank: 0,
+                        objective: res.objective,
+                        memory: MemoryModel::full_kernel_kmeans(n, self.k),
+                        sketch_time,
+                        recovery_time: Duration::ZERO,
+                        kmeans_time,
+                    },
+                })
+            }
+            _ => {
+                let n_pad = match (self.backend, registry) {
+                    (Backend::Xla, Some(reg)) => {
+                        xla_preferred_n_pad(reg, self.kernel, x.rows(), n)
+                            .unwrap_or_else(|| n.next_power_of_two())
+                    }
+                    _ => n.next_power_of_two(),
+                };
+                let (outcome, memory) = self.compute_embedding(x, registry, n_pad, &mut rng)?;
+                self.finish_embedded(outcome, memory, Some(x.clone()), n_pad, registry, &mut rng)
+            }
+        }
+    }
+
+    /// Fit from streamed kernel blocks (data never materialized). The
+    /// resulting model cannot `embed`/`predict` out-of-sample points —
+    /// there is no retained training data to evaluate the kernel against.
+    pub fn fit_stream(&self, mut src: impl BlockSource) -> Result<FittedModel> {
+        self.fit_stream_dyn(&mut src)
+    }
+
+    /// Object-safe flavor of [`fit_stream`](Self::fit_stream).
+    pub fn fit_stream_dyn(&self, src: &mut dyn BlockSource) -> Result<FittedModel> {
+        let n = src.n();
+        self.validate(n)?;
+        match self.method {
+            Method::PlainKmeans => {
+                return Err(RkcError::unsupported(
+                    "plain K-means needs raw coordinates; use `fit` with the data matrix",
+                ))
+            }
+            Method::FullKernel => {
+                return Err(RkcError::unsupported(
+                    "full-kernel K-means clusters on the materialized kernel; use `fit` \
+                     with the data matrix (or the FullKernelEmbedder for a dense \
+                     rank-r embedding from a stream)",
+                ))
+            }
+            _ => {}
+        }
+        let mut rng = Pcg64::seed_stream(self.seed, 0x7a1a1);
+        let embedder = embedder_for(self.method, self.rank, self.oversample, self.batch, self.threads)
+            .expect("non-embedding methods rejected above");
+        let outcome = embedder.embed(src, &mut rng)?;
+        let memory = embedder.memory_model(n, src.n_padded());
+        let n_pad = src.n_padded();
+        self.finish_embedded(outcome, memory, None, n_pad, None, &mut rng)
+    }
+
+    /// K-means on the recovered embedding + model assembly (shared by
+    /// `fit` and `fit_stream`).
+    fn finish_embedded(
+        &self,
+        outcome: EmbedOutcome,
+        memory: MethodMemory,
+        train_x: Option<Mat>,
+        n_pad: usize,
+        registry: Option<&ArtifactRegistry>,
+        rng: &mut Pcg64,
+    ) -> Result<FittedModel> {
+        let kopts = self.kmeans_opts();
+        let emb = outcome.embedding;
+        let t0 = Instant::now();
+        let res = match (self.backend, registry) {
+            (Backend::Xla, Some(reg)) => match xla_kmeans(reg, &emb.y, &kopts, rng) {
+                Ok(r) => r,
+                // no artifact for this (r, k, n) — fall back silently;
+                // the artifact set covers the paper's experiments
+                Err(_) => kmeans(&emb.y, &kopts, rng),
+            },
+            _ => kmeans(&emb.y, &kopts, rng),
+        };
+        let kmeans_time = t0.elapsed();
+        Ok(FittedModel {
+            kernel: self.kernel,
+            k: self.k,
+            labels: res.labels,
+            assigner: Assigner::Embedded { centroids: res.centroids },
+            train_x,
+            n_pad,
+            batch: self.batch,
+            metrics: FitMetrics {
+                method: self.method.to_string(),
+                n: emb.n(),
+                rank: emb.rank(),
+                objective: res.objective,
+                memory,
+                sketch_time: outcome.sketch_time,
+                recovery_time: outcome.recovery_time,
+                kmeans_time,
+            },
+            embedding: Some(emb),
+        })
+    }
+
+    /// Produce the embedding for the configured method/backend, with the
+    /// production fast paths (fused XLA sketch, threaded native pipeline)
+    /// layered over the generic [`Embedder`] dispatch.
+    fn compute_embedding(
+        &self,
+        x: &Mat,
+        registry: Option<&ArtifactRegistry>,
+        n_pad: usize,
+        rng: &mut Pcg64,
+    ) -> Result<(EmbedOutcome, MethodMemory)> {
+        let n = x.cols();
+        let width = self.sketch_width();
+
+        // fused XLA fast path: one artifact call computes (HD)K[:, J]
+        if self.method == Method::OnePass && self.backend == Backend::Xla {
+            let reg = registry.expect("registry presence checked by caller");
+            let mut srht = Srht::draw(rng, n_pad, width);
+            srht.mask_padding(n);
+            let t0 = Instant::now();
+            let sketch = match FusedXlaSketchRows::new(reg, x, self.kernel, srht.clone()) {
+                Ok(mut p) => run_xla_sketch_pass(&mut p, x, n)?,
+                // no fused artifact for this (kernel, p, n) — reuse the
+                // SAME SRHT draw over a block source, so a fallback run
+                // stays bit-identical to the native backend at this seed
+                Err(_) => {
+                    let mut src = self.block_source(x, registry, n_pad)?;
+                    let mut sk = OnePassSketch::new(srht, n);
+                    for cols in column_batches(n, self.batch) {
+                        let kb = src.block(&cols);
+                        let rows = sk.srht().apply_to_block(&kb, self.threads.max(1));
+                        sk.ingest(&cols, &rows);
+                    }
+                    sk
+                }
+            };
+            let sketch_time = t0.elapsed();
+            let t1 = Instant::now();
+            let embedding = one_pass_recovery(&sketch, self.rank);
+            let outcome = EmbedOutcome { embedding, sketch_time, recovery_time: t1.elapsed() };
+            return Ok((outcome, MemoryModel::one_pass(n, n_pad, width, self.rank, self.batch)));
+        }
+
+        // threaded native pipeline: producer/consumer with backpressure
+        if self.method == Method::OnePass && self.backend == Backend::Native && self.threads > 1 {
+            let mut srht = Srht::draw(rng, n_pad, width);
+            srht.mask_padding(n);
+            let t0 = Instant::now();
+            let (sketch, _stats) = run_sketch_pass_threaded(
+                NativeBlockSource::new(x.clone(), self.kernel, n_pad),
+                srht,
+                self.batch,
+                2,
+                self.threads,
+            );
+            let sketch_time = t0.elapsed();
+            let t1 = Instant::now();
+            let embedding = one_pass_recovery(&sketch, self.rank);
+            let outcome = EmbedOutcome { embedding, sketch_time, recovery_time: t1.elapsed() };
+            return Ok((outcome, MemoryModel::one_pass(n, n_pad, width, self.rank, self.batch)));
+        }
+
+        let embedder =
+            embedder_for(self.method, self.rank, self.oversample, self.batch, self.threads)
+                .expect("non-embedding methods handled by fit");
+        let mut src = self.block_source(x, registry, n_pad)?;
+        let outcome = embedder.embed(src.as_mut(), rng)?;
+        let memory = embedder.memory_model(n, n_pad);
+        Ok((outcome, memory))
+    }
+
+    /// Kernel block source for the configured backend, degrading to the
+    /// native gram path when no matching artifact exists.
+    fn block_source(
+        &self,
+        x: &Mat,
+        registry: Option<&ArtifactRegistry>,
+        n_pad: usize,
+    ) -> Result<Box<dyn BlockSource>> {
+        Ok(match (self.backend, registry) {
+            (Backend::Xla, Some(reg)) => {
+                match XlaBlockSource::new(reg, x.clone(), self.kernel, n_pad) {
+                    Ok(src) => Box::new(src),
+                    // graceful degradation when no gram artifact matches
+                    Err(_) => Box::new(NativeBlockSource::new(x.clone(), self.kernel, n_pad)),
+                }
+            }
+            _ => Box::new(NativeBlockSource::new(x.clone(), self.kernel, n_pad)),
+        })
+    }
+
+    fn kmeans_opts(&self) -> KmeansOpts {
+        KmeansOpts {
+            k: self.k,
+            restarts: self.kmeans_restarts,
+            max_iters: self.kmeans_iters,
+            tol: self.kmeans_tol,
+        }
+    }
+}
+
+/// Sequential sketch pass over the fused XLA producer (PJRT handles are
+/// not Send, so this cannot reuse the threaded native pipeline).
+fn run_xla_sketch_pass(
+    p: &mut FusedXlaSketchRows,
+    x: &Mat,
+    n_real: usize,
+) -> Result<OnePassSketch> {
+    let mut sketch = OnePassSketch::new(p.srht().clone(), n_real);
+    // the artifact has a fixed batch width; stream at exactly that width
+    let width = p.batch_width();
+    for cols in column_batches(n_real, width) {
+        let rows = p.rows_for(x, &cols)?;
+        sketch.ingest(&cols, &rows);
+    }
+    Ok(sketch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::accuracy;
+    use crate::data;
+
+    #[test]
+    fn builder_validation_catches_bad_geometry() {
+        let x = data::cross_lines(&mut Pcg64::seed(1), 40).x;
+        // rank 0
+        assert!(KernelClusterer::new(2).rank(0).fit(&x).is_err());
+        // oversampling below rank (strict builder)
+        assert!(KernelClusterer::new(2).rank(4).oversample(2).fit(&x).is_err());
+        // k > n
+        assert!(KernelClusterer::new(100).fit(&x).is_err());
+        // k = 0
+        assert!(KernelClusterer::new(0).fit(&x).is_err());
+        // nystrom m below rank
+        assert!(KernelClusterer::new(2)
+            .method(Method::Nystrom { m: 1 })
+            .rank(2)
+            .fit(&x)
+            .is_err());
+        // the defaults are fine
+        assert!(KernelClusterer::new(2).fit(&x).is_ok());
+    }
+
+    #[test]
+    fn relaxed_config_path_allows_ablation_oversampling() {
+        let mut cfg = ExperimentConfig::table1();
+        cfg.n = 64;
+        cfg.oversample = 0; // below rank: rejected strictly, allowed here
+        let x = data::cross_lines(&mut Pcg64::seed(2), 64).x;
+        assert!(KernelClusterer::from_config(&cfg).fit(&x).is_ok());
+    }
+
+    #[test]
+    fn fit_separates_cross_lines() {
+        let ds = data::cross_lines(&mut Pcg64::seed(3), 400);
+        let model = KernelClusterer::new(2).oversample(10).seed(9).fit(&ds.x).unwrap();
+        let acc = accuracy(model.labels(), &ds.labels, 2);
+        assert!(acc > 0.9, "one-pass accuracy {acc}");
+        assert!(model.metrics().memory.peak() > 0);
+        assert_eq!(model.metrics().rank, 2);
+        let err = model.approx_error().unwrap();
+        assert!(err.is_finite() && err < 1.0, "approx error {err}");
+    }
+
+    #[test]
+    fn fit_stream_works_without_raw_data() {
+        let ds = data::cross_lines(&mut Pcg64::seed(4), 200);
+        let src = NativeBlockSource::pow2(ds.x.clone(), Kernel::paper_poly2());
+        let model = KernelClusterer::new(2).oversample(8).fit_stream(src).unwrap();
+        let acc = accuracy(model.labels(), &ds.labels, 2);
+        assert!(acc > 0.9, "streamed accuracy {acc}");
+        // no retained data => no out-of-sample ops
+        assert!(model.predict(&ds.x).is_err());
+        assert!(model.embed(&ds.x).is_err());
+    }
+
+    #[test]
+    fn plain_kmeans_model_predicts_in_input_space() {
+        let ds = data::gaussian_blobs(&mut Pcg64::seed(5), 120, 3, 4, 0.3);
+        let model = KernelClusterer::new(4)
+            .method(Method::PlainKmeans)
+            .fit(&ds.x)
+            .unwrap();
+        // predicting the training points reproduces the fit labels
+        let pred = model.predict(&ds.x).unwrap();
+        assert_eq!(pred, model.labels());
+        assert!(model.embed(&ds.x).is_err(), "no kernel embedding for plain");
+    }
+
+    #[test]
+    fn full_kernel_model_assigns_out_of_sample() {
+        let ds = data::cross_lines(&mut Pcg64::seed(6), 120);
+        let model = KernelClusterer::new(2)
+            .method(Method::FullKernel)
+            .kmeans_restarts(20)
+            .fit(&ds.x)
+            .unwrap();
+        let acc = accuracy(model.labels(), &ds.labels, 2);
+        assert!(acc > 0.9, "kernel k-means accuracy {acc}");
+        // re-assigning the training points agrees with the fit labels
+        let pred = model.predict(&ds.x).unwrap();
+        let agree = pred.iter().zip(model.labels()).filter(|(a, b)| a == b).count();
+        assert!(agree as f64 / 120.0 > 0.95, "only {agree}/120 agree");
+    }
+
+    #[test]
+    fn xla_backend_without_registry_is_typed_error() {
+        let ds = data::cross_lines(&mut Pcg64::seed(7), 64);
+        let err = KernelClusterer::new(2)
+            .backend(Backend::Xla)
+            .artifacts_dir("/nonexistent/rkc_artifacts")
+            .fit(&ds.x)
+            .unwrap_err();
+        assert!(err.to_string().contains("manifest.json"), "{err}");
+    }
+}

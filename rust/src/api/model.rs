@@ -1,0 +1,274 @@
+//! The trained artifact of a [`KernelClusterer`](super::KernelClusterer)
+//! fit: recovered embedding, centroids, labels, and out-of-sample
+//! assignment.
+//!
+//! Out-of-sample extension: the recovered factorization is
+//! `K̂ = Yᵀ Y = U Λ Uᵀ` with `Y = Λ^{1/2} Uᵀ`, so `Y Yᵀ = Λ` and a new
+//! point `z` embeds as
+//!
+//! ```text
+//! y(z) = Λ⁻¹ · Y · k_z,    k_z = [κ(z, x_j)]_{j=1..n}
+//! ```
+//!
+//! (the Nyström-style column-map extension: plugging `z = x_l` in gives
+//! `Λ⁻¹ Y K[:, l] ≈ Λ⁻¹ (Y Yᵀ) Y[:, l] = Y[:, l]`, i.e. it reproduces
+//! the in-sample embedding up to approximation error). Prediction then
+//! assigns the nearest trained centroid in embedding space.
+
+use std::time::Duration;
+
+use crate::error::{Result, RkcError};
+use crate::kernels::{BlockSource, Kernel, NativeBlockSource};
+use crate::linalg::Mat;
+use crate::lowrank::{streamed_frobenius_error, Embedding};
+use crate::metrics::MethodMemory;
+
+/// Everything a fit measures about itself.
+#[derive(Clone, Debug)]
+pub struct FitMetrics {
+    /// stable method name (the `Method` `Display` form)
+    pub method: String,
+    /// training sample count
+    pub n: usize,
+    /// embedding rank (0 for plain K-means)
+    pub rank: usize,
+    /// final K-means / kernel-K-means objective
+    pub objective: f64,
+    /// byte-accounting memory model of the fit
+    pub memory: MethodMemory,
+    pub sketch_time: Duration,
+    pub recovery_time: Duration,
+    pub kmeans_time: Duration,
+}
+
+/// How a fitted model assigns new points to clusters.
+pub(crate) enum Assigner {
+    /// nearest centroid in embedding space (r × k centroids)
+    Embedded { centroids: Mat },
+    /// nearest centroid in input space (p × k centroids; plain K-means)
+    Input { centroids: Mat },
+    /// kernel K-means assignment (Dhillon et al. Eq. 4): per-cluster
+    /// sizes and the constant intra-cluster kernel terms, members
+    /// resolved through the stored training labels
+    KernelClusters { sizes: Vec<usize>, self_terms: Vec<f64> },
+}
+
+/// A trained clustering model: embedding + centroids + labels, with
+/// out-of-sample [`embed`](FittedModel::embed) /
+/// [`predict`](FittedModel::predict) when the training data was retained
+/// (i.e. the model came from `fit`, not `fit_stream`).
+pub struct FittedModel {
+    pub(crate) kernel: Kernel,
+    pub(crate) k: usize,
+    pub(crate) embedding: Option<Embedding>,
+    pub(crate) labels: Vec<usize>,
+    pub(crate) assigner: Assigner,
+    pub(crate) train_x: Option<Mat>,
+    pub(crate) n_pad: usize,
+    pub(crate) batch: usize,
+    pub(crate) metrics: FitMetrics,
+}
+
+impl FittedModel {
+    /// Cluster index per training point.
+    pub fn labels(&self) -> &[usize] {
+        &self.labels
+    }
+
+    /// Number of clusters.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// The kernel this model was trained with.
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
+    }
+
+    /// The recovered low-rank embedding (`None` for plain K-means and
+    /// the full-kernel baseline, which never form one).
+    pub fn embedding(&self) -> Option<&Embedding> {
+        self.embedding.as_ref()
+    }
+
+    /// Trained centroids: r × k in embedding space, or p × k in input
+    /// space for plain K-means. `None` for the full-kernel baseline
+    /// (kernel K-means centroids exist only implicitly in feature space).
+    pub fn centroids(&self) -> Option<&Mat> {
+        match &self.assigner {
+            Assigner::Embedded { centroids } | Assigner::Input { centroids } => Some(centroids),
+            Assigner::KernelClusters { .. } => None,
+        }
+    }
+
+    /// Timings, memory model, and the final objective of the fit.
+    pub fn metrics(&self) -> &FitMetrics {
+        &self.metrics
+    }
+
+    /// The padded kernel length the fit used (power of two on the
+    /// native path; an artifact-baked size on the XLA path). Callers
+    /// building their own [`BlockSource`] for
+    /// [`approx_error_with`](Self::approx_error_with) should match it.
+    pub fn n_padded(&self) -> usize {
+        self.n_pad
+    }
+
+    /// Embed out-of-sample points `xq` (p × m) into the trained
+    /// embedding space via the column-map extension `y(z) = Λ⁻¹ Y k_z`.
+    pub fn embed(&self, xq: &Mat) -> Result<Mat> {
+        let emb = self.embedding.as_ref().ok_or_else(|| {
+            RkcError::unsupported(format!(
+                "method {} has no kernel embedding to extend",
+                self.metrics.method
+            ))
+        })?;
+        let xt = self.require_train_x()?;
+        self.check_dims(xt, xq)?;
+        let (n, m, r) = (xt.cols(), xq.cols(), emb.rank());
+
+        // columns once, so the κ(z, x_j) loop reads contiguous slices
+        let train_cols: Vec<Vec<f64>> = (0..n).map(|j| xt.col(j)).collect();
+        let mut out = Mat::zeros(r, m);
+        for j in 0..m {
+            let zq = xq.col(j);
+            for (t, xcol) in train_cols.iter().enumerate() {
+                let kv = self.kernel.eval(xcol, &zq);
+                if kv == 0.0 {
+                    continue;
+                }
+                for i in 0..r {
+                    out[(i, j)] += emb.y[(i, t)] * kv;
+                }
+            }
+        }
+        // scale row i by 1/λ_i; numerically-absent directions stay zero
+        let lmax = emb.eigenvalues.first().copied().unwrap_or(0.0).max(0.0);
+        let floor = 1e-12 * lmax.max(1e-300);
+        for i in 0..r {
+            let l = emb.eigenvalues[i];
+            let s = if l > floor { 1.0 / l } else { 0.0 };
+            for v in out.row_mut(i) {
+                *v *= s;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Assign out-of-sample points `xq` (p × m) to trained clusters.
+    pub fn predict(&self, xq: &Mat) -> Result<Vec<usize>> {
+        match &self.assigner {
+            Assigner::Embedded { centroids } => {
+                let yq = self.embed(xq)?;
+                Ok(nearest_centroids(&yq, centroids))
+            }
+            Assigner::Input { centroids } => {
+                if xq.rows() != centroids.rows() {
+                    return Err(RkcError::invalid_config(format!(
+                        "query dimension {} does not match trained dimension {}",
+                        xq.rows(),
+                        centroids.rows()
+                    )));
+                }
+                Ok(nearest_centroids(xq, centroids))
+            }
+            Assigner::KernelClusters { sizes, self_terms } => {
+                let xt = self.require_train_x()?;
+                self.check_dims(xt, xq)?;
+                let n = xt.cols();
+                let train_cols: Vec<Vec<f64>> = (0..n).map(|j| xt.col(j)).collect();
+                let mut out = Vec::with_capacity(xq.cols());
+                for j in 0..xq.cols() {
+                    let zq = xq.col(j);
+                    // cross term Σ_{l∈S_c} κ(z, x_l) per cluster
+                    let mut cross = vec![0.0f64; self.k];
+                    for (t, xcol) in train_cols.iter().enumerate() {
+                        cross[self.labels[t]] += self.kernel.eval(xcol, &zq);
+                    }
+                    // κ(z,z) is constant over clusters — argmin ignores it
+                    let mut best = 0usize;
+                    let mut best_score = f64::INFINITY;
+                    for c in 0..self.k {
+                        if sizes[c] == 0 {
+                            continue;
+                        }
+                        let score = self_terms[c] - 2.0 * cross[c] / sizes[c] as f64;
+                        if score < best_score {
+                            best_score = score;
+                            best = c;
+                        }
+                    }
+                    out.push(best);
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Streamed normalized approximation error `‖K − K̂‖_F / ‖K‖_F`
+    /// against the model's own training kernel — one extra pass over
+    /// native kernel blocks, never violating the O(r'n) memory budget.
+    pub fn approx_error(&self) -> Result<f64> {
+        let xt = self.require_train_x()?;
+        let mut src = NativeBlockSource::new(xt.clone(), self.kernel, self.n_pad);
+        self.approx_error_with(&mut src)
+    }
+
+    /// Streamed approximation error against a caller-provided block
+    /// source (e.g. an XLA-backed one).
+    pub fn approx_error_with(&self, src: &mut dyn BlockSource) -> Result<f64> {
+        let emb = self.embedding.as_ref().ok_or_else(|| {
+            RkcError::unsupported(format!(
+                "method {} has no embedding to measure",
+                self.metrics.method
+            ))
+        })?;
+        Ok(streamed_frobenius_error(src, emb, self.batch))
+    }
+
+    fn require_train_x(&self) -> Result<&Mat> {
+        self.train_x.as_ref().ok_or_else(|| {
+            RkcError::unsupported(
+                "model was fit from a block stream without retained training data \
+                 (use `fit` instead of `fit_stream` for out-of-sample operations)",
+            )
+        })
+    }
+
+    fn check_dims(&self, xt: &Mat, xq: &Mat) -> Result<()> {
+        if xq.rows() != xt.rows() {
+            return Err(RkcError::invalid_config(format!(
+                "query dimension {} does not match trained dimension {}",
+                xq.rows(),
+                xt.rows()
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Nearest-centroid assignment: `points` and `centroids` share their row
+/// dimension; returns one centroid index per point column.
+fn nearest_centroids(points: &Mat, centroids: &Mat) -> Vec<usize> {
+    let (r, m) = (points.rows(), points.cols());
+    let k = centroids.cols();
+    debug_assert_eq!(centroids.rows(), r);
+    let mut out = Vec::with_capacity(m);
+    for j in 0..m {
+        let mut best = 0usize;
+        let mut best_d = f64::INFINITY;
+        for c in 0..k {
+            let mut d = 0.0;
+            for i in 0..r {
+                let t = points[(i, j)] - centroids[(i, c)];
+                d += t * t;
+            }
+            if d < best_d {
+                best_d = d;
+                best = c;
+            }
+        }
+        out.push(best);
+    }
+    out
+}

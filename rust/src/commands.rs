@@ -1,14 +1,13 @@
-//! Subcommand implementations shared by the CLI binary.
+//! Subcommand implementations shared by the CLI binary — thin clients of
+//! the `rkc::api` layer plus table formatting.
 
-use anyhow::Result;
-
+use rkc::api::{Embedder, OnePassEmbedder};
 use rkc::clustering::{kernel_kmeans_objective, kmeans, KmeansOpts};
 use rkc::config::{ExperimentConfig, Method};
 use rkc::coordinator::{build_dataset, run_trials};
 use rkc::data;
+use rkc::error::Result;
 use rkc::kernels::full_kernel_matrix;
-#[allow(unused_imports)]
-use rkc::lowrank::normalized_frobenius_error;
 use rkc::linalg::Mat;
 use rkc::lowrank::{exact_topr_dense, trace_norm_error_psd};
 use rkc::metrics::{MemoryModel, Table};
@@ -18,13 +17,8 @@ use rkc::runtime::ArtifactRegistry;
 pub fn cmd_run(cfg: &ExperimentConfig, registry: Option<&ArtifactRegistry>) -> Result<()> {
     let ds = build_dataset(cfg)?;
     println!(
-        "dataset={} method={} backend={:?} r={} l={} trials={}",
-        ds.name,
-        cfg.method.name(),
-        cfg.backend,
-        cfg.rank,
-        cfg.oversample,
-        cfg.trials
+        "dataset={} method={} backend={} r={} l={} trials={}",
+        ds.name, cfg.method, cfg.backend, cfg.rank, cfg.oversample, cfg.trials
     );
     let agg = run_trials(cfg, &ds, registry)?;
     let mut t = Table::new(
@@ -106,9 +100,15 @@ pub fn cmd_fig2(
     let exact = rkc::lowrank::exact_topr_streaming(&mut src, cfg.rank, 40, cfg.batch);
     data::write_points_csv(&format!("{out_dir}/fig2a_exact.csv"), &exact.y, &ds.labels)?;
 
-    let mut c = cfg.clone();
-    c.method = Method::OnePass;
-    let ours = one_pass_embedding(&c, &ds)?;
+    // one-pass embedding via the method object (no K-means needed here)
+    let one_pass = OnePassEmbedder {
+        rank: cfg.rank,
+        oversample: cfg.oversample,
+        batch: cfg.batch,
+        threads: cfg.threads.max(1),
+    };
+    let mut rng2 = Pcg64::seed_stream(cfg.seed, 0xf162);
+    let ours = one_pass.embed(&mut src, &mut rng2)?.embedding;
     data::write_points_csv(&format!("{out_dir}/fig2b_ours.csv"), &ours.y, &ds.labels)?;
 
     // quantitative proxy for "almost identical to exact": streamed
@@ -118,28 +118,6 @@ pub fn cmd_fig2(
     println!("fig2: wrote {out_dir}/fig1_data.csv, fig1_centroids.csv, fig2a_exact.csv, fig2b_ours.csv");
     println!("fig2: exact err={err_exact:.4}  ours err={err_ours:.4} (paper: both 0.40)");
     Ok(())
-}
-
-fn one_pass_embedding(
-    cfg: &ExperimentConfig,
-    ds: &data::Dataset,
-) -> Result<rkc::lowrank::Embedding> {
-    use rkc::coordinator::{run_sketch_pass, NativeSketchRows};
-    use rkc::kernels::NativeBlockSource;
-    use rkc::lowrank::one_pass_recovery;
-    use rkc::sketch::Srht;
-    let n = ds.n();
-    let n_pad = n.next_power_of_two();
-    let mut rng = Pcg64::seed_stream(cfg.seed, 0xf162);
-    let mut srht = Srht::draw(&mut rng, n_pad, cfg.sketch_width());
-    srht.mask_padding(n);
-    let mut p = NativeSketchRows {
-        src: NativeBlockSource::new(ds.x.clone(), cfg.kernel, n_pad),
-        srht,
-        threads: cfg.threads.max(1),
-    };
-    let (sketch, _) = run_sketch_pass(&mut p, n, cfg.batch);
-    Ok(one_pass_recovery(&sketch, cfg.rank))
 }
 
 /// Fig. 3: normalized approximation error (a) and clustering accuracy

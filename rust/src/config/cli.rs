@@ -18,6 +18,12 @@ impl std::fmt::Display for CliError {
 
 impl std::error::Error for CliError {}
 
+impl From<CliError> for crate::error::RkcError {
+    fn from(e: CliError) -> Self {
+        crate::error::RkcError::InvalidConfig(e.0)
+    }
+}
+
 /// Parsed command line.
 #[derive(Debug, Clone)]
 pub struct Cli {

@@ -2,17 +2,28 @@
 //!
 //! Configs load from JSON files (see `util::json`) and/or `--key value`
 //! command-line overrides, so every experiment in EXPERIMENTS.md is
-//! reproducible from a single command line.
+//! reproducible from a single command line. [`Method`] and [`Backend`]
+//! implement the standard [`FromStr`]/[`Display`] pair (round-tripping
+//! for every variant), so they parse with plain `"exact".parse()` and
+//! print with `{}` like any other Rust type.
 
 mod cli;
 
 pub use cli::{Cli, CliError};
 
+use std::fmt;
+use std::str::FromStr;
+
+use crate::error::{Result, RkcError};
 use crate::kernels::Kernel;
 use crate::util::Json;
 
+/// Default Nyström landmark count for a bare `"nystrom"` method string
+/// (the paper's largest sweep point — Table 1's `m = 100` column).
+pub const DEFAULT_NYSTROM_M: usize = 100;
+
 /// Which low-rank / clustering method to run.
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Method {
     /// the paper's Alg. 1 (SRHT one-pass)
     OnePass,
@@ -28,28 +39,38 @@ pub enum Method {
     PlainKmeans,
 }
 
-impl Method {
-    pub fn name(&self) -> String {
+impl fmt::Display for Method {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
-            Method::OnePass => "one_pass".into(),
-            Method::GaussianOnePass => "gaussian_one_pass".into(),
-            Method::Nystrom { m } => format!("nystrom_m{m}"),
-            Method::Exact => "exact".into(),
-            Method::FullKernel => "full_kernel".into(),
-            Method::PlainKmeans => "plain_kmeans".into(),
+            Method::OnePass => write!(f, "one_pass"),
+            Method::GaussianOnePass => write!(f, "gaussian_one_pass"),
+            Method::Nystrom { m } => write!(f, "nystrom_m{m}"),
+            Method::Exact => write!(f, "exact"),
+            Method::FullKernel => write!(f, "full_kernel"),
+            Method::PlainKmeans => write!(f, "plain_kmeans"),
         }
     }
+}
 
-    pub fn parse(s: &str) -> Option<Method> {
+impl FromStr for Method {
+    type Err = RkcError;
+
+    /// Accepts every `Display` form plus the historical aliases
+    /// (`ours`, `gaussian`, `plain`) and a bare `nystrom`, which gets
+    /// [`DEFAULT_NYSTROM_M`] landmarks.
+    fn from_str(s: &str) -> Result<Method> {
         match s {
-            "one_pass" | "ours" => Some(Method::OnePass),
-            "gaussian" | "gaussian_one_pass" => Some(Method::GaussianOnePass),
-            "exact" => Some(Method::Exact),
-            "full_kernel" => Some(Method::FullKernel),
-            "plain" | "plain_kmeans" => Some(Method::PlainKmeans),
-            _ => s.strip_prefix("nystrom_m")
+            "one_pass" | "ours" => Ok(Method::OnePass),
+            "gaussian" | "gaussian_one_pass" => Ok(Method::GaussianOnePass),
+            "exact" => Ok(Method::Exact),
+            "full_kernel" => Ok(Method::FullKernel),
+            "plain" | "plain_kmeans" => Ok(Method::PlainKmeans),
+            "nystrom" => Ok(Method::Nystrom { m: DEFAULT_NYSTROM_M }),
+            _ => s
+                .strip_prefix("nystrom_m")
                 .and_then(|m| m.parse().ok())
-                .map(|m| Method::Nystrom { m }),
+                .map(|m| Method::Nystrom { m })
+                .ok_or_else(|| RkcError::parse("method", s)),
         }
     }
 }
@@ -61,6 +82,27 @@ pub enum Backend {
     Native,
     /// XLA artifacts via PJRT (the production path; requires artifacts/)
     Xla,
+}
+
+impl fmt::Display for Backend {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Backend::Native => write!(f, "native"),
+            Backend::Xla => write!(f, "xla"),
+        }
+    }
+}
+
+impl FromStr for Backend {
+    type Err = RkcError;
+
+    fn from_str(s: &str) -> Result<Backend> {
+        match s {
+            "native" => Ok(Backend::Native),
+            "xla" => Ok(Backend::Xla),
+            _ => Err(RkcError::parse("backend", s)),
+        }
+    }
 }
 
 /// A full experiment specification.
@@ -82,6 +124,9 @@ pub struct ExperimentConfig {
     pub kmeans_iters: usize,
     pub threads: usize,
     pub artifacts_dir: String,
+    /// root directory for on-disk datasets (e.g. `segmentation.csv`);
+    /// CSV dataset names resolve relative to it when not found as given
+    pub data_dir: String,
 }
 
 impl Default for ExperimentConfig {
@@ -104,6 +149,7 @@ impl Default for ExperimentConfig {
             kmeans_iters: 20,
             threads: 1,
             artifacts_dir: "artifacts".into(),
+            data_dir: "data".into(),
         }
     }
 }
@@ -128,61 +174,39 @@ impl ExperimentConfig {
 
     /// Apply a `key=value` override; unknown keys are an error so typos
     /// fail loudly.
-    pub fn set(&mut self, key: &str, value: &str) -> Result<(), String> {
-        let uint = |v: &str| v.parse::<usize>().map_err(|e| format!("{key}: {e}"));
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let uint = |what: &'static str, v: &str| {
+            v.parse::<usize>().map_err(|_| RkcError::parse(what, v))
+        };
         match key {
             "dataset" => self.dataset = value.into(),
-            "n" => self.n = uint(value)?,
-            "p" => self.p = uint(value)?,
-            "k" => self.k = uint(value)?,
-            "rank" | "r" => self.rank = uint(value)?,
-            "oversample" | "l" => self.oversample = uint(value)?,
-            "batch" => self.batch = uint(value)?,
-            "trials" => self.trials = uint(value)?,
-            "seed" => self.seed = value.parse().map_err(|e| format!("seed: {e}"))?,
-            "kmeans_restarts" => self.kmeans_restarts = uint(value)?,
-            "kmeans_iters" => self.kmeans_iters = uint(value)?,
-            "threads" => self.threads = uint(value)?,
+            "n" => self.n = uint("n", value)?,
+            "p" => self.p = uint("p", value)?,
+            "k" => self.k = uint("k", value)?,
+            "rank" | "r" => self.rank = uint("rank", value)?,
+            "oversample" | "l" => self.oversample = uint("oversample", value)?,
+            "batch" => self.batch = uint("batch", value)?,
+            "trials" => self.trials = uint("trials", value)?,
+            "seed" => {
+                self.seed = value.parse().map_err(|_| RkcError::parse("seed", value))?;
+            }
+            "kmeans_restarts" => self.kmeans_restarts = uint("kmeans_restarts", value)?,
+            "kmeans_iters" => self.kmeans_iters = uint("kmeans_iters", value)?,
+            "threads" => self.threads = uint("threads", value)?,
             "artifacts_dir" => self.artifacts_dir = value.into(),
-            "method" => {
-                self.method =
-                    Method::parse(value).ok_or_else(|| format!("unknown method '{value}'"))?;
-            }
-            "backend" => {
-                self.backend = match value {
-                    "native" => Backend::Native,
-                    "xla" => Backend::Xla,
-                    _ => return Err(format!("unknown backend '{value}'")),
-                };
-            }
-            "kernel" => {
-                self.kernel = match value {
-                    "poly2" => Kernel::paper_poly2(),
-                    "linear" => Kernel::Linear,
-                    _ if value.starts_with("rbf:") => {
-                        let g: f64 = value[4..].parse().map_err(|e| format!("rbf gamma: {e}"))?;
-                        Kernel::Rbf { gamma: g }
-                    }
-                    _ if value.starts_with("poly:") => {
-                        let rest = &value[5..];
-                        let (g, d) = rest.split_once(':').ok_or("poly:<gamma>:<degree>")?;
-                        Kernel::Poly {
-                            gamma: g.parse().map_err(|e| format!("poly gamma: {e}"))?,
-                            degree: d.parse().map_err(|e| format!("poly degree: {e}"))?,
-                        }
-                    }
-                    _ => return Err(format!("unknown kernel '{value}'")),
-                };
-            }
-            _ => return Err(format!("unknown config key '{key}'")),
+            "data_dir" => self.data_dir = value.into(),
+            "method" => self.method = value.parse()?,
+            "backend" => self.backend = value.parse()?,
+            "kernel" => self.kernel = value.parse()?,
+            _ => return Err(RkcError::invalid_config(format!("unknown config key '{key}'"))),
         }
         Ok(())
     }
 
     /// Load overrides from a JSON object file: `{"n": 1000, "r": 2, ...}`.
-    pub fn apply_json(&mut self, json: &Json) -> Result<(), String> {
+    pub fn apply_json(&mut self, json: &Json) -> Result<()> {
         let Json::Obj(map) = json else {
-            return Err("config file must be a JSON object".into());
+            return Err(RkcError::invalid_config("config file must be a JSON object"));
         };
         for (k, v) in map {
             let as_text = match v {
@@ -195,7 +219,11 @@ impl ExperimentConfig {
                     }
                 }
                 Json::Bool(b) => format!("{b}"),
-                _ => return Err(format!("unsupported value for '{k}'")),
+                _ => {
+                    return Err(RkcError::invalid_config(format!(
+                        "unsupported value for '{k}'"
+                    )))
+                }
             };
             self.set(k, &as_text)?;
         }
@@ -217,6 +245,7 @@ mod tests {
         assert_eq!(c.trials, 100);
         assert_eq!(c.kmeans_restarts, 10);
         assert_eq!(c.kmeans_iters, 20);
+        assert_eq!(c.data_dir, "data");
         let t = ExperimentConfig::table1();
         assert_eq!((t.n, t.k, t.oversample), (4000, 2, 10));
         assert_eq!(t.dataset, "cross_lines");
@@ -234,13 +263,15 @@ mod tests {
         assert_eq!(c.kernel, Kernel::Poly { gamma: 1.0, degree: 3 });
         c.set("backend", "xla").unwrap();
         assert_eq!(c.backend, Backend::Xla);
+        c.set("data_dir", "/tmp/datasets").unwrap();
+        assert_eq!(c.data_dir, "/tmp/datasets");
         assert!(c.set("nope", "1").is_err());
         assert!(c.set("backend", "gpu").is_err());
         assert!(c.set("n", "abc").is_err());
     }
 
     #[test]
-    fn method_parse_roundtrip() {
+    fn method_display_fromstr_roundtrip() {
         for m in [
             Method::OnePass,
             Method::GaussianOnePass,
@@ -249,9 +280,27 @@ mod tests {
             Method::FullKernel,
             Method::PlainKmeans,
         ] {
-            assert_eq!(Method::parse(&m.name()), Some(m), "{}", m.name());
+            assert_eq!(m.to_string().parse::<Method>().unwrap(), m, "{m}");
         }
-        assert_eq!(Method::parse("bogus"), None);
+        assert!("bogus".parse::<Method>().is_err());
+    }
+
+    #[test]
+    fn bare_nystrom_gets_default_m() {
+        assert_eq!(
+            "nystrom".parse::<Method>().unwrap(),
+            Method::Nystrom { m: DEFAULT_NYSTROM_M }
+        );
+        assert!("nystrom_m".parse::<Method>().is_err());
+        assert!("nystrom_mNaN".parse::<Method>().is_err());
+    }
+
+    #[test]
+    fn backend_display_fromstr_roundtrip() {
+        for b in [Backend::Native, Backend::Xla] {
+            assert_eq!(b.to_string().parse::<Backend>().unwrap(), b);
+        }
+        assert!("gpu".parse::<Backend>().is_err());
     }
 
     #[test]

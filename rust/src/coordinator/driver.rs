@@ -1,29 +1,28 @@
-//! Experiment driver: dataset construction, method dispatch over both
-//! backends, metric collection, and the multi-trial protocol (the paper
-//! re-runs every stochastic method 100 times and reports means).
+//! Experiment driver: dataset construction, metric collection, and the
+//! multi-trial protocol (the paper re-runs every stochastic method 100
+//! times and reports means).
+//!
+//! Since the `api` redesign this layer is a thin compatibility wrapper:
+//! [`run_experiment`] builds a [`KernelClusterer`](crate::api::KernelClusterer)
+//! from the [`ExperimentConfig`] and scores the resulting
+//! [`FittedModel`](crate::api::FittedModel) against the dataset's ground
+//! truth. Method dispatch, backend selection, and the fast paths all
+//! live in `api`.
 
+use std::path::Path;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
-
-use crate::clustering::{
-    accuracy, adjusted_rand_index, kernel_kmeans, kmeans, normalized_mutual_info, KmeansOpts,
-};
+use crate::api::KernelClusterer;
+use crate::clustering::{accuracy, adjusted_rand_index, normalized_mutual_info};
 use crate::config::{Backend, ExperimentConfig, Method};
 use crate::data::{self, Dataset};
-use crate::kernels::{full_kernel_matrix, BlockSource, NativeBlockSource};
-use crate::linalg::Mat;
-use crate::lowrank::{
-    exact_topr_streaming, nystrom, one_pass_recovery, streamed_frobenius_error, Embedding,
-    NystromSampling, OnePassSketch,
-};
-use crate::metrics::{MemoryModel, MethodMemory};
+use crate::error::{Result, RkcError};
+use crate::kernels::{BlockSource, NativeBlockSource};
+use crate::metrics::MethodMemory;
 use crate::rng::Pcg64;
 use crate::runtime::ArtifactRegistry;
-use crate::sketch::{GaussianSketch, Srht};
 
-use super::pipeline::{run_sketch_pass, run_sketch_pass_threaded};
-use super::sources::{FusedXlaSketchRows, NativeSketchRows, XlaBlockSource};
+use super::sources::XlaBlockSource;
 
 /// Everything one trial produces.
 #[derive(Clone, Debug)]
@@ -44,6 +43,8 @@ pub struct RunOutcome {
 }
 
 /// Construct the dataset named in the config (deterministic per seed).
+/// On-disk CSV datasets resolve against `cfg.data_dir` when the path is
+/// not found as given.
 pub fn build_dataset(cfg: &ExperimentConfig) -> Result<Dataset> {
     let mut rng = Pcg64::seed_stream(cfg.seed, 0xda7a);
     Ok(match cfg.dataset.as_str() {
@@ -51,7 +52,8 @@ pub fn build_dataset(cfg: &ExperimentConfig) -> Result<Dataset> {
         "cross_lines" => data::cross_lines(&mut rng, cfg.n),
         "segmentation_like" => {
             // prefer the real UCI file when the user provides it
-            if let Some(ds) = data::load_segmentation_csv("data/segmentation.csv") {
+            let csv = Path::new(&cfg.data_dir).join("segmentation.csv");
+            if let Some(ds) = csv.to_str().and_then(data::load_segmentation_csv) {
                 ds
             } else {
                 data::segmentation_like(&mut rng, cfg.n, cfg.p, cfg.k)
@@ -59,307 +61,77 @@ pub fn build_dataset(cfg: &ExperimentConfig) -> Result<Dataset> {
         }
         "blobs" => data::gaussian_blobs(&mut rng, cfg.n, cfg.p, cfg.k, 0.6),
         "two_moons" => data::two_moons(&mut rng, cfg.n, 0.08),
-        path if path.ends_with(".csv") => data::load_segmentation_csv(path)
-            .ok_or_else(|| anyhow!("cannot load dataset file {path}"))?,
-        other => return Err(anyhow!("unknown dataset '{other}'")),
+        path if path.ends_with(".csv") => {
+            let direct = data::load_segmentation_csv(path);
+            let resolved = direct.or_else(|| {
+                Path::new(&cfg.data_dir)
+                    .join(path)
+                    .to_str()
+                    .and_then(data::load_segmentation_csv)
+            });
+            resolved.ok_or_else(|| {
+                RkcError::dataset(format!(
+                    "cannot load dataset file {path} (also tried under {})",
+                    cfg.data_dir
+                ))
+            })?
+        }
+        other => return Err(RkcError::dataset(format!("unknown dataset '{other}'"))),
     })
 }
 
 /// Run one trial of `cfg.method` with the trial-specific `seed`.
+///
+/// Compatibility wrapper over [`KernelClusterer::fit_with_registry`]:
+/// fits the model, then scores it against the dataset labels and runs
+/// the streamed approximation-error pass.
 pub fn run_experiment(
     cfg: &ExperimentConfig,
     ds: &Dataset,
     registry: Option<&ArtifactRegistry>,
     seed: u64,
 ) -> Result<RunOutcome> {
-    let mut rng = Pcg64::seed_stream(seed, 0x7a1a1);
-    let n = ds.n();
-    // XLA backend: pad up to the nearest compiled artifact size (free —
-    // padded rows/cols of the implicit kernel are zero); native: pow2.
-    let n_pad = match (cfg.backend, registry) {
-        (Backend::Xla, Some(reg)) => {
-            super::sources::xla_preferred_n_pad(reg, cfg.kernel, ds.p(), n)
-                .unwrap_or_else(|| n.next_power_of_two())
-        }
-        _ => n.next_power_of_two(),
-    };
-    let kopts = KmeansOpts {
-        k: ds.k,
-        restarts: cfg.kmeans_restarts,
-        max_iters: cfg.kmeans_iters,
-        tol: 1e-9,
-    };
+    let clusterer = KernelClusterer::from_config(cfg).clusters(ds.k).seed(seed);
+    let model = clusterer.fit_with_registry(&ds.x, registry)?;
 
-    let mut sketch_time = Duration::ZERO;
-    let mut recovery_time = Duration::ZERO;
-    let mut kmeans_time = Duration::ZERO;
-    let mut error_time = Duration::ZERO;
-
-    // --- produce the embedding (or run the non-embedding baselines) ---
-    let (embedding, memory): (Option<Embedding>, MethodMemory) = match cfg.method {
-        Method::PlainKmeans => {
-            let t0 = Instant::now();
-            let res = kmeans(&ds.x, &kopts, &mut rng);
-            kmeans_time += t0.elapsed();
-            let acc = accuracy(&res.labels, &ds.labels, ds.k.max(cfg.k));
-            return Ok(RunOutcome {
-                method: cfg.method.name(),
-                accuracy: acc,
-                nmi: normalized_mutual_info(&res.labels, &ds.labels, ds.k),
-                ari: adjusted_rand_index(&res.labels, &ds.labels, ds.k),
-                approx_error: f64::NAN,
-                kmeans_objective: res.objective,
-                memory: MethodMemory {
-                    method: cfg.method.name(),
-                    persistent: 8 * ds.p() * ds.k,
-                    transient: 0,
-                    recovery: 0,
-                },
-                sketch_time,
-                recovery_time,
-                kmeans_time,
-                error_time,
-            });
-        }
-        Method::FullKernel => {
-            let t0 = Instant::now();
-            let kmat = full_kernel_matrix(&ds.x, cfg.kernel);
-            sketch_time += t0.elapsed(); // "sketch" = materialization here
-            let t1 = Instant::now();
-            let res = kernel_kmeans(&kmat, ds.k, cfg.kmeans_restarts, cfg.kmeans_iters, &mut rng);
-            kmeans_time += t1.elapsed();
-            let acc = accuracy(&res.labels, &ds.labels, ds.k);
-            return Ok(RunOutcome {
-                method: cfg.method.name(),
-                accuracy: acc,
-                nmi: normalized_mutual_info(&res.labels, &ds.labels, ds.k),
-                ari: adjusted_rand_index(&res.labels, &ds.labels, ds.k),
-                approx_error: 0.0,
-                kmeans_objective: res.objective,
-                memory: MemoryModel::full_kernel_kmeans(n, ds.k),
-                sketch_time,
-                recovery_time,
-                kmeans_time,
-                error_time,
-            });
-        }
-        Method::OnePass => {
-            let rp = cfg.sketch_width();
-            let mut srht = Srht::draw(&mut rng, n_pad, rp);
-            srht.mask_padding(n);
-            let t0 = Instant::now();
-            let (sketch, _stats) = match cfg.backend {
-                Backend::Native => {
-                    if cfg.threads > 1 {
-                        run_sketch_pass_threaded(
-                            NativeBlockSource::new(ds.x.clone(), cfg.kernel, n_pad),
-                            srht,
-                            cfg.batch,
-                            2,
-                            cfg.threads,
-                        )
-                    } else {
-                        let mut p = NativeSketchRows {
-                            src: NativeBlockSource::new(ds.x.clone(), cfg.kernel, n_pad),
-                            srht,
-                            threads: 1,
-                        };
-                        run_sketch_pass(&mut p, n, cfg.batch)
-                    }
-                }
-                Backend::Xla => {
-                    let registry =
-                        registry.ok_or_else(|| anyhow!("XLA backend requires a registry"))?;
-                    match FusedXlaSketchRows::new(registry, &ds.x, cfg.kernel, srht.clone()) {
-                        Ok(mut p) => run_xla_sketch_pass(&mut p, &ds.x, n)?,
-                        // no artifact for this (kernel, p, n) — fall back
-                        // to the native path rather than failing the job
-                        // (the artifact set covers the paper's workloads)
-                        Err(_) => {
-                            let mut p = NativeSketchRows {
-                                src: NativeBlockSource::new(ds.x.clone(), cfg.kernel, n_pad),
-                                srht,
-                                threads: cfg.threads.max(1),
-                            };
-                            run_sketch_pass(&mut p, n, cfg.batch)
-                        }
-                    }
-                }
-            };
-            sketch_time += t0.elapsed();
-            let t1 = Instant::now();
-            let emb = one_pass_recovery(&sketch, cfg.rank);
-            recovery_time += t1.elapsed();
-            (Some(emb), MemoryModel::one_pass(n, n_pad, rp, cfg.rank, cfg.batch))
-        }
-        Method::GaussianOnePass => {
-            let rp = cfg.sketch_width();
-            // dense Gaussian test matrix over the padded length, padded
-            // rows zeroed (same masking convention as the SRHT)
-            let gauss = {
-                let mut g = GaussianSketch::draw(&mut rng, n_pad, rp);
-                for i in n..n_pad {
-                    for j in 0..rp {
-                        g.omega[(i, j)] = 0.0;
-                    }
-                }
-                g
-            };
-            // reuse the one-pass recovery through a synthetic Srht-free
-            // sketch: accumulate W = KΩ block by block
-            let t0 = Instant::now();
-            let mut src: Box<dyn BlockSource> = make_block_source(cfg, ds, registry, n_pad)?;
-            let mut w = Mat::zeros(n, rp);
-            for cols in crate::kernels::column_batches(n, cfg.batch) {
-                let kb = src.block(&cols);
-                let rows = gauss.apply_to_block(&kb); // b × r'
-                for (bj, &j) in cols.iter().enumerate() {
-                    w.row_mut(j).copy_from_slice(rows.row(bj));
-                }
-            }
-            sketch_time += t0.elapsed();
-            let t1 = Instant::now();
-            let emb = gaussian_recovery(&w, &gauss, n, cfg.rank);
-            recovery_time += t1.elapsed();
-            // memory: Ω itself is n_pad × r' dense — the structured-vs-
-            // Gaussian gap the paper's §4 calls out
-            let mut mem = MemoryModel::one_pass(n, n_pad, rp, cfg.rank, cfg.batch);
-            mem.method = cfg.method.name();
-            mem.persistent += 8 * n_pad * rp;
-            (Some(emb), mem)
-        }
-        Method::Nystrom { m } => {
-            let t0 = Instant::now();
-            let mut src: Box<dyn BlockSource> = make_block_source(cfg, ds, registry, n_pad)?;
-            let emb = nystrom(src.as_mut(), m, cfg.rank, NystromSampling::Uniform, &mut rng);
-            sketch_time += t0.elapsed();
-            (Some(emb), MemoryModel::nystrom(n, m, cfg.rank))
-        }
-        Method::Exact => {
-            let t0 = Instant::now();
-            let mut src: Box<dyn BlockSource> = make_block_source(cfg, ds, registry, n_pad)?;
-            let emb = exact_topr_streaming(src.as_mut(), cfg.rank, 40, cfg.batch);
-            sketch_time += t0.elapsed();
-            (Some(emb), MemoryModel::exact_streaming(n, n_pad, cfg.rank, cfg.batch))
-        }
-    };
-
-    let emb = embedding.expect("embedding methods reach here");
-
-    // --- K-means on the embedding ---
+    // --- streamed approximation error (one extra pass, through the
+    // configured backend's gram path when an artifact matches) ---
     let t0 = Instant::now();
-    let res = match cfg.backend {
-        Backend::Xla => {
-            let registry = registry.ok_or_else(|| anyhow!("XLA backend requires a registry"))?;
-            match super::xla_kmeans(registry, &emb.y, &kopts, &mut rng) {
-                Ok(r) => r,
-                // no artifact for this (r, k, n) — fall back silently;
-                // the artifact set covers the paper's experiments
-                Err(_) => kmeans(&emb.y, &kopts, &mut rng),
-            }
+    let approx_error = match cfg.method {
+        Method::PlainKmeans => f64::NAN,
+        // the materialized kernel is its own approximation
+        Method::FullKernel => 0.0,
+        _ => {
+            let n_pad = model.n_padded();
+            let mut src: Box<dyn BlockSource> = match (cfg.backend, registry) {
+                (Backend::Xla, Some(reg)) => {
+                    match XlaBlockSource::new(reg, ds.x.clone(), cfg.kernel, n_pad) {
+                        Ok(s) => Box::new(s),
+                        Err(_) => Box::new(NativeBlockSource::new(ds.x.clone(), cfg.kernel, n_pad)),
+                    }
+                }
+                _ => Box::new(NativeBlockSource::new(ds.x.clone(), cfg.kernel, n_pad)),
+            };
+            model.approx_error_with(src.as_mut())?
         }
-        Backend::Native => kmeans(&emb.y, &kopts, &mut rng),
     };
-    kmeans_time += t0.elapsed();
+    let error_time = t0.elapsed();
 
-    // --- streamed approximation error (one extra pass) ---
-    let t1 = Instant::now();
-    let mut src: Box<dyn BlockSource> = make_block_source(cfg, ds, registry, n_pad)?;
-    let approx_error = streamed_frobenius_error(src.as_mut(), &emb, cfg.batch);
-    error_time += t1.elapsed();
-
+    let k_eval = if cfg.method == Method::PlainKmeans { ds.k.max(cfg.k) } else { ds.k };
+    let m = model.metrics();
     Ok(RunOutcome {
-        method: cfg.method.name(),
-        accuracy: accuracy(&res.labels, &ds.labels, ds.k),
-        nmi: normalized_mutual_info(&res.labels, &ds.labels, ds.k),
-        ari: adjusted_rand_index(&res.labels, &ds.labels, ds.k),
+        method: m.method.clone(),
+        accuracy: accuracy(model.labels(), &ds.labels, k_eval),
+        nmi: normalized_mutual_info(model.labels(), &ds.labels, ds.k),
+        ari: adjusted_rand_index(model.labels(), &ds.labels, ds.k),
         approx_error,
-        kmeans_objective: res.objective,
-        memory,
-        sketch_time,
-        recovery_time,
-        kmeans_time,
+        kmeans_objective: m.objective,
+        memory: m.memory.clone(),
+        sketch_time: m.sketch_time,
+        recovery_time: m.recovery_time,
+        kmeans_time: m.kmeans_time,
         error_time,
     })
-}
-
-fn make_block_source(
-    cfg: &ExperimentConfig,
-    ds: &Dataset,
-    registry: Option<&ArtifactRegistry>,
-    n_pad: usize,
-) -> Result<Box<dyn BlockSource>> {
-    Ok(match cfg.backend {
-        Backend::Native => Box::new(NativeBlockSource::new(ds.x.clone(), cfg.kernel, n_pad)),
-        Backend::Xla => {
-            let registry = registry.ok_or_else(|| anyhow!("XLA backend requires a registry"))?;
-            match XlaBlockSource::new(registry, ds.x.clone(), cfg.kernel, n_pad) {
-                Ok(src) => Box::new(src),
-                // graceful degradation when no gram artifact matches
-                Err(_) => Box::new(NativeBlockSource::new(ds.x.clone(), cfg.kernel, n_pad)),
-            }
-        }
-    })
-}
-
-/// Sequential sketch pass over the fused XLA producer (PJRT handles are
-/// not Send, so this cannot reuse the threaded native pipeline).
-fn run_xla_sketch_pass(
-    p: &mut FusedXlaSketchRows,
-    x: &Mat,
-    n_real: usize,
-) -> Result<(OnePassSketch, super::pipeline::StageStats)> {
-    let mut sketch = OnePassSketch::new(p.srht().clone(), n_real);
-    let mut stats = super::pipeline::StageStats::default();
-    // the artifact has a fixed batch width; stream at exactly that width
-    let width = p.batch_width();
-    for cols in crate::kernels::column_batches(n_real, width) {
-        let t0 = Instant::now();
-        let rows = p.rows_for(x, &cols)?;
-        stats.produce_time += t0.elapsed();
-        sketch.ingest(&cols, &rows);
-        stats.blocks += 1;
-    }
-    stats.peak_in_flight = 1;
-    Ok((sketch, stats))
-}
-
-/// One-pass recovery for the Gaussian sketch (Ω explicit): identical
-/// math to `one_pass_recovery` (full-r'-basis variant) with a dense Ω.
-fn gaussian_recovery(w: &Mat, gauss: &GaussianSketch, n_real: usize, rank: usize) -> Embedding {
-    use crate::linalg::{householder_qr, jacobi_eig, least_squares};
-    let rp = w.cols();
-    let (qfull, rmat) = householder_qr(w); // n × r'
-    let rrt = rmat.matmul_t(&rmat);
-    let (sv2, u) = jacobi_eig(&rrt);
-    let smax2 = sv2[0].max(0.0);
-    let numerical_rank = sv2.iter().filter(|&&s2| s2 > 1e-14 * smax2).count();
-    let qdim = numerical_rank.clamp(rank.min(rp), rp);
-    let uq = Mat::from_fn(rp, qdim, |i, j| u[(i, j)]);
-    let q = qfull.matmul(&uq);
-    // QᵀΩ over real rows
-    let omega_real = Mat::from_fn(n_real, rp, |i, j| gauss.omega[(i, j)]);
-    let qt_omega = q.t_matmul(&omega_real); // q × r'
-    let qt_w = q.t_matmul(w); // q × r'
-    let bt = least_squares(&qt_omega.transpose(), &qt_w.transpose());
-    let mut b = bt.transpose();
-    b.symmetrize();
-    let (evals, v) = jacobi_eig(&b);
-    let mut clamped: Vec<f64> =
-        evals.iter().take(rank.min(qdim)).map(|&l| l.max(0.0)).collect();
-    clamped.resize(rank, 0.0);
-    let mut y = Mat::zeros(rank, n_real);
-    for i in 0..rank.min(qdim) {
-        let s = clamped[i].sqrt();
-        for j in 0..n_real {
-            let mut acc = 0.0;
-            for k in 0..qdim {
-                acc += v[(k, i)] * q[(j, k)];
-            }
-            y[(i, j)] = s * acc;
-        }
-    }
-    Embedding { y, eigenvalues: clamped }
 }
 
 /// Aggregate over trials: mean ± std of the headline metrics.
@@ -403,7 +175,7 @@ pub fn run_trials(
         peak = peak.max(out.memory.peak());
     }
     Ok(TrialAggregate {
-        method: cfg.method.name(),
+        method: cfg.method.to_string(),
         trials,
         accuracy_mean: crate::util::mean(&accs),
         accuracy_std: crate::util::std_dev(&accs),
@@ -505,5 +277,25 @@ mod tests {
         let mut cfg = small_cfg(Method::OnePass);
         cfg.dataset = "wat".into();
         assert!(build_dataset(&cfg).is_err());
+    }
+
+    #[test]
+    fn csv_dataset_resolves_through_data_dir() {
+        use std::io::Write as _;
+        let dir = std::env::temp_dir().join("rkc_driver_data_dir");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut f = std::fs::File::create(dir.join("mini.csv")).unwrap();
+        for j in 0..12 {
+            writeln!(f, "CLASS{},{}.0,{}.0", j % 2, j, j + 1).unwrap();
+        }
+        drop(f);
+        let mut cfg = small_cfg(Method::PlainKmeans);
+        cfg.dataset = "mini.csv".into();
+        cfg.data_dir = dir.to_str().unwrap().to_string();
+        let ds = build_dataset(&cfg).unwrap();
+        assert_eq!(ds.n(), 12);
+        // and an unresolvable file is a typed dataset error
+        cfg.dataset = "missing.csv".into();
+        assert!(matches!(build_dataset(&cfg), Err(RkcError::Dataset(_))));
     }
 }

@@ -10,11 +10,12 @@
 //! [`XlaBlockSource`] adapts a `gram_*` artifact to the [`BlockSource`]
 //! trait so Nyström / exact / error measurement run on the XLA backend too.
 
-use anyhow::{anyhow, Result};
-
+use crate::error::{Result, RkcError};
 use crate::kernels::{BlockSource, Kernel, NativeBlockSource};
 use crate::linalg::Mat;
-use crate::runtime::{literal_to_mat, mat_to_literal, vec_to_literal, ArtifactRegistry, Executable};
+use crate::runtime::{
+    literal_to_mat, mat_to_literal, vec_to_literal, ArtifactRegistry, Executable, Literal,
+};
 use crate::sketch::Srht;
 
 /// Pick the padded transform length for the XLA backend: the smallest
@@ -63,8 +64,8 @@ pub struct NativeSketchRows {
 /// the raw data; rust gathers the r' sampled rows.
 pub struct FusedXlaSketchRows {
     exe: &'static Executable,
-    x_lit: xla::Literal,
-    d_lit: xla::Literal,
+    x_lit: Literal,
+    d_lit: Literal,
     srht: Srht,
     n_pad: usize,
     b_art: usize,
@@ -96,7 +97,9 @@ impl FusedXlaSketchRows {
                     && i.param_usize("n").ok() == Some(n_pad)
             })
             .ok_or_else(|| {
-                anyhow!("no sketch artifact for kind={kind} p={p} n={n_pad}; run `make artifacts`")
+                RkcError::missing_artifact(format!(
+                    "no sketch artifact for kind={kind} p={p} n={n_pad}; run `make artifacts`"
+                ))
             })?
             .clone();
         let b_art = info.param_usize("b")?;
@@ -119,7 +122,13 @@ impl FusedXlaSketchRows {
 
     /// Compute W rows for `cols` (|cols| ≤ artifact batch width).
     pub fn rows_for(&mut self, x: &Mat, cols: &[usize]) -> Result<Mat> {
-        anyhow::ensure!(cols.len() <= self.b_art, "batch exceeds artifact width");
+        if cols.len() > self.b_art {
+            return Err(RkcError::backend(format!(
+                "batch of {} exceeds artifact width {}",
+                cols.len(),
+                self.b_art
+            )));
+        }
         // query block, zero-padded to the artifact's fixed width
         let xb = Mat::from_fn(self.p, self.b_art, |i, bj| {
             if bj < cols.len() {
@@ -146,7 +155,7 @@ impl FusedXlaSketchRows {
 pub struct XlaBlockSource {
     exe: &'static Executable,
     x: Mat,
-    x_lit: xla::Literal,
+    x_lit: Literal,
     kernel: Kernel,
     n_pad: usize,
     b_art: usize,
@@ -173,7 +182,9 @@ impl XlaBlockSource {
                     && i.param_usize("n").ok() == Some(n_pad)
             })
             .ok_or_else(|| {
-                anyhow!("no gram artifact for kind={kind} p={p} n={n_pad}; run `make artifacts`")
+                RkcError::missing_artifact(format!(
+                    "no gram artifact for kind={kind} p={p} n={n_pad}; run `make artifacts`"
+                ))
             })?
             .clone();
         let b_art = info.param_usize("b")?;

@@ -6,14 +6,13 @@
 //! Matches `clustering::kmeans` bit-for-bit up to f32 rounding (tested in
 //! `rust/tests/xla_integration.rs`).
 
-use anyhow::{anyhow, Result};
-
 use crate::clustering::{KmeansOpts, KmeansResult};
+use crate::error::{Result, RkcError};
 use crate::linalg::Mat;
 use crate::rng::Pcg64;
 use crate::runtime::{
     literal_to_indices, literal_to_mat, literal_to_vec, mat_to_literal, vec_to_literal,
-    ArtifactRegistry, Executable,
+    ArtifactRegistry, Executable, Literal,
 };
 
 /// K-means on `y` (r × n) using the artifact matching (r, k, n_pad).
@@ -31,7 +30,12 @@ pub fn xla_kmeans(
                 && i.param_usize("k").ok() == Some(opts.k)
                 && i.param_usize("n").ok().is_some_and(|np| np >= n)
         })
-        .ok_or_else(|| anyhow!("no kmeans_step artifact for r={r} k={} n>={n}", opts.k))?
+        .ok_or_else(|| {
+            RkcError::missing_artifact(format!(
+                "no kmeans_step artifact for r={r} k={} n>={n}",
+                opts.k
+            ))
+        })?
         .clone();
     let n_pad = info.param_usize("n")?;
     let exe = registry.get(&info.name)?;
@@ -58,8 +62,8 @@ pub fn xla_kmeans(
 
 fn lloyd_once(
     exe: &'static Executable,
-    y_lit: &xla::Literal,
-    w_lit: &xla::Literal,
+    y_lit: &Literal,
+    w_lit: &Literal,
     y: &Mat,
     opts: &KmeansOpts,
     _n_pad: usize,

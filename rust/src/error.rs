@@ -1,0 +1,138 @@
+//! Crate-wide typed errors.
+//!
+//! Every library layer (`api`, `lowrank`, `sketch`, `kernels`,
+//! `coordinator`, `config`, `runtime`) returns [`RkcError`]; only the
+//! CLI binary sits at the edge and is free to format them for humans.
+//! Hand-rolled `thiserror`-style (the image is offline — no proc-macro
+//! dependencies), so each variant carries enough context to be matched
+//! on programmatically and still renders a actionable message.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, RkcError>;
+
+/// Typed error for every fallible path in the library layers.
+#[derive(Debug)]
+pub enum RkcError {
+    /// A builder / config combination that can never produce a valid run
+    /// (rank 0, oversampling below rank, k > n, unknown config key, …).
+    InvalidConfig(String),
+    /// A string failed to parse as the named domain type
+    /// (`Method`, `Backend`, `Kernel`, a numeric field, …).
+    Parse {
+        /// what we tried to parse (e.g. "method")
+        what: &'static str,
+        /// the offending input
+        input: String,
+    },
+    /// Dataset construction or loading failed (unknown name, bad CSV, …).
+    Dataset(String),
+    /// No compiled artifact matches the requested shape / operation.
+    MissingArtifact(String),
+    /// The compute backend (PJRT runtime, artifact execution) failed or
+    /// is unavailable in this build.
+    Backend(String),
+    /// The operation is not defined for this model / method combination
+    /// (e.g. `embed` on a plain-K-means model).
+    Unsupported(String),
+    /// An underlying I/O failure, with the path or operation attached.
+    Io {
+        context: String,
+        source: std::io::Error,
+    },
+}
+
+impl RkcError {
+    /// Shorthand constructors keep call sites one-liners.
+    pub fn invalid_config(msg: impl Into<String>) -> Self {
+        RkcError::InvalidConfig(msg.into())
+    }
+
+    pub fn parse(what: &'static str, input: impl Into<String>) -> Self {
+        RkcError::Parse { what, input: input.into() }
+    }
+
+    pub fn dataset(msg: impl Into<String>) -> Self {
+        RkcError::Dataset(msg.into())
+    }
+
+    pub fn missing_artifact(msg: impl Into<String>) -> Self {
+        RkcError::MissingArtifact(msg.into())
+    }
+
+    pub fn backend(msg: impl Into<String>) -> Self {
+        RkcError::Backend(msg.into())
+    }
+
+    pub fn unsupported(msg: impl Into<String>) -> Self {
+        RkcError::Unsupported(msg.into())
+    }
+
+    pub fn io(context: impl Into<String>, source: std::io::Error) -> Self {
+        RkcError::Io { context: context.into(), source }
+    }
+}
+
+impl fmt::Display for RkcError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RkcError::InvalidConfig(m) => write!(f, "invalid config: {m}"),
+            RkcError::Parse { what, input } => {
+                write!(f, "cannot parse {what} from '{input}'")
+            }
+            RkcError::Dataset(m) => write!(f, "dataset error: {m}"),
+            RkcError::MissingArtifact(m) => write!(f, "{m}"),
+            RkcError::Backend(m) => write!(f, "{m}"),
+            RkcError::Unsupported(m) => write!(f, "unsupported operation: {m}"),
+            RkcError::Io { context, source } => write!(f, "{context}: {source}"),
+        }
+    }
+}
+
+impl std::error::Error for RkcError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            RkcError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for RkcError {
+    fn from(e: std::io::Error) -> Self {
+        RkcError::Io { context: "io error".into(), source: e }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_keeps_context() {
+        let e = RkcError::parse("method", "warp_drive");
+        assert_eq!(e.to_string(), "cannot parse method from 'warp_drive'");
+        let e = RkcError::missing_artifact("no gram artifact for p=4");
+        assert_eq!(e.to_string(), "no gram artifact for p=4");
+        let e = RkcError::invalid_config("rank must be >= 1");
+        assert!(e.to_string().contains("rank must be >= 1"));
+    }
+
+    #[test]
+    fn io_errors_chain_source() {
+        use std::error::Error as _;
+        let inner = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e = RkcError::io("reading manifest.json", inner);
+        assert!(e.to_string().contains("manifest.json"));
+        assert!(e.source().is_some());
+    }
+
+    #[test]
+    fn from_io_error_works_with_question_mark() {
+        fn read() -> Result<String> {
+            Ok(std::fs::read_to_string("/nonexistent/rkc")?)
+        }
+        assert!(matches!(read(), Err(RkcError::Io { .. })));
+    }
+}

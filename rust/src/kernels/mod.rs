@@ -6,6 +6,10 @@
 //! tests and small problems); the XLA-artifact-backed source lives in
 //! `runtime`/`coordinator` and runs the L1 Pallas gram kernel instead.
 
+use std::fmt;
+use std::str::FromStr;
+
+use crate::error::RkcError;
 use crate::linalg::Mat;
 
 /// Mercer kernel functions used in the paper's experiments.
@@ -47,11 +51,53 @@ impl Kernel {
         }
     }
 
+    /// Human-readable description (not parseable; see [`fmt::Display`]
+    /// for the round-trippable form).
     pub fn describe(&self) -> String {
         match *self {
             Kernel::Poly { gamma, degree } => format!("poly(gamma={gamma},d={degree})"),
             Kernel::Rbf { gamma } => format!("rbf(gamma={gamma})"),
             Kernel::Linear => "linear".to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Kernel {
+    /// Round-trippable spec string: `poly2` (the paper's kernel),
+    /// `poly:<gamma>:<degree>`, `rbf:<gamma>`, `linear`.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            Kernel::Poly { gamma, degree } if gamma == 0.0 && degree == 2 => {
+                write!(f, "poly2")
+            }
+            Kernel::Poly { gamma, degree } => write!(f, "poly:{gamma}:{degree}"),
+            Kernel::Rbf { gamma } => write!(f, "rbf:{gamma}"),
+            Kernel::Linear => write!(f, "linear"),
+        }
+    }
+}
+
+impl FromStr for Kernel {
+    type Err = RkcError;
+
+    fn from_str(s: &str) -> Result<Kernel, RkcError> {
+        let bad = || RkcError::parse("kernel", s);
+        match s {
+            "poly2" => Ok(Kernel::paper_poly2()),
+            "linear" => Ok(Kernel::Linear),
+            _ if s.starts_with("rbf:") => {
+                let g: f64 = s[4..].parse().map_err(|_| bad())?;
+                Ok(Kernel::Rbf { gamma: g })
+            }
+            _ if s.starts_with("poly:") => {
+                let rest = &s[5..];
+                let (g, d) = rest.split_once(':').ok_or_else(bad)?;
+                Ok(Kernel::Poly {
+                    gamma: g.parse().map_err(|_| bad())?,
+                    degree: d.parse().map_err(|_| bad())?,
+                })
+            }
+            _ => Err(bad()),
         }
     }
 }
@@ -283,6 +329,21 @@ mod tests {
         assert_mat_close(&k.transpose(), &k, 1e-12);
         let (evals, _) = crate::linalg::jacobi_eig(&k);
         assert!(evals.iter().all(|&l| l > -1e-9 * evals[0].max(1.0)));
+    }
+
+    #[test]
+    fn kernel_display_fromstr_roundtrip() {
+        for k in [
+            Kernel::paper_poly2(),
+            Kernel::Poly { gamma: 1.0, degree: 3 },
+            Kernel::Rbf { gamma: 2.5 },
+            Kernel::Linear,
+        ] {
+            assert_eq!(k.to_string().parse::<Kernel>().unwrap(), k, "{k}");
+        }
+        assert_eq!("poly2".parse::<Kernel>().unwrap(), Kernel::paper_poly2());
+        assert!("poly:abc:2".parse::<Kernel>().is_err());
+        assert!("sigmoid".parse::<Kernel>().is_err());
     }
 
     #[test]

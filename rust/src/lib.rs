@@ -7,17 +7,51 @@
 //! full-kernel baselines, a streaming rust coordinator, and XLA-compiled
 //! JAX+Pallas compute artifacts (see DESIGN.md for the full architecture).
 //!
-//! Layer map:
+//! ## Quickstart
+//!
+//! The crate's public face is [`api::KernelClusterer`]: a typed builder
+//! whose `fit` returns a [`api::FittedModel`] with labels, the recovered
+//! embedding, and out-of-sample `embed`/`predict`:
+//!
+//! ```
+//! use rkc::api::KernelClusterer;
+//! use rkc::data;
+//! use rkc::rng::Pcg64;
+//!
+//! let ds = data::cross_lines(&mut Pcg64::seed(7), 512);
+//! let model = KernelClusterer::new(2) // k = 2 clusters
+//!     .rank(2)                        // embedding rank r
+//!     .oversample(10)                 // sketch width r' = r + l
+//!     .fit(&ds.x)?;
+//! let accuracy = rkc::clustering::accuracy(model.labels(), &ds.labels, 2);
+//! assert!(accuracy > 0.9);
+//! let fresh = data::cross_lines(&mut Pcg64::seed(8), 64);
+//! let assigned = model.predict(&fresh.x)?; // never-seen points
+//! assert_eq!(assigned.len(), 64);
+//! # Ok::<(), rkc::error::RkcError>(())
+//! ```
+//!
+//! ## Layer map
+//!
+//! - [`api`] — **the public face**: `KernelClusterer` builder → `fit` →
+//!   `FittedModel`, the [`api::Embedder`] trait unifying every low-rank
+//!   method, out-of-sample embedding/prediction.
+//! - [`error`] — the crate-wide [`error::RkcError`]; every library layer
+//!   returns it (no stringly-typed or `anyhow` errors anywhere).
 //! - [`coordinator`] — L3: the streaming pipeline (scheduler, sketch
-//!   accumulator, recovery, K-means driver, metrics).
+//!   accumulator, threaded producer/consumer) plus the experiment driver,
+//!   now a thin compatibility client of [`api`].
 //! - [`runtime`] — PJRT wrapper loading `artifacts/*.hlo.txt` (L2/L1
-//!   compute compiled from JAX + Pallas by `python/compile/aot.py`).
+//!   compute compiled from JAX + Pallas by `python/compile/aot.py`);
+//!   gated behind the `xla` cargo feature with a graceful native
+//!   fallback when absent.
 //! - [`lowrank`], [`sketch`], [`kernels`], [`clustering`], [`linalg`],
 //!   [`rng`], [`data`], [`metrics`], [`config`], [`bench_harness`],
 //!   [`util`] — the substrates, all implemented from scratch.
 
 pub mod clustering;
 pub mod data;
+pub mod error;
 pub mod kernels;
 pub mod linalg;
 pub mod lowrank;
@@ -25,8 +59,12 @@ pub mod rng;
 pub mod sketch;
 pub mod util;
 
+pub mod api;
 pub mod bench_harness;
 pub mod config;
 pub mod coordinator;
 pub mod metrics;
 pub mod runtime;
+
+pub use api::{FittedModel, KernelClusterer};
+pub use error::{Result, RkcError};

@@ -76,7 +76,24 @@ impl OnePassSketch {
 /// identity `W = K Ω` restricted to real rows needs Ω's real rows only.
 pub fn one_pass_recovery(sketch: &OnePassSketch, rank: usize) -> Embedding {
     assert!(sketch.is_complete(), "recovery before the stream finished");
-    let w = sketch.w();
+    recover(sketch.w(), rank, |q| srht_qt_omega_real_rows(sketch, q))
+}
+
+/// One-pass recovery for a dense Gaussian test matrix: identical math to
+/// [`one_pass_recovery`] with an explicit `Ω` (restricted to the real
+/// rows — padded kernel rows are zero, so the identity `W = KΩ` over real
+/// rows only needs Ω's real rows). `w` is the accumulated sketch
+/// `K Ω` (n × r'); `omega_real` is n × r'.
+pub fn gaussian_one_pass_recovery(w: &Mat, omega_real: &Mat, rank: usize) -> Embedding {
+    assert_eq!(w.rows(), omega_real.rows(), "sketch/test-matrix row mismatch");
+    assert_eq!(w.cols(), omega_real.cols(), "sketch/test-matrix width mismatch");
+    recover(w, rank, |q| q.t_matmul(omega_real))
+}
+
+/// Shared recovery core (Alg. 1 steps 3–6) over any test matrix: the
+/// caller supplies `QᵀΩ` (how Ω is represented — implicit SRHT or dense
+/// Gaussian — is the only difference between the variants).
+fn recover(w: &Mat, rank: usize, qt_omega_of: impl FnOnce(&Mat) -> Mat) -> Embedding {
     let n = w.rows();
     let rp = w.cols();
     assert!(rank <= rp, "rank {rank} exceeds sketch width {rp}");
@@ -101,7 +118,7 @@ pub fn one_pass_recovery(sketch: &OnePassSketch, rank: usize) -> Embedding {
     // Step 4: solve B (QᵀΩ) = QᵀW without revisiting K, as the
     // least-squares problem (QᵀΩ)ᵀ Bᵀ = (QᵀW)ᵀ over the r' × q tall
     // (well-conditioned) transposed system.
-    let qt_omega = srht_qt_omega_real_rows(sketch, &q); // q × r'
+    let qt_omega = qt_omega_of(&q); // q × r'
     let qt_w = q.t_matmul(w); // q × r'
     let bt = crate::linalg::least_squares(&qt_omega.transpose(), &qt_w.transpose());
     let mut b = bt.transpose(); // q × q

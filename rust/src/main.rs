@@ -1,5 +1,7 @@
 //! `rkc` — command-line launcher for the randomized kernel clustering
-//! system (GlobalSIP 2016 reproduction).
+//! system (GlobalSIP 2016 reproduction). A thin client of `rkc::api`:
+//! every subcommand parses flags into an `ExperimentConfig` and drives
+//! the library's `KernelClusterer` through the compatibility driver.
 //!
 //! ```text
 //! rkc run      [--key value]...     one experiment (any method/backend)
@@ -13,11 +15,11 @@
 //!
 //! Every subcommand accepts the config overrides documented in
 //! `config::ExperimentConfig::set` (e.g. `--method nystrom_m50`,
-//! `--backend xla`, `--trials 10`, `--kernel rbf:2.0`).
-
-use anyhow::{anyhow, Result};
+//! `--backend xla`, `--trials 10`, `--kernel rbf:2.0`,
+//! `--data_dir /path/to/csvs`).
 
 use rkc::config::{Cli, ExperimentConfig};
+use rkc::error::{Result, RkcError};
 use rkc::runtime::ArtifactRegistry;
 
 mod commands;
@@ -27,13 +29,13 @@ const FLAGS: &[&str] = &["verbose", "csv", "help"];
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     if let Err(e) = real_main(args) {
-        eprintln!("error: {e:#}");
+        eprintln!("error: {e}");
         std::process::exit(1);
     }
 }
 
 fn real_main(args: Vec<String>) -> Result<()> {
-    let cli = Cli::parse(args, FLAGS).map_err(|e| anyhow!("{e}"))?;
+    let cli = Cli::parse(args, FLAGS)?;
     if cli.has_flag("help") || cli.subcommand.is_none() {
         print_help();
         return Ok(());
@@ -46,21 +48,25 @@ fn real_main(args: Vec<String>) -> Result<()> {
         _ => ExperimentConfig::default(),
     };
     if let Some(path) = cli.get("config") {
-        let text = std::fs::read_to_string(path)?;
-        let json = rkc::util::Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
-        cfg.apply_json(&json).map_err(|e| anyhow!("{e}"))?;
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| RkcError::io(format!("reading config {path}"), e))?;
+        let json = rkc::util::Json::parse(&text)
+            .map_err(|e| RkcError::invalid_config(format!("parsing config {path}: {e}")))?;
+        cfg.apply_json(&json)?;
     }
     for (k, v) in &cli.options {
         if k == "config" || k == "out-dir" {
             continue;
         }
-        cfg.set(k, v).map_err(|e| anyhow!("{e}"))?;
+        cfg.set(k, v)?;
     }
 
     // the registry is optional: native backend works without artifacts
     let registry = ArtifactRegistry::open(&cfg.artifacts_dir).ok();
     if cfg.backend == rkc::config::Backend::Xla && registry.is_none() {
-        return Err(anyhow!("--backend xla needs artifacts/ (run `make artifacts`)"));
+        return Err(RkcError::backend(
+            "--backend xla needs artifacts/ (run `make artifacts`)",
+        ));
     }
 
     let out_dir = cli.get("out-dir").unwrap_or("results").to_string();
@@ -72,7 +78,9 @@ fn real_main(args: Vec<String>) -> Result<()> {
         "theorem1" => commands::cmd_theorem1(&cfg),
         "memory" => commands::cmd_memory(&cfg),
         "artifacts" => commands::cmd_artifacts(registry.as_ref()),
-        other => Err(anyhow!("unknown subcommand '{other}' (try --help)")),
+        other => Err(RkcError::invalid_config(format!(
+            "unknown subcommand '{other}' (try --help)"
+        ))),
     }
 }
 
@@ -92,11 +100,11 @@ SUBCOMMANDS
   artifacts  list the compiled XLA artifacts
 
 COMMON OPTIONS (config overrides)
-  --method one_pass|gaussian|exact|full_kernel|plain|nystrom_m<M>
+  --method one_pass|gaussian|exact|full_kernel|plain|nystrom[_m<M>]
   --backend native|xla        --dataset cross_lines|segmentation_like|...
   --n N --p P --k K           --rank R --oversample L --batch B
   --trials T --seed S         --kernel poly2|rbf:<g>|poly:<g>:<d>
   --threads T                 --config file.json
-  --out-dir DIR (fig2/fig3)   --artifacts_dir DIR"
+  --out-dir DIR (fig2/fig3)   --artifacts_dir DIR --data_dir DIR"
     );
 }

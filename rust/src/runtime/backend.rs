@@ -1,0 +1,162 @@
+//! PJRT binding surface, feature-gated.
+//!
+//! With `--features xla` this re-exports the real `xla` bindings crate
+//! (add it to Cargo.toml when enabling — the offline image ships no
+//! registry). Without the feature (the default), a type-compatible stub
+//! stands in: literal containers are fully functional pure-data types
+//! (so conversion helpers and their tests keep working), while anything
+//! that would touch a PJRT client returns a typed
+//! [`RkcError::Backend`](crate::error::RkcError) — callers degrade to
+//! the native backend exactly as they do for a missing artifact.
+
+#[cfg(feature = "xla")]
+pub use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+#[cfg(not(feature = "xla"))]
+pub use stub::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use crate::error::{Result, RkcError};
+
+    fn unavailable() -> RkcError {
+        RkcError::backend(
+            "PJRT runtime unavailable: rkc was built without the `xla` feature \
+             (native backend remains fully functional)",
+        )
+    }
+
+    /// Element types a stub literal can hold.
+    pub trait NativeType: Copy {
+        fn to_f64(self) -> f64;
+        fn from_f64(v: f64) -> Self;
+    }
+
+    impl NativeType for f32 {
+        fn to_f64(self) -> f64 {
+            self as f64
+        }
+        fn from_f64(v: f64) -> Self {
+            v as f32
+        }
+    }
+
+    impl NativeType for i32 {
+        fn to_f64(self) -> f64 {
+            self as f64
+        }
+        fn from_f64(v: f64) -> Self {
+            v as i32
+        }
+    }
+
+    /// Pure-data literal: values plus a shape. Mirrors the subset of the
+    /// real `xla::Literal` API the crate uses.
+    #[derive(Clone, Debug)]
+    pub struct Literal {
+        data: Vec<f64>,
+        dims: Vec<i64>,
+    }
+
+    impl Literal {
+        pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+            Literal {
+                data: v.iter().map(|x| x.to_f64()).collect(),
+                dims: vec![v.len() as i64],
+            }
+        }
+
+        pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+            let want: i64 = dims.iter().product();
+            if want as usize != self.data.len() {
+                return Err(RkcError::backend(format!(
+                    "cannot reshape literal of {} elements to {dims:?}",
+                    self.data.len()
+                )));
+            }
+            Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+        }
+
+        pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+            Ok(self.data.iter().map(|&v| T::from_f64(v)).collect())
+        }
+
+        pub fn to_tuple(self) -> Result<Vec<Literal>> {
+            Err(unavailable())
+        }
+    }
+
+    /// Stand-in for a device buffer handle.
+    #[derive(Debug)]
+    pub struct PjRtBuffer;
+
+    impl PjRtBuffer {
+        pub fn to_literal_sync(&self) -> Result<Literal> {
+            Err(unavailable())
+        }
+    }
+
+    #[derive(Debug)]
+    pub struct HloModuleProto;
+
+    impl HloModuleProto {
+        pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+            Err(unavailable())
+        }
+    }
+
+    #[derive(Debug)]
+    pub struct XlaComputation;
+
+    impl XlaComputation {
+        pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+            XlaComputation
+        }
+    }
+
+    #[derive(Debug)]
+    pub struct PjRtClient;
+
+    impl PjRtClient {
+        pub fn cpu() -> Result<PjRtClient> {
+            Err(unavailable())
+        }
+
+        pub fn platform_name(&self) -> String {
+            "unavailable".into()
+        }
+
+        pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+            Err(unavailable())
+        }
+    }
+
+    #[derive(Debug)]
+    pub struct PjRtLoadedExecutable;
+
+    impl PjRtLoadedExecutable {
+        pub fn execute<L>(&self, _inputs: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+            Err(unavailable())
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn literal_roundtrips_data() {
+            let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+            let shaped = lit.reshape(&[2, 2]).unwrap();
+            let back: Vec<f32> = shaped.to_vec().unwrap();
+            assert_eq!(back, vec![1.0, 2.0, 3.0, 4.0]);
+            assert!(lit.reshape(&[3, 3]).is_err());
+        }
+
+        #[test]
+        fn client_reports_unavailable() {
+            let err = PjRtClient::cpu().unwrap_err();
+            assert!(err.to_string().contains("xla"));
+        }
+    }
+}

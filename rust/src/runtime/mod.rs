@@ -2,30 +2,34 @@
 //!
 //! Python runs once at build time (`make artifacts`); this module is the
 //! only bridge between the rust coordinator and the compiled L2/L1
-//! compute. Interchange is HLO *text* (see python/compile/aot.py and
-//! /opt/xla-example/README.md): `HloModuleProto::from_text_file` →
-//! `XlaComputation::from_proto` → `PjRtClient::compile` → `execute`.
+//! compute. Interchange is HLO *text* (see python/compile/aot.py):
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`.
 //!
 //! The [`ArtifactRegistry`] is driven entirely by `artifacts/manifest.json`
 //! and compiles lazily: an experiment that only needs the gram artifact
-//! never pays for the others.
+//! never pays for the others, and a build without the `xla` feature can
+//! still open a registry and list artifacts — only execution requires
+//! the real PJRT bindings (see [`backend`]).
 
+pub mod backend;
 mod registry;
 
+pub use backend::Literal;
 pub use registry::{ArtifactInfo, ArtifactRegistry, Executable};
 
-use anyhow::{Context, Result};
-
+use crate::error::{Result, RkcError};
 use crate::linalg::Mat;
 
 /// Shared PJRT CPU client (one per process).
 pub struct PjrtRuntime {
-    client: xla::PjRtClient,
+    client: backend::PjRtClient,
 }
 
 impl PjrtRuntime {
     pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let client = backend::PjRtClient::cpu()
+            .map_err(|e| RkcError::backend(format!("creating PJRT CPU client: {e}")))?;
         Ok(PjrtRuntime { client })
     }
 
@@ -34,51 +38,57 @@ impl PjrtRuntime {
     }
 
     /// Compile HLO text from `path` into an executable.
-    pub fn compile_hlo_file(&self, path: &str) -> Result<xla::PjRtLoadedExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parsing HLO text {path}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
+    pub fn compile_hlo_file(&self, path: &str) -> Result<backend::PjRtLoadedExecutable> {
+        let proto = backend::HloModuleProto::from_text_file(path)
+            .map_err(|e| RkcError::backend(format!("parsing HLO text {path}: {e}")))?;
+        let comp = backend::XlaComputation::from_proto(&proto);
         self.client
             .compile(&comp)
-            .with_context(|| format!("compiling {path}"))
+            .map_err(|e| RkcError::backend(format!("compiling {path}: {e}")))
     }
 }
 
 /// Convert a row-major f64 [`Mat`] into an f32 PJRT literal of shape
 /// (rows, cols).
-pub fn mat_to_literal(m: &Mat) -> Result<xla::Literal> {
+pub fn mat_to_literal(m: &Mat) -> Result<Literal> {
     let data: Vec<f32> = m.data().iter().map(|&v| v as f32).collect();
-    let lit = xla::Literal::vec1(&data);
-    Ok(lit.reshape(&[m.rows() as i64, m.cols() as i64])?)
+    let lit = Literal::vec1(&data);
+    lit.reshape(&[m.rows() as i64, m.cols() as i64])
+        .map_err(|e| RkcError::backend(format!("reshaping literal: {e}")))
 }
 
 /// Convert a f64 slice into a rank-1 f32 literal.
-pub fn vec_to_literal(v: &[f64]) -> Result<xla::Literal> {
+pub fn vec_to_literal(v: &[f64]) -> Result<Literal> {
     let data: Vec<f32> = v.iter().map(|&x| x as f32).collect();
-    Ok(xla::Literal::vec1(&data))
+    Ok(Literal::vec1(&data))
 }
 
 /// Read an f32 literal of shape (rows, cols) back into a [`Mat`].
-pub fn literal_to_mat(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Mat> {
-    let v: Vec<f32> = lit.to_vec()?;
-    anyhow::ensure!(
-        v.len() == rows * cols,
-        "literal has {} elements, want {}x{}",
-        v.len(),
-        rows,
-        cols
-    );
+pub fn literal_to_mat(lit: &Literal, rows: usize, cols: usize) -> Result<Mat> {
+    let v: Vec<f32> = lit
+        .to_vec()
+        .map_err(|e| RkcError::backend(format!("reading literal: {e}")))?;
+    if v.len() != rows * cols {
+        return Err(RkcError::backend(format!(
+            "literal has {} elements, want {rows}x{cols}",
+            v.len()
+        )));
+    }
     Ok(Mat::from_vec(rows, cols, v.into_iter().map(|x| x as f64).collect()))
 }
 
 /// Read an f32 literal into a f64 vector.
-pub fn literal_to_vec(lit: &xla::Literal) -> Result<Vec<f64>> {
-    let v: Vec<f32> = lit.to_vec()?;
+pub fn literal_to_vec(lit: &Literal) -> Result<Vec<f64>> {
+    let v: Vec<f32> = lit
+        .to_vec()
+        .map_err(|e| RkcError::backend(format!("reading literal: {e}")))?;
     Ok(v.into_iter().map(|x| x as f64).collect())
 }
 
 /// Read an i32 literal into usize labels.
-pub fn literal_to_indices(lit: &xla::Literal) -> Result<Vec<usize>> {
-    let v: Vec<i32> = lit.to_vec()?;
+pub fn literal_to_indices(lit: &Literal) -> Result<Vec<usize>> {
+    let v: Vec<i32> = lit
+        .to_vec()
+        .map_err(|e| RkcError::backend(format!("reading literal: {e}")))?;
     Ok(v.into_iter().map(|x| x.max(0) as usize).collect())
 }

@@ -1,12 +1,13 @@
 //! Manifest-driven artifact registry with lazy compilation.
 
+use std::cell::OnceCell;
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 
-use anyhow::{anyhow, Context, Result};
-
+use crate::error::{Result, RkcError};
 use crate::util::Json;
 
+use super::backend;
 use super::PjrtRuntime;
 
 /// One entry of `artifacts/manifest.json`.
@@ -24,15 +25,22 @@ pub struct ArtifactInfo {
 
 impl ArtifactInfo {
     pub fn param_usize(&self, key: &str) -> Result<usize> {
-        self.params
-            .get(key)
-            .and_then(|v| v.parse().ok())
-            .ok_or_else(|| anyhow!("artifact {}: missing numeric param '{key}'", self.name))
+        self.params.get(key).and_then(|v| v.parse().ok()).ok_or_else(|| {
+            RkcError::missing_artifact(format!(
+                "artifact {}: missing numeric param '{key}'",
+                self.name
+            ))
+        })
     }
 
     fn from_json(j: &Json) -> Result<ArtifactInfo> {
-        let name = j.str_field("name").map_err(|e| anyhow!("{e}"))?.to_string();
-        let file = j.str_field("file").map_err(|e| anyhow!("{e}"))?.to_string();
+        let field = |key: &str| -> Result<String> {
+            j.str_field(key)
+                .map(str::to_string)
+                .map_err(|e| RkcError::backend(format!("artifact manifest entry: {e}")))
+        };
+        let name = field("name")?;
+        let file = field("file")?;
         let mut params = BTreeMap::new();
         if let Some(Json::Obj(map)) = j.get("params") {
             for (k, v) in map {
@@ -53,14 +61,19 @@ impl ArtifactInfo {
         let shapes = |key: &str| -> Result<Vec<Vec<usize>>> {
             j.get(key)
                 .and_then(Json::as_arr)
-                .ok_or_else(|| anyhow!("artifact {name}: missing '{key}'"))?
+                .ok_or_else(|| RkcError::backend(format!("artifact {name}: missing '{key}'")))?
                 .iter()
                 .map(|e| {
                     e.get("shape")
                         .and_then(Json::as_arr)
-                        .ok_or_else(|| anyhow!("artifact {name}: bad shape entry"))?
+                        .ok_or_else(|| {
+                            RkcError::backend(format!("artifact {name}: bad shape entry"))
+                        })?
                         .iter()
-                        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                        .map(|d| {
+                            d.as_usize()
+                                .ok_or_else(|| RkcError::backend("bad shape dimension"))
+                        })
                         .collect()
                 })
                 .collect()
@@ -72,35 +85,39 @@ impl ArtifactInfo {
 /// A compiled artifact plus its manifest metadata.
 pub struct Executable {
     pub info: ArtifactInfo,
-    exe: xla::PjRtLoadedExecutable,
+    exe: backend::PjRtLoadedExecutable,
 }
 
 impl Executable {
     /// Execute with the given input literals; returns the flattened
     /// output tuple (aot.py lowers with `return_tuple=True`).
-    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        anyhow::ensure!(
-            inputs.len() == self.info.inputs.len(),
-            "artifact {} expects {} inputs, got {}",
-            self.info.name,
-            self.info.inputs.len(),
-            inputs.len()
-        );
+    pub fn run(&self, inputs: &[backend::Literal]) -> Result<Vec<backend::Literal>> {
+        if inputs.len() != self.info.inputs.len() {
+            return Err(RkcError::backend(format!(
+                "artifact {} expects {} inputs, got {}",
+                self.info.name,
+                self.info.inputs.len(),
+                inputs.len()
+            )));
+        }
         let result = self
             .exe
-            .execute::<xla::Literal>(inputs)
-            .with_context(|| format!("executing {}", self.info.name))?;
+            .execute::<backend::Literal>(inputs)
+            .map_err(|e| RkcError::backend(format!("executing {}: {e}", self.info.name)))?;
         let lit = result[0][0]
             .to_literal_sync()
-            .with_context(|| format!("fetching result of {}", self.info.name))?;
-        Ok(lit.to_tuple()?)
+            .map_err(|e| RkcError::backend(format!("fetching result of {}: {e}", self.info.name)))?;
+        lit.to_tuple()
+            .map_err(|e| RkcError::backend(format!("untupling result of {}: {e}", self.info.name)))
     }
 }
 
 /// Loads `manifest.json`, compiles artifacts on first use, and caches
-/// the executables for the lifetime of the process.
+/// the executables for the lifetime of the process. The PJRT client is
+/// created lazily too: listing / inspecting artifacts never requires a
+/// working XLA backend.
 pub struct ArtifactRegistry {
-    runtime: PjrtRuntime,
+    runtime: OnceCell<PjrtRuntime>,
     dir: String,
     infos: BTreeMap<String, ArtifactInfo>,
     compiled: Mutex<BTreeMap<String, &'static Executable>>,
@@ -111,20 +128,32 @@ impl ArtifactRegistry {
     pub fn open(dir: &str) -> Result<Self> {
         let manifest_path = format!("{dir}/manifest.json");
         let text = std::fs::read_to_string(&manifest_path)
-            .with_context(|| format!("reading {manifest_path} (run `make artifacts`)"))?;
-        let json = Json::parse(&text).map_err(|e| anyhow!("parsing manifest: {e}"))?;
-        let arr = json.as_arr().ok_or_else(|| anyhow!("manifest must be a JSON array"))?;
+            .map_err(|e| RkcError::io(format!("reading {manifest_path} (run `make artifacts`)"), e))?;
+        let json = Json::parse(&text).map_err(|e| RkcError::backend(format!("parsing manifest: {e}")))?;
+        let arr = json
+            .as_arr()
+            .ok_or_else(|| RkcError::backend("manifest must be a JSON array"))?;
         let mut infos = BTreeMap::new();
         for entry in arr {
             let info = ArtifactInfo::from_json(entry)?;
             infos.insert(info.name.clone(), info);
         }
         Ok(ArtifactRegistry {
-            runtime: PjrtRuntime::cpu()?,
+            runtime: OnceCell::new(),
             dir: dir.to_string(),
             infos,
             compiled: Mutex::new(BTreeMap::new()),
         })
+    }
+
+    fn runtime(&self) -> Result<&PjrtRuntime> {
+        if self.runtime.get().is_none() {
+            let rt = PjrtRuntime::cpu()?;
+            // single-threaded cell (PJRT clients are !Sync); a lost race
+            // is impossible, but ignore the Err to stay panic-free
+            let _ = self.runtime.set(rt);
+        }
+        Ok(self.runtime.get().expect("runtime initialized above"))
     }
 
     pub fn names(&self) -> Vec<String> {
@@ -152,16 +181,26 @@ impl ArtifactRegistry {
         let info = self
             .infos
             .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact '{name}' (have: {:?})", self.names()))?
+            .ok_or_else(|| {
+                RkcError::missing_artifact(format!(
+                    "unknown artifact '{name}' (have: {:?})",
+                    self.names()
+                ))
+            })?
             .clone();
         let path = format!("{}/{}", self.dir, info.file);
-        let exe = self.runtime.compile_hlo_file(&path)?;
+        let exe = self.runtime()?.compile_hlo_file(&path)?;
         let boxed: &'static Executable = Box::leak(Box::new(Executable { info, exe }));
         cache.insert(name.to_string(), boxed);
         Ok(boxed)
     }
 
+    /// PJRT platform name, or a placeholder when no client can start
+    /// (e.g. built without the `xla` feature).
     pub fn platform(&self) -> String {
-        self.runtime.platform()
+        match self.runtime() {
+            Ok(rt) => rt.platform(),
+            Err(_) => "unavailable".into(),
+        }
     }
 }

@@ -1,0 +1,156 @@
+//! Integration tests for the library-first `rkc::api` surface:
+//! builder validation, fit → predict round-trips, out-of-sample
+//! embedding consistency, and `FromStr`/`Display` round-trips.
+
+use rkc::api::KernelClusterer;
+use rkc::clustering::accuracy;
+use rkc::config::{Backend, Method, DEFAULT_NYSTROM_M};
+use rkc::data;
+use rkc::error::RkcError;
+use rkc::kernels::Kernel;
+use rkc::rng::Pcg64;
+
+#[test]
+fn builder_validation_is_typed() {
+    let x = data::cross_lines(&mut Pcg64::seed(1), 60).x;
+    for bad in [
+        KernelClusterer::new(2).rank(0),              // rank 0
+        KernelClusterer::new(2).rank(4).oversample(2), // oversampling < rank
+        KernelClusterer::new(61),                     // k > n
+        KernelClusterer::new(0),                      // k = 0
+        KernelClusterer::new(2).rank(70),             // rank > n
+        KernelClusterer::new(2).batch(0),             // degenerate batch
+        KernelClusterer::new(2).method(Method::Nystrom { m: 1 }).rank(2), // m < r
+        KernelClusterer::new(2).method(Method::Nystrom { m: 100 }),       // m > n
+    ] {
+        let err = bad.fit(&x).unwrap_err();
+        assert!(matches!(err, RkcError::InvalidConfig(_)), "wrong variant: {err}");
+    }
+}
+
+#[test]
+fn fit_predict_roundtrip_on_two_rings() {
+    let train = data::two_rings(&mut Pcg64::seed(3), 800);
+    let model = KernelClusterer::new(2).rank(2).oversample(10).seed(5).fit(&train.x).unwrap();
+    let acc_in = accuracy(model.labels(), &train.labels, 2);
+
+    let held_out = data::two_rings(&mut Pcg64::seed(4), 400);
+    let predicted = model.predict(&held_out.x).unwrap();
+    let acc_out = accuracy(&predicted, &held_out.labels, 2);
+
+    assert!(acc_in > 0.6, "in-sample accuracy degenerate: {acc_in}");
+    assert!(
+        (acc_in - acc_out).abs() < 0.1,
+        "held-out accuracy {acc_out} drifts from in-sample {acc_in}"
+    );
+}
+
+#[test]
+fn fit_predict_roundtrip_on_cross_lines() {
+    // rank 3 covers the R² quadratic kernel's spectrum: the out-of-sample
+    // extension is near-exact and held-out accuracy matches in-sample
+    let train = data::cross_lines(&mut Pcg64::seed(6), 600);
+    let model = KernelClusterer::new(2).rank(3).oversample(10).seed(7).fit(&train.x).unwrap();
+    let acc_in = accuracy(model.labels(), &train.labels, 2);
+    assert!(acc_in > 0.9, "in-sample accuracy {acc_in}");
+
+    let held_out = data::cross_lines(&mut Pcg64::seed(8), 300);
+    let predicted = model.predict(&held_out.x).unwrap();
+    let acc_out = accuracy(&predicted, &held_out.labels, 2);
+    assert!(acc_out > 0.85, "held-out accuracy {acc_out}");
+    assert!((acc_in - acc_out).abs() < 0.1, "in {acc_in} vs out {acc_out}");
+
+    // re-predicting the training set agrees with the fit labels
+    let repredicted = model.predict(&train.x).unwrap();
+    let agree = repredicted.iter().zip(model.labels()).filter(|(a, b)| a == b).count();
+    assert!(agree as f64 / 600.0 > 0.95, "only {agree}/600 training points agree");
+}
+
+#[test]
+fn out_of_sample_embed_matches_in_sample_embedding() {
+    // with the spectrum fully covered (rank 3 on an R² quadratic kernel)
+    // the column-map extension reproduces the in-sample embedding
+    let train = data::cross_lines(&mut Pcg64::seed(9), 128);
+    let model = KernelClusterer::new(2).rank(3).oversample(10).seed(11).fit(&train.x).unwrap();
+    let emb = model.embedding().expect("one-pass builds an embedding");
+    let re_embedded = model.embed(&train.x).unwrap();
+    assert_eq!((re_embedded.rows(), re_embedded.cols()), (3, 128));
+    let scale = emb.y.max_abs().max(1e-12);
+    let diff = re_embedded.sub(&emb.y).max_abs();
+    // the extension error is the recovery error amplified by 1/sqrt(λ_i),
+    // so allow a generous (but still tight in absolute terms) margin
+    assert!(
+        diff < 1e-3 * scale.max(1.0),
+        "extension differs from in-sample embedding by {diff} (scale {scale})"
+    );
+}
+
+#[test]
+fn every_embedding_method_roundtrips_through_the_builder() {
+    let train = data::cross_lines(&mut Pcg64::seed(12), 160);
+    for method in [
+        Method::OnePass,
+        Method::GaussianOnePass,
+        Method::Nystrom { m: 60 },
+        Method::Exact,
+    ] {
+        let model = KernelClusterer::new(2)
+            .method(method)
+            .rank(2)
+            .oversample(8)
+            .seed(13)
+            .fit(&train.x)
+            .unwrap();
+        let acc = accuracy(model.labels(), &train.labels, 2);
+        assert!(acc > 0.9, "{method}: accuracy {acc}");
+        let pred = model.predict(&train.x).unwrap();
+        assert_eq!(pred.len(), 160, "{method}");
+        let err = model.approx_error().unwrap();
+        assert!(err.is_finite() && err < 1.0, "{method}: approx error {err}");
+    }
+}
+
+#[test]
+fn dimension_mismatch_is_a_typed_error() {
+    let train = data::cross_lines(&mut Pcg64::seed(14), 80);
+    let model = KernelClusterer::new(2).oversample(8).fit(&train.x).unwrap();
+    let wrong_p = data::gaussian_blobs(&mut Pcg64::seed(15), 10, 5, 2, 0.3);
+    assert!(model.predict(&wrong_p.x).is_err());
+    assert!(model.embed(&wrong_p.x).is_err());
+}
+
+#[test]
+fn method_fromstr_display_roundtrip_and_aliases() {
+    for m in [
+        Method::OnePass,
+        Method::GaussianOnePass,
+        Method::Nystrom { m: 20 },
+        Method::Nystrom { m: DEFAULT_NYSTROM_M },
+        Method::Exact,
+        Method::FullKernel,
+        Method::PlainKmeans,
+    ] {
+        assert_eq!(m.to_string().parse::<Method>().unwrap(), m, "{m}");
+    }
+    // bare `nystrom` gets the documented default m
+    assert_eq!("nystrom".parse::<Method>().unwrap(), Method::Nystrom { m: DEFAULT_NYSTROM_M });
+    // historical aliases still parse
+    assert_eq!("ours".parse::<Method>().unwrap(), Method::OnePass);
+    assert_eq!("plain".parse::<Method>().unwrap(), Method::PlainKmeans);
+    assert!(matches!("warp".parse::<Method>(), Err(RkcError::Parse { .. })));
+}
+
+#[test]
+fn backend_and_kernel_fromstr_display_roundtrip() {
+    for b in [Backend::Native, Backend::Xla] {
+        assert_eq!(b.to_string().parse::<Backend>().unwrap(), b);
+    }
+    for k in [
+        Kernel::paper_poly2(),
+        Kernel::Poly { gamma: 0.5, degree: 4 },
+        Kernel::Rbf { gamma: 1.25 },
+        Kernel::Linear,
+    ] {
+        assert_eq!(k.to_string().parse::<Kernel>().unwrap(), k, "{k}");
+    }
+}

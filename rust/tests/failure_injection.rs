@@ -99,7 +99,7 @@ fn executable_rejects_wrong_arity() {
     // use the real artifacts (skip silently if not built)
     let Ok(reg) = ArtifactRegistry::open("artifacts") else { return };
     let Ok(exe) = reg.get("precond_n256_b64") else { return };
-    let one_input = vec![xla::Literal::vec1(&[0f32; 256 * 64])
+    let one_input = vec![rkc::runtime::Literal::vec1(&[0f32; 256 * 64])
         .reshape(&[256, 64])
         .unwrap()];
     let err = match exe.run(&one_input) {
@@ -136,6 +136,20 @@ fn config_rejects_unknown_keys_and_bad_values() {
     // good values still work after failures
     cfg.set("rank", "4").unwrap();
     assert_eq!(cfg.rank, 4);
+}
+
+#[test]
+fn errors_are_typed_not_stringly() {
+    use rkc::error::RkcError;
+    let mut cfg = ExperimentConfig::default();
+    assert!(matches!(cfg.set("method", "warp_drive").unwrap_err(), RkcError::Parse { .. }));
+    assert!(matches!(cfg.set("nope", "1").unwrap_err(), RkcError::InvalidConfig(_)));
+    assert!(matches!(
+        ArtifactRegistry::open("/nonexistent/rkc_artifacts").unwrap_err(),
+        RkcError::Io { .. }
+    ));
+    cfg.dataset = "wat".into();
+    assert!(matches!(build_dataset(&cfg).unwrap_err(), RkcError::Dataset(_)));
 }
 
 #[test]

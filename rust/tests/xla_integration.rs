@@ -1,7 +1,9 @@
 //! Integration tests over the PJRT runtime + compiled artifacts.
 //!
-//! Requires `make artifacts` to have produced `artifacts/manifest.json`;
-//! these tests exercise the test-scale artifacts (n=256, b=64) plus one
+//! Requires `make artifacts` to have produced `artifacts/manifest.json`
+//! *and* a build with the `xla` feature; every test skips silently when
+//! either is missing (CI runs without the compiled artifact set). The
+//! tests exercise the test-scale artifacts (n=256, b=64) plus one
 //! production-shape smoke test, verifying the XLA path agrees with the
 //! native rust implementations to f32 tolerance.
 
@@ -16,9 +18,20 @@ use rkc::runtime::{literal_to_mat, mat_to_literal, vec_to_literal, ArtifactRegis
 
 // PJRT handles are !Send/!Sync (Rc-backed), so each test owns its own
 // registry; artifacts compile lazily and only the test-scale ones are
-// touched here, keeping this cheap.
-fn registry() -> ArtifactRegistry {
-    ArtifactRegistry::open("artifacts").expect("artifacts/manifest.json (run `make artifacts`)")
+// touched here, keeping this cheap. Returns None (=> skip) when the
+// artifact set or the xla feature is unavailable.
+fn registry() -> Option<ArtifactRegistry> {
+    let reg = ArtifactRegistry::open("artifacts").ok()?;
+    // a registry that cannot compile anything (no `xla` feature) is as
+    // good as absent for these tests; probe with a known test-scale
+    // artifact so the availability check never compiles a production one
+    let probe = if reg.info("precond_n256_b64").is_some() {
+        "precond_n256_b64".to_string()
+    } else {
+        reg.names().into_iter().next()?
+    };
+    reg.get(&probe).ok()?;
+    Some(reg)
 }
 
 fn random_mat(rng: &mut Pcg64, rows: usize, cols: usize) -> Mat {
@@ -27,7 +40,8 @@ fn random_mat(rng: &mut Pcg64, rows: usize, cols: usize) -> Mat {
 
 #[test]
 fn manifest_lists_all_artifact_families() {
-    let names = registry().names();
+    let Some(reg) = registry() else { return };
+    let names = reg.names();
     for needle in ["gram_poly2h_p4_n256_b64", "precond_n256_b64", "kmeans_step_r2_k3_n256"] {
         assert!(names.iter().any(|n| n == needle), "missing {needle} in {names:?}");
     }
@@ -35,10 +49,11 @@ fn manifest_lists_all_artifact_families() {
 
 #[test]
 fn gram_artifact_matches_native_gram() {
+    let Some(reg) = registry() else { return };
     let mut rng = Pcg64::seed(1);
     let x = random_mat(&mut rng, 4, 200); // pads to 256
     let kern = Kernel::paper_poly2();
-    let mut xla_src = XlaBlockSource::new(&registry(), x.clone(), kern, 256).unwrap();
+    let mut xla_src = XlaBlockSource::new(&reg, x.clone(), kern, 256).unwrap();
     let mut nat_src = NativeBlockSource::new(x, kern, 256);
     let cols: Vec<usize> = vec![0, 3, 77, 199, 42];
     let a = xla_src.block(&cols);
@@ -50,8 +65,9 @@ fn gram_artifact_matches_native_gram() {
 
 #[test]
 fn precond_artifact_matches_native_srht() {
+    let Some(reg) = registry() else { return };
     let mut rng = Pcg64::seed(2);
-    let exe = registry().get("precond_n256_b64").unwrap();
+    let exe = reg.get("precond_n256_b64").unwrap();
     let kb = random_mat(&mut rng, 256, 64);
     let d: Vec<f64> = (0..256).map(|_| rng.rademacher()).collect();
     let outs = exe
@@ -71,6 +87,7 @@ fn precond_artifact_matches_native_srht() {
 
 #[test]
 fn fused_sketch_pipeline_matches_native_pipeline() {
+    let Some(reg) = registry() else { return };
     // run the full one-pass method on both backends with the same seed:
     // identical SRHT draw => embeddings must reconstruct the same K̂
     let mut cfg = ExperimentConfig::default();
@@ -89,7 +106,7 @@ fn fused_sketch_pipeline_matches_native_pipeline() {
     cfg.backend = Backend::Native;
     let nat = run_experiment(&cfg, &ds, None, 99).unwrap();
     cfg.backend = Backend::Xla;
-    let xla = run_experiment(&cfg, &ds, Some(&registry()), 99).unwrap();
+    let xla = run_experiment(&cfg, &ds, Some(&reg), 99).unwrap();
 
     assert!(
         (nat.approx_error - xla.approx_error).abs() < 5e-3,
@@ -103,6 +120,7 @@ fn fused_sketch_pipeline_matches_native_pipeline() {
 
 #[test]
 fn xla_kmeans_agrees_with_native_kmeans() {
+    let Some(reg) = registry() else { return };
     let mut rng = Pcg64::seed(5);
     // three separated blobs in r=2
     let mut ds = data::gaussian_blobs(&mut rng, 180, 2, 3, 0.4);
@@ -111,7 +129,7 @@ fn xla_kmeans_agrees_with_native_kmeans() {
     let mut rng_a = Pcg64::seed(7);
     let mut rng_b = Pcg64::seed(7);
     let nat = rkc::clustering::kmeans(&ds.x, &opts, &mut rng_a);
-    let xla = rkc::coordinator::xla_kmeans(&registry(), &ds.x, &opts, &mut rng_b).unwrap();
+    let xla = rkc::coordinator::xla_kmeans(&reg, &ds.x, &opts, &mut rng_b).unwrap();
     // same seeding => same clustering (up to f32 noise in distances)
     let agree = nat
         .labels
@@ -125,6 +143,7 @@ fn xla_kmeans_agrees_with_native_kmeans() {
 
 #[test]
 fn xla_trials_on_cross_lines_beat_plain_kmeans() {
+    let Some(reg) = registry() else { return };
     // end-to-end XLA backend on a (shrunk) Table-1 workload
     let mut cfg = ExperimentConfig::table1();
     cfg.n = 240;
@@ -132,21 +151,19 @@ fn xla_trials_on_cross_lines_beat_plain_kmeans() {
     cfg.kmeans_restarts = 5;
     cfg.backend = Backend::Xla;
     let ds = rkc::coordinator::build_dataset(&cfg).unwrap();
-    let ours = run_trials(&cfg, &ds, Some(&registry())).unwrap();
+    let ours = run_trials(&cfg, &ds, Some(&reg)).unwrap();
     assert!(ours.accuracy_mean > 0.9, "xla one-pass accuracy {}", ours.accuracy_mean);
 }
 
 #[test]
 fn srht_masked_padding_keeps_rbf_consistent_across_backends() {
+    let Some(reg) = registry() else { return };
     // RBF padded rows are nonzero in the raw artifact output; the d-mask
     // must make both backends agree anyway
     let mut rng = Pcg64::seed(11);
-    let x = random_mat(&mut rng, 2, 100); // pads 100 -> 256? no: next_pow2(100)=128
+    let x = random_mat(&mut rng, 2, 100); // pads 100 -> 128
     let kern = Kernel::Rbf { gamma: 2.0 };
-    // use the production 4096-padded artifacts via a 4096 SRHT? too big
-    // for a quick test; instead check the XlaBlockSource zeroing directly
     let n_pad = 256;
-    let reg = registry();
     let mut xla_src = match XlaBlockSource::new(&reg, x.clone(), kern, n_pad) {
         Ok(s) => s,
         Err(_) => return, // no rbf p=2 n=256 artifact in the set — skip
