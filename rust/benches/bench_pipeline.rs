@@ -1,22 +1,27 @@
-//! Bench: end-to-end pipeline throughput per stage, on both backends.
+//! Bench: end-to-end pipeline throughput per stage, on both backends,
+//! plus 1-vs-N-thread scaling of the native parallel subsystem.
 //!
 //! This is the L3 perf driver for EXPERIMENTS.md §Perf: wall time of the
 //! sketch pass (gram + SRHT), recovery, K-means, and the error pass, on
 //! the Fig-3 production shape. `RKC_BACKEND=xla` runs the PJRT artifact
-//! path (requires `make artifacts`).
+//! path (requires `make artifacts`). `RKC_THREADS` overrides the thread
+//! list for the scaling section (comma-separated; `0` = auto-detect).
 
 use rkc::config::{Backend, ExperimentConfig, Method};
 use rkc::coordinator::{build_dataset, run_experiment};
 use rkc::runtime::ArtifactRegistry;
+use rkc::util::parallel::{available_threads, resolve_threads};
 
 fn main() {
     let backend = std::env::var("RKC_BACKEND").unwrap_or_else(|_| "both".into());
     let iters: usize = std::env::var("RKC_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(3);
 
-    let run = |be: Backend| {
+    let med = |v: &[f64]| rkc::util::percentile(v, 50.0);
+    let run = |be: Backend, threads: usize| {
         let mut cfg = ExperimentConfig::default();
         cfg.backend = be;
         cfg.method = Method::OnePass;
+        cfg.threads = threads;
         let registry = match be {
             Backend::Xla => Some(ArtifactRegistry::open("artifacts").expect("make artifacts")),
             Backend::Native => None,
@@ -33,9 +38,8 @@ fn main() {
             kmeans.push(out.kmeans_time.as_secs_f64());
             error.push(out.error_time.as_secs_f64());
         }
-        let med = |v: &[f64]| rkc::util::percentile(v, 50.0);
         println!(
-            "pipeline {:?}: sketch {:.3}s | recovery {:.4}s | kmeans {:.3}s | error-pass {:.3}s | total {:.3}s (n={}, batch={}, median of {iters})",
+            "pipeline {:?} threads={threads}: sketch {:.3}s | recovery {:.4}s | kmeans {:.3}s | error-pass {:.3}s | total {:.3}s (n={}, batch={}, median of {iters})",
             be,
             med(&sketch),
             med(&recovery),
@@ -50,12 +54,37 @@ fn main() {
             "  sketch throughput: {:.0} kernel-columns/s",
             ds.n() as f64 / med(&sketch)
         );
+        med(&sketch) + med(&kmeans)
     };
 
     if backend == "native" || backend == "both" {
-        run(Backend::Native);
+        // 1-vs-N thread scaling of the sharded sketch + parallel K-means
+        // (the threads=1 row doubles as the plain native baseline)
+        let mut thread_list: Vec<usize> = std::env::var("RKC_THREADS")
+            .ok()
+            .map(|v| v.split(',').filter_map(|t| t.trim().parse().ok()).collect())
+            .filter(|v: &Vec<usize>| !v.is_empty()) // malformed env → default
+            .unwrap_or_else(|| vec![1, available_threads()]);
+        thread_list.dedup_by_key(|t| resolve_threads(*t));
+        println!(
+            "scaling (native, sketch + kmeans stages, auto = {} threads):",
+            available_threads()
+        );
+        let mut base = f64::NAN;
+        for &t in &thread_list {
+            let resolved = resolve_threads(t);
+            let hot = run(Backend::Native, t);
+            if base.is_nan() {
+                base = hot;
+            }
+            println!(
+                "  threads={resolved}: speedup {:.2}x vs {}-thread baseline",
+                base / hot,
+                resolve_threads(thread_list[0])
+            );
+        }
     }
     if backend == "xla" || backend == "both" {
-        run(Backend::Xla);
+        run(Backend::Xla, 1);
     }
 }

@@ -13,7 +13,7 @@ use crate::error::{Result, RkcError};
 use crate::kernels::{column_batches, BlockSource};
 use crate::linalg::Mat;
 use crate::lowrank::{
-    exact_topr_dense, exact_topr_streaming, gaussian_one_pass_recovery, nystrom,
+    exact_topr_dense, exact_topr_streaming, gaussian_one_pass_recovery, nystrom_threaded,
     one_pass_recovery, Embedding, NystromSampling, OnePassSketch,
 };
 use crate::metrics::{MemoryModel, MethodMemory};
@@ -169,9 +169,14 @@ impl Embedder for GaussianOnePassEmbedder {
 
 /// Nyström with m sampled columns (the paper's main baseline).
 pub struct NystromEmbedder {
+    /// embedding rank r (top-r eigenpairs of the inner matrix)
     pub rank: usize,
+    /// number of sampled landmark columns
     pub m: usize,
+    /// landmark sampling strategy
     pub sampling: NystromSampling,
+    /// worker threads for the embedding projection (`0` = auto-detect)
+    pub threads: usize,
 }
 
 impl Embedder for NystromEmbedder {
@@ -194,7 +199,8 @@ impl Embedder for NystromEmbedder {
             )));
         }
         let t0 = Instant::now();
-        let embedding = nystrom(src, self.m, self.rank, self.sampling, rng);
+        let embedding =
+            nystrom_threaded(src, self.m, self.rank, self.sampling, rng, self.threads);
         Ok(EmbedOutcome { embedding, sketch_time: t0.elapsed(), recovery_time: Duration::ZERO })
     }
 
@@ -280,6 +286,25 @@ impl Embedder for FullKernelEmbedder {
 
 /// Map a [`Method`] to its embedder object. Returns `None` for
 /// [`Method::PlainKmeans`], which never forms a kernel embedding.
+/// `threads` parameterizes the strategies with their own parallel
+/// stages (one-pass FWHT, Nyström projection); block-level parallelism
+/// belongs to the [`BlockSource`] the embedder is fed.
+///
+/// # Examples
+///
+/// ```
+/// use rkc::api::embedder_for;
+/// use rkc::config::Method;
+/// use rkc::kernels::{Kernel, NativeBlockSource};
+/// use rkc::rng::Pcg64;
+///
+/// let ds = rkc::data::cross_lines(&mut Pcg64::seed(3), 96);
+/// let embedder = embedder_for(Method::OnePass, 2, 8, 32, 1).unwrap();
+/// let mut src = NativeBlockSource::pow2(ds.x, Kernel::paper_poly2());
+/// let out = embedder.embed(&mut src, &mut Pcg64::seed(1))?;
+/// assert_eq!((out.embedding.rank(), out.embedding.n()), (2, 96));
+/// # Ok::<(), rkc::error::RkcError>(())
+/// ```
 pub fn embedder_for(
     method: Method,
     rank: usize,
@@ -287,14 +312,20 @@ pub fn embedder_for(
     batch: usize,
     threads: usize,
 ) -> Option<Box<dyn Embedder>> {
+    // resolve the crate-wide `0 = auto-detect` convention here, once,
+    // so every method sees the same semantics
+    let threads = crate::util::parallel::resolve_threads(threads).max(1);
     match method {
         Method::OnePass => Some(Box::new(OnePassEmbedder { rank, oversample, batch, threads })),
         Method::GaussianOnePass => {
             Some(Box::new(GaussianOnePassEmbedder { rank, oversample, batch }))
         }
-        Method::Nystrom { m } => {
-            Some(Box::new(NystromEmbedder { rank, m, sampling: NystromSampling::Uniform }))
-        }
+        Method::Nystrom { m } => Some(Box::new(NystromEmbedder {
+            rank,
+            m,
+            sampling: NystromSampling::Uniform,
+            threads,
+        })),
         Method::Exact => Some(Box::new(ExactEmbedder { rank, iters: 40, batch })),
         Method::FullKernel => Some(Box::new(FullKernelEmbedder { rank, batch })),
         Method::PlainKmeans => None,
@@ -361,9 +392,11 @@ mod tests {
         let x = random_x(2, 2, 20);
         let mut src = NativeBlockSource::pow2(x, Kernel::paper_poly2());
         let mut rng = Pcg64::seed(1);
-        let too_many = NystromEmbedder { rank: 2, m: 50, sampling: NystromSampling::Uniform };
+        let too_many =
+            NystromEmbedder { rank: 2, m: 50, sampling: NystromSampling::Uniform, threads: 1 };
         assert!(too_many.embed(&mut src, &mut rng).is_err());
-        let rank_over_m = NystromEmbedder { rank: 6, m: 4, sampling: NystromSampling::Uniform };
+        let rank_over_m =
+            NystromEmbedder { rank: 6, m: 4, sampling: NystromSampling::Uniform, threads: 1 };
         assert!(rank_over_m.embed(&mut src, &mut rng).is_err());
     }
 

@@ -41,19 +41,22 @@ pub use model::{FitMetrics, FittedModel};
 
 use std::time::{Duration, Instant};
 
-use crate::clustering::{kernel_kmeans, kmeans, KmeansOpts};
+use crate::clustering::{kernel_kmeans, kmeans_threaded, KmeansOpts};
 use crate::config::{Backend, ExperimentConfig, Method};
 use crate::coordinator::{
-    run_sketch_pass_threaded, xla_kmeans, xla_preferred_n_pad, FusedXlaSketchRows, XlaBlockSource,
+    run_sketch_pass_sharded, xla_kmeans, xla_preferred_n_pad, FusedXlaSketchRows, XlaBlockSource,
 };
 use crate::error::{Result, RkcError};
-use crate::kernels::{column_batches, full_kernel_matrix, BlockSource, Kernel, NativeBlockSource};
+use crate::kernels::{
+    column_batches, full_kernel_matrix_threaded, BlockSource, Kernel, NativeBlockSource,
+};
 use crate::linalg::Mat;
 use crate::lowrank::{one_pass_recovery, OnePassSketch};
 use crate::metrics::{MemoryModel, MethodMemory};
 use crate::rng::Pcg64;
 use crate::runtime::ArtifactRegistry;
 use crate::sketch::Srht;
+use crate::util::parallel;
 
 use model::Assigner;
 
@@ -123,7 +126,7 @@ impl KernelClusterer {
             threads: cfg.threads,
             kmeans_restarts: cfg.kmeans_restarts,
             kmeans_iters: cfg.kmeans_iters,
-            kmeans_tol: 1e-9,
+            kmeans_tol: cfg.kmeans_tol,
             artifacts_dir: cfg.artifacts_dir.clone(),
             strict: false,
         }
@@ -136,11 +139,15 @@ impl KernelClusterer {
         self
     }
 
+    /// The Mercer kernel to cluster under (default: the paper's
+    /// homogeneous quadratic, [`Kernel::paper_poly2`]).
     pub fn kernel(mut self, kernel: Kernel) -> Self {
         self.kernel = kernel;
         self
     }
 
+    /// The low-rank strategy (default: [`Method::OnePass`], the paper's
+    /// Alg. 1).
     pub fn method(mut self, method: Method) -> Self {
         self.method = method;
         self
@@ -164,32 +171,49 @@ impl KernelClusterer {
         self
     }
 
+    /// Master seed. Every random draw in the fit — SRHT signs and row
+    /// sampling, Nyström landmarks, K-means++ — derives from it through
+    /// split PCG streams, so a fit is exactly reproducible (and
+    /// thread-count-independent; see [`threads`](Self::threads)).
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
     }
 
+    /// Compute backend for the bulk work (default: [`Backend::Native`]).
     pub fn backend(mut self, backend: Backend) -> Self {
         self.backend = backend;
         self
     }
 
-    /// Worker threads for the native sketch pipeline / FWHT stage.
+    /// Worker threads for the parallel execution subsystem: sharded
+    /// gram-block production, the FWHT stage, K-means restarts, and the
+    /// Nyström projection. `0` means auto-detect via
+    /// `std::thread::available_parallelism`. Results are bit-identical
+    /// for every thread count (the determinism contract in
+    /// `ARCHITECTURE.md`, enforced by `tests/parallel_determinism.rs`).
     pub fn threads(mut self, threads: usize) -> Self {
         self.threads = threads;
         self
     }
 
+    /// Number of independent K-means++ restarts; the best objective
+    /// wins. The paper's protocol (§4) runs 10 — the default.
     pub fn kmeans_restarts(mut self, restarts: usize) -> Self {
         self.kmeans_restarts = restarts;
         self
     }
 
+    /// Lloyd-iteration cap per restart. The paper's protocol runs 20 —
+    /// the default.
     pub fn kmeans_iters(mut self, iters: usize) -> Self {
         self.kmeans_iters = iters;
         self
     }
 
+    /// Relative objective-improvement tolerance for early stopping a
+    /// Lloyd run (default `1e-9`, effectively "run to convergence" —
+    /// the paper-protocol value [`KmeansOpts::paper`] uses).
     pub fn kmeans_tol(mut self, tol: f64) -> Self {
         self.kmeans_tol = tol;
         self
@@ -204,6 +228,12 @@ impl KernelClusterer {
     /// r' = r + l, the sketch width.
     pub fn sketch_width(&self) -> usize {
         self.rank + self.oversample
+    }
+
+    /// The effective worker count: the configured value, with `0`
+    /// resolved to the machine's available parallelism.
+    fn threads_resolved(&self) -> usize {
+        parallel::resolve_threads(self.threads).max(1)
     }
 
     /// Check the configuration against a dataset of `n` samples.
@@ -302,7 +332,7 @@ impl KernelClusterer {
         match self.method {
             Method::PlainKmeans => {
                 let t0 = Instant::now();
-                let res = kmeans(x, &kopts, &mut rng);
+                let res = kmeans_threaded(x, &kopts, &mut rng, self.threads_resolved());
                 let kmeans_time = t0.elapsed();
                 Ok(FittedModel {
                     kernel: self.kernel,
@@ -332,7 +362,7 @@ impl KernelClusterer {
             }
             Method::FullKernel => {
                 let t0 = Instant::now();
-                let kmat = full_kernel_matrix(x, self.kernel);
+                let kmat = full_kernel_matrix_threaded(x, self.kernel, self.threads_resolved());
                 let sketch_time = t0.elapsed(); // "sketch" = materialization
                 let t1 = Instant::now();
                 let res =
@@ -418,8 +448,14 @@ impl KernelClusterer {
             _ => {}
         }
         let mut rng = Pcg64::seed_stream(self.seed, 0x7a1a1);
-        let embedder = embedder_for(self.method, self.rank, self.oversample, self.batch, self.threads)
-            .expect("non-embedding methods rejected above");
+        let embedder = embedder_for(
+            self.method,
+            self.rank,
+            self.oversample,
+            self.batch,
+            self.threads_resolved(),
+        )
+        .expect("non-embedding methods rejected above");
         let outcome = embedder.embed(src, &mut rng)?;
         let memory = embedder.memory_model(n, src.n_padded());
         let n_pad = src.n_padded();
@@ -438,6 +474,7 @@ impl KernelClusterer {
         rng: &mut Pcg64,
     ) -> Result<FittedModel> {
         let kopts = self.kmeans_opts();
+        let threads = self.threads_resolved();
         let emb = outcome.embedding;
         let t0 = Instant::now();
         let res = match (self.backend, registry) {
@@ -445,9 +482,9 @@ impl KernelClusterer {
                 Ok(r) => r,
                 // no artifact for this (r, k, n) — fall back silently;
                 // the artifact set covers the paper's experiments
-                Err(_) => kmeans(&emb.y, &kopts, rng),
+                Err(_) => kmeans_threaded(&emb.y, &kopts, rng, threads),
             },
-            _ => kmeans(&emb.y, &kopts, rng),
+            _ => kmeans_threaded(&emb.y, &kopts, rng, threads),
         };
         let kmeans_time = t0.elapsed();
         Ok(FittedModel {
@@ -473,7 +510,7 @@ impl KernelClusterer {
     }
 
     /// Produce the embedding for the configured method/backend, with the
-    /// production fast paths (fused XLA sketch, threaded native pipeline)
+    /// production fast paths (fused XLA sketch, sharded native pipeline)
     /// layered over the generic [`Embedder`] dispatch.
     fn compute_embedding(
         &self,
@@ -484,6 +521,7 @@ impl KernelClusterer {
     ) -> Result<(EmbedOutcome, MethodMemory)> {
         let n = x.cols();
         let width = self.sketch_width();
+        let threads = self.threads_resolved();
 
         // fused XLA fast path: one artifact call computes (HD)K[:, J]
         if self.method == Method::OnePass && self.backend == Backend::Xla {
@@ -501,7 +539,7 @@ impl KernelClusterer {
                     let mut sk = OnePassSketch::new(srht, n);
                     for cols in column_batches(n, self.batch) {
                         let kb = src.block(&cols);
-                        let rows = sk.srht().apply_to_block(&kb, self.threads.max(1));
+                        let rows = sk.srht().apply_to_block(&kb, threads);
                         sk.ingest(&cols, &rows);
                     }
                     sk
@@ -514,17 +552,25 @@ impl KernelClusterer {
             return Ok((outcome, MemoryModel::one_pass(n, n_pad, width, self.rank, self.batch)));
         }
 
-        // threaded native pipeline: producer/consumer with backpressure
-        if self.method == Method::OnePass && self.backend == Backend::Native && self.threads > 1 {
+        // sharded native pipeline: one producer shard per worker feeding
+        // the bounded-channel consumer; channel cap = producer count, so
+        // peak memory stays O(n·r' + P·b·n_pad). The producers consume
+        // the whole thread budget — gram production dominates the FWHT —
+        // so the consumer transforms single-threaded rather than
+        // oversubscribing the cores. Bit-identical to the sequential
+        // embedder path at the same seed (same SRHT draw,
+        // order-independent accumulation).
+        if self.method == Method::OnePass && self.backend == Backend::Native && threads > 1 {
             let mut srht = Srht::draw(rng, n_pad, width);
             srht.mask_padding(n);
             let t0 = Instant::now();
-            let (sketch, _stats) = run_sketch_pass_threaded(
-                NativeBlockSource::new(x.clone(), self.kernel, n_pad),
+            let (sketch, _stats) = run_sketch_pass_sharded(
+                &NativeBlockSource::new(x.clone(), self.kernel, n_pad),
                 srht,
                 self.batch,
-                2,
-                self.threads,
+                threads,
+                threads,
+                1,
             );
             let sketch_time = t0.elapsed();
             let t1 = Instant::now();
@@ -533,9 +579,8 @@ impl KernelClusterer {
             return Ok((outcome, MemoryModel::one_pass(n, n_pad, width, self.rank, self.batch)));
         }
 
-        let embedder =
-            embedder_for(self.method, self.rank, self.oversample, self.batch, self.threads)
-                .expect("non-embedding methods handled by fit");
+        let embedder = embedder_for(self.method, self.rank, self.oversample, self.batch, threads)
+            .expect("non-embedding methods handled by fit");
         let mut src = self.block_source(x, registry, n_pad)?;
         let outcome = embedder.embed(src.as_mut(), rng)?;
         let memory = embedder.memory_model(n, n_pad);
@@ -543,22 +588,27 @@ impl KernelClusterer {
     }
 
     /// Kernel block source for the configured backend, degrading to the
-    /// native gram path when no matching artifact exists.
+    /// native gram path when no matching artifact exists. Native block
+    /// production fans out over the resolved worker count.
     fn block_source(
         &self,
         x: &Mat,
         registry: Option<&ArtifactRegistry>,
         n_pad: usize,
     ) -> Result<Box<dyn BlockSource>> {
+        let native = |clusterer: &Self| {
+            NativeBlockSource::new(x.clone(), clusterer.kernel, n_pad)
+                .with_threads(clusterer.threads_resolved())
+        };
         Ok(match (self.backend, registry) {
             (Backend::Xla, Some(reg)) => {
                 match XlaBlockSource::new(reg, x.clone(), self.kernel, n_pad) {
                     Ok(src) => Box::new(src),
                     // graceful degradation when no gram artifact matches
-                    Err(_) => Box::new(NativeBlockSource::new(x.clone(), self.kernel, n_pad)),
+                    Err(_) => Box::new(native(self)),
                 }
             }
-            _ => Box::new(NativeBlockSource::new(x.clone(), self.kernel, n_pad)),
+            _ => Box::new(native(self)),
         })
     }
 

@@ -57,6 +57,25 @@ pub(crate) enum Assigner {
 /// out-of-sample [`embed`](FittedModel::embed) /
 /// [`predict`](FittedModel::predict) when the training data was retained
 /// (i.e. the model came from `fit`, not `fit_stream`).
+///
+/// # Examples
+///
+/// ```
+/// use rkc::api::KernelClusterer;
+/// use rkc::data;
+/// use rkc::rng::Pcg64;
+///
+/// let ds = data::cross_lines(&mut Pcg64::seed(2), 128);
+/// let model = KernelClusterer::new(2).oversample(8).fit(&ds.x)?;
+/// assert_eq!(model.labels().len(), 128);
+/// assert_eq!(model.k(), 2);
+///
+/// // never-seen points embed into the trained space and get a cluster
+/// let novel = data::cross_lines(&mut Pcg64::seed(3), 16);
+/// assert_eq!(model.embed(&novel.x)?.cols(), 16);
+/// assert_eq!(model.predict(&novel.x)?.len(), 16);
+/// # Ok::<(), rkc::error::RkcError>(())
+/// ```
 pub struct FittedModel {
     pub(crate) kernel: Kernel,
     pub(crate) k: usize,

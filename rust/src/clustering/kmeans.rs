@@ -1,4 +1,5 @@
-//! Lloyd K-means with k-means++ seeding and restarts.
+//! Lloyd K-means with k-means++ seeding, restarts, and fork-join
+//! parallelism over both axes.
 //!
 //! Runs on the embedded points `Y` (r × n, r tiny) produced by any of the
 //! low-rank paths — the paper's step 7. Matches the paper's experimental
@@ -7,9 +8,19 @@
 //! implementation is the reference and the restart engine (at r = 2 the
 //! native loop is faster than a PJRT round trip per iteration — measured
 //! in EXPERIMENTS.md §Perf).
+//!
+//! Parallel execution ([`kmeans_threaded`]) fans the independent
+//! restarts out across worker threads, and chunks the O(n·k·r)
+//! assignment step over points when a single restart has the machine to
+//! itself. Both axes preserve the determinism contract: per-restart PCG
+//! streams are split from the caller's RNG in restart order on the
+//! calling thread, per-point assignments are pure functions of
+//! `(Y, centroids)`, and the objective is reduced in point order — so
+//! `threads = 1` and `threads = N` return bit-identical results.
 
 use crate::linalg::Mat;
 use crate::rng::{Pcg64, Rng};
+use crate::util::parallel::{for_each_task, map_indexed};
 
 /// Options mirroring the paper's protocol (MATLAB kmeans defaults used
 /// in §4: 10 replicates, 20 max iterations).
@@ -23,6 +34,11 @@ pub struct KmeansOpts {
 }
 
 impl KmeansOpts {
+    /// The paper's experimental protocol (§4, MATLAB `kmeans` defaults):
+    /// 10 restarts, 20 Lloyd iterations, and an effectively-exact
+    /// relative-improvement tolerance of `1e-9`. Override any of these
+    /// through the [`KernelClusterer`](crate::api::KernelClusterer)
+    /// builder (`kmeans_restarts` / `kmeans_iters` / `kmeans_tol`).
     pub fn paper(k: usize) -> Self {
         KmeansOpts { k, restarts: 10, max_iters: 20, tol: 1e-9 }
     }
@@ -94,33 +110,92 @@ fn col_dist2(y: &Mat, j: usize, c: &Mat, cj: usize) -> f64 {
     s
 }
 
+/// Assignment step over a contiguous chunk of points starting at global
+/// index `start`: nearest centroid and squared distance per point. Pure
+/// per-point function of `(y, centroids)` — safe to run on any worker.
+fn assign_range(
+    y: &Mat,
+    centroids: &Mat,
+    k: usize,
+    start: usize,
+    labels: &mut [usize],
+    dist: &mut [f64],
+) {
+    for (o, (lab, ds)) in labels.iter_mut().zip(dist.iter_mut()).enumerate() {
+        let j = start + o;
+        let mut best = 0usize;
+        let mut bestd = f64::INFINITY;
+        for c in 0..k {
+            let d = col_dist2(y, j, centroids, c);
+            if d < bestd {
+                bestd = d;
+                best = c;
+            }
+        }
+        *lab = best;
+        *ds = bestd;
+    }
+}
+
+/// Full assignment step, chunked over points across `threads` workers.
+/// Labels and distances land in per-point slots, so the result does not
+/// depend on the chunking; callers sum `dist` sequentially in point
+/// order to keep the objective bit-identical across thread counts.
+fn assign_points(
+    y: &Mat,
+    centroids: &Mat,
+    k: usize,
+    labels: &mut [usize],
+    dist: &mut [f64],
+    threads: usize,
+) {
+    let n = y.cols();
+    let workers = threads.min(n).max(1);
+    if workers <= 1 {
+        assign_range(y, centroids, k, 0, labels, dist);
+        return;
+    }
+    let chunk = n.div_ceil(workers);
+    let tasks: Vec<(usize, &mut [usize], &mut [f64])> = labels
+        .chunks_mut(chunk)
+        .zip(dist.chunks_mut(chunk))
+        .enumerate()
+        .map(|(g, (lc, dc))| (g * chunk, lc, dc))
+        .collect();
+    for_each_task(tasks, workers, |(start, lc, dc)| {
+        assign_range(y, centroids, k, start, lc, dc);
+    });
+}
+
 /// One seeded Lloyd run. Empty clusters are re-seeded to the point
 /// farthest from its centroid (standard repair).
 pub fn kmeans_once(y: &Mat, opts: &KmeansOpts, rng: &mut Pcg64) -> KmeansResult {
+    kmeans_once_threaded(y, opts, rng, 1)
+}
+
+/// [`kmeans_once`] with the assignment step chunked over `threads`
+/// workers. Bit-identical to the sequential run for any thread count:
+/// only the O(n·k·r) per-point search is distributed; the update step
+/// and the objective reduction stay in point order.
+pub fn kmeans_once_threaded(
+    y: &Mat,
+    opts: &KmeansOpts,
+    rng: &mut Pcg64,
+    threads: usize,
+) -> KmeansResult {
     let (r, n) = (y.rows(), y.cols());
     let k = opts.k;
     let mut centroids = kmeanspp_init(y, k, rng);
     let mut labels = vec![0usize; n];
+    let mut dist = vec![0.0f64; n];
     let mut objective = f64::INFINITY;
     let mut iterations = 0;
 
     for it in 0..opts.max_iters {
         iterations = it + 1;
-        // assignment step
-        let mut obj = 0.0;
-        for j in 0..n {
-            let mut best = 0usize;
-            let mut bestd = f64::INFINITY;
-            for c in 0..k {
-                let d = col_dist2(y, j, &centroids, c);
-                if d < bestd {
-                    bestd = d;
-                    best = c;
-                }
-            }
-            labels[j] = best;
-            obj += bestd;
-        }
+        // assignment step (parallel over points, reduced in point order)
+        assign_points(y, &centroids, k, &mut labels, &mut dist, threads);
+        let obj: f64 = dist.iter().sum();
         // update step
         let mut sums = Mat::zeros(r, k);
         let mut counts = vec![0usize; k];
@@ -157,36 +232,61 @@ pub fn kmeans_once(y: &Mat, opts: &KmeansOpts, rng: &mut Pcg64) -> KmeansResult 
         }
     }
     // final assignment under the last centroids (objective consistent)
-    let mut obj = 0.0;
-    for j in 0..n {
-        let mut best = 0usize;
-        let mut bestd = f64::INFINITY;
-        for c in 0..k {
-            let d = col_dist2(y, j, &centroids, c);
-            if d < bestd {
-                bestd = d;
-                best = c;
-            }
-        }
-        labels[j] = best;
-        obj += bestd;
-    }
+    assign_points(y, &centroids, k, &mut labels, &mut dist, threads);
+    let obj: f64 = dist.iter().sum();
     KmeansResult { labels, centroids, objective: obj, iterations }
 }
 
 /// K-means with restarts: best-of-`opts.restarts` independent seeded
 /// runs (the paper's protocol). Deterministic given the rng.
 pub fn kmeans(y: &Mat, opts: &KmeansOpts, rng: &mut Pcg64) -> KmeansResult {
+    kmeans_threaded(y, opts, rng, 1)
+}
+
+/// [`kmeans`] with the restarts fanned out across `threads` workers.
+///
+/// Determinism contract (verified by `tests/parallel_determinism.rs`):
+/// every restart's PCG stream is split from `rng` in restart order *on
+/// the calling thread* — exactly the sequence the sequential loop draws
+/// — and the winning restart is reduced in restart order with the same
+/// strict `<` comparison, so labels, centroids, and objective are
+/// bit-identical for any thread count. With a single restart the
+/// parallelism moves into the chunked assignment step instead.
+pub fn kmeans_threaded(
+    y: &Mat,
+    opts: &KmeansOpts,
+    rng: &mut Pcg64,
+    threads: usize,
+) -> KmeansResult {
     assert!(opts.restarts >= 1);
+    // pre-split per-restart streams in restart order: the parent rng
+    // advances exactly as in the sequential loop, for any thread count
+    let streams: Vec<Pcg64> =
+        (0..opts.restarts).map(|t| rng.split(t as u64 + 1)).collect();
+    if threads <= 1 || opts.restarts == 1 {
+        // fold run by run — only the current best result stays alive
+        let mut best: Option<KmeansResult> = None;
+        for mut r in streams {
+            let run = kmeans_once_threaded(y, opts, &mut r, threads);
+            if best.as_ref().is_none_or(|b| run.objective < b.objective) {
+                best = Some(run);
+            }
+        }
+        return best.expect("restarts >= 1");
+    }
+    // the fan-out holds one result per restart until the index-order
+    // reduction (restarts are ~10 under the paper's protocol)
+    let runs = map_indexed(opts.restarts, threads, |t| {
+        let mut r = streams[t].clone();
+        kmeans_once_threaded(y, opts, &mut r, 1)
+    });
     let mut best: Option<KmeansResult> = None;
-    for t in 0..opts.restarts {
-        let mut run_rng = rng.split(t as u64 + 1);
-        let run = kmeans_once(y, opts, &mut run_rng);
+    for run in runs {
         if best.as_ref().is_none_or(|b| run.objective < b.objective) {
             best = Some(run);
         }
     }
-    best.unwrap()
+    best.expect("restarts >= 1")
 }
 
 #[cfg(test)]
@@ -259,6 +359,29 @@ mod tests {
         let b = kmeans(&y, &KmeansOpts::paper(3), &mut b_rng);
         assert_eq!(a.labels, b.labels);
         assert_eq!(a.objective, b.objective);
+    }
+
+    #[test]
+    fn threaded_is_bit_identical_to_sequential() {
+        let mut r1 = Pcg64::seed(7);
+        let (y, _) = blobs(&mut r1, 40);
+        let run = |threads: usize| {
+            let mut rng = Pcg64::seed(123);
+            kmeans_threaded(&y, &KmeansOpts::paper(3), &mut rng, threads)
+        };
+        let base = run(1);
+        for threads in [2usize, 4, 16] {
+            let par = run(threads);
+            assert_eq!(base.labels, par.labels, "threads={threads}");
+            assert_eq!(base.objective.to_bits(), par.objective.to_bits(), "threads={threads}");
+            assert_eq!(base.centroids.data(), par.centroids.data(), "threads={threads}");
+        }
+        // the caller's rng must advance identically on both paths
+        let mut a = Pcg64::seed(5);
+        let mut b = Pcg64::seed(5);
+        let _ = kmeans(&y, &KmeansOpts::paper(3), &mut a);
+        let _ = kmeans_threaded(&y, &KmeansOpts::paper(3), &mut b, 4);
+        assert_eq!(a.next_u64(), b.next_u64());
     }
 
     #[test]

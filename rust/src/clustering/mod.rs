@@ -2,7 +2,9 @@
 //!
 //! `kmeans` is the standard Lloyd algorithm with k-means++ seeding and
 //! restarts — exactly what the paper runs on the embedded points `Y`
-//! (MATLAB `kmeans`, 10 initializations, 20 iterations). `kernel_kmeans`
+//! (MATLAB `kmeans`, 10 initializations, 20 iterations); `kmeans_threaded`
+//! fans the restarts (and, when they run alone, the assignment step)
+//! across worker threads with bit-identical results. `kernel_kmeans`
 //! is the full-kernel-matrix baseline (Dhillon et al. 2004, Eq. 4 of the
 //! paper) used for the "full Kernel K-means = 0.46" reference line in
 //! Fig. 3(b). `metrics` provides clustering accuracy (best label
@@ -15,5 +17,7 @@ mod metrics;
 
 pub use hungarian::hungarian_min_cost;
 pub use kernel_kmeans::{kernel_kmeans, kernel_kmeans_objective, KernelKmeansResult};
-pub use kmeans::{kmeans, kmeans_once, KmeansOpts, KmeansResult};
+pub use kmeans::{
+    kmeans, kmeans_once, kmeans_once_threaded, kmeans_threaded, KmeansOpts, KmeansResult,
+};
 pub use metrics::{accuracy, adjusted_rand_index, confusion_matrix, normalized_mutual_info};

@@ -105,7 +105,7 @@ pub fn cmd_fig2(
         rank: cfg.rank,
         oversample: cfg.oversample,
         batch: cfg.batch,
-        threads: cfg.threads.max(1),
+        threads: rkc::util::parallel::resolve_threads(cfg.threads).max(1),
     };
     let mut rng2 = Pcg64::seed_stream(cfg.seed, 0xf162);
     let ours = one_pass.embed(&mut src, &mut rng2)?.embedding;

@@ -3,7 +3,7 @@
 //! Configs load from JSON files (see `util::json`) and/or `--key value`
 //! command-line overrides, so every experiment in EXPERIMENTS.md is
 //! reproducible from a single command line. [`Method`] and [`Backend`]
-//! implement the standard [`FromStr`]/[`Display`] pair (round-tripping
+//! implement the standard [`FromStr`]/[`fmt::Display`] pair (round-tripping
 //! for every variant), so they parse with plain `"exact".parse()` and
 //! print with `{}` like any other Rust type.
 
@@ -122,6 +122,11 @@ pub struct ExperimentConfig {
     pub backend: Backend,
     pub kmeans_restarts: usize,
     pub kmeans_iters: usize,
+    /// relative objective-improvement tolerance for K-means early
+    /// stopping (the paper protocol's effectively-exact `1e-9`)
+    pub kmeans_tol: f64,
+    /// worker threads for the parallel execution subsystem; `0` means
+    /// auto-detect via `std::thread::available_parallelism`
     pub threads: usize,
     pub artifacts_dir: String,
     /// root directory for on-disk datasets (e.g. `segmentation.csv`);
@@ -147,6 +152,7 @@ impl Default for ExperimentConfig {
             backend: Backend::Native,
             kmeans_restarts: 10,
             kmeans_iters: 20,
+            kmeans_tol: 1e-9,
             threads: 1,
             artifacts_dir: "artifacts".into(),
             data_dir: "data".into(),
@@ -192,6 +198,10 @@ impl ExperimentConfig {
             }
             "kmeans_restarts" => self.kmeans_restarts = uint("kmeans_restarts", value)?,
             "kmeans_iters" => self.kmeans_iters = uint("kmeans_iters", value)?,
+            "kmeans_tol" => {
+                self.kmeans_tol =
+                    value.parse().map_err(|_| RkcError::parse("kmeans_tol", value))?;
+            }
             "threads" => self.threads = uint("threads", value)?,
             "artifacts_dir" => self.artifacts_dir = value.into(),
             "data_dir" => self.data_dir = value.into(),
@@ -245,6 +255,8 @@ mod tests {
         assert_eq!(c.trials, 100);
         assert_eq!(c.kmeans_restarts, 10);
         assert_eq!(c.kmeans_iters, 20);
+        assert_eq!(c.kmeans_tol, 1e-9);
+        assert_eq!(c.threads, 1);
         assert_eq!(c.data_dir, "data");
         let t = ExperimentConfig::table1();
         assert_eq!((t.n, t.k, t.oversample), (4000, 2, 10));
@@ -265,6 +277,11 @@ mod tests {
         assert_eq!(c.backend, Backend::Xla);
         c.set("data_dir", "/tmp/datasets").unwrap();
         assert_eq!(c.data_dir, "/tmp/datasets");
+        c.set("kmeans_tol", "1e-6").unwrap();
+        assert_eq!(c.kmeans_tol, 1e-6);
+        c.set("threads", "0").unwrap(); // 0 = auto-detect
+        assert_eq!(c.threads, 0);
+        assert!(c.set("kmeans_tol", "tiny").is_err());
         assert!(c.set("nope", "1").is_err());
         assert!(c.set("backend", "gpu").is_err());
         assert!(c.set("n", "abc").is_err());

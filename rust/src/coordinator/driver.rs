@@ -84,7 +84,9 @@ pub fn build_dataset(cfg: &ExperimentConfig) -> Result<Dataset> {
 ///
 /// Compatibility wrapper over [`KernelClusterer::fit_with_registry`]:
 /// fits the model, then scores it against the dataset labels and runs
-/// the streamed approximation-error pass.
+/// the streamed approximation-error pass. `cfg.threads` flows through
+/// unchanged (`0` = auto-detect); results are bit-identical for any
+/// thread count, so threaded trials stay comparable to recorded runs.
 pub fn run_experiment(
     cfg: &ExperimentConfig,
     ds: &Dataset,

@@ -10,12 +10,13 @@
 //! ```
 //!
 //! The full kernel matrix never exists in memory: peak usage is the
-//! sketch (`n·r'` f64) plus one in-flight block (`n_pad·b`). The native
-//! backend demonstrates the threaded producer/consumer pipeline with
-//! bounded-channel backpressure; the XLA backend routes the bulk compute
-//! through the PJRT artifacts (compiled from JAX + Pallas) on the main
-//! thread — the PJRT CPU client is not Sync, and on a real accelerator
-//! the overlap comes from device streams instead.
+//! sketch (`n·r'` f64) plus the in-flight blocks (`P·b·n_pad` with `P`
+//! producer shards). The native backend runs the sharded multi-producer
+//! pipeline with bounded-channel backpressure
+//! ([`run_sketch_pass_sharded`]); the XLA backend routes the bulk
+//! compute through the PJRT artifacts (compiled from JAX + Pallas) on
+//! the main thread — the PJRT CPU client is not Sync, and on a real
+//! accelerator the overlap comes from device streams instead.
 
 mod driver;
 mod pipeline;
@@ -23,6 +24,9 @@ mod sources;
 mod xla_kmeans;
 
 pub use driver::{build_dataset, run_experiment, run_trials, RunOutcome, TrialAggregate};
-pub use pipeline::{run_sketch_pass, run_sketch_pass_threaded, SketchRowProducer, StageStats};
+pub use pipeline::{
+    run_sketch_pass, run_sketch_pass_sharded, run_sketch_pass_threaded, SketchRowProducer,
+    StageStats,
+};
 pub use sources::{xla_preferred_n_pad, FusedXlaSketchRows, NativeSketchRows, XlaBlockSource};
 pub use xla_kmeans::xla_kmeans;

@@ -1,14 +1,24 @@
 //! The streaming sketch pass: block scheduler + SRHT stage + accumulator.
 //!
-//! Two execution modes:
+//! Three execution modes:
 //! - [`run_sketch_pass`] — sequential loop, works with any producer
 //!   (including the XLA-backed one, whose PJRT handles are not `Send`).
-//! - [`run_sketch_pass_threaded`] — producer/consumer with a bounded
-//!   `sync_channel`: the producer thread computes kernel blocks while the
-//!   consumer applies the FWHT and gathers sketch rows. Backpressure is
-//!   the channel bound — at most `channel_cap` blocks (each n_pad × b
-//!   f64) are ever in flight, keeping peak memory at the documented
-//!   O(n·r' + b·n_pad) regardless of producer speed.
+//! - [`run_sketch_pass_threaded`] — single producer/consumer with a
+//!   bounded `sync_channel` (the sharded pass with one producer).
+//! - [`run_sketch_pass_sharded`] — P producer workers, each computing a
+//!   disjoint contiguous shard of the kernel column blocks, feeding one
+//!   bounded channel; the consumer applies `D`, the FWHT, and the row
+//!   gather, then writes each streamed column's sketch row into its own
+//!   slot of `W`. Backpressure is the channel bound: at most
+//!   `channel_cap` queued blocks plus one in-production block per
+//!   producer (each n_pad × b f64) are ever alive, keeping peak memory
+//!   at the documented O(n·r' + P·b·n_pad) regardless of producer speed.
+//!
+//! Determinism: the accumulator is order-independent (each column owns a
+//! row of `W`; [`OnePassSketch::ingest`] asserts no column streams
+//! twice), and block contents are pure functions of `(x, kernel, cols)`,
+//! so the sharded pass is bit-identical to the sequential one for any
+//! producer count and any arrival interleaving.
 
 use std::sync::mpsc::sync_channel;
 use std::time::Duration;
@@ -21,10 +31,14 @@ use crate::sketch::Srht;
 /// Per-stage wall-clock accounting for the sketch pass.
 #[derive(Clone, Debug, Default)]
 pub struct StageStats {
+    /// kernel column blocks processed end to end
     pub blocks: usize,
+    /// gram-block production time; in sharded mode this is the *sum*
+    /// across producer workers, so it can exceed the pass's wall clock
     pub produce_time: Duration,
+    /// consumer-side SRHT stage time (scale, FWHT, row gather, ingest)
     pub transform_time: Duration,
-    /// peak number of blocks simultaneously alive (threaded mode)
+    /// upper bound on blocks simultaneously alive (queue + producers)
     pub peak_in_flight: usize,
 }
 
@@ -67,13 +81,32 @@ pub fn run_sketch_pass(
     (sketch, stats)
 }
 
-/// Threaded sketch pass (native backend): the producer thread computes
+/// Threaded sketch pass (native backend): one producer thread computes
 /// raw kernel blocks; the consumer applies `D`, FWHT and the row gather.
+/// Equivalent to [`run_sketch_pass_sharded`] with a single producer.
 pub fn run_sketch_pass_threaded(
-    mut src: NativeBlockSource,
+    src: NativeBlockSource,
     srht: Srht,
     batch: usize,
     channel_cap: usize,
+    fwht_threads: usize,
+) -> (OnePassSketch, StageStats) {
+    run_sketch_pass_sharded(&src, srht, batch, channel_cap, 1, fwht_threads)
+}
+
+/// Sharded sketch pass (native backend): `producers` workers — sharing
+/// the block source by reference (native gram blocks are a pure `&self`
+/// computation) — compute disjoint contiguous shards of the
+/// column-batch list and feed one bounded channel; the consumer runs
+/// the SRHT stage (FWHT fanned over `fwht_threads`) and accumulates
+/// `W`. See the module docs for the memory bound and the determinism
+/// argument.
+pub fn run_sketch_pass_sharded(
+    src: &NativeBlockSource,
+    srht: Srht,
+    batch: usize,
+    channel_cap: usize,
+    producers: usize,
     fwht_threads: usize,
 ) -> (OnePassSketch, StageStats) {
     let n_real = src.n();
@@ -81,21 +114,37 @@ pub fn run_sketch_pass_threaded(
     let mut stats = StageStats::default();
     let batches = column_batches(n_real, batch);
     let nbatches = batches.len();
+    if nbatches == 0 {
+        return (sketch, stats);
+    }
+    let producers = producers.clamp(1, nbatches);
+    let per_shard = nbatches.div_ceil(producers);
+    let shards: Vec<Vec<Vec<usize>>> =
+        batches.chunks(per_shard).map(|c| c.to_vec()).collect();
     let (tx, rx) = sync_channel::<(Vec<usize>, Mat)>(channel_cap.max(1));
 
     std::thread::scope(|scope| {
-        let producer = scope.spawn(move || {
-            let mut produce_time = Duration::ZERO;
-            for cols in batches {
-                let t0 = std::time::Instant::now();
-                let kb = src.block(&cols);
-                produce_time += t0.elapsed();
-                if tx.send((cols, kb)).is_err() {
-                    break; // consumer hung up (panic downstream)
-                }
-            }
-            produce_time
-        });
+        let handles: Vec<_> = shards
+            .into_iter()
+            .map(|shard| {
+                let tx = tx.clone();
+                scope.spawn(move || {
+                    let mut produce_time = Duration::ZERO;
+                    for cols in shard {
+                        let t0 = std::time::Instant::now();
+                        let kb = src.compute_block(&cols);
+                        produce_time += t0.elapsed();
+                        if tx.send((cols, kb)).is_err() {
+                            break; // consumer hung up (panic downstream)
+                        }
+                    }
+                    produce_time
+                })
+            })
+            .collect();
+        // drop the original sender so `rx.iter()` terminates once every
+        // producer has drained its shard
+        drop(tx);
 
         for (cols, kb) in rx.iter() {
             let t1 = std::time::Instant::now();
@@ -104,11 +153,13 @@ pub fn run_sketch_pass_threaded(
             stats.transform_time += t1.elapsed();
             stats.blocks += 1;
         }
-        stats.produce_time = producer.join().expect("producer thread panicked");
+        for h in handles {
+            stats.produce_time += h.join().expect("producer thread panicked");
+        }
     });
 
     assert_eq!(stats.blocks, nbatches);
-    stats.peak_in_flight = channel_cap.max(1) + 1;
+    stats.peak_in_flight = channel_cap.max(1) + producers;
     (sketch, stats)
 }
 
@@ -149,6 +200,33 @@ mod tests {
         assert_mat_close(sk_seq.w(), sk_thr.w(), 1e-12);
         assert_eq!(st_seq.blocks, st_thr.blocks);
         assert!(sk_thr.is_complete());
+    }
+
+    #[test]
+    fn sharded_is_bit_identical_to_sequential() {
+        let (x, srht) = setup(4, 61);
+        let kern = Kernel::paper_poly2();
+        let mut seq = NativeSketchRows {
+            src: NativeBlockSource::pow2(x.clone(), kern),
+            srht: srht.clone(),
+            threads: 1,
+        };
+        let (sk_seq, _) = run_sketch_pass(&mut seq, 61, 7);
+        for producers in [2usize, 3, 5] {
+            let src = NativeBlockSource::pow2(x.clone(), kern);
+            let (sk_shard, st) = run_sketch_pass_sharded(
+                &src,
+                srht.clone(),
+                7,
+                producers,
+                producers,
+                2,
+            );
+            assert_eq!(sk_seq.w().data(), sk_shard.w().data(), "producers={producers}");
+            assert!(sk_shard.is_complete());
+            assert_eq!(st.blocks, 9); // ceil(61 / 7)
+            assert!(st.peak_in_flight <= 2 * producers);
+        }
     }
 
     #[test]

@@ -5,7 +5,18 @@
 //! CLI binary sits at the edge and is free to format them for humans.
 //! Hand-rolled `thiserror`-style (the image is offline — no proc-macro
 //! dependencies), so each variant carries enough context to be matched
-//! on programmatically and still renders a actionable message.
+//! on programmatically and still renders an actionable message.
+//!
+//! # Examples
+//!
+//! ```
+//! use rkc::config::Method;
+//! use rkc::error::RkcError;
+//!
+//! let err = "warp_drive".parse::<Method>().unwrap_err();
+//! assert!(matches!(err, RkcError::Parse { what: "method", .. }));
+//! assert_eq!(err.to_string(), "cannot parse method from 'warp_drive'");
+//! ```
 
 use std::fmt;
 

@@ -13,6 +13,20 @@ use crate::error::RkcError;
 use crate::linalg::Mat;
 
 /// Mercer kernel functions used in the paper's experiments.
+///
+/// # Examples
+///
+/// ```
+/// use rkc::kernels::Kernel;
+///
+/// // the paper's homogeneous quadratic: κ(x, y) = ⟨x, y⟩²
+/// let k = Kernel::paper_poly2();
+/// assert_eq!(k.eval(&[1.0, 2.0], &[3.0, -1.0]), 1.0);
+///
+/// // spec strings round-trip through FromStr/Display
+/// assert_eq!("rbf:0.5".parse::<Kernel>().unwrap(), Kernel::Rbf { gamma: 0.5 });
+/// assert_eq!(Kernel::Rbf { gamma: 0.5 }.to_string(), "rbf:0.5");
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Kernel {
     /// `(<x, y> + gamma)^degree`; `gamma = 0` is the homogeneous
@@ -130,16 +144,25 @@ pub trait BlockSource {
 
 /// Reference rust block source: gram blocks computed directly from the
 /// data matrix (p × n) with the requested padding.
+///
+/// Block production parallelizes across output *rows* when configured
+/// with [`with_threads`](Self::with_threads): each worker fills a
+/// disjoint row range of the block, and every entry is computed with the
+/// same accumulation order regardless of the worker count, so blocks are
+/// bit-identical for any `threads` setting.
+#[derive(Clone)]
 pub struct NativeBlockSource {
     x: Mat,
     kernel: Kernel,
     n_padded: usize,
+    threads: usize,
 }
 
 impl NativeBlockSource {
+    /// Source over `x` (p × n) padding blocks to `n_padded` rows.
     pub fn new(x: Mat, kernel: Kernel, n_padded: usize) -> Self {
         assert!(n_padded >= x.cols(), "padding smaller than data");
-        NativeBlockSource { x, kernel, n_padded }
+        NativeBlockSource { x, kernel, n_padded, threads: 1 }
     }
 
     /// Convenience: pad to the next power of two (SRHT requirement).
@@ -148,12 +171,90 @@ impl NativeBlockSource {
         Self::new(x, kernel, n_padded)
     }
 
+    /// Fan gram-row computation out over `threads` workers per `block`
+    /// call (`0` = auto-detect; see [`crate::util::parallel`]).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = crate::util::parallel::resolve_threads(threads).max(1);
+        self
+    }
+
+    /// The underlying data matrix (p × n).
     pub fn x(&self) -> &Mat {
         &self.x
     }
 
+    /// The kernel function this source evaluates.
     pub fn kernel(&self) -> Kernel {
         self.kernel
+    }
+
+    /// Compute `K[:, cols]` without requiring `&mut self` — the native
+    /// gram path is pure, so concurrent producers can share one source
+    /// by reference ([`BlockSource::block`] delegates here).
+    pub fn compute_block(&self, cols: &[usize]) -> Mat {
+        let n = self.x.cols();
+        let p = self.x.rows();
+        let b = cols.len();
+        let mut out = Mat::zeros(self.n_padded, b);
+        if b == 0 || n == 0 {
+            return out;
+        }
+        let xb = Mat::from_fn(p, b, |d, bj| {
+            let j = cols[bj];
+            assert!(j < n, "column index {j} out of range (n={n})");
+            self.x[(d, j)]
+        });
+        // query-column norms for the RBF distance identity, shared
+        // read-only by every worker
+        let ys: Vec<f64> = match self.kernel {
+            Kernel::Rbf { .. } => {
+                (0..b).map(|bj| (0..p).map(|d| xb[(d, bj)].powi(2)).sum()).collect()
+            }
+            _ => Vec::new(),
+        };
+        // Gram core as a blocked matmul: out[i, bj] = Σ_d x[d, i]·xb[d, bj]
+        // accumulated row of x by row of x — both operands stream
+        // sequentially, ~6× faster than per-entry kernel eval
+        // (EXPERIMENTS.md §Perf). The kernel nonlinearity is applied
+        // elementwise per finished row. i-outer: the (b)-wide output row
+        // stays in L1 and the inner axpy vectorizes over b; xb (p × b) is
+        // L2-resident throughout. Workers own disjoint row ranges; the
+        // per-entry accumulation order never depends on the worker count.
+        let x = &self.x;
+        let kernel = self.kernel;
+        let (real_rows, _padding) = out.data_mut().split_at_mut(n * b);
+        crate::util::parallel::for_each_row_chunk(real_rows, b, self.threads, |i0, rows| {
+            for (di, orow) in rows.chunks_mut(b).enumerate() {
+                let i = i0 + di;
+                for d in 0..p {
+                    let xi = x[(d, i)];
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    let brow = xb.row(d);
+                    for (o, &q) in orow.iter_mut().zip(brow) {
+                        *o += xi * q;
+                    }
+                }
+                match kernel {
+                    Kernel::Linear => {}
+                    Kernel::Poly { gamma, degree } => {
+                        let e = degree as i32;
+                        for v in orow.iter_mut() {
+                            *v = (*v + gamma).powi(e);
+                        }
+                    }
+                    Kernel::Rbf { gamma } => {
+                        // ||x−y||² = ||x||² + ||y||² − 2⟨x,y⟩ from the dot
+                        let xs_i: f64 = (0..p).map(|d| x[(d, i)].powi(2)).sum();
+                        for (bj, v) in orow.iter_mut().enumerate() {
+                            *v = (-gamma * (xs_i + ys[bj] - 2.0 * *v)).exp();
+                        }
+                    }
+                }
+            }
+        });
+        out
     }
 }
 
@@ -167,61 +268,7 @@ impl BlockSource for NativeBlockSource {
     }
 
     fn block(&mut self, cols: &[usize]) -> Mat {
-        let n = self.x.cols();
-        let p = self.x.rows();
-        let b = cols.len();
-        // Gram core as a blocked matmul: out[i, bj] = Σ_d x[d, i]·xb[d, bj]
-        // accumulated row-of-x by row-of-x (d outer) — both operands
-        // stream sequentially, ~6× faster than per-entry kernel eval
-        // (EXPERIMENTS.md §Perf). The kernel nonlinearity is applied
-        // elementwise afterwards.
-        let mut out = Mat::zeros(self.n_padded, b);
-        let xb = Mat::from_fn(p, b, |d, bj| {
-            let j = cols[bj];
-            assert!(j < n, "column index {j} out of range (n={n})");
-            self.x[(d, j)]
-        });
-        // i-outer: the (b)-wide output row stays in L1 and the inner
-        // axpy vectorizes over b; xb (p × b) is L2-resident throughout.
-        for i in 0..n {
-            let orow = out.row_mut(i);
-            for d in 0..p {
-                let xi = self.x[(d, i)];
-                if xi == 0.0 {
-                    continue;
-                }
-                let brow = xb.row(d);
-                for (o, &q) in orow.iter_mut().zip(brow) {
-                    *o += xi * q;
-                }
-            }
-        }
-        // elementwise kernel nonlinearity on the real rows
-        match self.kernel {
-            Kernel::Linear => {}
-            Kernel::Poly { gamma, degree } => {
-                let e = degree as i32;
-                for i in 0..n {
-                    for v in out.row_mut(i) {
-                        *v = (*v + gamma).powi(e);
-                    }
-                }
-            }
-            Kernel::Rbf { gamma } => {
-                // ||x−y||² = ||x||² + ||y||² − 2⟨x,y⟩ from the dot block
-                let xs: Vec<f64> =
-                    (0..n).map(|i| (0..p).map(|d| self.x[(d, i)].powi(2)).sum()).collect();
-                let ys: Vec<f64> =
-                    (0..b).map(|bj| (0..p).map(|d| xb[(d, bj)].powi(2)).sum()).collect();
-                for i in 0..n {
-                    let orow = out.row_mut(i);
-                    for (bj, v) in orow.iter_mut().enumerate() {
-                        *v = (-gamma * (xs[i] + ys[bj] - 2.0 * *v)).exp();
-                    }
-                }
-            }
-        }
-        out
+        self.compute_block(cols)
     }
 
     fn diag(&mut self) -> Vec<f64> {
@@ -250,6 +297,37 @@ pub fn full_kernel_matrix(x: &Mat, kernel: Kernel) -> Mat {
             k[(j, i)] = v;
         }
     }
+    k
+}
+
+/// [`full_kernel_matrix`] with the rows fanned out over `threads`
+/// workers (`0` = auto-detect). Each worker evaluates full rows of a
+/// disjoint range — symmetry is *not* exploited, trading 2× arithmetic
+/// for an embarrassingly parallel layout — and `κ(x, y)` is evaluated
+/// with a scheduling-independent accumulation order, so the result is
+/// bit-identical to the sequential baseline for any thread count.
+pub fn full_kernel_matrix_threaded(x: &Mat, kernel: Kernel, threads: usize) -> Mat {
+    let threads = crate::util::parallel::resolve_threads(threads);
+    if threads <= 1 {
+        return full_kernel_matrix(x, kernel);
+    }
+    let n = x.cols();
+    let p = x.rows();
+    let mut k = Mat::zeros(n, n);
+    if n == 0 {
+        return k;
+    }
+    let cols: Vec<Vec<f64>> =
+        (0..n).map(|j| (0..p).map(|d| x[(d, j)]).collect()).collect();
+    let cols_ref = &cols;
+    crate::util::parallel::for_each_row_chunk(k.data_mut(), n, threads, |i0, rows| {
+        for (di, krow) in rows.chunks_mut(n).enumerate() {
+            let xi = &cols_ref[i0 + di];
+            for (j, v) in krow.iter_mut().enumerate() {
+                *v = kernel.eval(xi, &cols_ref[j]);
+            }
+        }
+    });
     k
 }
 
@@ -352,6 +430,31 @@ mod tests {
         assert_eq!(batches, vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7], vec![8, 9]]);
         let flat: Vec<usize> = batches.into_iter().flatten().collect();
         assert_eq!(flat, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn threaded_block_source_is_bit_identical() {
+        let mut rng = Pcg64::seed(5);
+        let x = random_mat(&mut rng, 4, 37);
+        let cols: Vec<usize> = vec![0, 3, 9, 36, 17];
+        for kern in [Kernel::paper_poly2(), Kernel::Rbf { gamma: 0.8 }, Kernel::Linear] {
+            let base = NativeBlockSource::pow2(x.clone(), kern).block(&cols);
+            for threads in [2usize, 3, 8] {
+                let mut par = NativeBlockSource::pow2(x.clone(), kern).with_threads(threads);
+                assert_eq!(base.data(), par.block(&cols).data(), "{kern} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_full_kernel_matrix_is_bit_identical() {
+        let mut rng = Pcg64::seed(6);
+        let x = random_mat(&mut rng, 3, 25);
+        for kern in [Kernel::paper_poly2(), Kernel::Rbf { gamma: 1.1 }, Kernel::Linear] {
+            let a = full_kernel_matrix(&x, kern);
+            let b = full_kernel_matrix_threaded(&x, kern, 4);
+            assert_eq!(a.data(), b.data(), "{kern}");
+        }
     }
 
     #[test]

@@ -4,8 +4,11 @@
 //! Clustering"* (Pourkamali-Anaraki & Becker, IEEE GlobalSIP 2016): one-pass
 //! SRHT-preconditioned randomized low-rank kernel approximation followed by
 //! standard K-means on the embedded points, with Nyström / exact-EVD /
-//! full-kernel baselines, a streaming rust coordinator, and XLA-compiled
-//! JAX+Pallas compute artifacts (see DESIGN.md for the full architecture).
+//! full-kernel baselines, a streaming rust coordinator, a fork-join parallel
+//! execution subsystem threading every stage, and XLA-compiled JAX+Pallas
+//! compute artifacts. Start with the repository `README.md`; the system
+//! design, memory model, and determinism contract live in
+//! `ARCHITECTURE.md`.
 //!
 //! ## Quickstart
 //!
@@ -39,8 +42,11 @@
 //! - [`error`] — the crate-wide [`error::RkcError`]; every library layer
 //!   returns it (no stringly-typed or `anyhow` errors anywhere).
 //! - [`coordinator`] — L3: the streaming pipeline (scheduler, sketch
-//!   accumulator, threaded producer/consumer) plus the experiment driver,
-//!   now a thin compatibility client of [`api`].
+//!   accumulator, sharded multi-producer/consumer) plus the experiment
+//!   driver, now a thin compatibility client of [`api`].
+//! - [`util::parallel`] — the scoped fork-join substrate every parallel
+//!   stage shares; `threads(0)` auto-detection and the determinism
+//!   contract (`threads = 1` ≡ `threads = N`, bit for bit).
 //! - [`runtime`] — PJRT wrapper loading `artifacts/*.hlo.txt` (L2/L1
 //!   compute compiled from JAX + Pallas by `python/compile/aot.py`);
 //!   gated behind the `xla` cargo feature with a graceful native

@@ -25,10 +25,11 @@ pub enum NystromSampling {
     ColumnNorm,
 }
 
-/// Nyström rank-r embedding from `m` sampled columns.
+/// Nyström rank-r embedding from `m` sampled columns (single-threaded;
+/// see [`nystrom_threaded`] for the fork-join variant).
 ///
-/// `eps_rel` guards tiny/negative eigenvalues of the inner matrix (it is
-/// PSD in exact arithmetic but m ≈ 100 with a quadratic kernel is
+/// A relative floor guards tiny/negative eigenvalues of the inner matrix
+/// (it is PSD in exact arithmetic but m ≈ 100 with a quadratic kernel is
 /// numerically delicate).
 pub fn nystrom(
     src: &mut dyn BlockSource,
@@ -36,6 +37,23 @@ pub fn nystrom(
     rank: usize,
     sampling: NystromSampling,
     rng: &mut Pcg64,
+) -> Embedding {
+    nystrom_threaded(src, m, rank, sampling, rng, 1)
+}
+
+/// [`nystrom`] with the O(n·m·r) embedding projection
+/// `Y = Λ_r^{-1/2} U_rᵀ Cᵀ` chunked over samples across `threads`
+/// workers (`C` itself parallelizes inside the block source). All RNG
+/// draws happen on the calling thread and every entry keeps its
+/// sequential accumulation order, so the result is bit-identical for
+/// any thread count.
+pub fn nystrom_threaded(
+    src: &mut dyn BlockSource,
+    m: usize,
+    rank: usize,
+    sampling: NystromSampling,
+    rng: &mut Pcg64,
+    threads: usize,
 ) -> Embedding {
     let n = src.n();
     assert!(m <= n, "cannot sample {m} of {n} columns");
@@ -76,26 +94,58 @@ pub fn nystrom(
     let lmax = evals.first().copied().unwrap_or(0.0).max(0.0);
     let floor = 1e-12 * lmax.max(1e-300);
 
-    // Y = Λ_r^{-1/2} U_rᵀ Cᵀ  (r × n)
-    let mut y = Mat::zeros(rank, n);
+    // per-direction scales; numerically-absent directions stay zero
+    let mut scale = vec![0.0f64; rank];
     let mut eigenvalues = vec![0.0; rank];
     for i in 0..rank {
         let l = evals[i];
         if l <= floor {
-            continue; // direction numerically absent: leave the row zero
+            continue;
         }
         // Nyström eigenvalue estimate for K is (n/m) λ_i; the embedding
         // scale that reproduces K̂ = C W⁺ C is λ^{-1/2} regardless.
         eigenvalues[i] = l * (n as f64) / (m as f64);
-        let s = 1.0 / l.sqrt();
-        for j in 0..n {
-            let mut acc = 0.0;
-            for t in 0..m {
-                acc += u[(t, i)] * c_real[(j, t)];
-            }
-            y[(i, j)] = s * acc;
-        }
+        scale[i] = 1.0 / l.sqrt();
     }
+
+    // Y = Λ_r^{-1/2} U_rᵀ Cᵀ (r × n). The sequential path writes the
+    // row-major result directly (no extra buffer); parallel workers fill
+    // a sample-major (n × rank) buffer in disjoint contiguous row chunks
+    // and transpose once. Every entry keeps the same t-accumulation
+    // order either way, so the two layouts are bit-identical.
+    let workers = crate::util::parallel::resolve_threads(threads).max(1).min(n.max(1));
+    let project = |j: usize, i: usize| {
+        let mut acc = 0.0;
+        for t in 0..m {
+            acc += u[(t, i)] * c_real[(j, t)];
+        }
+        scale[i] * acc
+    };
+    let y = if workers <= 1 || rank == 0 {
+        let mut y = Mat::zeros(rank, n);
+        for i in 0..rank {
+            if scale[i] == 0.0 {
+                continue; // direction numerically absent: row stays zero
+            }
+            for j in 0..n {
+                y[(i, j)] = project(j, i);
+            }
+        }
+        y
+    } else {
+        let mut yt = Mat::zeros(n, rank);
+        crate::util::parallel::for_each_row_chunk(yt.data_mut(), rank, workers, |j0, rows| {
+            for (dj, yrow) in rows.chunks_mut(rank).enumerate() {
+                let j = j0 + dj;
+                for (i, yv) in yrow.iter_mut().enumerate() {
+                    if scale[i] != 0.0 {
+                        *yv = project(j, i);
+                    }
+                }
+            }
+        });
+        Mat::from_fn(rank, n, |i, j| yt[(j, i)])
+    };
     Embedding { y, eigenvalues }
 }
 
@@ -153,6 +203,23 @@ mod tests {
         let b = run(7);
         assert_eq!(a.y.data(), b.y.data());
         assert_eq!((a.rank(), a.n()), (2, 40));
+    }
+
+    #[test]
+    fn threaded_matches_sequential_bitwise() {
+        let mut rng_data = Pcg64::seed(8);
+        let x = random_mat(&mut rng_data, 3, 50);
+        let run = |threads: usize| {
+            let mut src = NativeBlockSource::pow2(x.clone(), Kernel::paper_poly2());
+            let mut rng = Pcg64::seed(21);
+            nystrom_threaded(&mut src, 12, 3, NystromSampling::Uniform, &mut rng, threads)
+        };
+        let a = run(1);
+        for threads in [2usize, 4] {
+            let b = run(threads);
+            assert_eq!(a.y.data(), b.y.data(), "threads={threads}");
+            assert_eq!(a.eigenvalues, b.eigenvalues, "threads={threads}");
+        }
     }
 
     #[test]

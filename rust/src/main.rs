@@ -104,7 +104,8 @@ COMMON OPTIONS (config overrides)
   --backend native|xla        --dataset cross_lines|segmentation_like|...
   --n N --p P --k K           --rank R --oversample L --batch B
   --trials T --seed S         --kernel poly2|rbf:<g>|poly:<g>:<d>
-  --threads T                 --config file.json
+  --threads T (0 = auto)      --config file.json
+  --kmeans_restarts N --kmeans_iters N --kmeans_tol EPS
   --out-dir DIR (fig2/fig3)   --artifacts_dir DIR --data_dir DIR"
     );
 }

@@ -3,9 +3,12 @@
 //! The paper parallelizes the Hadamard application with pthreads and
 //! reports an 11× speedup on 16 threads. Parallelism across *columns* is
 //! embarrassing (each kernel column transforms independently), so the
-//! rust hot path forks `threads` std::thread workers over disjoint column
-//! chunks — no locks, no shared mutable state. The per-vector transform
-//! is the classic in-place butterfly: O(n log n), no allocation.
+//! rust hot path fans disjoint column chunks out through the shared
+//! fork-join helper in [`crate::util::parallel`] — no locks on the data,
+//! no shared mutable state. The per-vector transform is the classic
+//! in-place butterfly: O(n log n), no allocation.
+
+use crate::util::parallel::for_each_task;
 
 /// In-place unnormalized FWHT of a single power-of-two-length vector.
 pub fn fwht_inplace(x: &mut [f64]) {
@@ -39,13 +42,10 @@ pub fn fwht_columns(cols: &mut [Vec<f64>], threads: usize) {
     }
     let workers = threads.min(cols.len());
     let chunk = cols.len().div_ceil(workers);
-    std::thread::scope(|scope| {
-        for group in cols.chunks_mut(chunk) {
-            scope.spawn(move || {
-                for c in group.iter_mut() {
-                    fwht_inplace(c);
-                }
-            });
+    let tasks: Vec<&mut [Vec<f64>]> = cols.chunks_mut(chunk).collect();
+    for_each_task(tasks, workers, |group| {
+        for c in group.iter_mut() {
+            fwht_inplace(c);
         }
     });
 }
@@ -60,15 +60,15 @@ pub fn fwht_parallel(data: &mut [f64], len: usize, threads: usize) {
         return;
     }
     let nrows = data.len() / len;
+    if nrows == 0 {
+        return;
+    }
     let workers = threads.min(nrows);
     let rows_per = nrows.div_ceil(workers);
-    std::thread::scope(|scope| {
-        for group in data.chunks_mut(rows_per * len) {
-            scope.spawn(move || {
-                for row in group.chunks_mut(len) {
-                    fwht_inplace(row);
-                }
-            });
+    let tasks: Vec<&mut [f64]> = data.chunks_mut(rows_per * len).collect();
+    for_each_task(tasks, workers, |group| {
+        for row in group.chunks_mut(len) {
+            fwht_inplace(row);
         }
     });
 }

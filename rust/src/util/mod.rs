@@ -1,8 +1,10 @@
 //! Small shared utilities: a dependency-free JSON parser (the artifact
 //! manifest and experiment configs are JSON; serde is unavailable on this
-//! offline image) and misc helpers.
+//! offline image), the scoped fork-join helpers every parallel stage
+//! shares ([`parallel`]), and misc statistics helpers.
 
 pub mod json;
+pub mod parallel;
 
 pub use json::Json;
 

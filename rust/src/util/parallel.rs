@@ -1,0 +1,187 @@
+//! Shared fork-join parallelism for the whole pipeline (std::thread only).
+//!
+//! Every parallel stage in the crate — the FWHT column transform, gram
+//! block production, the sharded sketch pass, K-means restarts and the
+//! chunked assignment step — funnels through the two primitives here
+//! instead of ad-hoc `std::thread::spawn` calls. Both are *scoped*
+//! fork-joins: no worker outlives the call, no channels or locks leak,
+//! and a panicking worker propagates to the caller.
+//!
+//! # Determinism contract
+//!
+//! Callers must arrange their work so the result is a pure function of
+//! the inputs, independent of scheduling: disjoint output slices per
+//! task, per-entry arithmetic whose accumulation order does not depend
+//! on the worker count, and any reduction over task results performed in
+//! task-index order ([`map_indexed`] returns results in index order for
+//! exactly this reason). Under that discipline `threads = 1` and
+//! `threads = N` produce bit-identical results — the contract
+//! `rust/tests/parallel_determinism.rs` enforces end to end.
+
+use std::sync::Mutex;
+
+/// Resolve a user-facing thread-count setting: `0` means "auto-detect",
+/// i.e. use [`available_threads`]; any other value is taken literally.
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        available_threads()
+    } else {
+        requested
+    }
+}
+
+/// Hardware parallelism via `std::thread::available_parallelism`,
+/// falling back to 1 when the platform cannot report it.
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f` over every task, fanning out across at most `threads` scoped
+/// workers that drain a shared queue (so uneven task costs still
+/// balance). With `threads <= 1` or a single task this degenerates to a
+/// plain in-order loop with zero spawn overhead.
+///
+/// Tasks typically carry disjoint `&mut` chunks of an output buffer
+/// (`slice::chunks_mut` + `enumerate`), which is what makes the
+/// scheduling-independence contract above easy to uphold.
+pub fn for_each_task<T: Send>(tasks: Vec<T>, threads: usize, f: impl Fn(T) + Sync) {
+    let workers = threads.min(tasks.len()).max(1);
+    if workers <= 1 {
+        for t in tasks {
+            f(t);
+        }
+        return;
+    }
+    let queue = Mutex::new(tasks.into_iter());
+    let queue = &queue;
+    let f = &f;
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(move || loop {
+                // the guard is a temporary of the `let` statement, so the
+                // lock is released before the (expensive) task body runs
+                let next = queue.lock().expect("parallel queue poisoned").next();
+                let Some(task) = next else { break };
+                f(task);
+            });
+        }
+    });
+}
+
+/// Fork-join over a row-major buffer: split `data` (whose rows are
+/// `row_width` elements wide) into one contiguous row range per worker
+/// and call `f(first_row_index, rows)` on each. This is the shared
+/// shape of every row-parallel stage (gram blocks, full-kernel rows,
+/// the Nyström projection), so the offset arithmetic — and any future
+/// fix to it — lives in exactly one place.
+pub fn for_each_row_chunk<T: Send>(
+    data: &mut [T],
+    row_width: usize,
+    threads: usize,
+    f: impl Fn(usize, &mut [T]) + Sync,
+) {
+    assert!(row_width > 0, "row width must be positive");
+    assert_eq!(data.len() % row_width, 0, "buffer must be a whole number of rows");
+    let nrows = data.len() / row_width;
+    if nrows == 0 {
+        return;
+    }
+    let workers = threads.min(nrows).max(1);
+    let rows_per = nrows.div_ceil(workers);
+    let tasks: Vec<(usize, &mut [T])> = data
+        .chunks_mut(rows_per * row_width)
+        .enumerate()
+        .map(|(g, rows)| (g * rows_per, rows))
+        .collect();
+    for_each_task(tasks, workers, |(first_row, rows)| f(first_row, rows));
+}
+
+/// Map `f` over `0..n`, returning the results **in index order**. The
+/// index range is split into at most `threads` contiguous spans, one
+/// scoped worker each; with `threads <= 1` this is a plain sequential
+/// map. Used for K-means restarts, where the winner must be reduced in
+/// restart order to match the sequential loop exactly.
+pub fn map_indexed<R: Send>(n: usize, threads: usize, f: impl Fn(usize) -> R + Sync) -> Vec<R> {
+    let workers = threads.min(n).max(1);
+    if workers <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let span = n.div_ceil(workers);
+    let f = &f;
+    let mut out = Vec::with_capacity(n);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n)
+            .step_by(span)
+            .map(|start| {
+                let end = (start + span).min(n);
+                scope.spawn(move || (start..end).map(f).collect::<Vec<R>>())
+            })
+            .collect();
+        for h in handles {
+            out.extend(h.join().expect("parallel worker panicked"));
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn resolve_zero_means_auto() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
+        assert_eq!(resolve_threads(0), available_threads());
+    }
+
+    #[test]
+    fn for_each_task_runs_every_task_once() {
+        for threads in [1usize, 2, 4, 9] {
+            let hits = AtomicUsize::new(0);
+            let mut out = vec![0usize; 23];
+            let tasks: Vec<(usize, &mut [usize])> =
+                out.chunks_mut(5).enumerate().collect();
+            for_each_task(tasks, threads, |(g, chunk)| {
+                hits.fetch_add(chunk.len(), Ordering::Relaxed);
+                for (i, v) in chunk.iter_mut().enumerate() {
+                    *v = g * 5 + i;
+                }
+            });
+            assert_eq!(hits.load(Ordering::Relaxed), 23, "threads={threads}");
+            assert_eq!(out, (0..23).collect::<Vec<_>>(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn for_each_task_handles_empty_and_single() {
+        for_each_task(Vec::<usize>::new(), 4, |_| panic!("no tasks to run"));
+        let hits = AtomicUsize::new(0);
+        for_each_task(vec![7usize], 4, |t| {
+            hits.fetch_add(t, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 7);
+    }
+
+    #[test]
+    fn map_indexed_preserves_order_for_any_thread_count() {
+        let want: Vec<usize> = (0..57).map(|i| i * i).collect();
+        for threads in [1usize, 2, 3, 8, 64] {
+            assert_eq!(map_indexed(57, threads, |i| i * i), want, "threads={threads}");
+        }
+        assert!(map_indexed(0, 4, |i| i).is_empty());
+    }
+
+    // scope auto-join surfaces a worker panic as "a scoped thread
+    // panicked"; match the stable substring only
+    #[test]
+    #[should_panic(expected = "panicked")]
+    fn worker_panic_propagates() {
+        for_each_task(vec![0usize, 1, 2, 3], 2, |t| {
+            if t == 2 {
+                panic!("worker exploded");
+            }
+        });
+    }
+}

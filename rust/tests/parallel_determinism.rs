@@ -1,0 +1,101 @@
+//! The parallel subsystem's determinism contract, end to end: for a
+//! fixed seed, `fit` must produce **bit-identical** labels and objective
+//! for every thread count — `threads(1)`, `threads(4)`, and the
+//! auto-detected `threads(0)` — on every native method. See
+//! ARCHITECTURE.md §Determinism for why this holds by construction.
+
+use rkc::api::KernelClusterer;
+use rkc::config::Method;
+use rkc::data;
+use rkc::rng::Pcg64;
+
+/// Fit cross-lines with the given thread count and return the outputs
+/// that must not depend on it.
+fn fit_with(method: Method, n: usize, threads: usize, seed: u64) -> (Vec<usize>, f64) {
+    let ds = data::cross_lines(&mut Pcg64::seed(11), n);
+    let model = KernelClusterer::new(2)
+        .method(method)
+        .rank(2)
+        .oversample(8)
+        .batch(32)
+        .seed(seed)
+        .threads(threads)
+        .fit(&ds.x)
+        .expect("fit");
+    (model.labels().to_vec(), model.metrics().objective)
+}
+
+fn assert_thread_invariant_at(method: Method, n: usize) {
+    for seed in [7u64, 2016] {
+        let (base_labels, base_obj) = fit_with(method, n, 1, seed);
+        for threads in [2usize, 4, 0] {
+            let (labels, obj) = fit_with(method, n, threads, seed);
+            assert_eq!(
+                base_labels, labels,
+                "{method}: labels diverged at threads={threads} seed={seed}"
+            );
+            assert_eq!(
+                base_obj.to_bits(),
+                obj.to_bits(),
+                "{method}: objective diverged at threads={threads} seed={seed} \
+                 ({base_obj} vs {obj})"
+            );
+        }
+    }
+}
+
+#[test]
+fn one_pass_is_thread_count_invariant() {
+    assert_thread_invariant_at(Method::OnePass, 300);
+}
+
+#[test]
+fn nystrom_is_thread_count_invariant() {
+    assert_thread_invariant_at(Method::Nystrom { m: 40 }, 300);
+}
+
+#[test]
+fn exact_is_thread_count_invariant() {
+    assert_thread_invariant_at(Method::Exact, 300);
+}
+
+#[test]
+fn gaussian_one_pass_is_thread_count_invariant() {
+    assert_thread_invariant_at(Method::GaussianOnePass, 300);
+}
+
+#[test]
+fn plain_kmeans_is_thread_count_invariant() {
+    assert_thread_invariant_at(Method::PlainKmeans, 300);
+}
+
+#[test]
+fn full_kernel_is_thread_count_invariant() {
+    // kernel K-means on the (threaded) materialized kernel; smaller n —
+    // the O(n²) baseline is the expensive one
+    assert_thread_invariant_at(Method::FullKernel, 120);
+}
+
+/// The streamed entry point honors the same contract: embedder-level
+/// threading (FWHT, Nyström projection) must not change the fit.
+#[test]
+fn fit_stream_is_thread_count_invariant() {
+    use rkc::kernels::{Kernel, NativeBlockSource};
+    let ds = data::cross_lines(&mut Pcg64::seed(13), 200);
+    let run = |threads: usize| {
+        let src = NativeBlockSource::pow2(ds.x.clone(), Kernel::paper_poly2());
+        let model = KernelClusterer::new(2)
+            .oversample(8)
+            .seed(5)
+            .threads(threads)
+            .fit_stream(src)
+            .expect("fit_stream");
+        (model.labels().to_vec(), model.metrics().objective)
+    };
+    let (base_labels, base_obj) = run(1);
+    for threads in [3usize, 0] {
+        let (labels, obj) = run(threads);
+        assert_eq!(base_labels, labels, "threads={threads}");
+        assert_eq!(base_obj.to_bits(), obj.to_bits(), "threads={threads}");
+    }
+}
