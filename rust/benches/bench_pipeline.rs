@@ -6,57 +6,116 @@
 //! the Fig-3 production shape. `RKC_BACKEND=xla` runs the PJRT artifact
 //! path (requires `make artifacts`). `RKC_THREADS` overrides the thread
 //! list for the scaling section (comma-separated; `0` = auto-detect).
+//!
+//! Besides the human-readable stdout rows, every run rewrites
+//! `BENCH_pipeline.json` in the working directory — one JSON object per
+//! configuration — so the perf trajectory is machine-diffable across
+//! commits.
+
+use std::collections::BTreeMap;
 
 use rkc::config::{Backend, ExperimentConfig, Method};
 use rkc::coordinator::{build_dataset, run_experiment};
 use rkc::runtime::ArtifactRegistry;
 use rkc::util::parallel::{available_threads, resolve_threads};
+use rkc::util::Json;
+
+struct StageRow {
+    backend: Backend,
+    threads: usize,
+    sketch_s: f64,
+    recovery_s: f64,
+    kmeans_s: f64,
+    error_s: f64,
+    n: usize,
+    batch: usize,
+    iters: usize,
+}
+
+impl StageRow {
+    fn total_s(&self) -> f64 {
+        self.sketch_s + self.recovery_s + self.kmeans_s + self.error_s
+    }
+
+    /// the stages the thread-scaling section compares
+    fn hot_s(&self) -> f64 {
+        self.sketch_s + self.kmeans_s
+    }
+
+    fn to_json(&self, speedup: Option<f64>) -> Json {
+        // measured floats go through finite_num: a degenerate 0-second
+        // median would otherwise put an unparseable "inf" in the file
+        let mut obj = BTreeMap::from([
+            ("backend".to_string(), Json::Str(format!("{:?}", self.backend).to_lowercase())),
+            ("threads".to_string(), Json::Num(self.threads as f64)),
+            ("sketch_s".to_string(), Json::finite_num(self.sketch_s)),
+            ("recovery_s".to_string(), Json::finite_num(self.recovery_s)),
+            ("kmeans_s".to_string(), Json::finite_num(self.kmeans_s)),
+            ("error_pass_s".to_string(), Json::finite_num(self.error_s)),
+            ("total_s".to_string(), Json::finite_num(self.total_s())),
+            ("n".to_string(), Json::Num(self.n as f64)),
+            ("batch".to_string(), Json::Num(self.batch as f64)),
+            ("iters".to_string(), Json::Num(self.iters as f64)),
+            (
+                "sketch_columns_per_s".to_string(),
+                Json::finite_num(self.n as f64 / self.sketch_s.max(1e-12)),
+            ),
+        ]);
+        if let Some(s) = speedup {
+            obj.insert("speedup_vs_first_row".to_string(), Json::finite_num(s));
+        }
+        Json::Obj(obj)
+    }
+}
+
+fn run(be: Backend, threads: usize, iters: usize, registry: Option<&ArtifactRegistry>) -> StageRow {
+    let med = |v: &[f64]| rkc::util::percentile(v, 50.0);
+    let mut cfg = ExperimentConfig::default();
+    cfg.backend = be;
+    cfg.method = Method::OnePass;
+    cfg.threads = threads;
+    let ds = build_dataset(&cfg).expect("dataset");
+    let mut sketch = Vec::new();
+    let mut recovery = Vec::new();
+    let mut kmeans = Vec::new();
+    let mut error = Vec::new();
+    for i in 0..iters {
+        let out = run_experiment(&cfg, &ds, registry, 100 + i as u64).expect("run");
+        sketch.push(out.sketch_time.as_secs_f64());
+        recovery.push(out.recovery_time.as_secs_f64());
+        kmeans.push(out.kmeans_time.as_secs_f64());
+        error.push(out.error_time.as_secs_f64());
+    }
+    let row = StageRow {
+        backend: be,
+        threads: resolve_threads(threads),
+        sketch_s: med(&sketch),
+        recovery_s: med(&recovery),
+        kmeans_s: med(&kmeans),
+        error_s: med(&error),
+        n: ds.n(),
+        batch: cfg.batch,
+        iters,
+    };
+    println!(
+        "pipeline {:?} threads={}: sketch {:.3}s | recovery {:.4}s | kmeans {:.3}s | \
+         error-pass {:.3}s | total {:.3}s (n={}, batch={}, median of {iters})",
+        be, row.threads, row.sketch_s, row.recovery_s, row.kmeans_s, row.error_s,
+        row.total_s(), row.n, row.batch,
+    );
+    println!(
+        "  sketch throughput: {:.0} kernel-columns/s",
+        row.n as f64 / row.sketch_s.max(1e-12)
+    );
+    row
+}
 
 fn main() {
     let backend = std::env::var("RKC_BACKEND").unwrap_or_else(|_| "both".into());
-    let iters: usize = std::env::var("RKC_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(3);
+    let iters: usize =
+        std::env::var("RKC_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(3);
 
-    let med = |v: &[f64]| rkc::util::percentile(v, 50.0);
-    let run = |be: Backend, threads: usize| {
-        let mut cfg = ExperimentConfig::default();
-        cfg.backend = be;
-        cfg.method = Method::OnePass;
-        cfg.threads = threads;
-        let registry = match be {
-            Backend::Xla => Some(ArtifactRegistry::open("artifacts").expect("make artifacts")),
-            Backend::Native => None,
-        };
-        let ds = build_dataset(&cfg).expect("dataset");
-        let mut sketch = Vec::new();
-        let mut recovery = Vec::new();
-        let mut kmeans = Vec::new();
-        let mut error = Vec::new();
-        for i in 0..iters {
-            let out = run_experiment(&cfg, &ds, registry.as_ref(), 100 + i as u64).expect("run");
-            sketch.push(out.sketch_time.as_secs_f64());
-            recovery.push(out.recovery_time.as_secs_f64());
-            kmeans.push(out.kmeans_time.as_secs_f64());
-            error.push(out.error_time.as_secs_f64());
-        }
-        println!(
-            "pipeline {:?} threads={threads}: sketch {:.3}s | recovery {:.4}s | kmeans {:.3}s | error-pass {:.3}s | total {:.3}s (n={}, batch={}, median of {iters})",
-            be,
-            med(&sketch),
-            med(&recovery),
-            med(&kmeans),
-            med(&error),
-            med(&sketch) + med(&recovery) + med(&kmeans) + med(&error),
-            ds.n(),
-            cfg.batch,
-        );
-        // kernel-columns/second through the full sketch stage
-        println!(
-            "  sketch throughput: {:.0} kernel-columns/s",
-            ds.n() as f64 / med(&sketch)
-        );
-        med(&sketch) + med(&kmeans)
-    };
-
+    let mut records: Vec<Json> = Vec::new();
     if backend == "native" || backend == "both" {
         // 1-vs-N thread scaling of the sharded sketch + parallel K-means
         // (the threads=1 row doubles as the plain native baseline)
@@ -72,19 +131,44 @@ fn main() {
         );
         let mut base = f64::NAN;
         for &t in &thread_list {
-            let resolved = resolve_threads(t);
-            let hot = run(Backend::Native, t);
+            let row = run(Backend::Native, t, iters, None);
+            let hot = row.hot_s();
             if base.is_nan() {
                 base = hot;
             }
             println!(
-                "  threads={resolved}: speedup {:.2}x vs {}-thread baseline",
+                "  threads={}: speedup {:.2}x vs {}-thread baseline",
+                row.threads,
                 base / hot,
                 resolve_threads(thread_list[0])
             );
+            records.push(row.to_json(Some(base / hot)));
         }
     }
     if backend == "xla" || backend == "both" {
-        run(Backend::Xla, 1);
+        // don't let a missing artifacts/ panic away the native records
+        // already measured (the default build ships no artifacts); open
+        // once and pass the handle down — no second racy open
+        match ArtifactRegistry::open("artifacts") {
+            Ok(reg) => {
+                let row = run(Backend::Xla, 1, iters, Some(&reg));
+                records.push(row.to_json(None));
+            }
+            Err(_) => {
+                eprintln!("skipping xla section: no artifacts/ (run `make artifacts`)");
+            }
+        }
+    }
+
+    if records.is_empty() {
+        // e.g. a typo'd RKC_BACKEND — don't clobber the recorded perf
+        // trajectory with an empty array
+        eprintln!("no configurations ran (RKC_BACKEND={backend:?}); BENCH_pipeline.json untouched");
+        return;
+    }
+    let out = Json::Arr(records).to_string();
+    match std::fs::write("BENCH_pipeline.json", &out) {
+        Ok(()) => println!("wrote BENCH_pipeline.json ({} bytes)", out.len()),
+        Err(e) => eprintln!("could not write BENCH_pipeline.json: {e}"),
     }
 }

@@ -1,0 +1,107 @@
+//! Bench: serving throughput and latency of the `rkc::serve` runtime —
+//! concurrent clients hammering a `ModelServer`'s micro-batch queue with
+//! out-of-sample predict requests.
+//!
+//! Env knobs: `RKC_SERVE_N` (training size, default 1024),
+//! `RKC_SERVE_CLIENTS` (concurrent client threads, default 4),
+//! `RKC_SERVE_REQS` (requests per client, default 25),
+//! `RKC_SERVE_POINTS` (query points per request, default 16).
+//!
+//! Besides the stdout summary, every run rewrites `BENCH_serve.json` in
+//! the working directory so the serving perf trajectory is
+//! machine-diffable across commits.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use rkc::api::KernelClusterer;
+use rkc::data;
+use rkc::rng::Pcg64;
+use rkc::serve::{ModelServer, ServeOpts};
+use rkc::util::{percentile, Json};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let n = env_usize("RKC_SERVE_N", 1024);
+    let clients = env_usize("RKC_SERVE_CLIENTS", 4).max(1);
+    let reqs = env_usize("RKC_SERVE_REQS", 25).max(1);
+    let points_per_req = env_usize("RKC_SERVE_POINTS", 16).max(1);
+
+    let ds = data::cross_lines(&mut Pcg64::seed(7), n);
+    let t_fit = Instant::now();
+    let model = KernelClusterer::new(2)
+        .oversample(10)
+        .seed(42)
+        .threads(0)
+        .fit(&ds.x)
+        .expect("fit");
+    let fit_s = t_fit.elapsed().as_secs_f64();
+    let query = data::cross_lines(&mut Pcg64::seed(8), points_per_req).x;
+
+    let server =
+        ModelServer::new(model, ServeOpts { threads: 0, ..Default::default() }).expect("server");
+    let t0 = Instant::now();
+    let mut latencies_s: Vec<f64> = Vec::with_capacity(clients * reqs);
+    std::thread::scope(|s| {
+        let workers: Vec<_> = (0..clients)
+            .map(|_| {
+                let h = server.handle();
+                let q = query.clone();
+                s.spawn(move || {
+                    let mut lat = Vec::with_capacity(reqs);
+                    for _ in 0..reqs {
+                        let t = Instant::now();
+                        h.predict(q.clone()).expect("predict");
+                        lat.push(t.elapsed().as_secs_f64());
+                    }
+                    lat
+                })
+            })
+            .collect();
+        for w in workers {
+            latencies_s.extend(w.join().expect("client thread"));
+        }
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let stats = server.stats();
+    server.shutdown();
+
+    let total_reqs = (clients * reqs) as f64;
+    let total_points = total_reqs * points_per_req as f64;
+    let p50_ms = percentile(&latencies_s, 50.0) * 1e3;
+    let p95_ms = percentile(&latencies_s, 95.0) * 1e3;
+    let p99_ms = percentile(&latencies_s, 99.0) * 1e3;
+    println!(
+        "serve n={n} clients={clients} reqs/client={reqs} points/req={points_per_req}: \
+         {:.0} req/s | {:.0} points/s | p50 {p50_ms:.2}ms p95 {p95_ms:.2}ms p99 {p99_ms:.2}ms \
+         (fit {fit_s:.2}s, mean batch {:.2})",
+        total_reqs / wall_s,
+        total_points / wall_s,
+        stats.mean_batch(),
+    );
+
+    let record = Json::Obj(BTreeMap::from([
+        ("n_train".to_string(), Json::Num(n as f64)),
+        ("clients".to_string(), Json::Num(clients as f64)),
+        ("requests_per_client".to_string(), Json::Num(reqs as f64)),
+        ("points_per_request".to_string(), Json::Num(points_per_req as f64)),
+        ("fit_s".to_string(), Json::finite_num(fit_s)),
+        ("wall_s".to_string(), Json::finite_num(wall_s)),
+        ("requests_per_s".to_string(), Json::finite_num(total_reqs / wall_s)),
+        ("points_per_s".to_string(), Json::finite_num(total_points / wall_s)),
+        ("p50_ms".to_string(), Json::finite_num(p50_ms)),
+        ("p95_ms".to_string(), Json::finite_num(p95_ms)),
+        ("p99_ms".to_string(), Json::finite_num(p99_ms)),
+        ("batches".to_string(), Json::Num(stats.batches as f64)),
+        ("mean_batch".to_string(), Json::finite_num(stats.mean_batch())),
+        ("mean_latency_us".to_string(), Json::finite_num(stats.mean_latency_us())),
+    ]));
+    let out = record.to_string();
+    match std::fs::write("BENCH_serve.json", &out) {
+        Ok(()) => println!("wrote BENCH_serve.json ({} bytes)", out.len()),
+        Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),
+    }
+}

@@ -39,6 +39,7 @@ pub use embedder::{
 };
 pub use model::{FitMetrics, FittedModel};
 
+use std::sync::OnceLock;
 use std::time::{Duration, Instant};
 
 use crate::clustering::{kernel_kmeans, kmeans_threaded, KmeansOpts};
@@ -58,7 +59,7 @@ use crate::runtime::ArtifactRegistry;
 use crate::sketch::Srht;
 use crate::util::parallel;
 
-use model::Assigner;
+pub(crate) use model::Assigner;
 
 /// Builder for a kernel clustering run: kernel, method, rank,
 /// oversampling, backend, seed and K-means options — typed, validated,
@@ -82,6 +83,9 @@ pub struct KernelClusterer {
     kmeans_iters: usize,
     kmeans_tol: f64,
     artifacts_dir: String,
+    /// persist every successful fit here (path or directory); `None`
+    /// means no auto-save
+    auto_save: Option<String>,
     /// strict builders reject advisory misconfigurations (l < r); the
     /// experiment-config path relaxes this for ablation sweeps
     strict: bool,
@@ -106,6 +110,7 @@ impl KernelClusterer {
             kmeans_iters: 20,
             kmeans_tol: 1e-9,
             artifacts_dir: "artifacts".into(),
+            auto_save: None,
             strict: true,
         }
     }
@@ -128,6 +133,7 @@ impl KernelClusterer {
             kmeans_iters: cfg.kmeans_iters,
             kmeans_tol: cfg.kmeans_tol,
             artifacts_dir: cfg.artifacts_dir.clone(),
+            auto_save: None,
             strict: false,
         }
     }
@@ -225,6 +231,22 @@ impl KernelClusterer {
         self
     }
 
+    /// Persist every successful fit to `target` in the `.rkc` format
+    /// (see [`crate::model_io`]). If `target` is an existing directory
+    /// (or ends with `/`), the model is written as `model.rkc` inside it
+    /// — the artifacts-directory-driven flavor the CLI `save` subcommand
+    /// uses. Parent directories are created as needed.
+    ///
+    /// A failed write fails the whole `fit` call (the in-memory model is
+    /// dropped with the error): when persistence was requested, silently
+    /// returning an unpersisted model would be worse. Callers who want
+    /// the model regardless of disk state should fit without `auto_save`
+    /// and call [`FittedModel::save`] themselves.
+    pub fn auto_save(mut self, target: impl Into<String>) -> Self {
+        self.auto_save = Some(target.into());
+        self
+    }
+
     /// r' = r + l, the sketch width.
     pub fn sketch_width(&self) -> usize {
         self.rank + self.oversample
@@ -250,6 +272,16 @@ impl KernelClusterer {
         }
         if self.batch == 0 {
             return bad("batch must be at least 1".into());
+        }
+        if self.kmeans_restarts == 0 {
+            return bad("kmeans_restarts must be at least 1 (0 reaches the solver with \
+                        no run to pick a winner from)"
+                .into());
+        }
+        if self.kmeans_iters == 0 {
+            return bad("kmeans_iters must be at least 1 (0 never runs a Lloyd step, so \
+                        centroids would stay at their K-means++ seeds)"
+                .into());
         }
         if self.method != Method::PlainKmeans {
             if self.rank == 0 {
@@ -316,6 +348,16 @@ impl KernelClusterer {
         x: &Mat,
         registry: Option<&ArtifactRegistry>,
     ) -> Result<FittedModel> {
+        let model = self.fit_with_registry_inner(x, registry)?;
+        self.auto_save_model(&model)?;
+        Ok(model)
+    }
+
+    fn fit_with_registry_inner(
+        &self,
+        x: &Mat,
+        registry: Option<&ArtifactRegistry>,
+    ) -> Result<FittedModel> {
         let n = x.cols();
         self.validate(n)?;
         // only the embedding methods can route compute through XLA;
@@ -341,6 +383,7 @@ impl KernelClusterer {
                     labels: res.labels,
                     assigner: Assigner::Input { centroids: res.centroids },
                     train_x: Some(x.clone()),
+                    train_cols: OnceLock::new(),
                     n_pad: n.next_power_of_two(),
                     batch: self.batch,
                     metrics: FitMetrics {
@@ -393,6 +436,7 @@ impl KernelClusterer {
                     labels: res.labels,
                     assigner: Assigner::KernelClusters { sizes, self_terms },
                     train_x: Some(x.clone()),
+                    train_cols: OnceLock::new(),
                     n_pad: n.next_power_of_two(),
                     batch: self.batch,
                     metrics: FitMetrics {
@@ -459,7 +503,20 @@ impl KernelClusterer {
         let outcome = embedder.embed(src, &mut rng)?;
         let memory = embedder.memory_model(n, src.n_padded());
         let n_pad = src.n_padded();
-        self.finish_embedded(outcome, memory, None, n_pad, None, &mut rng)
+        let model = self.finish_embedded(outcome, memory, None, n_pad, None, &mut rng)?;
+        self.auto_save_model(&model)?;
+        Ok(model)
+    }
+
+    /// Apply the [`auto_save`](Self::auto_save) setting to a fresh fit:
+    /// a directory target gets `model.rkc` appended, a file target is
+    /// written as-is (the shared rule in
+    /// [`model_io::resolve_model_target`](crate::model_io::resolve_model_target)).
+    fn auto_save_model(&self, model: &FittedModel) -> Result<()> {
+        let Some(target) = &self.auto_save else {
+            return Ok(());
+        };
+        model.save(&crate::model_io::resolve_model_target(target))
     }
 
     /// K-means on the recovered embedding + model assembly (shared by
@@ -493,6 +550,7 @@ impl KernelClusterer {
             labels: res.labels,
             assigner: Assigner::Embedded { centroids: res.centroids },
             train_x,
+            train_cols: OnceLock::new(),
             n_pad,
             batch: self.batch,
             metrics: FitMetrics {
@@ -664,6 +722,41 @@ mod tests {
             .is_err());
         // the defaults are fine
         assert!(KernelClusterer::new(2).fit(&x).is_ok());
+    }
+
+    #[test]
+    fn zero_kmeans_restarts_or_iters_is_a_typed_error() {
+        let x = data::cross_lines(&mut Pcg64::seed(10), 32).x;
+        let err = KernelClusterer::new(2).kmeans_restarts(0).fit(&x).unwrap_err();
+        assert!(matches!(err, RkcError::InvalidConfig(_)), "{err}");
+        assert!(err.to_string().contains("kmeans_restarts"), "{err}");
+        let err = KernelClusterer::new(2).kmeans_iters(0).fit(&x).unwrap_err();
+        assert!(matches!(err, RkcError::InvalidConfig(_)), "{err}");
+        assert!(err.to_string().contains("kmeans_iters"), "{err}");
+        // the relaxed config path rejects them too: 0 is never meaningful
+        let mut cfg = ExperimentConfig::table1();
+        cfg.kmeans_iters = 0;
+        assert!(KernelClusterer::from_config(&cfg).fit(&x).is_err());
+    }
+
+    #[test]
+    fn auto_save_persists_the_fit() {
+        let ds = data::cross_lines(&mut Pcg64::seed(16), 64);
+        let dir = std::env::temp_dir().join(format!("rkc_auto_save_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let dir_str = dir.to_str().unwrap().to_string();
+        // directory target: model.rkc appears inside
+        let model = KernelClusterer::new(2)
+            .oversample(8)
+            .auto_save(dir_str.clone())
+            .fit(&ds.x)
+            .unwrap();
+        let path = format!("{dir_str}/model.rkc");
+        let back = FittedModel::load(&path).unwrap();
+        assert_eq!(back.labels(), model.labels());
+        assert_eq!(back.predict(&ds.x).unwrap(), model.predict(&ds.x).unwrap());
+        std::fs::remove_file(&path).unwrap();
+        std::fs::remove_dir(&dir).unwrap();
     }
 
     #[test]

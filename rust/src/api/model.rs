@@ -86,6 +86,12 @@ pub struct FittedModel {
     pub(crate) n_pad: usize,
     pub(crate) batch: usize,
     pub(crate) metrics: FitMetrics,
+    /// lazily materialized columns of `train_x` (the p × n matrix is
+    /// row-major, so the κ(z, x_j) loops want contiguous per-column
+    /// slices). Built once on the first out-of-sample call instead of
+    /// per call — the serving hot path hits `embed`/`predict` per
+    /// request. Derived state: never serialized.
+    pub(crate) train_cols: std::sync::OnceLock<Vec<Vec<f64>>>,
 }
 
 impl FittedModel {
@@ -125,6 +131,51 @@ impl FittedModel {
         &self.metrics
     }
 
+    /// The input-space dimension p that [`embed`](Self::embed) /
+    /// [`predict`](Self::predict) queries must have. `None` when the
+    /// model retained no training data (a `fit_stream` model) and has no
+    /// input-space centroids — such models cannot answer out-of-sample
+    /// queries at all.
+    pub fn input_dim(&self) -> Option<usize> {
+        match &self.assigner {
+            Assigner::Input { centroids } => Some(centroids.rows()),
+            _ => self.train_x.as_ref().map(Mat::rows),
+        }
+    }
+
+    /// Persist this model to `path` in the versioned `.rkc` binary
+    /// format (see [`crate::model_io`] for the byte-level spec). Parent
+    /// directories are created as needed. The roundtrip is **bit-exact**:
+    /// [`load`](Self::load) reproduces a model whose `embed`/`predict`
+    /// outputs are bit-identical to this one's.
+    ///
+    /// ```
+    /// use rkc::api::{FittedModel, KernelClusterer};
+    /// use rkc::data;
+    /// use rkc::rng::Pcg64;
+    ///
+    /// let ds = data::cross_lines(&mut Pcg64::seed(2), 64);
+    /// let model = KernelClusterer::new(2).oversample(8).fit(&ds.x)?;
+    /// let path = std::env::temp_dir().join("rkc-doc-model.rkc");
+    /// let path = path.to_str().unwrap();
+    /// model.save(path)?;
+    /// let reloaded = FittedModel::load(path)?;
+    /// assert_eq!(reloaded.predict(&ds.x)?, model.predict(&ds.x)?);
+    /// std::fs::remove_file(path).ok();
+    /// # Ok::<(), rkc::error::RkcError>(())
+    /// ```
+    pub fn save(&self, path: &str) -> Result<()> {
+        crate::model_io::save_model(self, path)
+    }
+
+    /// Load a model previously written by [`save`](Self::save).
+    /// Corruption (bad magic, truncation, checksum mismatch) is a typed
+    /// [`RkcError::Model`]; a file from a newer release is
+    /// [`RkcError::ModelVersion`].
+    pub fn load(path: &str) -> Result<FittedModel> {
+        crate::model_io::load_model(path)
+    }
+
     /// The padded kernel length the fit used (power of two on the
     /// native path; an artifact-baked size on the XLA path). Callers
     /// building their own [`BlockSource`] for
@@ -144,10 +195,9 @@ impl FittedModel {
         })?;
         let xt = self.require_train_x()?;
         self.check_dims(xt, xq)?;
-        let (n, m, r) = (xt.cols(), xq.cols(), emb.rank());
+        let (m, r) = (xq.cols(), emb.rank());
 
-        // columns once, so the κ(z, x_j) loop reads contiguous slices
-        let train_cols: Vec<Vec<f64>> = (0..n).map(|j| xt.col(j)).collect();
+        let train_cols = self.train_cols(xt);
         let mut out = Mat::zeros(r, m);
         for j in 0..m {
             let zq = xq.col(j);
@@ -194,8 +244,7 @@ impl FittedModel {
             Assigner::KernelClusters { sizes, self_terms } => {
                 let xt = self.require_train_x()?;
                 self.check_dims(xt, xq)?;
-                let n = xt.cols();
-                let train_cols: Vec<Vec<f64>> = (0..n).map(|j| xt.col(j)).collect();
+                let train_cols = self.train_cols(xt);
                 let mut out = Vec::with_capacity(xq.cols());
                 for j in 0..xq.cols() {
                     let zq = xq.col(j);
@@ -243,6 +292,13 @@ impl FittedModel {
             ))
         })?;
         Ok(streamed_frobenius_error(src, emb, self.batch))
+    }
+
+    /// The training columns as contiguous slices, materialized once per
+    /// model (out-of-sample calls run per-request on the serving path).
+    fn train_cols(&self, xt: &Mat) -> &[Vec<f64>] {
+        self.train_cols
+            .get_or_init(|| (0..xt.cols()).map(|j| xt.col(j)).collect())
     }
 
     fn require_train_x(&self) -> Result<&Mat> {

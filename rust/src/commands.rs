@@ -1,7 +1,10 @@
 //! Subcommand implementations shared by the CLI binary — thin clients of
 //! the `rkc::api` layer plus table formatting.
 
-use rkc::api::{Embedder, OnePassEmbedder};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use rkc::api::{Embedder, FittedModel, KernelClusterer, OnePassEmbedder};
 use rkc::clustering::{kernel_kmeans_objective, kmeans, KmeansOpts};
 use rkc::config::{ExperimentConfig, Method};
 use rkc::coordinator::{build_dataset, run_trials};
@@ -268,6 +271,85 @@ pub fn cmd_memory(cfg: &ExperimentConfig) -> Result<()> {
     row(MemoryModel::exact_dense(n));
     row(MemoryModel::full_kernel_kmeans(n, cfg.k));
     print!("{}", t.render());
+    Ok(())
+}
+
+/// `rkc save` — fit once on the configured dataset and persist the model
+/// through the builder's artifacts-dir-driven auto-save.
+pub fn cmd_save(cfg: &ExperimentConfig, registry: Option<&ArtifactRegistry>) -> Result<()> {
+    let ds = build_dataset(cfg)?;
+    let path = cfg.resolved_model_path();
+    let t0 = Instant::now();
+    let model = KernelClusterer::from_config(cfg)
+        .clusters(ds.k)
+        .auto_save(path.as_str())
+        .fit_with_registry(&ds.x, registry)?;
+    let acc = rkc::clustering::accuracy(model.labels(), &ds.labels, ds.k);
+    let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+    println!(
+        "fit {} on {} (n={}, k={}) in {:.2}s — in-sample accuracy {acc:.3}",
+        cfg.method,
+        ds.name,
+        ds.n(),
+        ds.k,
+        t0.elapsed().as_secs_f64()
+    );
+    println!("saved model to {path} ({bytes} bytes)");
+    Ok(())
+}
+
+/// `rkc predict` — load a saved model and assign query points offline.
+/// Queries come from `--data points.csv` (one comma-separated coordinate
+/// row per point) or, absent that, the configured dataset. Output is one
+/// machine-readable JSON object on stdout.
+pub fn cmd_predict(cfg: &ExperimentConfig, data_csv: Option<&str>) -> Result<()> {
+    let path = cfg.resolved_model_path();
+    let model = FittedModel::load(&path)?;
+    let (source, x) = match data_csv {
+        Some(f) => (f.to_string(), rkc::data::load_points_csv(f)?),
+        None => {
+            let ds = build_dataset(cfg)?;
+            (ds.name, ds.x)
+        }
+    };
+    let labels = model.predict(&x)?;
+    let out = rkc::util::Json::Obj(BTreeMap::from([
+        ("model".to_string(), rkc::util::Json::Str(path)),
+        ("source".to_string(), rkc::util::Json::Str(source)),
+        ("n".to_string(), rkc::util::Json::Num(labels.len() as f64)),
+        (
+            "labels".to_string(),
+            rkc::util::Json::Arr(
+                labels.iter().map(|&l| rkc::util::Json::Num(l as f64)).collect(),
+            ),
+        ),
+    ]));
+    println!("{out}");
+    Ok(())
+}
+
+/// `rkc serve` — load a saved model and serve it over HTTP until the
+/// process is stopped.
+pub fn cmd_serve(cfg: &ExperimentConfig) -> Result<()> {
+    use rkc::serve::{serve_http, ModelServer, ServeOpts};
+    let path = cfg.resolved_model_path();
+    let model = FittedModel::load(&path)?;
+    let m = model.metrics();
+    eprintln!(
+        "loaded {path}: method={} n={} k={} rank={}",
+        m.method,
+        m.n,
+        model.k(),
+        m.rank
+    );
+    let server =
+        ModelServer::new(model, ServeOpts { threads: cfg.threads, ..Default::default() })?;
+    let http = serve_http(&server, &cfg.serve_addr)?;
+    println!(
+        "rkc serve: listening on http://{} (POST /predict, POST /embed, GET /healthz)",
+        http.local_addr()
+    );
+    http.wait();
     Ok(())
 }
 

@@ -132,6 +132,12 @@ pub struct ExperimentConfig {
     /// root directory for on-disk datasets (e.g. `segmentation.csv`);
     /// CSV dataset names resolve relative to it when not found as given
     pub data_dir: String,
+    /// where `save` writes and `predict`/`serve` read the fitted model;
+    /// empty means the artifacts-dir-driven default
+    /// (see [`resolved_model_path`](ExperimentConfig::resolved_model_path))
+    pub model_path: String,
+    /// listen address for the `serve` subcommand's HTTP front-end
+    pub serve_addr: String,
 }
 
 impl Default for ExperimentConfig {
@@ -156,6 +162,8 @@ impl Default for ExperimentConfig {
             threads: 1,
             artifacts_dir: "artifacts".into(),
             data_dir: "data".into(),
+            model_path: String::new(),
+            serve_addr: "127.0.0.1:7878".into(),
         }
     }
 }
@@ -176,6 +184,24 @@ impl ExperimentConfig {
     /// r' = r + l, the sketch width.
     pub fn sketch_width(&self) -> usize {
         self.rank + self.oversample
+    }
+
+    /// The model file the `save`/`predict`/`serve` subcommands use: the
+    /// explicit `model` override when given, else `model.rkc` inside
+    /// [`artifacts_dir`](ExperimentConfig::artifacts_dir) (the fit
+    /// artifacts live next to the compiled compute artifacts). A
+    /// directory-style override (trailing `/`, or an existing directory)
+    /// resolves to `model.rkc` inside it, so the same `--model` value
+    /// works identically for `save` and for `predict`/`serve`.
+    pub fn resolved_model_path(&self) -> String {
+        if self.model_path.is_empty() {
+            // artifacts_dir is a directory by definition (the trailing
+            // slash tells the shared rule so, without it having to exist
+            // yet)
+            let dir = format!("{}/", self.artifacts_dir.trim_end_matches('/'));
+            return crate::model_io::resolve_model_target(&dir);
+        }
+        crate::model_io::resolve_model_target(&self.model_path)
     }
 
     /// Apply a `key=value` override; unknown keys are an error so typos
@@ -205,6 +231,8 @@ impl ExperimentConfig {
             "threads" => self.threads = uint("threads", value)?,
             "artifacts_dir" => self.artifacts_dir = value.into(),
             "data_dir" => self.data_dir = value.into(),
+            "model" | "model_path" => self.model_path = value.into(),
+            "addr" | "serve_addr" => self.serve_addr = value.into(),
             "method" => self.method = value.parse()?,
             "backend" => self.backend = value.parse()?,
             "kernel" => self.kernel = value.parse()?,
@@ -258,6 +286,9 @@ mod tests {
         assert_eq!(c.kmeans_tol, 1e-9);
         assert_eq!(c.threads, 1);
         assert_eq!(c.data_dir, "data");
+        assert_eq!(c.serve_addr, "127.0.0.1:7878");
+        // artifacts-dir-driven model path when no explicit override
+        assert_eq!(c.resolved_model_path(), "artifacts/model.rkc");
         let t = ExperimentConfig::table1();
         assert_eq!((t.n, t.k, t.oversample), (4000, 2, 10));
         assert_eq!(t.dataset, "cross_lines");
@@ -281,6 +312,15 @@ mod tests {
         assert_eq!(c.kmeans_tol, 1e-6);
         c.set("threads", "0").unwrap(); // 0 = auto-detect
         assert_eq!(c.threads, 0);
+        c.set("model", "/tmp/m.rkc").unwrap();
+        assert_eq!(c.model_path, "/tmp/m.rkc");
+        assert_eq!(c.resolved_model_path(), "/tmp/m.rkc");
+        // a directory-style override resolves to model.rkc inside it,
+        // matching what save's auto-save would write there
+        c.set("model", "models/").unwrap();
+        assert_eq!(c.resolved_model_path(), "models/model.rkc");
+        c.set("addr", "0.0.0.0:9000").unwrap();
+        assert_eq!(c.serve_addr, "0.0.0.0:9000");
         assert!(c.set("kmeans_tol", "tiny").is_err());
         assert!(c.set("nope", "1").is_err());
         assert!(c.set("backend", "gpu").is_err());

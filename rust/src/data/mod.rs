@@ -245,6 +245,52 @@ pub fn load_segmentation_csv(path: &str) -> Option<Dataset> {
     Some(Dataset { x, labels, k, name: format!("uci_segmentation({path})") })
 }
 
+/// Load query points from a CSV of comma-separated coordinates, one row
+/// per point — the `rkc predict` input format. Every column is read as a
+/// coordinate (strip label columns before feeding files written by
+/// [`write_points_csv`]); blank lines are skipped. Returns the p × m
+/// matrix (columns are samples) the prediction APIs consume.
+pub fn load_points_csv(path: &str) -> crate::error::Result<Mat> {
+    use crate::error::RkcError;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| RkcError::io(format!("reading points csv {path}"), e))?;
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    for (idx, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let vals = line
+            .split(',')
+            .map(|t| {
+                let t = t.trim();
+                t.parse::<f64>().map_err(|_| {
+                    RkcError::dataset(format!(
+                        "{path}:{}: '{t}' is not a number",
+                        idx + 1
+                    ))
+                })
+            })
+            .collect::<crate::error::Result<Vec<f64>>>()?;
+        if let Some(first) = rows.first() {
+            if vals.len() != first.len() {
+                return Err(RkcError::dataset(format!(
+                    "{path}:{}: row has {} columns, expected {}",
+                    idx + 1,
+                    vals.len(),
+                    first.len()
+                )));
+            }
+        }
+        rows.push(vals);
+    }
+    if rows.is_empty() {
+        return Err(RkcError::dataset(format!("{path}: no data rows")));
+    }
+    let (m, p) = (rows.len(), rows[0].len());
+    Ok(Mat::from_fn(p, m, |i, j| rows[j][i]))
+}
+
 /// Write a dataset (transposed: one sample per line, label last) to CSV —
 /// used by the figure dumps.
 pub fn write_points_csv(path: &str, x: &Mat, labels: &[usize]) -> std::io::Result<()> {
@@ -261,6 +307,25 @@ pub fn write_points_csv(path: &str, x: &Mat, labels: &[usize]) -> std::io::Resul
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn load_points_csv_roundtrips_coordinates() {
+        let path = std::env::temp_dir().join(format!("rkc_points_{}.csv", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        std::fs::write(&path, "1.5, -2.0\n\n0.25,3.0\n").unwrap();
+        let m = load_points_csv(&path).unwrap();
+        assert_eq!((m.rows(), m.cols()), (2, 2));
+        assert_eq!(m[(0, 0)], 1.5);
+        assert_eq!(m[(1, 1)], 3.0);
+        // ragged and non-numeric rows are typed errors, empty is too
+        std::fs::write(&path, "1,2\n3\n").unwrap();
+        assert!(load_points_csv(&path).is_err());
+        std::fs::write(&path, "x,y\n1,2\n").unwrap();
+        assert!(load_points_csv(&path).is_err());
+        std::fs::write(&path, "\n").unwrap();
+        assert!(load_points_csv(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
 
     #[test]
     fn two_rings_radii_are_separated() {

@@ -52,6 +52,22 @@ pub enum RkcError {
         context: String,
         source: std::io::Error,
     },
+    /// A saved `.rkc` model file is unreadable: bad magic, corrupt or
+    /// truncated header/payload, or a checksum mismatch.
+    Model {
+        /// the file (or byte-source description) that failed to load
+        path: String,
+        /// what exactly was wrong with it
+        detail: String,
+    },
+    /// A saved model declares a format version this build does not
+    /// support (written by a newer release).
+    ModelVersion {
+        /// version found in the file
+        found: u32,
+        /// newest version this build reads/writes
+        supported: u32,
+    },
 }
 
 impl RkcError {
@@ -83,6 +99,10 @@ impl RkcError {
     pub fn io(context: impl Into<String>, source: std::io::Error) -> Self {
         RkcError::Io { context: context.into(), source }
     }
+
+    pub fn model(path: impl Into<String>, detail: impl Into<String>) -> Self {
+        RkcError::Model { path: path.into(), detail: detail.into() }
+    }
 }
 
 impl fmt::Display for RkcError {
@@ -97,6 +117,14 @@ impl fmt::Display for RkcError {
             RkcError::Backend(m) => write!(f, "{m}"),
             RkcError::Unsupported(m) => write!(f, "unsupported operation: {m}"),
             RkcError::Io { context, source } => write!(f, "{context}: {source}"),
+            RkcError::Model { path, detail } => {
+                write!(f, "invalid model file {path}: {detail}")
+            }
+            RkcError::ModelVersion { found, supported } => write!(
+                f,
+                "model format version {found} is newer than the supported \
+                 version {supported} (upgrade rkc to read this file)"
+            ),
         }
     }
 }
@@ -137,6 +165,15 @@ mod tests {
         let e = RkcError::io("reading manifest.json", inner);
         assert!(e.to_string().contains("manifest.json"));
         assert!(e.source().is_some());
+    }
+
+    #[test]
+    fn model_errors_render_actionably() {
+        let e = RkcError::model("m.rkc", "checksum mismatch");
+        assert_eq!(e.to_string(), "invalid model file m.rkc: checksum mismatch");
+        let e = RkcError::ModelVersion { found: 9, supported: 1 };
+        assert!(e.to_string().contains("version 9"));
+        assert!(e.to_string().contains("supported version 1"));
     }
 
     #[test]

@@ -39,6 +39,13 @@
 //! - [`api`] — **the public face**: `KernelClusterer` builder → `fit` →
 //!   `FittedModel`, the [`api::Embedder`] trait unifying every low-rank
 //!   method, out-of-sample embedding/prediction.
+//! - [`model_io`] — versioned, endianness-explicit `.rkc` binary
+//!   persistence for fitted models (`FittedModel::save`/`load`),
+//!   bit-exact across the roundtrip.
+//! - [`serve`] — the batched serving runtime: `ModelServer`
+//!   micro-batches concurrent `embed`/`predict` requests through a
+//!   bounded queue onto the fork-join pool, with a zero-dependency
+//!   HTTP/1.1 front-end (`/predict`, `/embed`, `/healthz`).
 //! - [`error`] — the crate-wide [`error::RkcError`]; every library layer
 //!   returns it (no stringly-typed or `anyhow` errors anywhere).
 //! - [`coordinator`] — L3: the streaming pipeline (scheduler, sketch
@@ -70,7 +77,9 @@ pub mod bench_harness;
 pub mod config;
 pub mod coordinator;
 pub mod metrics;
+pub mod model_io;
 pub mod runtime;
+pub mod serve;
 
 pub use api::{FittedModel, KernelClusterer};
 pub use error::{Result, RkcError};

@@ -11,6 +11,9 @@
 //! rkc theorem1                      empirical Theorem-1 bound check
 //! rkc memory                        memory model across methods
 //! rkc artifacts                     list compiled artifacts
+//! rkc save     [--model path]       fit once, persist the .rkc model
+//! rkc predict  [--model path] [--data pts.csv]   offline predictions
+//! rkc serve    [--model path] [--addr host:port] HTTP serving runtime
 //! ```
 //!
 //! Every subcommand accepts the config overrides documented in
@@ -55,7 +58,9 @@ fn real_main(args: Vec<String>) -> Result<()> {
         cfg.apply_json(&json)?;
     }
     for (k, v) in &cli.options {
-        if k == "config" || k == "out-dir" {
+        // "data" is predict's query CSV, not a config key — but only
+        // there; everywhere else an unknown key still fails loudly
+        if k == "config" || k == "out-dir" || (k == "data" && sub == "predict") {
             continue;
         }
         cfg.set(k, v)?;
@@ -78,6 +83,9 @@ fn real_main(args: Vec<String>) -> Result<()> {
         "theorem1" => commands::cmd_theorem1(&cfg),
         "memory" => commands::cmd_memory(&cfg),
         "artifacts" => commands::cmd_artifacts(registry.as_ref()),
+        "save" => commands::cmd_save(&cfg, registry.as_ref()),
+        "predict" => commands::cmd_predict(&cfg, cli.get("data")),
+        "serve" => commands::cmd_serve(&cfg),
         other => Err(RkcError::invalid_config(format!(
             "unknown subcommand '{other}' (try --help)"
         ))),
@@ -98,6 +106,9 @@ SUBCOMMANDS
   theorem1   empirical validation of the Theorem-1 bounds
   memory     peak-memory model across methods
   artifacts  list the compiled XLA artifacts
+  save       fit once and persist the model to --model (.rkc format)
+  predict    load --model, assign --data points.csv (or the dataset)
+  serve      load --model and serve predictions over HTTP at --addr
 
 COMMON OPTIONS (config overrides)
   --method one_pass|gaussian|exact|full_kernel|plain|nystrom[_m<M>]
@@ -106,6 +117,14 @@ COMMON OPTIONS (config overrides)
   --trials T --seed S         --kernel poly2|rbf:<g>|poly:<g>:<d>
   --threads T (0 = auto)      --config file.json
   --kmeans_restarts N --kmeans_iters N --kmeans_tol EPS
-  --out-dir DIR (fig2/fig3)   --artifacts_dir DIR --data_dir DIR"
+  --out-dir DIR (fig2/fig3)   --artifacts_dir DIR --data_dir DIR
+  --model PATH (default {{artifacts_dir}}/model.rkc)
+  --addr HOST:PORT (serve; default 127.0.0.1:7878)
+  --data points.csv (predict; one row of coordinates per point)
+
+SERVING PROTOCOL (serve)
+  POST /predict {{\"points\": [[x, y, ...], ...]}}  ->  {{\"labels\": [...]}}
+  POST /embed   same body                         ->  {{\"embedding\": [...]}}
+  GET  /healthz                                   ->  status + counters"
     );
 }

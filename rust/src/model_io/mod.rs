@@ -1,0 +1,712 @@
+//! Versioned binary persistence for fitted models — the `.rkc` format.
+//!
+//! A [`FittedModel`](crate::api::FittedModel) is the paper's whole point
+//! made tangible: a compact object (column map + rank-r embedding +
+//! centroids) that replaces the O(n²) kernel matrix. This module lets
+//! that object outlive the process that fitted it, so a model is fitted
+//! once and served forever ([`crate::serve`]). Loading is **bit-exact**:
+//! every f64 travels as its IEEE-754 bits, so a reloaded model's
+//! `embed`/`predict` outputs are bit-identical to the in-memory
+//! original (enforced by `tests/serve_roundtrip.rs`).
+//!
+//! # Byte-level format (version 1)
+//!
+//! All multi-byte integers and floats are **little-endian**, written
+//! explicitly via `to_le_bytes` (the format is identical on every
+//! platform).
+//!
+//! ```text
+//! offset        size  contents
+//! 0             8     magic, the ASCII bytes "RKCMODEL"
+//! 8             4     u32 format version (currently 1)
+//! 12            4     u32 header length H in bytes
+//! 16            H     UTF-8 JSON header (see below)
+//! 16+H          8·Σ   payload: for each header `sections` entry, in
+//!                     order, rows·cols f64 values in row-major order
+//! end−8         8     u64 FNV-1a checksum of every preceding byte
+//! ```
+//!
+//! The JSON header (written by [`crate::util::json`], no external
+//! dependencies) carries the scalar model state and the payload layout:
+//!
+//! ```text
+//! {
+//!   "format":   "rkc-model",
+//!   "kernel":   round-trippable kernel spec ("poly2", "rbf:0.5", …),
+//!   "method":   method name ("one_pass", "nystrom_m100", …),
+//!   "assigner": "embedded" | "input" | "kernel_clusters",
+//!   "k" / "n" / "rank" / "n_pad" / "batch":  integers,
+//!   "objective": number (null when non-finite),
+//!   "times":    {"sketch": s, "recovery": s, "kmeans": s},
+//!   "memory":   {"method", "persistent", "transient", "recovery"},
+//!   "sections": [{"name": "...", "rows": R, "cols": C}, ...]
+//! }
+//! ```
+//!
+//! Section names and presence rules: `labels` (1 × n, always);
+//! `embedding_y` (r × n) + `eigenvalues` (1 × r) when the model has an
+//! embedding; `centroids` for the `embedded`/`input` assigners;
+//! `cluster_sizes` + `self_terms` (1 × k each) for `kernel_clusters`;
+//! `train_x` (p × n) when the training data was retained (required for
+//! out-of-sample `embed`/`predict`). Integer-valued sections (labels,
+//! sizes) are stored as f64, exact up to 2⁵³.
+//!
+//! # Versioning and failure modes
+//!
+//! The outer framing — magic, version word, header length, trailing
+//! checksum — is **invariant across all format versions** (only the
+//! header schema and section set may evolve), so integrity is checked
+//! before version negotiation: a checksum mismatch always means
+//! corruption, never a newer format. The loader accepts any version
+//! `1..=`[`FORMAT_VERSION`]. A newer version is a typed
+//! [`RkcError::ModelVersion`]; everything else that
+//! can be wrong with a file — bad magic, truncated framing or payload,
+//! checksum mismatch, malformed header, inconsistent shapes — is a
+//! typed [`RkcError::Model`] naming the file and the defect.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::api::{Assigner, FitMetrics, FittedModel};
+use crate::error::{Result, RkcError};
+use crate::kernels::Kernel;
+use crate::linalg::Mat;
+use crate::lowrank::Embedding;
+use crate::metrics::MethodMemory;
+use crate::util::Json;
+
+/// The 8 magic bytes opening every `.rkc` file.
+pub const MAGIC: [u8; 8] = *b"RKCMODEL";
+
+/// Newest format version this build writes (and the newest it reads).
+pub const FORMAT_VERSION: u32 = 1;
+
+/// magic + version + header length before the header itself
+const FIXED_PREFIX: usize = 8 + 4 + 4;
+
+/// Resolve a save/load target the way every model-path entry point
+/// (builder `auto_save`, the CLI `--model` flag) does: a
+/// directory-style target — trailing `/`, or an existing directory —
+/// means `model.rkc` inside it; anything else is the file path itself.
+/// One shared rule, so the value that `save` just wrote to is exactly
+/// the value `predict`/`serve` load from.
+pub fn resolve_model_target(target: &str) -> String {
+    if target.ends_with('/') || std::path::Path::new(target).is_dir() {
+        format!("{}/model.rkc", target.trim_end_matches('/'))
+    } else {
+        target.to_string()
+    }
+}
+
+/// 64-bit FNV-1a — the integrity checksum trailing every `.rkc` file
+/// (part of the format spec, exposed so external tooling can verify or
+/// re-seal files).
+pub fn checksum(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Serialize a fitted model into the `.rkc` byte format.
+pub fn model_to_bytes(model: &FittedModel) -> Vec<u8> {
+    use std::borrow::Cow;
+    // (name, rows, cols, row-major data) in the fixed writer order;
+    // float sections borrow straight from the model (only the
+    // integer-valued ones need an owned f64 conversion) — the byte
+    // buffer below still holds one full serialized copy, so peak save
+    // memory is model + bytes, not model + floats + bytes
+    let mut sections: Vec<(&'static str, usize, usize, Cow<'_, [f64]>)> = Vec::new();
+    let labels: Vec<f64> = model.labels().iter().map(|&l| l as f64).collect();
+    sections.push(("labels", 1, labels.len(), Cow::Owned(labels)));
+    if let Some(emb) = &model.embedding {
+        sections.push(("embedding_y", emb.y.rows(), emb.y.cols(),
+            Cow::Borrowed(emb.y.data())));
+        sections.push(("eigenvalues", 1, emb.eigenvalues.len(),
+            Cow::Borrowed(emb.eigenvalues.as_slice())));
+    }
+    let assigner_tag = match &model.assigner {
+        Assigner::Embedded { centroids } => {
+            sections.push(("centroids", centroids.rows(), centroids.cols(),
+                Cow::Borrowed(centroids.data())));
+            "embedded"
+        }
+        Assigner::Input { centroids } => {
+            sections.push(("centroids", centroids.rows(), centroids.cols(),
+                Cow::Borrowed(centroids.data())));
+            "input"
+        }
+        Assigner::KernelClusters { sizes, self_terms } => {
+            let s: Vec<f64> = sizes.iter().map(|&c| c as f64).collect();
+            sections.push(("cluster_sizes", 1, s.len(), Cow::Owned(s)));
+            sections.push(("self_terms", 1, self_terms.len(),
+                Cow::Borrowed(self_terms.as_slice())));
+            "kernel_clusters"
+        }
+    };
+    if let Some(x) = &model.train_x {
+        sections.push(("train_x", x.rows(), x.cols(), Cow::Borrowed(x.data())));
+    }
+
+    let m = model.metrics();
+    let mut header = BTreeMap::new();
+    header.insert("format".into(), Json::Str("rkc-model".into()));
+    header.insert("kernel".into(), Json::Str(model.kernel().to_string()));
+    header.insert("method".into(), Json::Str(m.method.clone()));
+    header.insert("assigner".into(), Json::Str(assigner_tag.into()));
+    header.insert("k".into(), uint(model.k()));
+    header.insert("n".into(), uint(m.n));
+    header.insert("rank".into(), uint(m.rank));
+    header.insert("n_pad".into(), uint(model.n_padded()));
+    header.insert("batch".into(), uint(model.batch));
+    header.insert("objective".into(), Json::finite_num(m.objective));
+    header.insert(
+        "times".into(),
+        Json::Obj(BTreeMap::from([
+            ("sketch".to_string(), Json::finite_num(m.sketch_time.as_secs_f64())),
+            ("recovery".to_string(), Json::finite_num(m.recovery_time.as_secs_f64())),
+            ("kmeans".to_string(), Json::finite_num(m.kmeans_time.as_secs_f64())),
+        ])),
+    );
+    header.insert(
+        "memory".into(),
+        Json::Obj(BTreeMap::from([
+            ("method".to_string(), Json::Str(m.memory.method.clone())),
+            ("persistent".to_string(), uint(m.memory.persistent)),
+            ("transient".to_string(), uint(m.memory.transient)),
+            ("recovery".to_string(), uint(m.memory.recovery)),
+        ])),
+    );
+    header.insert(
+        "sections".into(),
+        Json::Arr(
+            sections
+                .iter()
+                .map(|(name, rows, cols, _)| {
+                    Json::Obj(BTreeMap::from([
+                        ("name".to_string(), Json::Str((*name).into())),
+                        ("rows".to_string(), uint(*rows)),
+                        ("cols".to_string(), uint(*cols)),
+                    ]))
+                })
+                .collect(),
+        ),
+    );
+
+    let header_bytes = Json::Obj(header).to_string().into_bytes();
+    let payload_len: usize = sections.iter().map(|(_, r, c, _)| 8 * r * c).sum();
+    let mut out = Vec::with_capacity(FIXED_PREFIX + header_bytes.len() + payload_len + 8);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    out.extend_from_slice(&(header_bytes.len() as u32).to_le_bytes());
+    out.extend_from_slice(&header_bytes);
+    for (_, _, _, data) in &sections {
+        for v in data.iter() {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    let ck = checksum(&out);
+    out.extend_from_slice(&ck.to_le_bytes());
+    out
+}
+
+/// Deserialize a `.rkc` byte buffer. `origin` names the source (a file
+/// path, "network", …) in error messages.
+pub fn model_from_bytes(bytes: &[u8], origin: &str) -> Result<FittedModel> {
+    let bad = |d: String| RkcError::model(origin, d);
+    if bytes.len() < FIXED_PREFIX + 8 {
+        return Err(bad(format!(
+            "truncated: {} bytes is shorter than the fixed framing",
+            bytes.len()
+        )));
+    }
+    if bytes[..8] != MAGIC {
+        return Err(bad("bad magic (not an .rkc model file)".into()));
+    }
+    // integrity before version negotiation: the outer framing (magic,
+    // version, header length, trailing FNV-1a) is invariant across ALL
+    // format versions, so a checksum mismatch always means corruption —
+    // never a newer format — and a bit flip inside the version bytes is
+    // diagnosed truthfully instead of as "upgrade rkc"
+    let payload_end = bytes.len() - 8;
+    let stored = u64::from_le_bytes(bytes[payload_end..].try_into().unwrap());
+    let computed = checksum(&bytes[..payload_end]);
+    if stored != computed {
+        return Err(bad(format!(
+            "checksum mismatch (stored {stored:#018x}, computed {computed:#018x}); \
+             the file is corrupt"
+        )));
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    if version > FORMAT_VERSION {
+        return Err(RkcError::ModelVersion { found: version, supported: FORMAT_VERSION });
+    }
+    if version == 0 {
+        return Err(bad("format version 0 is invalid".into()));
+    }
+    let hlen = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+    if FIXED_PREFIX + hlen > payload_end {
+        return Err(bad(format!("truncated: header length {hlen} exceeds the file")));
+    }
+    let header_text = std::str::from_utf8(&bytes[FIXED_PREFIX..FIXED_PREFIX + hlen])
+        .map_err(|_| bad("header is not UTF-8".into()))?;
+    let header =
+        Json::parse(header_text).map_err(|e| bad(format!("header is not valid JSON: {e}")))?;
+    if header.get("format").and_then(Json::as_str) != Some("rkc-model") {
+        return Err(bad("header 'format' field is not 'rkc-model'".into()));
+    }
+
+    let secs = header
+        .get("sections")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| bad("header is missing the 'sections' array".into()))?;
+    let mut mats: BTreeMap<String, Mat> = BTreeMap::new();
+    let mut off = FIXED_PREFIX + hlen;
+    for s in secs {
+        let name = s.str_field("name").map_err(|e| bad(e.to_string()))?.to_string();
+        let rows = s.usize_field("rows").map_err(|e| bad(e.to_string()))?;
+        let cols = s.usize_field("cols").map_err(|e| bad(e.to_string()))?;
+        let n_bytes = rows
+            .checked_mul(cols)
+            .and_then(|c| c.checked_mul(8))
+            .ok_or_else(|| bad(format!("section '{name}' shape {rows}x{cols} overflows")))?;
+        let end = off
+            .checked_add(n_bytes)
+            .filter(|&e| e <= payload_end)
+            .ok_or_else(|| {
+                bad(format!(
+                    "truncated payload: section '{name}' ({rows}x{cols}) runs past \
+                     the end of the file"
+                ))
+            })?;
+        let data: Vec<f64> = bytes[off..end]
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        off = end;
+        if mats.insert(name.clone(), Mat::from_vec(rows, cols, data)).is_some() {
+            return Err(bad(format!("duplicate section '{name}'")));
+        }
+    }
+    if off != payload_end {
+        return Err(bad(format!(
+            "payload size mismatch: {} trailing bytes after the last section",
+            payload_end - off
+        )));
+    }
+    assemble_model(&header, mats, origin)
+}
+
+/// Write `model` to `path` in the `.rkc` format, creating parent
+/// directories as needed. The write is atomic (temp file + rename in
+/// the same directory): an interrupted save never destroys an existing
+/// good model at `path`, and a concurrent reader sees either the old
+/// file or the new one, never a torn write.
+pub fn save_model(model: &FittedModel, path: &str) -> Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent).map_err(|e| {
+                RkcError::io(format!("creating model directory {}", parent.display()), e)
+            })?;
+        }
+    }
+    let tmp = format!("{path}.tmp.{}", std::process::id());
+    std::fs::write(&tmp, model_to_bytes(model))
+        .map_err(|e| RkcError::io(format!("writing model {tmp}"), e))?;
+    std::fs::rename(&tmp, path).map_err(|e| {
+        let _ = std::fs::remove_file(&tmp);
+        RkcError::io(format!("renaming {tmp} into place as {path}"), e)
+    })
+}
+
+/// Read a `.rkc` model from `path`.
+pub fn load_model(path: &str) -> Result<FittedModel> {
+    let bytes =
+        std::fs::read(path).map_err(|e| RkcError::io(format!("reading model {path}"), e))?;
+    model_from_bytes(&bytes, path)
+}
+
+fn uint(v: usize) -> Json {
+    Json::Num(v as f64)
+}
+
+fn assemble_model(
+    header: &Json,
+    mut mats: BTreeMap<String, Mat>,
+    origin: &str,
+) -> Result<FittedModel> {
+    let bad = |d: String| RkcError::model(origin, d);
+    let str_of = |key: &str| {
+        header
+            .get(key)
+            .and_then(Json::as_str)
+            .ok_or_else(|| bad(format!("header is missing string field '{key}'")))
+    };
+    let uint_of = |key: &str| {
+        header
+            .get(key)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| bad(format!("header is missing integer field '{key}'")))
+    };
+    let kernel_spec = str_of("kernel")?;
+    let kernel: Kernel = kernel_spec
+        .parse()
+        .map_err(|_| bad(format!("unknown kernel spec '{kernel_spec}'")))?;
+    let k = uint_of("k")?;
+    let n = uint_of("n")?;
+    let rank = uint_of("rank")?;
+    let n_pad = uint_of("n_pad")?;
+    let batch = uint_of("batch")?;
+    // downstream code asserts these invariants (block sources require
+    // n_pad >= n and batch >= 1); a re-sealed file that violates them
+    // must be a typed error here, not a panic there
+    if n_pad < n {
+        return Err(bad(format!("n_pad={n_pad} is smaller than n={n}")));
+    }
+    if batch == 0 {
+        return Err(bad("batch must be at least 1".into()));
+    }
+    let method = str_of("method")?.to_string();
+    let objective = header.get("objective").and_then(Json::as_f64).unwrap_or(f64::NAN);
+    let time_of = |key: &str| {
+        let secs = header
+            .get("times")
+            .and_then(|t| t.get(key))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0);
+        // try_from handles negatives, non-finite, AND values beyond
+        // u64::MAX seconds — from_secs_f64 would panic on a re-sealed
+        // file carrying an absurd time
+        Duration::try_from_secs_f64(secs).unwrap_or(Duration::ZERO)
+    };
+    let mem = header.get("memory");
+    let mem_uint = |key: &str| mem.and_then(|m| m.get(key)).and_then(Json::as_usize).unwrap_or(0);
+    let memory = MethodMemory {
+        method: mem
+            .and_then(|m| m.get("method"))
+            .and_then(Json::as_str)
+            .unwrap_or(method.as_str())
+            .to_string(),
+        persistent: mem_uint("persistent"),
+        transient: mem_uint("transient"),
+        recovery: mem_uint("recovery"),
+    };
+
+    let labels_mat =
+        mats.remove("labels").ok_or_else(|| bad("missing 'labels' section".into()))?;
+    let labels = as_usize_vec(labels_mat.data())
+        .map_err(|e| bad(format!("labels section: {e}")))?;
+    if labels.len() != n {
+        return Err(bad(format!("labels length {} does not match n={n}", labels.len())));
+    }
+    // labels index k-length per-cluster tables during prediction; an
+    // out-of-range value must be a typed error here, not a panic there
+    if let Some(&l) = labels.iter().find(|&&l| l >= k) {
+        return Err(bad(format!("label {l} is out of range for k={k}")));
+    }
+
+    let embedding = match (mats.remove("embedding_y"), mats.remove("eigenvalues")) {
+        (Some(y), Some(ev)) => {
+            if y.cols() != n {
+                return Err(bad(format!(
+                    "embedding has {} columns but n={n}",
+                    y.cols()
+                )));
+            }
+            if ev.rows() != 1 || ev.cols() != y.rows() || y.rows() != rank {
+                return Err(bad(format!(
+                    "embedding rank {} / eigenvalue shape {}x{} disagree with rank={rank}",
+                    y.rows(),
+                    ev.rows(),
+                    ev.cols()
+                )));
+            }
+            Some(Embedding { y, eigenvalues: ev.data().to_vec() })
+        }
+        (None, None) => None,
+        _ => {
+            return Err(bad(
+                "'embedding_y' and 'eigenvalues' sections must appear together".into(),
+            ))
+        }
+    };
+
+    let assigner_tag = str_of("assigner")?;
+    let assigner = match assigner_tag {
+        "embedded" | "input" => {
+            let centroids = mats
+                .remove("centroids")
+                .ok_or_else(|| bad(format!("assigner '{assigner_tag}' needs 'centroids'")))?;
+            if centroids.cols() != k {
+                return Err(bad(format!(
+                    "centroids have {} columns but k={k}",
+                    centroids.cols()
+                )));
+            }
+            if assigner_tag == "embedded" {
+                if embedding.is_none() {
+                    return Err(bad(
+                        "assigner 'embedded' requires an embedding section".into(),
+                    ));
+                }
+                // prediction compares r-vectors against these columns;
+                // a row mismatch would index out of bounds downstream
+                if centroids.rows() != rank {
+                    return Err(bad(format!(
+                        "embedded centroids have {} rows but rank={rank}",
+                        centroids.rows()
+                    )));
+                }
+                Assigner::Embedded { centroids }
+            } else {
+                if let Some(x) = mats.get("train_x") {
+                    if centroids.rows() != x.rows() {
+                        return Err(bad(format!(
+                            "input-space centroids have {} rows but train_x has {}",
+                            centroids.rows(),
+                            x.rows()
+                        )));
+                    }
+                }
+                Assigner::Input { centroids }
+            }
+        }
+        "kernel_clusters" => {
+            let sizes_mat = mats
+                .remove("cluster_sizes")
+                .ok_or_else(|| bad("assigner 'kernel_clusters' needs 'cluster_sizes'".into()))?;
+            let sizes = as_usize_vec(sizes_mat.data())
+                .map_err(|e| bad(format!("cluster_sizes section: {e}")))?;
+            let self_terms = mats
+                .remove("self_terms")
+                .ok_or_else(|| bad("assigner 'kernel_clusters' needs 'self_terms'".into()))?
+                .data()
+                .to_vec();
+            if sizes.len() != k || self_terms.len() != k {
+                return Err(bad(format!(
+                    "cluster_sizes/self_terms lengths {}/{} do not match k={k}",
+                    sizes.len(),
+                    self_terms.len()
+                )));
+            }
+            Assigner::KernelClusters { sizes, self_terms }
+        }
+        other => return Err(bad(format!("unknown assigner '{other}'"))),
+    };
+
+    let train_x = mats.remove("train_x");
+    if let Some(x) = &train_x {
+        if x.cols() != n {
+            return Err(bad(format!(
+                "train_x has {} columns but n={n}",
+                x.cols()
+            )));
+        }
+    }
+    if !mats.is_empty() {
+        let names: Vec<&str> = mats.keys().map(String::as_str).collect();
+        return Err(bad(format!("unknown sections {names:?}")));
+    }
+
+    Ok(FittedModel {
+        kernel,
+        k,
+        embedding,
+        labels,
+        assigner,
+        train_x,
+        train_cols: std::sync::OnceLock::new(),
+        n_pad,
+        batch,
+        metrics: FitMetrics {
+            method,
+            n,
+            rank,
+            objective,
+            memory,
+            sketch_time: time_of("sketch"),
+            recovery_time: time_of("recovery"),
+            kmeans_time: time_of("kmeans"),
+        },
+    })
+}
+
+/// Decode integer-valued f64 sections (labels, cluster sizes) with a
+/// strict exactness check — anything fractional, negative, or beyond
+/// 2⁵³ means the file lies about its contents.
+fn as_usize_vec(data: &[f64]) -> std::result::Result<Vec<usize>, String> {
+    const MAX_EXACT: f64 = 9_007_199_254_740_992.0; // 2^53
+    data.iter()
+        .map(|&v| {
+            if v.is_finite() && v >= 0.0 && v.fract() == 0.0 && v < MAX_EXACT {
+                Ok(v as usize)
+            } else {
+                Err(format!("value {v} is not an exact non-negative integer"))
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::KernelClusterer;
+    use crate::config::Method;
+    use crate::data;
+    use crate::rng::Pcg64;
+
+    fn fit(method: Method) -> FittedModel {
+        let ds = data::cross_lines(&mut Pcg64::seed(31), 64);
+        KernelClusterer::new(2)
+            .method(method)
+            .rank(2)
+            .oversample(8)
+            .seed(17)
+            .fit(&ds.x)
+            .unwrap()
+    }
+
+    fn all_methods() -> Vec<Method> {
+        vec![
+            Method::OnePass,
+            Method::GaussianOnePass,
+            Method::Nystrom { m: 30 },
+            Method::Exact,
+            Method::FullKernel,
+            Method::PlainKmeans,
+        ]
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact_for_every_method() {
+        let query = data::cross_lines(&mut Pcg64::seed(32), 24).x;
+        for method in all_methods() {
+            let model = fit(method);
+            let bytes = model_to_bytes(&model);
+            let back = model_from_bytes(&bytes, "mem").unwrap_or_else(|e| {
+                panic!("{method}: roundtrip failed: {e}")
+            });
+            assert_eq!(back.labels(), model.labels(), "{method}");
+            assert_eq!(back.k(), model.k(), "{method}");
+            assert_eq!(back.kernel(), model.kernel(), "{method}");
+            assert_eq!(back.metrics().method, model.metrics().method, "{method}");
+            assert_eq!(back.metrics().n, model.metrics().n, "{method}");
+            assert_eq!(back.metrics().rank, model.metrics().rank, "{method}");
+            assert_eq!(back.metrics().memory, model.metrics().memory, "{method}");
+            assert_eq!(
+                back.predict(&query).unwrap(),
+                model.predict(&query).unwrap(),
+                "{method}: reloaded predictions must be identical"
+            );
+            match (model.embedding(), back.embedding()) {
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.y.data(), b.y.data(), "{method}: embedding bits");
+                    assert_eq!(a.eigenvalues, b.eigenvalues, "{method}: eigenvalue bits");
+                    assert_eq!(
+                        model.embed(&query).unwrap().data(),
+                        back.embed(&query).unwrap().data(),
+                        "{method}: out-of-sample embedding bits"
+                    );
+                }
+                (None, None) => {}
+                _ => panic!("{method}: embedding presence changed across the roundtrip"),
+            }
+        }
+    }
+
+    #[test]
+    fn save_load_file_roundtrip() {
+        let model = fit(Method::OnePass);
+        let path = std::env::temp_dir()
+            .join(format!("rkc_model_io_{}.rkc", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        model.save(&path).unwrap();
+        let back = FittedModel::load(&path).unwrap();
+        assert_eq!(back.labels(), model.labels());
+        let err = back.approx_error().unwrap();
+        assert!(err.is_finite() && err < 1.0, "reloaded approx error {err}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn corrupt_magic_is_a_typed_model_error() {
+        let mut bytes = model_to_bytes(&fit(Method::OnePass));
+        bytes[0] = b'X';
+        let err = model_from_bytes(&bytes, "mem").unwrap_err();
+        assert!(matches!(err, RkcError::Model { .. }), "{err}");
+        assert!(err.to_string().contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_header_byte_fails_the_checksum() {
+        let mut bytes = model_to_bytes(&fit(Method::Exact));
+        bytes[FIXED_PREFIX + 3] ^= 0x40; // flip a bit inside the JSON header
+        let err = model_from_bytes(&bytes, "mem").unwrap_err();
+        assert!(matches!(err, RkcError::Model { .. }), "{err}");
+        assert!(err.to_string().contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn truncated_payload_is_a_typed_model_error() {
+        let bytes = model_to_bytes(&fit(Method::Nystrom { m: 30 }));
+        let err = model_from_bytes(&bytes[..bytes.len() - 16], "mem").unwrap_err();
+        assert!(matches!(err, RkcError::Model { .. }), "{err}");
+        // a 5-byte stub dies on the framing check, not a panic
+        let err = model_from_bytes(&bytes[..5], "mem").unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn newer_format_version_is_a_typed_version_error() {
+        let mut bytes = model_to_bytes(&fit(Method::PlainKmeans));
+        bytes[8..12].copy_from_slice(&99u32.to_le_bytes());
+        // re-seal so the version check (not the checksum) is what fires
+        let end = bytes.len() - 8;
+        let ck = checksum(&bytes[..end]);
+        bytes[end..].copy_from_slice(&ck.to_le_bytes());
+        let err = model_from_bytes(&bytes, "mem").unwrap_err();
+        assert!(
+            matches!(err, RkcError::ModelVersion { found: 99, supported: FORMAT_VERSION }),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn garbage_header_with_valid_checksum_is_a_typed_model_error() {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC);
+        bytes.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        let hdr = b"this is not json";
+        bytes.extend_from_slice(&(hdr.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(hdr);
+        let ck = checksum(&bytes);
+        bytes.extend_from_slice(&ck.to_le_bytes());
+        let err = model_from_bytes(&bytes, "mem").unwrap_err();
+        assert!(err.to_string().contains("JSON"), "{err}");
+    }
+
+    #[test]
+    fn full_kernel_infinite_self_terms_survive_the_binary_payload() {
+        // a fit whose k exceeds the populated clusters can carry
+        // f64::INFINITY self-terms; those travel in the payload (JSON
+        // could not hold them) and must come back bit-identical
+        let ds = data::gaussian_blobs(&mut Pcg64::seed(40), 40, 3, 2, 0.2);
+        let model = KernelClusterer::new(4)
+            .method(Method::FullKernel)
+            .kmeans_restarts(2)
+            .seed(3)
+            .fit(&ds.x)
+            .unwrap();
+        let back = model_from_bytes(&model_to_bytes(&model), "mem").unwrap();
+        assert_eq!(back.predict(&ds.x).unwrap(), model.predict(&ds.x).unwrap());
+    }
+
+    #[test]
+    fn checksum_is_fnv1a() {
+        // spot-check against the published FNV-1a test vectors
+        assert_eq!(checksum(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(checksum(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+}

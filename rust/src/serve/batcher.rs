@@ -1,0 +1,96 @@
+//! The bounded micro-batch queue at the heart of [`super::ModelServer`].
+//!
+//! Concurrent request threads [`push`](Batcher::push) into a bounded
+//! queue (blocking while full — the same backpressure discipline as the
+//! sharded sketch pass's bounded channel); one batch worker drains up to
+//! `max_batch` requests at a time with [`next_batch`](Batcher::next_batch)
+//! and fans them out over the shared fork-join pool.
+//! [`close`](Batcher::close) wakes every waiter: producers get a typed
+//! rejection, the worker drains what is left and exits.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+use crate::error::{Result, RkcError};
+
+use super::Request;
+
+struct State {
+    queue: VecDeque<Request>,
+    closed: bool,
+}
+
+/// Bounded multi-producer / single-consumer request queue with
+/// condvar-based blocking on both ends.
+pub(crate) struct Batcher {
+    state: Mutex<State>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    cap: usize,
+}
+
+impl Batcher {
+    pub(crate) fn new(cap: usize) -> Self {
+        assert!(cap > 0, "queue capacity must be positive");
+        Batcher {
+            state: Mutex::new(State { queue: VecDeque::new(), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            cap,
+        }
+    }
+
+    /// Enqueue a request, blocking while the queue is at capacity.
+    /// Returns a typed error once the server has shut down.
+    pub(crate) fn push(&self, req: Request) -> Result<()> {
+        let mut st = self.state.lock().expect("serve queue poisoned");
+        while st.queue.len() >= self.cap && !st.closed {
+            st = self.not_full.wait(st).expect("serve queue poisoned");
+        }
+        if st.closed {
+            return Err(RkcError::backend("model server is shut down"));
+        }
+        st.queue.push_back(req);
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Take the next batch (1..=`max` requests), blocking while the
+    /// queue is empty. Returns `None` once the queue is closed *and*
+    /// fully drained — the worker's exit signal.
+    pub(crate) fn next_batch(&self, max: usize) -> Option<Vec<Request>> {
+        let mut st = self.state.lock().expect("serve queue poisoned");
+        while st.queue.is_empty() && !st.closed {
+            st = self.not_empty.wait(st).expect("serve queue poisoned");
+        }
+        if st.queue.is_empty() {
+            return None; // closed and drained
+        }
+        let take = st.queue.len().min(max.max(1));
+        let batch: Vec<Request> = st.queue.drain(..take).collect();
+        drop(st);
+        // every producer blocked on a full queue may now have room
+        self.not_full.notify_all();
+        Some(batch)
+    }
+
+    /// Current queue depth (for health reporting; racy by nature).
+    pub(crate) fn depth(&self) -> usize {
+        self.state.lock().expect("serve queue poisoned").queue.len()
+    }
+
+    /// Whether the queue has been closed (worker exited or the server
+    /// shut down) — the health endpoint's liveness signal.
+    pub(crate) fn is_closed(&self) -> bool {
+        self.state.lock().expect("serve queue poisoned").closed
+    }
+
+    /// Close the queue: producers are rejected from now on, the worker
+    /// drains the remainder and exits.
+    pub(crate) fn close(&self) {
+        self.state.lock().expect("serve queue poisoned").closed = true;
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+}

@@ -1,0 +1,579 @@
+//! Zero-dependency HTTP/1.1 front-end over a [`ModelServer`] —
+//! `std::net` only, JSON in/out, one short-lived thread per connection
+//! (`Connection: close`).
+//!
+//! # Protocol
+//!
+//! | endpoint        | request body                          | 200 response              |
+//! |-----------------|---------------------------------------|---------------------------|
+//! | `POST /predict` | `{"points": [[x, y, …], …]}`          | `{"labels": [0, 1, …]}`   |
+//! | `POST /embed`   | `{"points": [[x, y, …], …]}`          | `{"embedding": [[…], …]}` |
+//! | `GET /healthz`  | —                                     | status + serving counters |
+//!
+//! Each inner `points` array is one query point (its length must match
+//! the model's input dimension); `embedding` returns one r-vector per
+//! point, with any non-finite coordinate (a degenerate query can
+//! overflow the kernel) downgraded to `null` so the body stays valid
+//! JSON. Malformed JSON, wrong shapes, and unsupported model
+//! operations answer **4xx with an `{"error": …}` body** — the server
+//! never crashes on bad input. Backend failures answer 5xx.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::error::RkcError;
+use crate::linalg::Mat;
+use crate::util::Json;
+
+use super::{ModelServer, ServerHandle};
+
+/// request-head cap (request line + headers)
+const MAX_HEAD: usize = 16 * 1024;
+/// request-body cap. Sized for generous predict batches (a 1 MiB JSON
+/// body is ~6k points in 8 dimensions), not for arbitrary uploads: the
+/// body, its parsed JSON tree (~16-32× larger for bodies of tiny
+/// numbers), and the query matrix all live on the per-connection thread
+/// *before* the bounded queue's backpressure applies. The aggregate
+/// worst case — [`MAX_CONNECTIONS`] × this cap × the tree amplification
+/// (64 × 1 MiB × ~32 ≈ 2 GiB) — is what this number actually bounds;
+/// raise it only together with that arithmetic.
+const MAX_BODY: usize = 1024 * 1024;
+/// total wall-clock budget for reading one request — the per-read
+/// timeout alone would let a slow-loris client dribble bytes and pin a
+/// connection thread indefinitely
+const REQUEST_DEADLINE: Duration = Duration::from_secs(30);
+/// concurrent connection-thread cap: each connection buffers its body,
+/// JSON tree, and query matrix *before* the bounded queue's
+/// backpressure applies, so aggregate pre-queue memory must be bounded
+/// too; excess connections get an immediate 503
+const MAX_CONNECTIONS: usize = 64;
+/// total wall-clock budget for writing one response — the write-side
+/// mirror of [`REQUEST_DEADLINE`]: a client draining its receive window
+/// one byte at a time must not pin a connection thread (and a multi-MB
+/// response buffer) past this
+const RESPONSE_DEADLINE: Duration = Duration::from_secs(30);
+
+/// A running HTTP front-end. Dropping (or
+/// [`shutdown`](HttpServer::shutdown)) stops the accept loop;
+/// [`wait`](HttpServer::wait) blocks until shutdown — the CLI's serve
+/// loop.
+pub struct HttpServer {
+    local: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+/// Bind `addr` (e.g. `"127.0.0.1:7878"`; port 0 picks a free port) and
+/// serve `server`'s model over HTTP until shutdown. Returns immediately;
+/// the accept loop runs on its own thread and each connection is handled
+/// on a short-lived worker thread feeding the server's micro-batch
+/// queue.
+pub fn serve_http(server: &ModelServer, addr: &str) -> crate::error::Result<HttpServer> {
+    let listener =
+        TcpListener::bind(addr).map_err(|e| RkcError::io(format!("binding {addr}"), e))?;
+    let local = listener
+        .local_addr()
+        .map_err(|e| RkcError::io(format!("resolving local address of {addr}"), e))?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop_flag = Arc::clone(&stop);
+    let handle = server.handle();
+    let accept = std::thread::Builder::new()
+        .name("rkc-serve-http".into())
+        .spawn(move || {
+            let active = Arc::new(AtomicUsize::new(0));
+            for conn in listener.incoming() {
+                if stop_flag.load(Ordering::SeqCst) {
+                    break;
+                }
+                let mut stream = match conn {
+                    Ok(s) => s,
+                    // fd exhaustion etc. — back off instead of spinning
+                    Err(_) => {
+                        std::thread::sleep(Duration::from_millis(10));
+                        continue;
+                    }
+                };
+                // shed load once the connection-thread cap is reached
+                // (check-then-add may overshoot by a race; the cap is a
+                // resource bound, not an exact count)
+                if active.load(Ordering::Relaxed) >= MAX_CONNECTIONS {
+                    // overload is exactly when operators watch the
+                    // counters — shed responses must show up in them
+                    handle.shared.counters.http_requests.fetch_add(1, Ordering::Relaxed);
+                    handle.shared.counters.http_failures.fetch_add(1, Ordering::Relaxed);
+                    // write the (tiny) 503 off-thread so a hostile peer
+                    // can never stall the accept loop; if even that
+                    // spawn fails, dropping the connection sheds harder
+                    let _ = std::thread::Builder::new()
+                        .name("rkc-serve-shed".into())
+                        .spawn(move || {
+                            let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+                            write_response(
+                                &mut stream,
+                                503,
+                                &error_json("too many concurrent connections"),
+                            );
+                        });
+                    continue;
+                }
+                active.fetch_add(1, Ordering::Relaxed);
+                let h = handle.clone();
+                let slot = Arc::clone(&active);
+                // a failed spawn (thread exhaustion) sheds this one
+                // connection — the closure (and stream) drop — instead
+                // of panicking the accept loop
+                let spawned = std::thread::Builder::new()
+                    .name("rkc-serve-conn".into())
+                    .spawn(move || {
+                        // release the slot on normal return and unwind
+                        struct Slot(Arc<AtomicUsize>);
+                        impl Drop for Slot {
+                            fn drop(&mut self) {
+                                self.0.fetch_sub(1, Ordering::Relaxed);
+                            }
+                        }
+                        let _slot = Slot(slot);
+                        handle_conn(stream, &h);
+                    });
+                if spawned.is_err() {
+                    active.fetch_sub(1, Ordering::Relaxed);
+                }
+            }
+        })
+        .map_err(|e| RkcError::io("spawning the http accept thread".to_string(), e))?;
+    Ok(HttpServer { local, stop, accept: Some(accept) })
+}
+
+impl HttpServer {
+    /// The bound address (useful with port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Stop accepting connections and join the accept thread.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    /// Block until the server shuts down (never, unless another owner of
+    /// the process stops it) — the CLI `rkc serve` foreground loop.
+    pub fn wait(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    fn stop_and_join(&mut self) {
+        if self.accept.is_none() {
+            return;
+        }
+        self.stop.store(true, Ordering::SeqCst);
+        // the accept loop is blocked in accept(2); poke it awake. A
+        // wildcard bind (0.0.0.0 / ::) is not connectable everywhere —
+        // aim the wake-up at the loopback of the same family instead.
+        let wake = if self.local.ip().is_unspecified() {
+            let loopback: IpAddr = match self.local.ip() {
+                IpAddr::V4(_) => Ipv4Addr::LOCALHOST.into(),
+                IpAddr::V6(_) => Ipv6Addr::LOCALHOST.into(),
+            };
+            SocketAddr::new(loopback, self.local.port())
+        } else {
+            self.local
+        };
+        match TcpStream::connect_timeout(&wake, Duration::from_secs(1)) {
+            Ok(_) => {
+                if let Some(h) = self.accept.take() {
+                    let _ = h.join();
+                }
+            }
+            // the wake-up could not reach the listener (self-connect
+            // firewalled?): detach the accept thread instead of hanging
+            // the caller in join(); it exits with the process
+            Err(_) => {
+                self.accept.take();
+            }
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+struct HttpRequest {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+}
+
+fn handle_conn(mut stream: TcpStream, handle: &ServerHandle) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    // symmetric defense: a client that never reads its response must
+    // not pin this thread (and the response buffer) forever
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
+    let counters = &handle.shared.counters;
+    let (status, body) = match read_request(&mut stream) {
+        Ok(req) => {
+            counters.http_requests.fetch_add(1, Ordering::Relaxed);
+            route(handle, &req)
+        }
+        // a connection that closed without sending a single byte is
+        // port-scan / LB-probe noise: no response, no counter traffic
+        Err((0, _)) => return,
+        // anything that DID send bytes and failed (413, 431, 408, bad
+        // head) is real rejected traffic operators must see
+        Err((status, msg)) => {
+            counters.http_requests.fetch_add(1, Ordering::Relaxed);
+            (status, error_json(&msg))
+        }
+    };
+    if status >= 400 {
+        counters.http_failures.fetch_add(1, Ordering::Relaxed);
+    }
+    write_response(&mut stream, status, &body);
+    // half-close, then briefly drain whatever request bytes are still in
+    // flight (e.g. the body behind a 413 written straight after the
+    // head): closing with unread data makes the kernel RST the
+    // connection, which can destroy the queued response before the
+    // client reads it
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+    let mut sink = [0u8; 8192];
+    let drain_started = std::time::Instant::now();
+    while drain_started.elapsed() < Duration::from_secs(2)
+        && matches!(stream.read(&mut sink), Ok(n) if n > 0)
+    {}
+}
+
+fn route(handle: &ServerHandle, req: &HttpRequest) -> (u16, String) {
+    match (req.method.as_str(), req.path.as_str()) {
+        // a closed queue (worker died / server shut down) must fail the
+        // health probe — a 200 here would keep load balancers routing
+        // traffic to a server that 503s every predict
+        ("GET", "/healthz") => {
+            let closed = handle.shared.queue.is_closed();
+            (if closed { 503 } else { 200 }, health_json(handle, closed))
+        }
+        ("POST", "/predict") => match parse_points(&req.body) {
+            Err(msg) => (400, error_json(&msg)),
+            Ok(points) => match handle.predict(points) {
+                Ok(labels) => {
+                    let arr = labels.iter().map(|&l| Json::Num(l as f64)).collect();
+                    (200, obj([("labels", Json::Arr(arr))]))
+                }
+                Err(e) => error_response(&e),
+            },
+        },
+        ("POST", "/embed") => match parse_points(&req.body) {
+            Err(msg) => (400, error_json(&msg)),
+            Ok(points) => match handle.embed(points) {
+                Ok(y) => {
+                    // non-finite coordinates (a degenerate query can
+                    // overflow the kernel) become null — JSON has no
+                    // inf/NaN literals and the body must stay parseable
+                    let cols: Vec<Json> = (0..y.cols())
+                        .map(|j| {
+                            Json::Arr(
+                                (0..y.rows()).map(|i| Json::finite_num(y[(i, j)])).collect(),
+                            )
+                        })
+                        .collect();
+                    (200, obj([("embedding", Json::Arr(cols))]))
+                }
+                Err(e) => error_response(&e),
+            },
+        },
+        (_, "/healthz") | (_, "/predict") | (_, "/embed") => {
+            (405, error_json("method not allowed for this path"))
+        }
+        _ => (404, error_json("no such endpoint (try /healthz, /predict, /embed)")),
+    }
+}
+
+/// Map a typed serving error onto an HTTP status: caller mistakes are
+/// 4xx, backend unavailability is 503, anything else 500.
+fn error_response(e: &RkcError) -> (u16, String) {
+    let status = match e {
+        RkcError::InvalidConfig(_) | RkcError::Parse { .. } | RkcError::Unsupported(_) => 400,
+        RkcError::Backend(_) => 503,
+        _ => 500,
+    };
+    (status, error_json(&e.to_string()))
+}
+
+fn health_json(handle: &ServerHandle, closed: bool) -> String {
+    let shared = &handle.shared;
+    let stats = shared.snapshot();
+    let m = shared.model.metrics();
+    let input_dim = match shared.model.input_dim() {
+        Some(p) => Json::Num(p as f64),
+        None => Json::Null,
+    };
+    let status = if closed { "shutdown" } else { "ok" };
+    obj([
+        ("status", Json::Str(status.into())),
+        ("method", Json::Str(m.method.clone())),
+        ("k", Json::Num(shared.model.k() as f64)),
+        ("n_train", Json::Num(m.n as f64)),
+        ("rank", Json::Num(m.rank as f64)),
+        ("input_dim", input_dim),
+        ("queue_depth", Json::Num(shared.queue.depth() as f64)),
+        ("requests", Json::Num(stats.requests as f64)),
+        ("points", Json::Num(stats.points as f64)),
+        ("batches", Json::Num(stats.batches as f64)),
+        ("errors", Json::Num(stats.errors as f64)),
+        ("mean_batch", Json::Num(stats.mean_batch())),
+        ("mean_latency_us", Json::Num(stats.mean_latency_us())),
+        ("http_requests", Json::Num(stats.http_requests as f64)),
+        ("http_failures", Json::Num(stats.http_failures as f64)),
+        ("uptime_s", Json::Num(stats.uptime_s)),
+    ])
+}
+
+/// Decode `{"points": [[…], …]}` into a p × m query matrix (columns are
+/// samples). Every defect is a caller-facing message for a 400.
+fn parse_points(body: &[u8]) -> Result<Mat, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not UTF-8".to_string())?;
+    let v = Json::parse(text).map_err(|e| format!("malformed JSON: {e}"))?;
+    let pts = v
+        .get("points")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "missing 'points': expected {\"points\": [[x, y, ...], ...]}".to_string())?;
+    if pts.is_empty() {
+        return Err("'points' must be non-empty".to_string());
+    }
+    let p = pts[0]
+        .as_arr()
+        .ok_or_else(|| "each point must be an array of numbers".to_string())?
+        .len();
+    // validate every point's shape BEFORE allocating: p comes from
+    // attacker-controlled input, and p × m must be known body-bounded
+    // (all points the same length) before Mat::zeros commits the memory
+    for (j, point) in pts.iter().enumerate() {
+        let coords = point
+            .as_arr()
+            .ok_or_else(|| "each point must be an array of numbers".to_string())?;
+        if coords.len() != p {
+            return Err(format!("point {j} has {} coordinates, expected {p}", coords.len()));
+        }
+    }
+    let mut mat = Mat::zeros(p, pts.len());
+    for (j, point) in pts.iter().enumerate() {
+        let coords = point.as_arr().expect("shape validated above");
+        for (i, val) in coords.iter().enumerate() {
+            mat[(i, j)] = val
+                .as_f64()
+                .ok_or_else(|| format!("point {j} coordinate {i} is not a number"))?;
+        }
+    }
+    Ok(mat)
+}
+
+fn obj<const N: usize>(fields: [(&str, Json); N]) -> String {
+    let map: BTreeMap<String, Json> =
+        fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
+    Json::Obj(map).to_string()
+}
+
+fn error_json(msg: &str) -> String {
+    obj([("error", Json::Str(msg.to_string()))])
+}
+
+fn write_response(stream: &mut TcpStream, status: u16, body: &str) {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        _ => "Error",
+    };
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    let started = std::time::Instant::now();
+    if write_all_deadline(stream, head.as_bytes(), started) {
+        let _ = write_all_deadline(stream, body.as_bytes(), started);
+    }
+    let _ = stream.flush();
+}
+
+/// `write_all` with an aggregate [`RESPONSE_DEADLINE`]: the 10 s
+/// per-write timeout alone would let a 1-byte-per-window reader keep a
+/// multi-MB response alive indefinitely. Returns false when the write
+/// was abandoned.
+fn write_all_deadline(stream: &mut TcpStream, mut buf: &[u8], started: std::time::Instant) -> bool {
+    while !buf.is_empty() {
+        if started.elapsed() > RESPONSE_DEADLINE {
+            return false;
+        }
+        match stream.write(&buf[..buf.len().min(64 * 1024)]) {
+            Ok(0) | Err(_) => return false,
+            Ok(n) => buf = &buf[n..],
+        }
+    }
+    true
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Read one HTTP request (head + Content-Length body) off the stream.
+/// Errors carry the status/message pair for the failure response.
+fn read_request(stream: &mut TcpStream) -> Result<HttpRequest, (u16, String)> {
+    let started = std::time::Instant::now();
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 2048];
+    let head_end = loop {
+        if let Some(pos) = find_head_end(&buf) {
+            break pos;
+        }
+        if buf.len() > MAX_HEAD {
+            return Err((431, "request head too large".to_string()));
+        }
+        if started.elapsed() > REQUEST_DEADLINE {
+            return Err((408, "request took too long to arrive".to_string()));
+        }
+        // status 0 = nothing ever arrived (close OR idle timeout): the
+        // caller drops the connection silently — probe noise, not traffic
+        let n = match stream.read(&mut chunk) {
+            Ok(n) => n,
+            Err(_) if buf.is_empty() => return Err((0, String::new())),
+            Err(e) => return Err((400, format!("read error: {e}"))),
+        };
+        if n == 0 {
+            if buf.is_empty() {
+                return Err((0, String::new()));
+            }
+            return Err((400, "connection closed mid-request".to_string()));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..head_end])
+        .map_err(|_| (400, "request head is not UTF-8".to_string()))?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or_default();
+    let mut parts = request_line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| (400, "empty request line".to_string()))?
+        .to_string();
+    let path = parts
+        .next()
+        .ok_or_else(|| (400, "request line is missing a path".to_string()))?
+        .to_string();
+    let mut content_length = 0usize;
+    let mut expects_continue = false;
+    for line in lines {
+        if let Some((key, value)) = line.split_once(':') {
+            let key = key.trim();
+            let value = value.trim();
+            if key.eq_ignore_ascii_case("content-length") {
+                content_length = value
+                    .parse()
+                    .map_err(|_| (400, "unparseable content-length".to_string()))?;
+            } else if key.eq_ignore_ascii_case("expect")
+                && value.eq_ignore_ascii_case("100-continue")
+            {
+                expects_continue = true;
+            } else if key.eq_ignore_ascii_case("transfer-encoding") {
+                // we only speak Content-Length bodies; saying so beats a
+                // misleading 400 after silently dropping a chunked body
+                return Err((
+                    501,
+                    "transfer-encoding is not supported; send Content-Length".to_string(),
+                ));
+            }
+        }
+    }
+    if content_length > MAX_BODY {
+        return Err((413, format!("body of {content_length} bytes exceeds the limit")));
+    }
+    // curl (and friends) pause up to a second waiting for this interim
+    // response before sending any body over 1 KiB
+    if expects_continue && content_length > 0 {
+        let _ = stream.write_all(b"HTTP/1.1 100 Continue\r\n\r\n");
+    }
+    let mut body = buf[head_end + 4..].to_vec();
+    body.truncate(content_length);
+    if body.len() < content_length {
+        // 64 KiB reads (bodies run up to MAX_BODY) with the same overall
+        // deadline as the head. Deliberately NOT reserving the declared
+        // Content-Length up front: headers alone must never commit the
+        // full MAX_BODY per connection — memory grows as bytes arrive
+        body.reserve((content_length - body.len()).min(64 * 1024));
+        let mut big = vec![0u8; 64 * 1024];
+        while body.len() < content_length {
+            if started.elapsed() > REQUEST_DEADLINE {
+                return Err((408, "request body took too long to arrive".to_string()));
+            }
+            let want = big.len().min(content_length - body.len());
+            let n = stream
+                .read(&mut big[..want])
+                .map_err(|e| (400, format!("read error: {e}")))?;
+            if n == 0 {
+                return Err((400, "connection closed mid-body".to_string()));
+            }
+            body.extend_from_slice(&big[..n]);
+        }
+    }
+    Ok(HttpRequest { method, path, body })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_points_builds_column_major_queries() {
+        let m = parse_points(br#"{"points": [[1.0, 2.0], [3.5, -4.0], [0, 1]]}"#).unwrap();
+        assert_eq!((m.rows(), m.cols()), (2, 3));
+        assert_eq!(m[(0, 0)], 1.0);
+        assert_eq!(m[(1, 1)], -4.0);
+        assert_eq!(m[(1, 2)], 1.0);
+    }
+
+    #[test]
+    fn parse_points_rejects_malformed_bodies() {
+        for bad in [
+            &b"{not json"[..],
+            &br#"{"pts": [[1]]}"#[..],
+            &br#"{"points": []}"#[..],
+            &br#"{"points": [1, 2]}"#[..],
+            &br#"{"points": [[1, 2], [3]]}"#[..],
+            &br#"{"points": [["a", "b"]]}"#[..],
+            &b"\xff\xfe"[..],
+        ] {
+            assert!(parse_points(bad).is_err(), "{:?} should fail", String::from_utf8_lossy(bad));
+        }
+    }
+
+    #[test]
+    fn error_statuses_map_caller_vs_backend_faults() {
+        assert_eq!(error_response(&RkcError::invalid_config("x")).0, 400);
+        assert_eq!(error_response(&RkcError::unsupported("x")).0, 400);
+        assert_eq!(error_response(&RkcError::backend("down")).0, 503);
+        assert_eq!(error_response(&RkcError::dataset("x")).0, 500);
+    }
+
+    #[test]
+    fn head_end_detection() {
+        assert_eq!(find_head_end(b"GET / HTTP/1.1\r\n\r\nbody"), Some(16));
+        assert_eq!(find_head_end(b"partial\r\n"), None);
+    }
+}

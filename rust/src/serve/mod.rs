@@ -1,0 +1,434 @@
+//! `rkc::serve` — a zero-dependency batched serving runtime for fitted
+//! kernel-clustering models.
+//!
+//! The paper's output is a compact served object: column map + rank-r
+//! embedding + centroids instead of the O(n²) kernel matrix. This module
+//! keeps that object resident and answers `embed`/`predict` queries
+//! against it:
+//!
+//! - [`ModelServer`] owns a loaded [`FittedModel`] and **micro-batches**
+//!   concurrent requests: callers enqueue into a bounded queue (blocking
+//!   when full — the same backpressure pattern as the sharded sketch
+//!   pass) and a batch worker drains up to `max_batch` requests at a
+//!   time, fanning them out over the shared fork-join pool
+//!   ([`crate::util::parallel`]).
+//! - [`serve_http`] puts an HTTP/1.1 front-end (plain `std::net`, JSON
+//!   request/response, `/healthz`, latency/throughput counters) on top.
+//!
+//! Requests are processed *independently* (one model call per request,
+//! never concatenated), so a served answer is bit-identical to calling
+//! [`FittedModel::predict`] directly — batching changes latency and
+//! throughput, never results. Combined with the bit-exact `.rkc`
+//! persistence ([`crate::model_io`]): fit → save → load → serve returns
+//! exactly the predictions of the original in-memory model.
+//!
+//! # Example
+//!
+//! ```
+//! use rkc::api::KernelClusterer;
+//! use rkc::serve::{ModelServer, ServeOpts};
+//! use rkc::data;
+//! use rkc::rng::Pcg64;
+//!
+//! let ds = data::cross_lines(&mut Pcg64::seed(2), 128);
+//! let model = KernelClusterer::new(2).oversample(8).fit(&ds.x)?;
+//! let direct = model.predict(&ds.x)?;
+//!
+//! let server = ModelServer::new(model, ServeOpts::default())?;
+//! let handle = server.handle(); // Clone one per client thread
+//! assert_eq!(handle.predict(ds.x.clone())?, direct);
+//! assert!(server.stats().requests >= 1);
+//! server.shutdown();
+//! # Ok::<(), rkc::error::RkcError>(())
+//! ```
+
+mod batcher;
+mod http;
+
+pub use http::{serve_http, HttpServer};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::api::FittedModel;
+use crate::error::{Result, RkcError};
+use crate::linalg::Mat;
+use crate::util::parallel;
+
+use batcher::Batcher;
+
+/// Tuning knobs for a [`ModelServer`].
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOpts {
+    /// Bounded queue capacity; producers block (backpressure) when the
+    /// queue holds this many pending requests.
+    pub queue_cap: usize,
+    /// Most requests drained into one micro-batch.
+    pub max_batch: usize,
+    /// Worker threads a batch fans out over (`0` = auto-detect, the
+    /// crate-wide convention).
+    pub threads: usize,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts { queue_cap: 64, max_batch: 16, threads: 0 }
+    }
+}
+
+/// What a queued request asks of the model.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum Op {
+    Predict,
+    Embed,
+}
+
+/// A successful reply.
+pub(crate) enum Reply {
+    Labels(Vec<usize>),
+    Points(Mat),
+}
+
+/// One queued request: the operation, its query points (p × m, columns
+/// are samples), the reply channel, and the enqueue timestamp for the
+/// latency counters.
+pub(crate) struct Request {
+    op: Op,
+    points: Mat,
+    reply: mpsc::Sender<Result<Reply>>,
+    enqueued: Instant,
+}
+
+/// Monotonic serving counters (all atomics; written by the batch worker
+/// and the HTTP front-end, snapshotted by [`ModelServer::stats`]).
+#[derive(Default)]
+struct Counters {
+    requests: AtomicU64,
+    points: AtomicU64,
+    batches: AtomicU64,
+    errors: AtomicU64,
+    latency_us_total: AtomicU64,
+    http_requests: AtomicU64,
+    http_failures: AtomicU64,
+}
+
+/// A point-in-time snapshot of a server's throughput/latency counters.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeStats {
+    /// model calls answered (including per-request errors)
+    pub requests: u64,
+    /// total query points across all answered requests
+    pub points: u64,
+    /// micro-batches executed
+    pub batches: u64,
+    /// requests that returned a per-request error
+    pub errors: u64,
+    /// cumulative enqueue→reply latency, microseconds
+    pub latency_us_total: u64,
+    /// HTTP requests handled by the front-end — connections that sent
+    /// at least one byte plus load-shed 503s, including requests
+    /// rejected before routing (0 without a front-end; silent
+    /// connect-and-close probes are not counted)
+    pub http_requests: u64,
+    /// HTTP requests answered with a non-2xx status
+    pub http_failures: u64,
+    /// seconds since the server started
+    pub uptime_s: f64,
+}
+
+impl ServeStats {
+    /// Mean enqueue→reply latency in microseconds (0 when idle).
+    pub fn mean_latency_us(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.latency_us_total as f64 / self.requests as f64
+        }
+    }
+
+    /// Mean requests per micro-batch (the batching efficiency signal).
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+struct Shared {
+    model: FittedModel,
+    queue: Batcher,
+    counters: Counters,
+    threads: usize,
+    max_batch: usize,
+    started: Instant,
+}
+
+/// Owns a loaded model and the micro-batching worker. Create with
+/// [`new`](ModelServer::new), hand [`handle`](ModelServer::handle)s to
+/// client threads (or [`serve_http`]), and
+/// [`shutdown`](ModelServer::shutdown) when done (dropping shuts down
+/// too).
+pub struct ModelServer {
+    shared: Arc<Shared>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl ModelServer {
+    /// Start serving `model` with the given options. Spawns the batch
+    /// worker thread immediately; a failed spawn (thread exhaustion) is
+    /// a typed error, per the crate-wide contract.
+    pub fn new(model: FittedModel, opts: ServeOpts) -> Result<Self> {
+        let shared = Arc::new(Shared {
+            model,
+            queue: Batcher::new(opts.queue_cap.max(1)),
+            counters: Counters::default(),
+            threads: parallel::resolve_threads(opts.threads).max(1),
+            max_batch: opts.max_batch.max(1),
+            started: Instant::now(),
+        });
+        let worker_shared = Arc::clone(&shared);
+        let worker = std::thread::Builder::new()
+            .name("rkc-serve-batcher".into())
+            .spawn(move || {
+                // normal exit or panic alike: close the queue and drop
+                // whatever is still enqueued, so producers get a typed
+                // rejection and waiting clients see their reply channel
+                // hang up — never an eternal block on a dead worker
+                let _close = CloseOnExit(&worker_shared.queue);
+                worker_loop(&worker_shared);
+            })
+            .map_err(|e| RkcError::io("spawning the serve batch worker".to_string(), e))?;
+        Ok(ModelServer { shared, worker: Some(worker) })
+    }
+
+    /// A cloneable client handle; each concurrent submitter should hold
+    /// its own.
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle { shared: Arc::clone(&self.shared) }
+    }
+
+    /// The served model.
+    pub fn model(&self) -> &FittedModel {
+        &self.shared.model
+    }
+
+    /// Snapshot the latency/throughput counters.
+    pub fn stats(&self) -> ServeStats {
+        self.shared.snapshot()
+    }
+
+    /// Current queue depth (pending, not yet batched).
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue.depth()
+    }
+
+    /// Stop accepting requests, drain the queue, and join the worker.
+    pub fn shutdown(self) {
+        drop(self);
+    }
+}
+
+impl Drop for ModelServer {
+    fn drop(&mut self) {
+        self.shared.queue.close();
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A client of a [`ModelServer`]: submits one request at a time and
+/// blocks for its reply (micro-batching happens behind the queue).
+#[derive(Clone)]
+pub struct ServerHandle {
+    shared: Arc<Shared>,
+}
+
+impl ServerHandle {
+    /// Assign each column of `points` (p × m) to a trained cluster.
+    /// Bit-identical to [`FittedModel::predict`] on the same points.
+    pub fn predict(&self, points: Mat) -> Result<Vec<usize>> {
+        match self.call(Op::Predict, points)? {
+            Reply::Labels(l) => Ok(l),
+            Reply::Points(_) => unreachable!("predict never yields points"),
+        }
+    }
+
+    /// Embed each column of `points` into the trained space (r × m).
+    /// Bit-identical to [`FittedModel::embed`] on the same points.
+    pub fn embed(&self, points: Mat) -> Result<Mat> {
+        match self.call(Op::Embed, points)? {
+            Reply::Points(y) => Ok(y),
+            Reply::Labels(_) => unreachable!("embed never yields labels"),
+        }
+    }
+
+    fn call(&self, op: Op, points: Mat) -> Result<Reply> {
+        let (tx, rx) = mpsc::channel();
+        self.shared.queue.push(Request { op, points, reply: tx, enqueued: Instant::now() })?;
+        rx.recv()
+            .map_err(|_| RkcError::backend("serving worker terminated before replying"))?
+    }
+}
+
+impl Shared {
+    fn snapshot(&self) -> ServeStats {
+        let c = &self.counters;
+        ServeStats {
+            requests: c.requests.load(Ordering::Relaxed),
+            points: c.points.load(Ordering::Relaxed),
+            batches: c.batches.load(Ordering::Relaxed),
+            errors: c.errors.load(Ordering::Relaxed),
+            latency_us_total: c.latency_us_total.load(Ordering::Relaxed),
+            http_requests: c.http_requests.load(Ordering::Relaxed),
+            http_failures: c.http_failures.load(Ordering::Relaxed),
+            uptime_s: self.started.elapsed().as_secs_f64(),
+        }
+    }
+}
+
+/// Closes (and drains) the queue when dropped — runs on the worker
+/// thread's normal exit and on unwind, so a panicking model call can
+/// never leave producers blocked on a full queue or clients blocked on
+/// a reply that will never come.
+struct CloseOnExit<'a>(&'a Batcher);
+
+impl Drop for CloseOnExit<'_> {
+    fn drop(&mut self) {
+        self.0.close();
+        // dropping the leftover requests drops their reply senders,
+        // which errors out any client still waiting in recv()
+        while self.0.next_batch(usize::MAX).is_some() {}
+    }
+}
+
+/// Drain → fan out → deliver, until the queue closes. Each request is an
+/// independent model call (results never depend on batching); the fan-out
+/// rides [`parallel::map_indexed`], which returns results in request
+/// order.
+fn worker_loop(shared: &Shared) {
+    while let Some(batch) = shared.queue.next_batch(shared.max_batch) {
+        // count the batch up front: a client unblocked by its reply may
+        // snapshot the stats before this loop iteration finishes, and
+        // must never observe completed requests with zero batches
+        shared.counters.batches.fetch_add(1, Ordering::Relaxed);
+        // split the (!Sync) reply senders from the Sync compute inputs
+        // before fanning out
+        let mut jobs: Vec<(Op, Mat, Instant)> = Vec::with_capacity(batch.len());
+        let mut replies: Vec<mpsc::Sender<Result<Reply>>> = Vec::with_capacity(batch.len());
+        for req in batch {
+            jobs.push((req.op, req.points, req.enqueued));
+            replies.push(req.reply);
+        }
+        let model = &shared.model;
+        let results = parallel::map_indexed(jobs.len(), shared.threads, |i| {
+            let (op, points, _) = &jobs[i];
+            match op {
+                Op::Predict => model.predict(points).map(Reply::Labels),
+                Op::Embed => model.embed(points).map(Reply::Points),
+            }
+        });
+        let delivered = Instant::now();
+        let c = &shared.counters;
+        for (((_, points, enqueued), reply), result) in
+            jobs.into_iter().zip(replies).zip(results)
+        {
+            c.requests.fetch_add(1, Ordering::Relaxed);
+            c.points.fetch_add(points.cols() as u64, Ordering::Relaxed);
+            if result.is_err() {
+                c.errors.fetch_add(1, Ordering::Relaxed);
+            }
+            let us = delivered.duration_since(enqueued).as_micros().min(u64::MAX as u128);
+            c.latency_us_total.fetch_add(us as u64, Ordering::Relaxed);
+            // a vanished caller is not an error; drop the reply
+            let _ = reply.send(result);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::KernelClusterer;
+    use crate::data;
+    use crate::rng::Pcg64;
+
+    fn small_model() -> FittedModel {
+        let ds = data::cross_lines(&mut Pcg64::seed(51), 96);
+        KernelClusterer::new(2).oversample(8).seed(9).fit(&ds.x).unwrap()
+    }
+
+    #[test]
+    fn served_predictions_match_direct_calls() {
+        let model = small_model();
+        let query = data::cross_lines(&mut Pcg64::seed(52), 33).x;
+        let direct_labels = model.predict(&query).unwrap();
+        let direct_embed = model.embed(&query).unwrap();
+        let server = ModelServer::new(model, ServeOpts::default()).unwrap();
+        let h = server.handle();
+        assert_eq!(h.predict(query.clone()).unwrap(), direct_labels);
+        assert_eq!(h.embed(query).unwrap().data(), direct_embed.data());
+        let stats = server.stats();
+        assert_eq!(stats.requests, 2);
+        assert_eq!(stats.points, 66);
+        assert!(stats.batches >= 1 && stats.batches <= 2);
+        assert_eq!(stats.errors, 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_micro_batch_and_agree() {
+        let model = small_model();
+        let query = data::cross_lines(&mut Pcg64::seed(53), 17).x;
+        let want = model.predict(&query).unwrap();
+        let server =
+            ModelServer::new(model, ServeOpts { max_batch: 8, ..Default::default() }).unwrap();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..6)
+                .map(|_| {
+                    let h = server.handle();
+                    let q = query.clone();
+                    s.spawn(move || h.predict(q).unwrap())
+                })
+                .collect();
+            for t in handles {
+                assert_eq!(t.join().unwrap(), want);
+            }
+        });
+        let stats = server.stats();
+        assert_eq!(stats.requests, 6);
+        assert!(stats.mean_batch() >= 1.0);
+        assert!(stats.mean_latency_us() > 0.0);
+    }
+
+    #[test]
+    fn per_request_errors_are_typed_not_fatal() {
+        let model = small_model();
+        let query = data::cross_lines(&mut Pcg64::seed(54), 5).x;
+        let want = model.predict(&query).unwrap();
+        let server = ModelServer::new(model, ServeOpts::default()).unwrap();
+        let h = server.handle();
+        // wrong input dimension: this request fails, the server survives
+        let wrong = crate::linalg::Mat::zeros(7, 3);
+        assert!(h.predict(wrong).is_err());
+        assert_eq!(h.predict(query).unwrap(), want);
+        let stats = server.stats();
+        assert_eq!(stats.errors, 1);
+        assert_eq!(stats.requests, 2);
+    }
+
+    #[test]
+    fn shutdown_rejects_new_requests_with_a_typed_error() {
+        let model = small_model();
+        let server = ModelServer::new(model, ServeOpts::default()).unwrap();
+        let h = server.handle();
+        server.shutdown();
+        let query = data::cross_lines(&mut Pcg64::seed(55), 3).x;
+        let err = h.predict(query).unwrap_err();
+        assert!(err.to_string().contains("shut down"), "{err}");
+    }
+}

@@ -21,8 +21,20 @@ pub enum Json {
 }
 
 impl Json {
+    /// A number, with non-finite values downgraded to [`Json::Null`] —
+    /// JSON has no inf/NaN literals, so this is the one shared rule for
+    /// putting an arbitrary `f64` into a document that must stay
+    /// parseable (model headers, HTTP responses, bench records).
+    pub fn finite_num(v: f64) -> Json {
+        if v.is_finite() {
+            Json::Num(v)
+        } else {
+            Json::Null
+        }
+    }
+
     pub fn parse(src: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { src: src.as_bytes(), pos: 0 };
+        let mut p = Parser { src: src.as_bytes(), pos: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -92,9 +104,16 @@ impl fmt::Display for JsonError {
 
 impl std::error::Error for JsonError {}
 
+/// Nesting cap for the recursive-descent parser. The parser now also
+/// reads untrusted input (HTTP request bodies, model-file headers), and
+/// unbounded recursion would let `[[[[…` overflow the thread stack; our
+/// real documents nest ≤ 4 levels, so 128 is generous.
+const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     src: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -151,12 +170,22 @@ impl<'a> Parser<'a> {
         }
     }
 
+    fn enter(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting deeper than the supported maximum"));
+        }
+        Ok(())
+    }
+
     fn object(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
         self.expect(b'{')?;
         let mut map = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(map));
         }
         loop {
@@ -169,18 +198,23 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
-                Some(b'}') => return Ok(Json::Obj(map)),
+                Some(b'}') => {
+                    self.depth -= 1;
+                    return Ok(Json::Obj(map));
+                }
                 _ => return Err(self.err("expected ',' or '}'")),
             }
         }
     }
 
     fn array(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
         self.expect(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(items));
         }
         loop {
@@ -188,7 +222,10 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
-                Some(b']') => return Ok(Json::Arr(items)),
+                Some(b']') => {
+                    self.depth -= 1;
+                    return Ok(Json::Arr(items));
+                }
                 _ => return Err(self.err("expected ',' or ']'")),
             }
         }
@@ -274,7 +311,11 @@ impl fmt::Display for Json {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(v) => {
-                if v.fract() == 0.0 && v.abs() < 1e15 {
+                // the integer short form would collapse -0.0 to "0" and
+                // break bit-exact f64 roundtrips; "-0" parses back to
+                // -0.0, so route it through the float path
+                if v.fract() == 0.0 && v.abs() < 1e15 && !(*v == 0.0 && v.is_sign_negative())
+                {
                     write!(f, "{}", *v as i64)
                 } else {
                     write!(f, "{v}")
@@ -365,6 +406,15 @@ mod tests {
     }
 
     #[test]
+    fn negative_zero_roundtrips_bit_exactly() {
+        assert_eq!(Json::Num(-0.0).to_string(), "-0");
+        let back = Json::parse("-0").unwrap().as_f64().unwrap();
+        assert_eq!(back.to_bits(), (-0.0f64).to_bits());
+        // the positive-zero short form is untouched
+        assert_eq!(Json::Num(0.0).to_string(), "0");
+    }
+
+    #[test]
     fn parses_real_manifest_shape() {
         let src = r#"[
  {"name": "precond_n256_b64", "file": "precond_n256_b64.hlo.txt",
@@ -378,6 +428,27 @@ mod tests {
         assert_eq!(arr.len(), 1);
         assert_eq!(arr[0].get("params").unwrap().str_field("op").unwrap(), "precond");
         assert_eq!(arr[0].get("inputs").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn pathological_nesting_is_an_error_not_a_stack_overflow() {
+        // untrusted input (HTTP bodies, model headers) must never crash
+        // the parser
+        let deep_ok = format!("{}1{}", "[".repeat(100), "]".repeat(100));
+        assert!(Json::parse(&deep_ok).is_ok());
+        let too_deep = format!("{}1{}", "[".repeat(50_000), "]".repeat(50_000));
+        let err = Json::parse(&too_deep).unwrap_err();
+        assert!(err.msg.contains("nesting"), "{err}");
+        let unclosed = "[".repeat(50_000);
+        assert!(Json::parse(&unclosed).is_err());
+    }
+
+    #[test]
+    fn finite_num_downgrades_non_finite_to_null() {
+        assert_eq!(Json::finite_num(2.5), Json::Num(2.5));
+        assert_eq!(Json::finite_num(f64::INFINITY), Json::Null);
+        assert_eq!(Json::finite_num(f64::NEG_INFINITY), Json::Null);
+        assert_eq!(Json::finite_num(f64::NAN), Json::Null);
     }
 
     #[test]

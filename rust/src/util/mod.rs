@@ -31,11 +31,16 @@ pub fn std_dev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
 }
 
-/// p-th percentile (nearest-rank) of an unsorted slice.
+/// p-th percentile (nearest-rank) of an unsorted slice. NaN inputs are
+/// tolerated: the IEEE total order is deterministic and never panics
+/// (serving latency counters feed this; a stray NaN must not take down
+/// the metrics path). Note the total order sorts positive NaN after
+/// +inf but *negative* NaN before -inf, so a NaN in the data can
+/// surface at either extreme of the rank range.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!(!xs.is_empty());
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
     v[rank.min(v.len() - 1)]
 }
@@ -58,5 +63,20 @@ mod tests {
     fn stats_degenerate() {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(std_dev(&[5.0]), 0.0);
+    }
+
+    #[test]
+    fn percentile_survives_nan_inputs() {
+        // the old partial_cmp().unwrap() sort panicked here
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        // sorted [1, 2, 3, NaN]: nearest-rank 50th = index (0.5·3).round() = 2
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        // positive NaN sorts last under total order: only the top rank
+        // sees it; a sign-flipped NaN would sort first instead
+        assert!(percentile(&xs, 100.0).is_nan());
+        assert_eq!(percentile(&[-f64::NAN, 1.0, 2.0], 100.0), 2.0);
+        assert!(percentile(&[-f64::NAN, 1.0, 2.0], 0.0).is_nan());
+        assert!(percentile(&[f64::NAN], 50.0).is_nan());
     }
 }

@@ -1,0 +1,250 @@
+//! End-to-end serving contract: a model fitted in memory, saved to the
+//! `.rkc` format, reloaded, and queried through `ModelServer` — both
+//! in-process and over the HTTP front-end with concurrent clients —
+//! returns predictions bit-identical to `FittedModel::predict` on the
+//! original. Malformed requests get typed 4xx responses, never a crash.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+
+use rkc::api::{FittedModel, KernelClusterer};
+use rkc::config::Method;
+use rkc::data;
+use rkc::error::RkcError;
+use rkc::linalg::Mat;
+use rkc::rng::Pcg64;
+use rkc::serve::{serve_http, ModelServer, ServeOpts};
+use rkc::util::Json;
+
+fn tmp_path(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("rkc_serve_roundtrip_{}_{tag}.rkc", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string()
+}
+
+/// Minimal HTTP/1.1 client used by the tests (and mirrored by the CI
+/// smoke step): one request per connection, JSON in and out.
+fn http_request(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connecting to the serve front-end");
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: rkc\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes()).unwrap();
+    let mut resp = String::new();
+    stream.read_to_string(&mut resp).unwrap();
+    let status: u16 = resp
+        .split_whitespace()
+        .nth(1)
+        .expect("status line")
+        .parse()
+        .expect("numeric status");
+    let body = resp
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    (status, body)
+}
+
+fn points_json(x: &Mat) -> String {
+    let pts: Vec<Json> = (0..x.cols())
+        .map(|j| Json::Arr((0..x.rows()).map(|i| Json::Num(x[(i, j)])).collect()))
+        .collect();
+    Json::Obj(BTreeMap::from([("points".to_string(), Json::Arr(pts))])).to_string()
+}
+
+fn labels_from(body: &str) -> Vec<usize> {
+    Json::parse(body)
+        .expect("response is JSON")
+        .get("labels")
+        .expect("has labels")
+        .as_arr()
+        .expect("labels is an array")
+        .iter()
+        .map(|j| j.as_usize().expect("label is an integer"))
+        .collect()
+}
+
+#[test]
+fn saved_reloaded_served_predictions_are_bit_identical() {
+    for (tag, method) in [("one_pass", Method::OnePass), ("nystrom", Method::Nystrom { m: 40 })] {
+        let train = data::cross_lines(&mut Pcg64::seed(71), 256);
+        let model = KernelClusterer::new(2)
+            .method(method)
+            .rank(2)
+            .oversample(8)
+            .seed(19)
+            .fit(&train.x)
+            .unwrap();
+        let query = data::cross_lines(&mut Pcg64::seed(72), 48).x;
+        let want = model.predict(&query).unwrap();
+        let want_embed = model.embed(&query).unwrap();
+
+        // save → reload: bit-identical predictions and embeddings
+        let path = tmp_path(tag);
+        model.save(&path).unwrap();
+        let loaded = FittedModel::load(&path).unwrap();
+        assert_eq!(loaded.labels(), model.labels(), "{tag}");
+        assert_eq!(loaded.predict(&query).unwrap(), want, "{tag}");
+        assert_eq!(
+            loaded.embed(&query).unwrap().data(),
+            want_embed.data(),
+            "{tag}: reloaded embedding bits"
+        );
+
+        // in-process serving, 2 concurrent clients through the batcher
+        let server =
+            ModelServer::new(loaded, ServeOpts { max_batch: 4, ..Default::default() }).unwrap();
+        std::thread::scope(|s| {
+            let workers: Vec<_> = (0..2)
+                .map(|_| {
+                    let h = server.handle();
+                    let q = query.clone();
+                    s.spawn(move || h.predict(q).unwrap())
+                })
+                .collect();
+            for w in workers {
+                assert_eq!(w.join().unwrap(), want, "{tag}: served != direct");
+            }
+        });
+
+        // HTTP front-end, 2 concurrent clients
+        let http = serve_http(&server, "127.0.0.1:0").unwrap();
+        let addr = http.local_addr();
+        let body = points_json(&query);
+        std::thread::scope(|s| {
+            let clients: Vec<_> = (0..2)
+                .map(|_| {
+                    let b = body.clone();
+                    s.spawn(move || http_request(addr, "POST", "/predict", &b))
+                })
+                .collect();
+            for c in clients {
+                let (status, resp) = c.join().unwrap();
+                assert_eq!(status, 200, "{tag}: {resp}");
+                assert_eq!(labels_from(&resp), want, "{tag}: http != direct");
+            }
+        });
+
+        // the embedding travels bit-exactly through JSON too (shortest
+        // round-trip float formatting on both sides)
+        let (status, resp) = http_request(addr, "POST", "/embed", &body);
+        assert_eq!(status, 200, "{tag}: {resp}");
+        let emb = Json::parse(&resp).unwrap();
+        let emb = emb.get("embedding").unwrap().as_arr().unwrap();
+        assert_eq!(emb.len(), query.cols(), "{tag}");
+        for (j, point) in emb.iter().enumerate() {
+            let coords = point.as_arr().unwrap();
+            assert_eq!(coords.len(), want_embed.rows(), "{tag}");
+            for (i, c) in coords.iter().enumerate() {
+                let got = c.as_f64().unwrap();
+                let want_v = want_embed[(i, j)];
+                // strict bit equality: Json Display preserves even the
+                // sign of an exact zero ("-0"), so no exemptions needed
+                assert_eq!(
+                    got.to_bits(),
+                    want_v.to_bits(),
+                    "{tag}: embedding[{i},{j}] differs over HTTP: {got} vs {want_v}"
+                );
+            }
+        }
+
+        // malformed requests: typed 4xx, server stays alive
+        let (status, resp) = http_request(addr, "POST", "/predict", "{definitely not json");
+        assert_eq!(status, 400, "{tag}: {resp}");
+        assert!(resp.contains("error"), "{tag}: {resp}");
+        let (status, _) = http_request(addr, "POST", "/predict", r#"{"points": [[1, 2], [3]]}"#);
+        assert_eq!(status, 400, "{tag}: ragged points");
+        let (status, _) = http_request(addr, "GET", "/predict", "");
+        assert_eq!(status, 405, "{tag}: GET /predict");
+        let (status, _) = http_request(addr, "POST", "/nope", "{}");
+        assert_eq!(status, 404, "{tag}");
+
+        // still serving correctly after the bad requests
+        let (status, resp) = http_request(addr, "POST", "/predict", &body);
+        assert_eq!(status, 200, "{tag}");
+        assert_eq!(labels_from(&resp), want, "{tag}: survives bad input");
+
+        // health endpoint reports the counters
+        let (status, resp) = http_request(addr, "GET", "/healthz", "");
+        assert_eq!(status, 200, "{tag}");
+        let health = Json::parse(&resp).unwrap();
+        assert_eq!(health.get("status").unwrap().as_str().unwrap(), "ok", "{tag}");
+        assert!(health.get("requests").unwrap().as_f64().unwrap() >= 3.0, "{tag}");
+        assert!(health.get("http_requests").unwrap().as_f64().unwrap() >= 7.0, "{tag}");
+        assert!(health.get("http_failures").unwrap().as_f64().unwrap() >= 4.0, "{tag}");
+
+        http.shutdown();
+        server.shutdown();
+        std::fs::remove_file(&path).unwrap();
+    }
+}
+
+#[test]
+fn corrupt_and_future_model_files_are_typed_errors_at_the_api_surface() {
+    let train = data::cross_lines(&mut Pcg64::seed(73), 96);
+    let model = KernelClusterer::new(2).oversample(8).seed(5).fit(&train.x).unwrap();
+    let path = tmp_path("corrupt");
+    model.save(&path).unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+
+    // truncated payload
+    std::fs::write(&path, &bytes[..bytes.len() - 32]).unwrap();
+    assert!(matches!(FittedModel::load(&path).unwrap_err(), RkcError::Model { .. }));
+
+    // corrupt header byte → checksum mismatch
+    let mut corrupted = bytes.clone();
+    corrupted[20] ^= 0xff;
+    std::fs::write(&path, &corrupted).unwrap();
+    let err = FittedModel::load(&path).unwrap_err();
+    assert!(err.to_string().contains("checksum"), "{err}");
+
+    // a file claiming a future format version, re-sealed so only the
+    // version check fires
+    bytes[8..12].copy_from_slice(&7u32.to_le_bytes());
+    let end = bytes.len() - 8;
+    let ck = rkc::model_io::checksum(&bytes[..end]);
+    bytes[end..].copy_from_slice(&ck.to_le_bytes());
+    std::fs::write(&path, &bytes).unwrap();
+    assert!(matches!(
+        FittedModel::load(&path).unwrap_err(),
+        RkcError::ModelVersion { found: 7, .. }
+    ));
+
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn plain_kmeans_models_serve_too() {
+    // the input-space assigner has no embedding; predict works, embed is
+    // a per-request typed error that the server survives
+    let ds = data::gaussian_blobs(&mut Pcg64::seed(74), 90, 3, 3, 0.3);
+    let model = KernelClusterer::new(3)
+        .method(Method::PlainKmeans)
+        .seed(2)
+        .fit(&ds.x)
+        .unwrap();
+    let want = model.predict(&ds.x).unwrap();
+    let path = tmp_path("plain");
+    model.save(&path).unwrap();
+    let server =
+        ModelServer::new(FittedModel::load(&path).unwrap(), ServeOpts::default()).unwrap();
+    let h = server.handle();
+    assert!(h.embed(ds.x.clone()).is_err());
+    assert_eq!(h.predict(ds.x.clone()).unwrap(), want);
+
+    let http = serve_http(&server, "127.0.0.1:0").unwrap();
+    let body = points_json(&ds.x);
+    let (status, resp) = http_request(http.local_addr(), "POST", "/embed", &body);
+    assert_eq!(status, 400, "embed on a plain model is a client error: {resp}");
+    let (status, resp) = http_request(http.local_addr(), "POST", "/predict", &body);
+    assert_eq!(status, 200, "{resp}");
+    assert_eq!(labels_from(&resp), want);
+    http.shutdown();
+    server.shutdown();
+    std::fs::remove_file(&path).unwrap();
+}
