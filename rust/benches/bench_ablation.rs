@@ -5,7 +5,15 @@
 //! 2. SRHT vs dense Gaussian test matrix (accuracy parity, memory gap);
 //! 3. oversampling l sweep;
 //! 4. streaming batch size sweep (throughput vs transient memory).
+//!
+//! Every run rewrites `BENCH_ablation.json`: one object per grid point,
+//! tagged by a `bench` key per section (`ablation_precond`,
+//! `ablation_testmatrix`, `ablation_batch`). `RKC_BENCH_QUICK=1`
+//! shrinks n, trials, and the sweeps to a CI smoke shape.
 
+use std::collections::BTreeMap;
+
+use rkc::bench_harness::{quick_mode, write_bench_json};
 use rkc::config::{ExperimentConfig, Method};
 use rkc::coordinator::{build_dataset, run_trials};
 use rkc::kernels::{column_batches, BlockSource, NativeBlockSource};
@@ -13,12 +21,18 @@ use rkc::lowrank::{one_pass_recovery, streamed_frobenius_error, OnePassSketch};
 use rkc::metrics::{MemoryModel, Table};
 use rkc::rng::Pcg64;
 use rkc::sketch::Srht;
+use rkc::util::Json;
 
 fn main() {
-    let trials: usize = std::env::var("RKC_TRIALS").ok().and_then(|v| v.parse().ok()).unwrap_or(5);
+    let quick = quick_mode();
+    let trials: usize = std::env::var("RKC_TRIALS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if quick { 1 } else { 5 });
     let mut cfg = ExperimentConfig::table1();
-    cfg.n = 2000; // keep the ablation grid affordable
+    cfg.n = if quick { 300 } else { 2000 }; // keep the ablation grid affordable
     cfg.trials = trials;
+    let mut records: Vec<Json> = Vec::new();
     let ds = build_dataset(&cfg).expect("dataset");
     let n = ds.n();
     let n_pad = n.next_power_of_two();
@@ -63,6 +77,14 @@ fn main() {
             if precondition { "HD preconditioning (paper)" } else { "raw row sampling" }.into(),
             format!("{:.3} ± {:.3}", rkc::util::mean(&errs), rkc::util::std_dev(&errs)),
         ]);
+        records.push(Json::Obj(BTreeMap::from([
+            ("bench".to_string(), Json::Str("ablation_precond".to_string())),
+            (
+                "variant".to_string(),
+                Json::Str(if precondition { "hd" } else { "raw" }.to_string()),
+            ),
+            ("approx_err".to_string(), Json::finite_num(rkc::util::mean(&errs))),
+        ])));
     }
     print!("{}", t.render());
 
@@ -71,8 +93,9 @@ fn main() {
         "Ablation: test matrix & oversampling l (accuracy parity, memory gap)",
         &["method", "l", "approx err", "accuracy", "persistent MiB"],
     );
+    let l_grid: &[usize] = if quick { &[0, 5] } else { &[0, 2, 5, 10, 20] };
     for (method, label) in [(Method::OnePass, "srht"), (Method::GaussianOnePass, "gaussian")] {
-        for l in [0usize, 2, 5, 10, 20] {
+        for &l in l_grid {
             let mut c = cfg.clone();
             c.method = method;
             c.oversample = l;
@@ -88,6 +111,14 @@ fn main() {
                 format!("{:.3}", agg.accuracy_mean),
                 format!("{:.3}", mem.persistent as f64 / (1024.0 * 1024.0)),
             ]);
+            records.push(Json::Obj(BTreeMap::from([
+                ("bench".to_string(), Json::Str("ablation_testmatrix".to_string())),
+                ("variant".to_string(), Json::Str(label.to_string())),
+                ("oversample".to_string(), Json::Num(l as f64)),
+                ("approx_err".to_string(), Json::finite_num(agg.error_mean)),
+                ("accuracy".to_string(), Json::finite_num(agg.accuracy_mean)),
+                ("persistent_bytes".to_string(), Json::Num(mem.persistent as f64)),
+            ])));
         }
     }
     print!("{}", t.render());
@@ -97,23 +128,29 @@ fn main() {
         "Ablation: streaming batch size (sketch wall time vs transient MiB)",
         &["batch", "sketch time s", "transient MiB"],
     );
-    for batch in [32usize, 128, 256, 1024] {
+    let batch_grid: &[usize] = if quick { &[32, 256] } else { &[32, 128, 256, 1024] };
+    for &batch in batch_grid {
         let mut c = cfg.clone();
         c.method = Method::OnePass;
         c.batch = batch;
         c.trials = 1;
         let ds2 = ds.clone();
-        let t0 = std::time::Instant::now();
         let out = rkc::coordinator::run_experiment(&c, &ds2, None, 42).expect("run");
-        let _ = t0;
         let mem = MemoryModel::one_pass(n, n_pad, c.sketch_width(), c.rank, batch);
         t.row(vec![
             batch.to_string(),
             format!("{:.3}", out.sketch_time.as_secs_f64()),
             format!("{:.2}", mem.transient as f64 / (1024.0 * 1024.0)),
         ]);
+        records.push(Json::Obj(BTreeMap::from([
+            ("bench".to_string(), Json::Str("ablation_batch".to_string())),
+            ("batch".to_string(), Json::Num(batch as f64)),
+            ("sketch_s".to_string(), Json::finite_num(out.sketch_time.as_secs_f64())),
+            ("transient_bytes".to_string(), Json::Num(mem.transient as f64)),
+        ])));
     }
     print!("{}", t.render());
+    write_bench_json("BENCH_ablation.json", records);
 }
 
 /// Recovery for both ablation variants: with preconditioning the normal

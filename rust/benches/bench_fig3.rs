@@ -4,15 +4,34 @@
 //! for ours (r' = 7) and the exact decomposition; full-kernel K-means
 //! accuracy reference (paper: 0.46). Paper shape: ours ≈ exact at r'=7
 //! while Nyström needs m ≈ 50 ≈ 7·r' to reach our error.
+//!
+//! Every run rewrites `BENCH_fig3.json`: one object per series point
+//! with `{bench, series, m, approx_err, accuracy, time_s}` (`m` is 0
+//! for the flat reference lines). `RKC_BENCH_QUICK=1` shrinks n, the
+//! m-grid, and trials to a CI smoke shape.
 
+use std::collections::BTreeMap;
+
+use rkc::bench_harness::{quick_mode, write_bench_json};
 use rkc::config::{ExperimentConfig, Method};
 use rkc::coordinator::{build_dataset, run_trials};
 use rkc::metrics::Table;
+use rkc::util::Json;
 
 fn main() {
-    let trials: usize = std::env::var("RKC_TRIALS").ok().and_then(|v| v.parse().ok()).unwrap_or(5);
+    let quick = quick_mode();
+    let trials: usize = std::env::var("RKC_TRIALS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if quick { 1 } else { 5 });
     let mut cfg = ExperimentConfig::default();
     cfg.trials = trials;
+    if quick {
+        cfg.n = 350;
+        // force the synthetic generator: a real data/segmentation.csv
+        // would override cfg.n with the full 2310-row dataset
+        cfg.data_dir = "data-quick-disabled".into();
+    }
     let ds = build_dataset(&cfg).expect("dataset");
     println!("bench_fig3: {} trials={} (RKC_TRIALS to change)", ds.name, trials);
 
@@ -20,26 +39,38 @@ fn main() {
         "Fig. 3 | x=m; ours r'=7 and exact are the flat reference lines",
         &["series", "m", "approx err (3a)", "accuracy (3b)"],
     );
+    let mut records = Vec::new();
 
-    let mut run = |method: Method, label: &str, m: &str, trials: usize| {
+    let mut run = |method: Method, label: &str, m: usize, trials: usize| {
         let mut c = cfg.clone();
         c.method = method;
         c.trials = trials;
         let agg = run_trials(&c, &ds, None).expect("run");
+        let m_label = if m == 0 { "-".to_string() } else { m.to_string() };
         table.row(vec![
             label.into(),
-            m.into(),
+            m_label,
             if agg.error_mean.is_nan() { "-".into() } else { format!("{:.3}", agg.error_mean) },
             format!("{:.3}", agg.accuracy_mean),
         ]);
         eprintln!("  {label} m={m} ({:.1}s)", agg.total_time.as_secs_f64());
+        records.push(Json::Obj(BTreeMap::from([
+            ("bench".to_string(), Json::Str("fig3".to_string())),
+            ("series".to_string(), Json::Str(label.to_string())),
+            ("m".to_string(), Json::Num(m as f64)),
+            ("approx_err".to_string(), Json::finite_num(agg.error_mean)),
+            ("accuracy".to_string(), Json::finite_num(agg.accuracy_mean)),
+            ("time_s".to_string(), Json::finite_num(agg.total_time.as_secs_f64())),
+        ])));
     };
 
-    run(Method::Exact, "exact", "-", 1);
-    run(Method::OnePass, "ours", "-", trials);
-    run(Method::FullKernel, "full_kernel_kmeans", "-", 1);
-    for m in [10, 20, 30, 40, 50, 70, 100] {
-        run(Method::Nystrom { m }, "nystrom", &m.to_string(), trials);
+    run(Method::Exact, "exact", 0, 1);
+    run(Method::OnePass, "ours", 0, trials);
+    run(Method::FullKernel, "full_kernel_kmeans", 0, 1);
+    let m_grid: &[usize] = if quick { &[10, 30] } else { &[10, 20, 30, 40, 50, 70, 100] };
+    for &m in m_grid {
+        run(Method::Nystrom { m }, "nystrom", m, trials);
     }
     print!("{}", table.render());
+    write_bench_json("BENCH_fig3.json", records);
 }

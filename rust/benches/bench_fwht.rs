@@ -6,21 +6,47 @@
 //! 1-core container it mostly demonstrates the fork-join overhead
 //! structure, and the per-size single-thread series is the meaningful
 //! number (elements/s vs the O(n log n) roofline).
+//!
+//! Every run rewrites `BENCH_fwht.json`: one object per configuration
+//! with `{bench, n, batch, threads, median_s, melems_per_s, speedup}`.
+//! `RKC_BENCH_QUICK=1` shrinks sizes and iterations to a CI smoke shape.
 
-use rkc::bench_harness::{bench, black_box};
+use std::collections::BTreeMap;
+
+use rkc::bench_harness::{bench, black_box, quick_mode, write_bench_json};
 use rkc::rng::{Pcg64, Rng};
 use rkc::sketch::fwht_parallel;
 use rkc::util::parallel::available_threads;
+use rkc::util::Json;
+
+fn row(n: usize, batch: usize, threads: usize, median_s: f64, speedup: f64) -> Json {
+    Json::Obj(BTreeMap::from([
+        ("bench".to_string(), Json::Str("fwht".to_string())),
+        ("n".to_string(), Json::Num(n as f64)),
+        ("batch".to_string(), Json::Num(batch as f64)),
+        ("threads".to_string(), Json::Num(threads as f64)),
+        ("median_s".to_string(), Json::finite_num(median_s)),
+        (
+            "melems_per_s".to_string(),
+            Json::finite_num((n * batch) as f64 / median_s.max(1e-12) / 1e6),
+        ),
+        ("speedup".to_string(), Json::finite_num(speedup)),
+    ]))
+}
 
 fn main() {
+    let quick = quick_mode();
+    let iters = if quick { 1 } else { 8 };
+    let batch = if quick { 16usize } else { 256 };
     let mut rng = Pcg64::seed(1);
-    println!("bench_fwht: batch of 256 vectors per transform");
+    let mut records = Vec::new();
+    println!("bench_fwht: batch of {batch} vectors per transform");
 
-    for logn in [10usize, 12, 14] {
+    let sizes: &[usize] = if quick { &[10] } else { &[10, 12, 14] };
+    for &logn in sizes {
         let n = 1usize << logn;
-        let batch = 256usize;
         let data: Vec<f64> = (0..n * batch).map(|_| rng.normal()).collect();
-        let r = bench(&format!("fwht n={n} x{batch} t=1"), 2, 8, || {
+        let r = bench(&format!("fwht n={n} x{batch} t=1"), 2.min(iters), iters, || {
             let mut d = data.clone();
             fwht_parallel(&mut d, n, 1);
             black_box(d)
@@ -32,11 +58,11 @@ fn main() {
             elems / r.median_s / 1e6,
             flops / r.median_s / 1e9
         );
+        records.push(row(n, batch, 1, r.median_s, 1.0));
     }
 
     // thread scaling at the production shape, up to the hardware limit
-    let n = 4096usize;
-    let batch = 256usize;
+    let n = if quick { 1024usize } else { 4096 };
     let auto = available_threads();
     let mut series: Vec<usize> = (0..)
         .map(|e| 1usize << e)
@@ -47,7 +73,7 @@ fn main() {
     let mut base = f64::NAN;
     println!("thread scaling (auto-detect resolves threads=0 to {auto}):");
     for threads in series {
-        let r = bench(&format!("fwht n={n} x{batch} t={threads}"), 2, 8, || {
+        let r = bench(&format!("fwht n={n} x{batch} t={threads}"), 2.min(iters), iters, || {
             let mut d = data.clone();
             fwht_parallel(&mut d, n, threads);
             black_box(d)
@@ -56,5 +82,8 @@ fn main() {
             base = r.median_s;
         }
         println!("  threads={threads}: speedup {:.2}x vs 1 thread", base / r.median_s);
+        records.push(row(n, batch, threads, r.median_s, base / r.median_s));
     }
+
+    write_bench_json("BENCH_fwht.json", records);
 }

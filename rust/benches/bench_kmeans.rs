@@ -1,0 +1,83 @@
+//! Bench: the K-means assignment overhaul — norm-identity + GEMM cross
+//! term ([`rkc::clustering::kmeans`]) vs the pre-GEMM per-(point,
+//! centroid) column-strided reference ([`kmeans_reference`]).
+//!
+//! Every run rewrites `BENCH_kmeans.json`: one object per row with
+//! `{bench, n, r, k, restarts, threads, before_s, after_s, speedup}` —
+//! `before_s` is the sequential reference implementation, `after_s` the
+//! shipping path at the row's thread count (threads=1 rows are the
+//! like-for-like algorithmic comparison; threaded rows fold in the
+//! restart fan-out). `RKC_BENCH_QUICK=1` shrinks to a CI smoke shape.
+
+use std::collections::BTreeMap;
+
+use rkc::bench_harness::{bench, black_box, quick_mode, write_bench_json};
+use rkc::clustering::{kmeans_reference, kmeans_threaded, KmeansOpts};
+use rkc::linalg::Mat;
+use rkc::rng::{Pcg64, Rng};
+use rkc::util::parallel::available_threads;
+use rkc::util::Json;
+
+/// k separated Gaussian blobs in R^r, point-per-column like the
+/// embedding the pipeline feeds to K-means.
+fn blobs(rng: &mut Pcg64, n: usize, r: usize, k: usize) -> Mat {
+    let centers = Mat::from_fn(r, k, |_, _| 10.0 * rng.normal());
+    Mat::from_fn(r, n, |i, j| centers[(i, j % k)] + 0.5 * rng.normal())
+}
+
+fn kmeans_row(n: usize, r: usize, k: usize, restarts: usize, threads: usize, iters: usize) -> Json {
+    let mut rng = Pcg64::seed(0x5eed ^ (n as u64) ^ ((k as u64) << 32));
+    let y = blobs(&mut rng, n, r, k);
+    let opts = KmeansOpts { k, restarts, max_iters: 20, tol: 1e-9 };
+    let before = bench(&format!("kmeans reference n={n} r={r} k={k} R={restarts}"), 1, iters, || {
+        let mut rr = Pcg64::seed(99);
+        black_box(kmeans_reference(&y, &opts, &mut rr))
+    });
+    let after = bench(
+        &format!("kmeans gemm      n={n} r={r} k={k} R={restarts} t={threads}"),
+        1,
+        iters,
+        || {
+            let mut rr = Pcg64::seed(99);
+            black_box(kmeans_threaded(&y, &opts, &mut rr, threads))
+        },
+    );
+    println!(
+        "  => gemm speedup {:.1}x at n={n}, r={r}, k={k}, threads={threads}",
+        before.median_s / after.median_s.max(1e-12)
+    );
+    Json::Obj(BTreeMap::from([
+        ("bench".to_string(), Json::Str("kmeans".to_string())),
+        ("n".to_string(), Json::Num(n as f64)),
+        ("r".to_string(), Json::Num(r as f64)),
+        ("k".to_string(), Json::Num(k as f64)),
+        ("restarts".to_string(), Json::Num(restarts as f64)),
+        ("threads".to_string(), Json::Num(threads as f64)),
+        ("before_s".to_string(), Json::finite_num(before.median_s)),
+        ("after_s".to_string(), Json::finite_num(after.median_s)),
+        ("speedup".to_string(), Json::finite_num(before.median_s / after.median_s.max(1e-12))),
+    ]))
+}
+
+fn main() {
+    let quick = quick_mode();
+    let iters = if quick { 1 } else { 7 };
+    let mut records = Vec::new();
+
+    println!("bench_kmeans: norm-identity + GEMM assignment vs pre-GEMM reference");
+    if quick {
+        records.push(kmeans_row(600, 2, 3, 3, 1, iters));
+    } else {
+        // the pipeline shape (tiny r, few clusters), a wider embedding,
+        // and a larger-n row; threads=1 is the algorithmic comparison
+        records.push(kmeans_row(4096, 2, 2, 10, 1, iters));
+        records.push(kmeans_row(4096, 8, 16, 10, 1, iters));
+        records.push(kmeans_row(32768, 4, 8, 3, 1, iters.min(5)));
+        let auto = available_threads();
+        if auto > 1 {
+            records.push(kmeans_row(4096, 8, 16, 10, auto, iters));
+        }
+    }
+
+    write_bench_json("BENCH_kmeans.json", records);
+}

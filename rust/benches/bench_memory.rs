@@ -3,18 +3,48 @@
 //!
 //! For both workloads, finds the smallest Nyström m whose mean error
 //! matches ours, then reports the persistent-memory ratio.
+//!
+//! Every run rewrites `BENCH_memory.json`: one object per (workload,
+//! method) with `{bench, workload, method, approx_err,
+//! persistent_bytes, ratio_vs_ours}`. `RKC_BENCH_QUICK=1` shrinks n,
+//! trials, and the m-grid to a CI smoke shape.
 
+use std::collections::BTreeMap;
+
+use rkc::bench_harness::{quick_mode, write_bench_json};
 use rkc::config::{ExperimentConfig, Method};
 use rkc::coordinator::{build_dataset, run_trials};
 use rkc::metrics::{MemoryModel, Table};
+use rkc::util::Json;
 
 fn main() {
-    let trials: usize = std::env::var("RKC_TRIALS").ok().and_then(|v| v.parse().ok()).unwrap_or(5);
+    let quick = quick_mode();
+    let trials: usize = std::env::var("RKC_TRIALS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if quick { 1 } else { 5 });
+    let mut records: Vec<Json> = Vec::new();
+    let mut record = |workload: &str, method: String, err: f64, bytes: usize, ratio: f64| {
+        records.push(Json::Obj(BTreeMap::from([
+            ("bench".to_string(), Json::Str("memory".to_string())),
+            ("workload".to_string(), Json::Str(workload.to_string())),
+            ("method".to_string(), Json::Str(method)),
+            ("approx_err".to_string(), Json::finite_num(err)),
+            ("persistent_bytes".to_string(), Json::Num(bytes as f64)),
+            ("ratio_vs_ours".to_string(), Json::finite_num(ratio)),
+        ])));
+    };
     for (name, mut cfg) in [
         ("table1/cross_lines", ExperimentConfig::table1()),
         ("fig3/segmentation", ExperimentConfig::default()),
     ] {
         cfg.trials = trials;
+        if quick {
+            cfg.n = 320;
+            // force the synthetic generator: a real data/segmentation.csv
+            // would override cfg.n with the full 2310-row dataset
+            cfg.data_dir = "data-quick-disabled".into();
+        }
         let ds = build_dataset(&cfg).expect("dataset");
         let n_pad = ds.n().next_power_of_two();
         println!("bench_memory: {name} (n={}, r'={})", ds.n(), cfg.sketch_width());
@@ -36,9 +66,12 @@ fn main() {
             format!("{:.3}", mib(ours_mem.persistent)),
             "1.0x".into(),
         ]);
+        record(name, format!("ours r'={}", cfg.sketch_width()), ours.error_mean,
+            ours_mem.persistent, 1.0);
 
+        let m_grid: &[usize] = if quick { &[10, 50] } else { &[10, 20, 30, 50, 70, 100, 150] };
         let mut matched = None;
-        for m in [10, 20, 30, 50, 70, 100, 150] {
+        for &m in m_grid {
             let mut c = cfg.clone();
             c.method = Method::Nystrom { m };
             let agg = run_trials(&c, &ds, None).expect("nystrom");
@@ -50,6 +83,7 @@ fn main() {
                 format!("{:.3}", mib(mem.persistent)),
                 format!("{ratio:.1}x"),
             ]);
+            record(name, format!("nystrom m={m}"), agg.error_mean, mem.persistent, ratio);
             if matched.is_none() && agg.error_mean <= ours.error_mean * 1.02 {
                 matched = Some((m, ratio));
             }
@@ -61,14 +95,19 @@ fn main() {
             format!("{:.1}", mib(dense.persistent)),
             format!("{:.0}x", dense.persistent as f64 / ours_mem.persistent as f64),
         ]);
+        record(name, "exact_dense".to_string(), f64::NAN, dense.persistent,
+            dense.persistent as f64 / ours_mem.persistent as f64);
         print!("{}", table.render());
         match matched {
             Some((m, ratio)) => println!(
                 "=> Nyström needs m≈{m} to match our error: {ratio:.1}× our memory (paper: ≈10×)\n"
             ),
-            None => println!("=> no m ≤ 150 matched our error: ratio > {:.1}×\n",
-                MemoryModel::nystrom(ds.n(), 150, cfg.rank).persistent as f64
+            None => println!("=> no m ≤ {} matched our error: ratio > {:.1}×\n",
+                m_grid.last().copied().unwrap_or(150),
+                MemoryModel::nystrom(ds.n(), m_grid.last().copied().unwrap_or(150), cfg.rank)
+                    .persistent as f64
                     / ours_mem.persistent as f64),
         }
     }
+    write_bench_json("BENCH_memory.json", records);
 }

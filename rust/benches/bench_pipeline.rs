@@ -14,11 +14,31 @@
 
 use std::collections::BTreeMap;
 
+use rkc::bench_harness::quick_mode;
+use rkc::clustering::{kmeans, kmeans_reference, KmeansOpts};
 use rkc::config::{Backend, ExperimentConfig, Method};
-use rkc::coordinator::{build_dataset, run_experiment};
+use rkc::coordinator::{build_dataset, run_experiment, run_sketch_pass, NativeSketchRows};
+use rkc::kernels::NativeBlockSource;
+use rkc::lowrank::{one_pass_recovery_entrywise_reference, one_pass_recovery_threaded};
+use rkc::rng::Pcg64;
 use rkc::runtime::ArtifactRegistry;
+use rkc::sketch::Srht;
 use rkc::util::parallel::{available_threads, resolve_threads};
 use rkc::util::Json;
+
+/// The bench's base configuration: Fig-3 production shape, shrunk to a
+/// smoke shape under `RKC_BENCH_QUICK=1`.
+fn base_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    if quick_mode() {
+        cfg.n = 400;
+        cfg.trials = 1;
+        // force the synthetic generator: with a real data/segmentation.csv
+        // present, build_dataset would ignore cfg.n and load all 2310 rows
+        cfg.data_dir = "data-quick-disabled".into();
+    }
+    cfg
+}
 
 struct StageRow {
     backend: Backend,
@@ -70,7 +90,7 @@ impl StageRow {
 
 fn run(be: Backend, threads: usize, iters: usize, registry: Option<&ArtifactRegistry>) -> StageRow {
     let med = |v: &[f64]| rkc::util::percentile(v, 50.0);
-    let mut cfg = ExperimentConfig::default();
+    let mut cfg = base_cfg();
     cfg.backend = be;
     cfg.method = Method::OnePass;
     cfg.threads = threads;
@@ -110,6 +130,84 @@ fn run(be: Backend, threads: usize, iters: usize, registry: Option<&ArtifactRegi
     row
 }
 
+/// Single-threaded before/after of the recovery and K-means stages
+/// against the retained pre-PR reference implementations (entrywise
+/// `QᵀΩ` recovery, column-strided per-pair K-means). Returned as extra
+/// keys merged into the first native row of `BENCH_pipeline.json`, so
+/// the stage-level speedup rides the same record the trajectory diffs.
+fn stage_compare(iters: usize) -> BTreeMap<String, Json> {
+    let med = |v: &[f64]| rkc::util::percentile(v, 50.0);
+    let cfg = base_cfg();
+    let ds = build_dataset(&cfg).expect("dataset");
+    let n = ds.n();
+    let n_pad = n.next_power_of_two();
+    let mut rng = Pcg64::seed(42);
+    let mut srht = Srht::draw(&mut rng, n_pad, cfg.sketch_width());
+    srht.mask_padding(n);
+    let mut producer = NativeSketchRows {
+        src: NativeBlockSource::new(ds.x.clone(), cfg.kernel, n_pad),
+        srht,
+        threads: 1,
+        scratch: Vec::new(),
+    };
+    let (sketch, _) = run_sketch_pass(&mut producer, n, cfg.batch);
+
+    let time = |f: &mut dyn FnMut()| {
+        let t0 = std::time::Instant::now();
+        f();
+        t0.elapsed().as_secs_f64()
+    };
+    let (mut rec_before, mut rec_after) = (Vec::new(), Vec::new());
+    for _ in 0..iters.max(1) {
+        rec_before.push(time(&mut || {
+            std::hint::black_box(one_pass_recovery_entrywise_reference(&sketch, cfg.rank));
+        }));
+        rec_after.push(time(&mut || {
+            std::hint::black_box(one_pass_recovery_threaded(&sketch, cfg.rank, 1));
+        }));
+    }
+
+    let emb = one_pass_recovery_threaded(&sketch, cfg.rank, 1);
+    let opts = KmeansOpts {
+        k: cfg.k,
+        restarts: cfg.kmeans_restarts,
+        max_iters: cfg.kmeans_iters,
+        tol: cfg.kmeans_tol,
+    };
+    let (mut km_before, mut km_after) = (Vec::new(), Vec::new());
+    for _ in 0..iters.max(1) {
+        km_before.push(time(&mut || {
+            let mut r = Pcg64::seed(7);
+            std::hint::black_box(kmeans_reference(&emb.y, &opts, &mut r));
+        }));
+        km_after.push(time(&mut || {
+            let mut r = Pcg64::seed(7);
+            std::hint::black_box(kmeans(&emb.y, &opts, &mut r));
+        }));
+    }
+
+    let (rb, ra) = (med(&rec_before), med(&rec_after));
+    let (kb, ka) = (med(&km_before), med(&km_after));
+    println!(
+        "stage before/after (1 thread, pre-PR reference impls): recovery {:.4}s -> {:.4}s \
+         ({:.1}x) | kmeans {:.3}s -> {:.3}s ({:.1}x)",
+        rb,
+        ra,
+        rb / ra.max(1e-12),
+        kb,
+        ka,
+        kb / ka.max(1e-12),
+    );
+    BTreeMap::from([
+        ("recovery_before_s".to_string(), Json::finite_num(rb)),
+        ("recovery_after_s".to_string(), Json::finite_num(ra)),
+        ("recovery_speedup".to_string(), Json::finite_num(rb / ra.max(1e-12))),
+        ("kmeans_before_s".to_string(), Json::finite_num(kb)),
+        ("kmeans_after_s".to_string(), Json::finite_num(ka)),
+        ("kmeans_speedup".to_string(), Json::finite_num(kb / ka.max(1e-12))),
+    ])
+}
+
 fn main() {
     let backend = std::env::var("RKC_BACKEND").unwrap_or_else(|_| "both".into());
     let iters: usize =
@@ -143,6 +241,12 @@ fn main() {
                 resolve_threads(thread_list[0])
             );
             records.push(row.to_json(Some(base / hot)));
+        }
+        // recovery+kmeans before/after vs the pre-PR reference impls,
+        // attached to the first native row
+        let extras = stage_compare(iters);
+        if let Some(Json::Obj(first)) = records.first_mut() {
+            first.extend(extras);
         }
     }
     if backend == "xla" || backend == "both" {

@@ -1,0 +1,117 @@
+//! Bench: the recovery hot paths — entrywise vs FWHT-based `QᵀΩ`, and
+//! the full Alg. 1 steps 3–6 before/after the GEMM+FWHT overhaul.
+//!
+//! The headline row is the acceptance shape n=4096, r=8, r'=18: the
+//! FWHT identity costs O(n log n · r) independent of r', while the
+//! entrywise path pays O(n · r · r') with a popcount per scalar.
+//!
+//! Every run rewrites `BENCH_recovery.json`: one object per row with
+//! `{bench, n, r, rp, threads, before_s, after_s, speedup}` —
+//! `before_s` is the pre-PR reference path, `after_s` the shipping one.
+//! `RKC_BENCH_QUICK=1` shrinks everything to a CI smoke shape.
+
+use std::collections::BTreeMap;
+
+use rkc::bench_harness::{bench, black_box, quick_mode, write_bench_json};
+use rkc::kernels::{column_batches, BlockSource, Kernel, NativeBlockSource};
+use rkc::linalg::Mat;
+use rkc::lowrank::{
+    one_pass_recovery_entrywise_reference, one_pass_recovery_threaded, OnePassSketch,
+};
+use rkc::rng::{Pcg64, Rng};
+use rkc::sketch::Srht;
+use rkc::util::parallel::available_threads;
+use rkc::util::Json;
+
+fn row(
+    name: &str,
+    n: usize,
+    r: usize,
+    rp: usize,
+    threads: usize,
+    before_s: f64,
+    after_s: f64,
+) -> Json {
+    Json::Obj(BTreeMap::from([
+        ("bench".to_string(), Json::Str(name.to_string())),
+        ("n".to_string(), Json::Num(n as f64)),
+        ("r".to_string(), Json::Num(r as f64)),
+        ("rp".to_string(), Json::Num(rp as f64)),
+        ("threads".to_string(), Json::Num(threads as f64)),
+        ("before_s".to_string(), Json::finite_num(before_s)),
+        ("after_s".to_string(), Json::finite_num(after_s)),
+        ("speedup".to_string(), Json::finite_num(before_s / after_s.max(1e-12))),
+    ]))
+}
+
+/// Entrywise vs FWHT `QᵀΩ` at one shape.
+fn qt_omega_row(n: usize, r: usize, rp: usize, threads: usize, iters: usize) -> Json {
+    let mut rng = Pcg64::seed(0xabc ^ (n as u64) ^ ((rp as u64) << 32));
+    let srht = Srht::draw(&mut rng, n, rp);
+    let q = Mat::from_fn(n, r, |_, _| rng.normal());
+    let before = bench(
+        &format!("qt_omega entrywise n={n} r={r} rp={rp}"),
+        1,
+        iters,
+        || black_box(srht.qt_omega_entrywise(&q)),
+    );
+    let after = bench(
+        &format!("qt_omega fwht      n={n} r={r} rp={rp} t={threads}"),
+        1,
+        iters,
+        || black_box(srht.qt_omega_threaded(&q, threads)),
+    );
+    println!(
+        "  => fwht speedup {:.1}x at n={n}, r={r}, r'={rp}, threads={threads}",
+        before.median_s / after.median_s.max(1e-12)
+    );
+    row("qt_omega", n, r, rp, threads, before.median_s, after.median_s)
+}
+
+/// Full recovery (QR + solve + eig + Y) before/after, on a real sketch.
+fn recovery_row(n: usize, r: usize, rp: usize, iters: usize) -> Json {
+    let mut rng = Pcg64::seed(17);
+    let x = Mat::from_fn(4, n, |_, _| rng.normal());
+    let mut src = NativeBlockSource::pow2(x, Kernel::paper_poly2());
+    let (n_real, np) = (src.n(), src.n_padded());
+    let mut srht = Srht::draw(&mut rng, np, rp);
+    srht.mask_padding(n_real);
+    let mut sketch = OnePassSketch::new(srht, n_real);
+    let mut scratch = Vec::new();
+    for cols in column_batches(n_real, 256) {
+        let kb = src.block(&cols);
+        let rows = sketch.srht().apply_to_block_with(&kb, 1, &mut scratch);
+        sketch.ingest(&cols, &rows);
+    }
+    let before = bench(&format!("recovery entrywise n={n} r={r} rp={rp}"), 1, iters, || {
+        black_box(one_pass_recovery_entrywise_reference(&sketch, r))
+    });
+    let after = bench(&format!("recovery fwht+gemm n={n} r={r} rp={rp}"), 1, iters, || {
+        black_box(one_pass_recovery_threaded(&sketch, r, 1))
+    });
+    row("recovery_total", np, r, rp, 1, before.median_s, after.median_s)
+}
+
+fn main() {
+    let quick = quick_mode();
+    let iters = if quick { 1 } else { 9 };
+    let mut records = Vec::new();
+
+    println!("bench_recovery: QᵀΩ entrywise vs FWHT, full recovery before/after");
+    if quick {
+        records.push(qt_omega_row(256, 4, 9, 1, iters));
+        records.push(recovery_row(200, 2, 6, iters));
+    } else {
+        // acceptance shape first, then r'-scaling and thread rows
+        records.push(qt_omega_row(4096, 8, 18, 1, iters));
+        records.push(qt_omega_row(4096, 8, 40, 1, iters));
+        records.push(qt_omega_row(16384, 8, 18, 1, iters));
+        let auto = available_threads();
+        if auto > 1 {
+            records.push(qt_omega_row(4096, 8, 18, auto, iters));
+        }
+        records.push(recovery_row(4000, 8, 18, iters.min(5)));
+    }
+
+    write_bench_json("BENCH_recovery.json", records);
+}

@@ -25,10 +25,13 @@ fn env_usize(key: &str, default: usize) -> usize {
 }
 
 fn main() {
-    let n = env_usize("RKC_SERVE_N", 1024);
-    let clients = env_usize("RKC_SERVE_CLIENTS", 4).max(1);
-    let reqs = env_usize("RKC_SERVE_REQS", 25).max(1);
-    let points_per_req = env_usize("RKC_SERVE_POINTS", 16).max(1);
+    // quick mode (RKC_BENCH_QUICK=1) shrinks the defaults to a CI smoke
+    // shape; explicit RKC_SERVE_* env knobs still win
+    let quick = rkc::bench_harness::quick_mode();
+    let n = env_usize("RKC_SERVE_N", if quick { 256 } else { 1024 });
+    let clients = env_usize("RKC_SERVE_CLIENTS", if quick { 2 } else { 4 }).max(1);
+    let reqs = env_usize("RKC_SERVE_REQS", if quick { 5 } else { 25 }).max(1);
+    let points_per_req = env_usize("RKC_SERVE_POINTS", if quick { 4 } else { 16 }).max(1);
 
     let ds = data::cross_lines(&mut Pcg64::seed(7), n);
     let t_fit = Instant::now();
@@ -84,6 +87,7 @@ fn main() {
     );
 
     let record = Json::Obj(BTreeMap::from([
+        ("bench".to_string(), Json::Str("serve".to_string())),
         ("n_train".to_string(), Json::Num(n as f64)),
         ("clients".to_string(), Json::Num(clients as f64)),
         ("requests_per_client".to_string(), Json::Num(reqs as f64)),
@@ -99,9 +103,6 @@ fn main() {
         ("mean_batch".to_string(), Json::finite_num(stats.mean_batch())),
         ("mean_latency_us".to_string(), Json::finite_num(stats.mean_latency_us())),
     ]));
-    let out = record.to_string();
-    match std::fs::write("BENCH_serve.json", &out) {
-        Ok(()) => println!("wrote BENCH_serve.json ({} bytes)", out.len()),
-        Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),
-    }
+    // one-row array: every BENCH_*.json is a JSON array of row objects
+    rkc::bench_harness::write_bench_json("BENCH_serve.json", vec![record]);
 }

@@ -4,15 +4,31 @@
 //! Nyström m=20: 0.56 / 0.74, Nyström m=100: 0.44 / 0.75; plain 0.53.
 //! The acceptance criterion is the *shape*: ours ≈ exact in both
 //! columns, Nyström worse at matched-or-larger memory.
+//!
+//! Every run rewrites `BENCH_table1.json`: one object per method with
+//! `{bench, method, trials, n, approx_err, accuracy, time_s}`
+//! (`approx_err` is `null` for plain K-means, which has no embedding).
+//! `RKC_BENCH_QUICK=1` shrinks n and trials to a CI smoke shape.
 
+use std::collections::BTreeMap;
+
+use rkc::bench_harness::{quick_mode, write_bench_json};
 use rkc::config::{ExperimentConfig, Method};
 use rkc::coordinator::{build_dataset, run_trials};
 use rkc::metrics::Table;
+use rkc::util::Json;
 
 fn main() {
-    let trials: usize = std::env::var("RKC_TRIALS").ok().and_then(|v| v.parse().ok()).unwrap_or(10);
+    let quick = quick_mode();
+    let trials: usize = std::env::var("RKC_TRIALS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if quick { 1 } else { 10 });
     let mut cfg = ExperimentConfig::table1();
     cfg.trials = trials;
+    if quick {
+        cfg.n = 320;
+    }
     let ds = build_dataset(&cfg).expect("dataset");
     println!("bench_table1: {} trials={} (RKC_TRIALS to change)", ds.name, trials);
 
@@ -20,6 +36,7 @@ fn main() {
         "Table 1 | paper: exact 0.40/0.99, ours 0.40/0.99, nys20 0.56/0.74, nys100 0.44/0.75, plain -/0.53",
         &["method", "approx err", "accuracy", "time_s"],
     );
+    let mut records = Vec::new();
     for method in [
         Method::Exact,
         Method::OnePass,
@@ -36,6 +53,16 @@ fn main() {
             format!("{:.2}", agg.accuracy_mean),
             format!("{:.1}", agg.total_time.as_secs_f64()),
         ]);
+        records.push(Json::Obj(BTreeMap::from([
+            ("bench".to_string(), Json::Str("table1".to_string())),
+            ("method".to_string(), Json::Str(agg.method.clone())),
+            ("trials".to_string(), Json::Num(agg.trials as f64)),
+            ("n".to_string(), Json::Num(ds.n() as f64)),
+            ("approx_err".to_string(), Json::finite_num(agg.error_mean)),
+            ("accuracy".to_string(), Json::finite_num(agg.accuracy_mean)),
+            ("time_s".to_string(), Json::finite_num(agg.total_time.as_secs_f64())),
+        ])));
     }
     print!("{}", table.render());
+    write_bench_json("BENCH_table1.json", records);
 }

@@ -13,8 +13,8 @@ use crate::error::{Result, RkcError};
 use crate::kernels::{column_batches, BlockSource};
 use crate::linalg::Mat;
 use crate::lowrank::{
-    exact_topr_dense, exact_topr_streaming, gaussian_one_pass_recovery, nystrom_threaded,
-    one_pass_recovery, Embedding, NystromSampling, OnePassSketch,
+    exact_topr_dense, exact_topr_streaming, gaussian_one_pass_recovery_threaded,
+    nystrom_threaded, one_pass_recovery_threaded, Embedding, NystromSampling, OnePassSketch,
 };
 use crate::metrics::{MemoryModel, MethodMemory};
 use crate::rng::Pcg64;
@@ -85,14 +85,16 @@ impl Embedder for OnePassEmbedder {
         srht.mask_padding(n);
         let t0 = Instant::now();
         let mut sketch = OnePassSketch::new(srht, n);
+        let mut scratch = Vec::new(); // one transform buffer for the whole pass
         for cols in column_batches(n, self.batch) {
             let kb = src.block(&cols);
-            let rows = sketch.srht().apply_to_block(&kb, self.threads.max(1));
+            let rows =
+                sketch.srht().apply_to_block_with(&kb, self.threads.max(1), &mut scratch);
             sketch.ingest(&cols, &rows);
         }
         let sketch_time = t0.elapsed();
         let t1 = Instant::now();
-        let embedding = one_pass_recovery(&sketch, self.rank);
+        let embedding = one_pass_recovery_threaded(&sketch, self.rank, self.threads.max(1));
         Ok(EmbedOutcome { embedding, sketch_time, recovery_time: t1.elapsed() })
     }
 
@@ -108,6 +110,8 @@ pub struct GaussianOnePassEmbedder {
     pub rank: usize,
     pub oversample: usize,
     pub batch: usize,
+    /// worker threads for the sketch GEMM and the recovery products
+    pub threads: usize,
 }
 
 impl GaussianOnePassEmbedder {
@@ -142,11 +146,12 @@ impl Embedder for GaussianOnePassEmbedder {
             }
             g
         };
+        let threads = self.threads.max(1);
         let t0 = Instant::now();
         let mut w = Mat::zeros(n, width);
         for cols in column_batches(n, self.batch) {
             let kb = src.block(&cols);
-            let rows = gauss.apply_to_block(&kb); // b × r'
+            let rows = gauss.apply_to_block(&kb, threads); // b × r'
             for (bj, &j) in cols.iter().enumerate() {
                 w.row_mut(j).copy_from_slice(rows.row(bj));
             }
@@ -154,7 +159,8 @@ impl Embedder for GaussianOnePassEmbedder {
         let sketch_time = t0.elapsed();
         let t1 = Instant::now();
         let omega_real = Mat::from_fn(n, width, |i, j| gauss.omega[(i, j)]);
-        let embedding = gaussian_one_pass_recovery(&w, &omega_real, self.rank);
+        let embedding =
+            gaussian_one_pass_recovery_threaded(&w, &omega_real, self.rank, threads);
         Ok(EmbedOutcome { embedding, sketch_time, recovery_time: t1.elapsed() })
     }
 
@@ -318,7 +324,7 @@ pub fn embedder_for(
     match method {
         Method::OnePass => Some(Box::new(OnePassEmbedder { rank, oversample, batch, threads })),
         Method::GaussianOnePass => {
-            Some(Box::new(GaussianOnePassEmbedder { rank, oversample, batch }))
+            Some(Box::new(GaussianOnePassEmbedder { rank, oversample, batch, threads }))
         }
         Method::Nystrom { m } => Some(Box::new(NystromEmbedder {
             rank,
@@ -413,7 +419,7 @@ mod tests {
     #[test]
     fn gaussian_memory_model_exceeds_srht() {
         let srht = OnePassEmbedder { rank: 2, oversample: 5, batch: 64, threads: 1 };
-        let gauss = GaussianOnePassEmbedder { rank: 2, oversample: 5, batch: 64 };
+        let gauss = GaussianOnePassEmbedder { rank: 2, oversample: 5, batch: 64, threads: 1 };
         assert!(gauss.memory_model(1000, 1024).persistent > srht.memory_model(1000, 1024).persistent);
     }
 }

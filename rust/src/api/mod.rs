@@ -52,7 +52,7 @@ use crate::kernels::{
     column_batches, full_kernel_matrix_threaded, BlockSource, Kernel, NativeBlockSource,
 };
 use crate::linalg::Mat;
-use crate::lowrank::{one_pass_recovery, OnePassSketch};
+use crate::lowrank::{one_pass_recovery_threaded, OnePassSketch};
 use crate::metrics::{MemoryModel, MethodMemory};
 use crate::rng::Pcg64;
 use crate::runtime::ArtifactRegistry;
@@ -595,9 +595,10 @@ impl KernelClusterer {
                 Err(_) => {
                     let mut src = self.block_source(x, registry, n_pad)?;
                     let mut sk = OnePassSketch::new(srht, n);
+                    let mut scratch = Vec::new();
                     for cols in column_batches(n, self.batch) {
                         let kb = src.block(&cols);
-                        let rows = sk.srht().apply_to_block(&kb, threads);
+                        let rows = sk.srht().apply_to_block_with(&kb, threads, &mut scratch);
                         sk.ingest(&cols, &rows);
                     }
                     sk
@@ -605,7 +606,7 @@ impl KernelClusterer {
             };
             let sketch_time = t0.elapsed();
             let t1 = Instant::now();
-            let embedding = one_pass_recovery(&sketch, self.rank);
+            let embedding = one_pass_recovery_threaded(&sketch, self.rank, threads);
             let outcome = EmbedOutcome { embedding, sketch_time, recovery_time: t1.elapsed() };
             return Ok((outcome, MemoryModel::one_pass(n, n_pad, width, self.rank, self.batch)));
         }
@@ -632,7 +633,7 @@ impl KernelClusterer {
             );
             let sketch_time = t0.elapsed();
             let t1 = Instant::now();
-            let embedding = one_pass_recovery(&sketch, self.rank);
+            let embedding = one_pass_recovery_threaded(&sketch, self.rank, threads);
             let outcome = EmbedOutcome { embedding, sketch_time, recovery_time: t1.elapsed() };
             return Ok((outcome, MemoryModel::one_pass(n, n_pad, width, self.rank, self.batch)));
         }

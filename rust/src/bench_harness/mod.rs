@@ -4,10 +4,19 @@
 //! Every `rust/benches/*.rs` target (`harness = false`) uses this to
 //! print the paper's tables and figure series in a stable format that
 //! `cargo bench 2>&1 | tee bench_output.txt` captures.
+//!
+//! Every bench also emits a machine-readable `BENCH_<name>.json` through
+//! [`write_bench_json`] — one JSON object per configuration row, all
+//! numeric values finite (non-finite values serialize as `null` via
+//! [`Json::finite_num`](crate::util::Json::finite_num)). CI runs each
+//! bench in the reduced [`quick_mode`] shape and validates the files
+//! against `tools/check_bench_json.py`; timings themselves are never
+//! gated in CI — the JSON trail exists so the perf trajectory is
+//! diffable across commits.
 
 use std::time::Instant;
 
-use crate::util::{mean, percentile};
+use crate::util::{mean, percentile, Json};
 
 /// One benchmark measurement.
 #[derive(Clone, Debug)]
@@ -89,6 +98,31 @@ pub fn bench_for<T>(
 #[inline]
 pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
+}
+
+/// True when `RKC_BENCH_QUICK=1` (or `true`): benches shrink to a CI
+/// smoke shape — small n, one measured rep — that exists to exercise
+/// the code paths and validate the emitted `BENCH_*.json` schema, not
+/// to produce meaningful timings.
+pub fn quick_mode() -> bool {
+    std::env::var("RKC_BENCH_QUICK")
+        .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+        .unwrap_or(false)
+}
+
+/// Write a bench's configuration rows to `path` as a JSON array — the
+/// shared `BENCH_*.json` convention. An empty record set leaves any
+/// previously recorded trajectory untouched rather than clobbering it.
+pub fn write_bench_json(path: &str, records: Vec<Json>) {
+    if records.is_empty() {
+        eprintln!("no configurations measured; {path} untouched");
+        return;
+    }
+    let out = Json::Arr(records).to_string();
+    match std::fs::write(path, &out) {
+        Ok(()) => println!("wrote {path} ({} bytes)", out.len()),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }
 
 #[cfg(test)]

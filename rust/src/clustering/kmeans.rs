@@ -9,16 +9,25 @@
 //! native loop is faster than a PJRT round trip per iteration — measured
 //! in EXPERIMENTS.md §Perf).
 //!
+//! The assignment step uses the norm identity
+//! `‖y − c‖² = ‖y‖² + ‖c‖² − 2 y·c`: point norms are computed once per
+//! run, centroid norms once per iteration, and the cross term `YᵀC` is
+//! one GEMM through the shared [`crate::linalg::gemm`] core — the old
+//! path walked column-strided memory per (point, centroid) pair. The
+//! pre-GEMM implementation survives as [`kmeans_reference`] for the
+//! bench before/after rows and the agreement tests.
+//!
 //! Parallel execution ([`kmeans_threaded`]) fans the independent
-//! restarts out across worker threads, and chunks the O(n·k·r)
-//! assignment step over points when a single restart has the machine to
+//! restarts out across worker threads — surplus workers beyond the
+//! restart count move into the chunked assignment step — and chunks the
+//! assignment over points when a single restart has the machine to
 //! itself. Both axes preserve the determinism contract: per-restart PCG
 //! streams are split from the caller's RNG in restart order on the
 //! calling thread, per-point assignments are pure functions of
 //! `(Y, centroids)`, and the objective is reduced in point order — so
 //! `threads = 1` and `threads = N` return bit-identical results.
 
-use crate::linalg::Mat;
+use crate::linalg::{dot, Mat};
 use crate::rng::{Pcg64, Rng};
 use crate::util::parallel::{for_each_task, map_indexed};
 
@@ -57,9 +66,340 @@ pub struct KmeansResult {
     pub iterations: usize,
 }
 
-/// K-means++ seeding (Arthur & Vassilvitskii 2007): first centroid
-/// uniform, subsequent ones D²-weighted.
-fn kmeanspp_init(y: &Mat, k: usize, rng: &mut Pcg64) -> Mat {
+#[inline]
+fn sq_norm(v: &[f64]) -> f64 {
+    v.iter().map(|x| x * x).sum()
+}
+
+/// Clamp an identity distance at zero without scrubbing NaN:
+/// `f64::max(NaN, 0.0)` would return 0.0, letting a NaN coordinate win
+/// the restart reduction with a bogus 0.0 objective — the comparison
+/// below keeps NaN as NaN (matching the pre-GEMM path, where a NaN
+/// distance never beat `bestd` and surfaced as an infinite objective).
+#[inline]
+fn clamp_dist2(d: f64) -> f64 {
+    if d < 0.0 {
+        0.0
+    } else {
+        d
+    }
+}
+
+/// `‖y − c‖²` via the norm identity, clamped at zero (the identity can
+/// land a few ulps negative when `y ≈ c`; when `c` was copied from `y`
+/// the dot product reruns the norm's exact op sequence and the result
+/// is exactly zero).
+#[inline]
+fn point_dist2(y: &[f64], yn: f64, c: &[f64], cn: f64) -> f64 {
+    clamp_dist2(yn + cn - 2.0 * dot(y, c))
+}
+
+/// K-means++ seeding (Arthur & Vassilvitskii 2007) over point-major
+/// data: first centroid uniform, subsequent ones D²-weighted, with all
+/// distances through the norm identity. Returns centroids point-major
+/// (k × r).
+fn kmeanspp_init(yt: &Mat, yn: &[f64], k: usize, rng: &mut Pcg64) -> Mat {
+    let n = yt.rows();
+    let r = yt.cols();
+    assert!(k <= n, "more clusters than points");
+    let mut ct = Mat::zeros(k, r);
+    let first = rng.below(n);
+    ct.row_mut(0).copy_from_slice(yt.row(first));
+    let cn0 = sq_norm(ct.row(0));
+    let mut d2 = vec![0.0f64; n];
+    for j in 0..n {
+        d2[j] = point_dist2(yt.row(j), yn[j], ct.row(0), cn0);
+    }
+    for c in 1..k {
+        let total: f64 = d2.iter().sum();
+        let pick = if total <= 0.0 {
+            rng.below(n)
+        } else {
+            let mut target = rng.next_f64() * total;
+            let mut chosen = n - 1;
+            for (j, &w) in d2.iter().enumerate() {
+                target -= w;
+                if target <= 0.0 {
+                    chosen = j;
+                    break;
+                }
+            }
+            chosen
+        };
+        ct.row_mut(c).copy_from_slice(yt.row(pick));
+        let cnc = sq_norm(ct.row(c));
+        for j in 0..n {
+            let nd = point_dist2(yt.row(j), yn[j], ct.row(c), cnc);
+            if nd < d2[j] {
+                d2[j] = nd;
+            }
+        }
+    }
+    ct
+}
+
+#[inline]
+fn col_dist2(y: &Mat, j: usize, c: &Mat, cj: usize) -> f64 {
+    let mut s = 0.0;
+    for i in 0..y.rows() {
+        let d = y[(i, j)] - c[(i, cj)];
+        s += d * d;
+    }
+    s
+}
+
+/// Argmin scan over a contiguous chunk of the cross-term rows (`g` is
+/// the flat row-major n × k cross term) starting at global point index
+/// `start`: nearest centroid and squared distance per point from
+/// `‖y‖² + ‖c‖² − 2 y·c`. Pure per-point function of the precomputed
+/// `(g, yn, cn)` — safe to run on any worker.
+fn assign_range(
+    g: &[f64],
+    k: usize,
+    yn: &[f64],
+    cn: &[f64],
+    start: usize,
+    labels: &mut [usize],
+    dist: &mut [f64],
+) {
+    for (o, (lab, ds)) in labels.iter_mut().zip(dist.iter_mut()).enumerate() {
+        let j = start + o;
+        let mut best = 0usize;
+        let mut bestd = f64::INFINITY;
+        for (c, &gv) in g[j * k..(j + 1) * k].iter().enumerate() {
+            let d = clamp_dist2(yn[j] + cn[c] - 2.0 * gv);
+            if d < bestd {
+                bestd = d;
+                best = c;
+            }
+        }
+        *lab = best;
+        *ds = bestd;
+    }
+}
+
+/// Full assignment step: one GEMM for the cross term `G = Y·Cᵀ`
+/// (point-major operands) into the caller-owned `g_scratch` buffer —
+/// reused across Lloyd iterations, no per-iteration allocation — then
+/// the argmin scan chunked over points across `threads` workers. Labels
+/// and distances land in per-point slots and `G` is
+/// thread-count-invariant by the GEMM contract, so the result does not
+/// depend on the chunking; callers sum `dist` sequentially in point
+/// order to keep the objective bit-identical across thread counts.
+fn assign_points(
+    yt: &Mat,
+    yn: &[f64],
+    ct: &Mat,
+    cn: &[f64],
+    labels: &mut [usize],
+    dist: &mut [f64],
+    threads: usize,
+    g_scratch: &mut Vec<f64>,
+) {
+    let n = yt.rows();
+    let k = ct.rows();
+    g_scratch.clear();
+    g_scratch.resize(n * k, 0.0); // gemm_into accumulates: start from zero
+    crate::linalg::gemm_into(g_scratch, yt, &ct.transpose(), threads);
+    let workers = threads.min(n).max(1);
+    if workers <= 1 {
+        assign_range(g_scratch, k, yn, cn, 0, labels, dist);
+        return;
+    }
+    let chunk = n.div_ceil(workers);
+    let tasks: Vec<(usize, &mut [usize], &mut [f64])> = labels
+        .chunks_mut(chunk)
+        .zip(dist.chunks_mut(chunk))
+        .enumerate()
+        .map(|(t, (lc, dc))| (t * chunk, lc, dc))
+        .collect();
+    let g = &*g_scratch;
+    for_each_task(tasks, workers, |(start, lc, dc)| {
+        assign_range(g, k, yn, cn, start, lc, dc);
+    });
+}
+
+/// One seeded Lloyd run. Empty clusters are re-seeded to the point
+/// farthest from its centroid (standard repair).
+pub fn kmeans_once(y: &Mat, opts: &KmeansOpts, rng: &mut Pcg64) -> KmeansResult {
+    kmeans_once_threaded(y, opts, rng, 1)
+}
+
+/// [`kmeans_once`] with the assignment step (GEMM + argmin scan) fanned
+/// over `threads` workers. Bit-identical to the sequential run for any
+/// thread count: only per-point work is distributed; the update step
+/// and the objective reduction stay in point order.
+pub fn kmeans_once_threaded(
+    y: &Mat,
+    opts: &KmeansOpts,
+    rng: &mut Pcg64,
+    threads: usize,
+) -> KmeansResult {
+    let (yt, yn) = point_major(y);
+    kmeans_once_on(&yt, &yn, opts, rng, threads)
+}
+
+/// Point-major layout + squared norms: every distance below is
+/// ‖y‖² + ‖c‖² − 2 y·c over contiguous rows. A pure function of `y`,
+/// computed once per `kmeans_threaded` call and shared by all restarts.
+fn point_major(y: &Mat) -> (Mat, Vec<f64>) {
+    let yt = y.transpose(); // n × r
+    let yn = (0..yt.rows()).map(|j| sq_norm(yt.row(j))).collect();
+    (yt, yn)
+}
+
+/// One Lloyd run over pre-transposed data (`yt` n × r, `yn` per-point
+/// squared norms) — the shared core of [`kmeans_once_threaded`] and the
+/// restart fan-out.
+fn kmeans_once_on(
+    yt: &Mat,
+    yn: &[f64],
+    opts: &KmeansOpts,
+    rng: &mut Pcg64,
+    threads: usize,
+) -> KmeansResult {
+    let (n, r) = (yt.rows(), yt.cols());
+    let k = opts.k;
+    let mut ct = kmeanspp_init(yt, yn, k, rng); // k × r
+    let mut cn: Vec<f64> = (0..k).map(|c| sq_norm(ct.row(c))).collect();
+    let mut labels = vec![0usize; n];
+    let mut dist = vec![0.0f64; n];
+    let mut g_scratch = Vec::new(); // cross-term buffer, reused every iteration
+    let mut objective = f64::INFINITY;
+    let mut iterations = 0;
+
+    for it in 0..opts.max_iters {
+        iterations = it + 1;
+        // assignment step (parallel over points, reduced in point order)
+        assign_points(yt, yn, &ct, &cn, &mut labels, &mut dist, threads, &mut g_scratch);
+        let obj: f64 = dist.iter().sum();
+        // update step: per-cluster sums accumulate over contiguous rows
+        let mut sums = Mat::zeros(k, r);
+        let mut counts = vec![0usize; k];
+        for j in 0..n {
+            let c = labels[j];
+            counts[c] += 1;
+            for (s, &v) in sums.row_mut(c).iter_mut().zip(yt.row(j)) {
+                *s += v;
+            }
+        }
+        // empty-cluster repair: re-seed to the point worst fit by the
+        // assignment just computed (`dist` is per-point and
+        // thread-count-invariant). total_cmp keeps a NaN distance from
+        // panicking, and each repaired cluster consumes its point so two
+        // empty clusters never adopt the same one.
+        let mut repair_d: Option<Vec<f64>> = None;
+        for c in 0..k {
+            if counts[c] == 0 {
+                let d = repair_d.get_or_insert_with(|| dist.clone());
+                let far = (0..n)
+                    .max_by(|&a, &b| d[a].total_cmp(&d[b]))
+                    .expect("kmeans on zero points");
+                d[far] = f64::NEG_INFINITY;
+                ct.row_mut(c).copy_from_slice(yt.row(far));
+            } else {
+                let count = counts[c] as f64;
+                for (cv, &s) in ct.row_mut(c).iter_mut().zip(sums.row(c)) {
+                    *cv = s / count;
+                }
+            }
+        }
+        for c in 0..k {
+            cn[c] = sq_norm(ct.row(c));
+        }
+        let improved = objective - obj;
+        objective = obj;
+        if improved.abs() <= opts.tol * objective.max(1e-300) && it > 0 {
+            break;
+        }
+    }
+    // final assignment under the last centroids (objective consistent)
+    assign_points(yt, yn, &ct, &cn, &mut labels, &mut dist, threads, &mut g_scratch);
+    let obj: f64 = dist.iter().sum();
+    KmeansResult { labels, centroids: ct.transpose(), objective: obj, iterations }
+}
+
+/// K-means with restarts: best-of-`opts.restarts` independent seeded
+/// runs (the paper's protocol). Deterministic given the rng.
+pub fn kmeans(y: &Mat, opts: &KmeansOpts, rng: &mut Pcg64) -> KmeansResult {
+    kmeans_threaded(y, opts, rng, 1)
+}
+
+/// [`kmeans`] with the restarts fanned out across `threads` workers.
+///
+/// Determinism contract (verified by `tests/parallel_determinism.rs`):
+/// every restart's PCG stream is split from `rng` in restart order *on
+/// the calling thread* — exactly the sequence the sequential loop draws
+/// — and the winning restart is reduced in restart order with the same
+/// strict `<` comparison, so labels, centroids, and objective are
+/// bit-identical for any thread count. Whole surplus multiples of the
+/// restart count are not left idle: each restart runs its assignment
+/// step with `(threads / restarts).max(1)` inner workers (the inner
+/// chunking is thread-count-invariant, so bit-identity survives; a
+/// fractional surplus below one extra worker per restart still idles).
+/// With a single restart all the parallelism moves into the assignment
+/// step.
+pub fn kmeans_threaded(
+    y: &Mat,
+    opts: &KmeansOpts,
+    rng: &mut Pcg64,
+    threads: usize,
+) -> KmeansResult {
+    assert!(opts.restarts >= 1);
+    // pre-split per-restart streams in restart order: the parent rng
+    // advances exactly as in the sequential loop, for any thread count
+    let streams: Vec<Pcg64> =
+        (0..opts.restarts).map(|t| rng.split(t as u64 + 1)).collect();
+    // transpose + norms once, shared read-only by every restart (a pure
+    // function of y — sharing it changes no bits)
+    let (yt, yn) = point_major(y);
+    if threads <= 1 || opts.restarts == 1 {
+        // fold run by run — only the current best result stays alive
+        let mut best: Option<KmeansResult> = None;
+        for mut r in streams {
+            let run = kmeans_once_on(&yt, &yn, opts, &mut r, threads);
+            if best.as_ref().is_none_or(|b| run.objective < b.objective) {
+                best = Some(run);
+            }
+        }
+        return best.expect("restarts >= 1");
+    }
+    // the fan-out holds one result per restart until the index-order
+    // reduction (restarts are ~10 under the paper's protocol); surplus
+    // workers beyond the restart count chunk each restart's assignment
+    let inner = (threads / opts.restarts).max(1);
+    let runs = map_indexed(opts.restarts, threads, |t| {
+        let mut r = streams[t].clone();
+        kmeans_once_on(&yt, &yn, opts, &mut r, inner)
+    });
+    let mut best: Option<KmeansResult> = None;
+    for run in runs {
+        if best.as_ref().is_none_or(|b| run.objective < b.objective) {
+            best = Some(run);
+        }
+    }
+    best.expect("restarts >= 1")
+}
+
+/// The pre-GEMM Lloyd implementation: per-(point, centroid) squared
+/// distances walked column-strided, sequential only. Kept verbatim as
+/// the oracle for `bench_kmeans`/`bench_pipeline` before/after rows and
+/// the agreement tests — never on a hot path.
+pub fn kmeans_reference(y: &Mat, opts: &KmeansOpts, rng: &mut Pcg64) -> KmeansResult {
+    assert!(opts.restarts >= 1);
+    let streams: Vec<Pcg64> =
+        (0..opts.restarts).map(|t| rng.split(t as u64 + 1)).collect();
+    let mut best: Option<KmeansResult> = None;
+    for mut r in streams {
+        let run = kmeans_once_reference(y, opts, &mut r);
+        if best.as_ref().is_none_or(|b| run.objective < b.objective) {
+            best = Some(run);
+        }
+    }
+    best.expect("restarts >= 1")
+}
+
+fn kmeanspp_init_reference(y: &Mat, k: usize, rng: &mut Pcg64) -> Mat {
     let (r, n) = (y.rows(), y.cols());
     assert!(k <= n, "more clusters than points");
     let mut centroids = Mat::zeros(r, k);
@@ -100,92 +440,10 @@ fn kmeanspp_init(y: &Mat, k: usize, rng: &mut Pcg64) -> Mat {
     centroids
 }
 
-#[inline]
-fn col_dist2(y: &Mat, j: usize, c: &Mat, cj: usize) -> f64 {
-    let mut s = 0.0;
-    for i in 0..y.rows() {
-        let d = y[(i, j)] - c[(i, cj)];
-        s += d * d;
-    }
-    s
-}
-
-/// Assignment step over a contiguous chunk of points starting at global
-/// index `start`: nearest centroid and squared distance per point. Pure
-/// per-point function of `(y, centroids)` — safe to run on any worker.
-fn assign_range(
-    y: &Mat,
-    centroids: &Mat,
-    k: usize,
-    start: usize,
-    labels: &mut [usize],
-    dist: &mut [f64],
-) {
-    for (o, (lab, ds)) in labels.iter_mut().zip(dist.iter_mut()).enumerate() {
-        let j = start + o;
-        let mut best = 0usize;
-        let mut bestd = f64::INFINITY;
-        for c in 0..k {
-            let d = col_dist2(y, j, centroids, c);
-            if d < bestd {
-                bestd = d;
-                best = c;
-            }
-        }
-        *lab = best;
-        *ds = bestd;
-    }
-}
-
-/// Full assignment step, chunked over points across `threads` workers.
-/// Labels and distances land in per-point slots, so the result does not
-/// depend on the chunking; callers sum `dist` sequentially in point
-/// order to keep the objective bit-identical across thread counts.
-fn assign_points(
-    y: &Mat,
-    centroids: &Mat,
-    k: usize,
-    labels: &mut [usize],
-    dist: &mut [f64],
-    threads: usize,
-) {
-    let n = y.cols();
-    let workers = threads.min(n).max(1);
-    if workers <= 1 {
-        assign_range(y, centroids, k, 0, labels, dist);
-        return;
-    }
-    let chunk = n.div_ceil(workers);
-    let tasks: Vec<(usize, &mut [usize], &mut [f64])> = labels
-        .chunks_mut(chunk)
-        .zip(dist.chunks_mut(chunk))
-        .enumerate()
-        .map(|(g, (lc, dc))| (g * chunk, lc, dc))
-        .collect();
-    for_each_task(tasks, workers, |(start, lc, dc)| {
-        assign_range(y, centroids, k, start, lc, dc);
-    });
-}
-
-/// One seeded Lloyd run. Empty clusters are re-seeded to the point
-/// farthest from its centroid (standard repair).
-pub fn kmeans_once(y: &Mat, opts: &KmeansOpts, rng: &mut Pcg64) -> KmeansResult {
-    kmeans_once_threaded(y, opts, rng, 1)
-}
-
-/// [`kmeans_once`] with the assignment step chunked over `threads`
-/// workers. Bit-identical to the sequential run for any thread count:
-/// only the O(n·k·r) per-point search is distributed; the update step
-/// and the objective reduction stay in point order.
-pub fn kmeans_once_threaded(
-    y: &Mat,
-    opts: &KmeansOpts,
-    rng: &mut Pcg64,
-    threads: usize,
-) -> KmeansResult {
+fn kmeans_once_reference(y: &Mat, opts: &KmeansOpts, rng: &mut Pcg64) -> KmeansResult {
     let (r, n) = (y.rows(), y.cols());
     let k = opts.k;
-    let mut centroids = kmeanspp_init(y, k, rng);
+    let mut centroids = kmeanspp_init_reference(y, k, rng);
     let mut labels = vec![0usize; n];
     let mut dist = vec![0.0f64; n];
     let mut objective = f64::INFINITY;
@@ -193,10 +451,20 @@ pub fn kmeans_once_threaded(
 
     for it in 0..opts.max_iters {
         iterations = it + 1;
-        // assignment step (parallel over points, reduced in point order)
-        assign_points(y, &centroids, k, &mut labels, &mut dist, threads);
+        for j in 0..n {
+            let mut bd = f64::INFINITY;
+            let mut bc = 0usize;
+            for c in 0..k {
+                let d = col_dist2(y, j, &centroids, c);
+                if d < bd {
+                    bd = d;
+                    bc = c;
+                }
+            }
+            labels[j] = bc;
+            dist[j] = bd;
+        }
         let obj: f64 = dist.iter().sum();
-        // update step
         let mut sums = Mat::zeros(r, k);
         let mut counts = vec![0usize; k];
         for j in 0..n {
@@ -208,14 +476,12 @@ pub fn kmeans_once_threaded(
         }
         for c in 0..k {
             if counts[c] == 0 {
-                // re-seed to the globally worst-fit point
                 let far = (0..n)
                     .max_by(|&a, &b| {
                         col_dist2(y, a, &centroids, labels[a])
-                            .partial_cmp(&col_dist2(y, b, &centroids, labels[b]))
-                            .unwrap()
+                            .total_cmp(&col_dist2(y, b, &centroids, labels[b]))
                     })
-                    .unwrap();
+                    .expect("kmeans on zero points");
                 for i in 0..r {
                     centroids[(i, c)] = y[(i, far)];
                 }
@@ -231,62 +497,21 @@ pub fn kmeans_once_threaded(
             break;
         }
     }
-    // final assignment under the last centroids (objective consistent)
-    assign_points(y, &centroids, k, &mut labels, &mut dist, threads);
-    let obj: f64 = dist.iter().sum();
-    KmeansResult { labels, centroids, objective: obj, iterations }
-}
-
-/// K-means with restarts: best-of-`opts.restarts` independent seeded
-/// runs (the paper's protocol). Deterministic given the rng.
-pub fn kmeans(y: &Mat, opts: &KmeansOpts, rng: &mut Pcg64) -> KmeansResult {
-    kmeans_threaded(y, opts, rng, 1)
-}
-
-/// [`kmeans`] with the restarts fanned out across `threads` workers.
-///
-/// Determinism contract (verified by `tests/parallel_determinism.rs`):
-/// every restart's PCG stream is split from `rng` in restart order *on
-/// the calling thread* — exactly the sequence the sequential loop draws
-/// — and the winning restart is reduced in restart order with the same
-/// strict `<` comparison, so labels, centroids, and objective are
-/// bit-identical for any thread count. With a single restart the
-/// parallelism moves into the chunked assignment step instead.
-pub fn kmeans_threaded(
-    y: &Mat,
-    opts: &KmeansOpts,
-    rng: &mut Pcg64,
-    threads: usize,
-) -> KmeansResult {
-    assert!(opts.restarts >= 1);
-    // pre-split per-restart streams in restart order: the parent rng
-    // advances exactly as in the sequential loop, for any thread count
-    let streams: Vec<Pcg64> =
-        (0..opts.restarts).map(|t| rng.split(t as u64 + 1)).collect();
-    if threads <= 1 || opts.restarts == 1 {
-        // fold run by run — only the current best result stays alive
-        let mut best: Option<KmeansResult> = None;
-        for mut r in streams {
-            let run = kmeans_once_threaded(y, opts, &mut r, threads);
-            if best.as_ref().is_none_or(|b| run.objective < b.objective) {
-                best = Some(run);
+    for j in 0..n {
+        let mut bd = f64::INFINITY;
+        let mut bc = 0usize;
+        for c in 0..k {
+            let d = col_dist2(y, j, &centroids, c);
+            if d < bd {
+                bd = d;
+                bc = c;
             }
         }
-        return best.expect("restarts >= 1");
+        labels[j] = bc;
+        dist[j] = bd;
     }
-    // the fan-out holds one result per restart until the index-order
-    // reduction (restarts are ~10 under the paper's protocol)
-    let runs = map_indexed(opts.restarts, threads, |t| {
-        let mut r = streams[t].clone();
-        kmeans_once_threaded(y, opts, &mut r, 1)
-    });
-    let mut best: Option<KmeansResult> = None;
-    for run in runs {
-        if best.as_ref().is_none_or(|b| run.objective < b.objective) {
-            best = Some(run);
-        }
-    }
-    best.expect("restarts >= 1")
+    let obj: f64 = dist.iter().sum();
+    KmeansResult { labels, centroids, objective: obj, iterations }
 }
 
 #[cfg(test)]
@@ -370,7 +595,8 @@ mod tests {
             kmeans_threaded(&y, &KmeansOpts::paper(3), &mut rng, threads)
         };
         let base = run(1);
-        for threads in [2usize, 4, 16] {
+        // 64 exercises the surplus-thread path (inner workers > 1)
+        for threads in [2usize, 4, 16, 64] {
             let par = run(threads);
             assert_eq!(base.labels, par.labels, "threads={threads}");
             assert_eq!(base.objective.to_bits(), par.objective.to_bits(), "threads={threads}");
@@ -392,5 +618,40 @@ mod tests {
         assert!(res.objective < 1e-18);
         assert_eq!(res.labels[0], res.labels[1]);
         assert_ne!(res.labels[0], res.labels[5]);
+    }
+
+    #[test]
+    fn agrees_with_reference_implementation() {
+        // the GEMM/norm-identity path and the pre-GEMM reference draw the
+        // same RNG sequence and converge to the same clustering on
+        // separated data; objectives agree to rounding noise
+        let mut r1 = Pcg64::seed(9);
+        let (y, truth) = blobs(&mut r1, 30);
+        let opts = KmeansOpts::paper(3);
+        let mut ra = Pcg64::seed(55);
+        let mut rb = Pcg64::seed(55);
+        let a = kmeans(&y, &opts, &mut ra);
+        let b = kmeans_reference(&y, &opts, &mut rb);
+        assert!((a.objective - b.objective).abs() < 1e-6 * a.objective.max(1.0));
+        let acc_a = crate::clustering::accuracy(&a.labels, &truth, 3);
+        let acc_b = crate::clustering::accuracy(&b.labels, &truth, 3);
+        assert!(acc_a > 0.99 && acc_b > 0.99, "{acc_a} vs {acc_b}");
+        // both paths must leave the caller's rng at the same state
+        assert_eq!(ra.next_u64(), rb.next_u64());
+    }
+
+    #[test]
+    fn empty_cluster_repair_survives_nan_distances() {
+        // a NaN coordinate used to panic the repair's partial_cmp sort;
+        // with total_cmp the run completes (labels for the NaN point are
+        // arbitrary but defined)
+        let y = Mat::from_vec(1, 6, vec![0.0, 0.1, 5.0, 5.1, 9.0, f64::NAN]);
+        let mut rng = Pcg64::seed(11);
+        let res = kmeans(&y, &KmeansOpts { k: 3, restarts: 3, max_iters: 10, tol: 0.0 }, &mut rng);
+        assert_eq!(res.labels.len(), 6);
+        // the distance clamp must not scrub NaN to 0.0: the NaN point's
+        // best distance stays infinite, so no restart can win with a
+        // bogus zero objective (the pre-GEMM NaN semantics)
+        assert!(res.objective.is_infinite(), "objective {}", res.objective);
     }
 }

@@ -52,7 +52,7 @@ pub trait SketchRowProducer {
 impl SketchRowProducer for super::NativeSketchRows {
     fn rows_for(&mut self, cols: &[usize]) -> Mat {
         let kb = self.src.block(cols);
-        self.srht.apply_to_block(&kb, self.threads)
+        self.srht.apply_to_block_with(&kb, self.threads, &mut self.scratch)
     }
 
     fn srht(&self) -> &Srht {
@@ -146,9 +146,12 @@ pub fn run_sketch_pass_sharded(
         // producer has drained its shard
         drop(tx);
 
+        // one flat transform buffer reused for every block the consumer
+        // drains — the SRHT stage allocates nothing per block
+        let mut scratch = Vec::new();
         for (cols, kb) in rx.iter() {
             let t1 = std::time::Instant::now();
-            let rows = srht.apply_to_block(&kb, fwht_threads);
+            let rows = srht.apply_to_block_with(&kb, fwht_threads, &mut scratch);
             sketch.ingest(&cols, &rows);
             stats.transform_time += t1.elapsed();
             stats.blocks += 1;
@@ -188,6 +191,7 @@ mod tests {
             src: NativeBlockSource::pow2(x.clone(), kern),
             srht: srht.clone(),
             threads: 1,
+            scratch: Vec::new(),
         };
         let (sk_seq, st_seq) = run_sketch_pass(&mut seq, 53, 10);
         let (sk_thr, st_thr) = run_sketch_pass_threaded(
@@ -210,6 +214,7 @@ mod tests {
             src: NativeBlockSource::pow2(x.clone(), kern),
             srht: srht.clone(),
             threads: 1,
+            scratch: Vec::new(),
         };
         let (sk_seq, _) = run_sketch_pass(&mut seq, 61, 7);
         for producers in [2usize, 3, 5] {
@@ -250,6 +255,7 @@ mod tests {
             src: NativeBlockSource::pow2(x, Kernel::Rbf { gamma: 0.5 }),
             srht,
             threads: 1,
+            scratch: Vec::new(),
         };
         let (sk, stats) = run_sketch_pass(&mut p, 17, 5);
         assert_eq!(stats.blocks, 4); // 5+5+5+2

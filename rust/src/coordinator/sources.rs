@@ -58,6 +58,9 @@ pub struct NativeSketchRows {
     pub src: NativeBlockSource,
     pub srht: Srht,
     pub threads: usize,
+    /// flat SRHT transform buffer, grown once and reused across blocks
+    /// (see [`Srht::apply_to_block_with`]); start with `Vec::new()`
+    pub scratch: Vec<f64>,
 }
 
 /// XLA fused producer: one artifact call computes `(H D) K[:, J]` from

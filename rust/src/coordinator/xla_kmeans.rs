@@ -108,9 +108,11 @@ fn lloyd_once(
                             (0..r).map(|i| (y[(i, a)] - centroids[(i, labels[a])]).powi(2)).sum();
                         let db: f64 =
                             (0..r).map(|i| (y[(i, b)] - centroids[(i, labels[b])]).powi(2)).sum();
-                        da.partial_cmp(&db).unwrap()
+                        // total order: a NaN distance must not panic the
+                        // repair (same fix as clustering::kmeans)
+                        da.total_cmp(&db)
                     })
-                    .unwrap();
+                    .expect("kmeans on zero points");
                 for i in 0..r {
                     centroids[(i, c)] = y[(i, far)];
                 }

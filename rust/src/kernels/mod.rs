@@ -152,7 +152,12 @@ pub trait BlockSource {
 /// bit-identical for any `threads` setting.
 #[derive(Clone)]
 pub struct NativeBlockSource {
-    x: Mat,
+    /// the data, transposed once to point-major `xᵀ` (n × p) — the gram
+    /// GEMM's left operand and the *only* copy this source holds (the
+    /// memory model's "data is shared, not accounted" premise stays true)
+    xt: Mat,
+    /// per-point squared norms `‖x_i‖²` (RBF distance identity + diag)
+    xnorm2: Vec<f64>,
     kernel: Kernel,
     n_padded: usize,
     threads: usize,
@@ -162,7 +167,9 @@ impl NativeBlockSource {
     /// Source over `x` (p × n) padding blocks to `n_padded` rows.
     pub fn new(x: Mat, kernel: Kernel, n_padded: usize) -> Self {
         assert!(n_padded >= x.cols(), "padding smaller than data");
-        NativeBlockSource { x, kernel, n_padded, threads: 1 }
+        let xt = x.transpose();
+        let xnorm2 = (0..xt.rows()).map(|i| xt.row(i).iter().map(|v| v * v).sum()).collect();
+        NativeBlockSource { xt, xnorm2, kernel, n_padded, threads: 1 }
     }
 
     /// Convenience: pad to the next power of two (SRHT requirement).
@@ -178,11 +185,6 @@ impl NativeBlockSource {
         self
     }
 
-    /// The underlying data matrix (p × n).
-    pub fn x(&self) -> &Mat {
-        &self.x
-    }
-
     /// The kernel function this source evaluates.
     pub fn kernel(&self) -> Kernel {
         self.kernel
@@ -192,8 +194,8 @@ impl NativeBlockSource {
     /// gram path is pure, so concurrent producers can share one source
     /// by reference ([`BlockSource::block`] delegates here).
     pub fn compute_block(&self, cols: &[usize]) -> Mat {
-        let n = self.x.cols();
-        let p = self.x.rows();
+        let n = self.xt.rows();
+        let p = self.xt.cols();
         let b = cols.len();
         let mut out = Mat::zeros(self.n_padded, b);
         if b == 0 || n == 0 {
@@ -202,65 +204,49 @@ impl NativeBlockSource {
         let xb = Mat::from_fn(p, b, |d, bj| {
             let j = cols[bj];
             assert!(j < n, "column index {j} out of range (n={n})");
-            self.x[(d, j)]
+            self.xt[(j, d)]
         });
-        // query-column norms for the RBF distance identity, shared
-        // read-only by every worker
-        let ys: Vec<f64> = match self.kernel {
-            Kernel::Rbf { .. } => {
-                (0..b).map(|bj| (0..p).map(|d| xb[(d, bj)].powi(2)).sum()).collect()
-            }
-            _ => Vec::new(),
-        };
-        // Gram core as a blocked matmul: out[i, bj] = Σ_d x[d, i]·xb[d, bj]
-        // accumulated row of x by row of x — both operands stream
-        // sequentially, ~6× faster than per-entry kernel eval
-        // (EXPERIMENTS.md §Perf). The kernel nonlinearity is applied
-        // elementwise per finished row. i-outer: the (b)-wide output row
-        // stays in L1 and the inner axpy vectorizes over b; xb (p × b) is
-        // L2-resident throughout. Workers own disjoint row ranges; the
-        // per-entry accumulation order never depends on the worker count.
-        let x = &self.x;
-        let kernel = self.kernel;
+        // Gram core: out[:n, :] = xᵀ · xb as one call into the shared
+        // cache-blocked GEMM (linalg::gemm) — branch-free inner axpy (the
+        // old per-element `xi == 0.0` skip pessimized dense data), packed
+        // panels, threaded over output rows with a scheduling-independent
+        // accumulation order, so blocks stay bit-identical for any
+        // `threads` setting. The padded tail is untouched (stays zero).
         let (real_rows, _padding) = out.data_mut().split_at_mut(n * b);
-        crate::util::parallel::for_each_row_chunk(real_rows, b, self.threads, |i0, rows| {
-            for (di, orow) in rows.chunks_mut(b).enumerate() {
-                let i = i0 + di;
-                for d in 0..p {
-                    let xi = x[(d, i)];
-                    if xi == 0.0 {
-                        continue;
+        crate::linalg::gemm_into(real_rows, &self.xt, &xb, self.threads);
+        // kernel nonlinearity as a second elementwise pass over the rows
+        match self.kernel {
+            Kernel::Linear => {}
+            Kernel::Poly { gamma, degree } => {
+                let e = degree as i32;
+                crate::util::parallel::for_each_row_chunk(real_rows, b, self.threads, |_, rows| {
+                    for v in rows.iter_mut() {
+                        *v = (*v + gamma).powi(e);
                     }
-                    let brow = xb.row(d);
-                    for (o, &q) in orow.iter_mut().zip(brow) {
-                        *o += xi * q;
-                    }
-                }
-                match kernel {
-                    Kernel::Linear => {}
-                    Kernel::Poly { gamma, degree } => {
-                        let e = degree as i32;
-                        for v in orow.iter_mut() {
-                            *v = (*v + gamma).powi(e);
-                        }
-                    }
-                    Kernel::Rbf { gamma } => {
-                        // ||x−y||² = ||x||² + ||y||² − 2⟨x,y⟩ from the dot
-                        let xs_i: f64 = (0..p).map(|d| x[(d, i)].powi(2)).sum();
+                });
+            }
+            Kernel::Rbf { gamma } => {
+                // ‖x−y‖² = ‖x‖² + ‖y‖² − 2⟨x,y⟩ from the dot product
+                let xn = &self.xnorm2;
+                let ys: Vec<f64> = cols.iter().map(|&j| xn[j]).collect();
+                let ys = &ys;
+                crate::util::parallel::for_each_row_chunk(real_rows, b, self.threads, |i0, rows| {
+                    for (di, orow) in rows.chunks_mut(b).enumerate() {
+                        let xs_i = xn[i0 + di];
                         for (bj, v) in orow.iter_mut().enumerate() {
                             *v = (-gamma * (xs_i + ys[bj] - 2.0 * *v)).exp();
                         }
                     }
-                }
+                });
             }
-        });
+        }
         out
     }
 }
 
 impl BlockSource for NativeBlockSource {
     fn n(&self) -> usize {
-        self.x.cols()
+        self.xt.rows()
     }
 
     fn n_padded(&self) -> usize {
@@ -272,13 +258,7 @@ impl BlockSource for NativeBlockSource {
     }
 
     fn diag(&mut self) -> Vec<f64> {
-        let p = self.x.rows();
-        (0..self.x.cols())
-            .map(|i| {
-                let norm2: f64 = (0..p).map(|d| self.x[(d, i)].powi(2)).sum();
-                self.kernel.eval_diag(norm2)
-            })
-            .collect()
+        self.xnorm2.iter().map(|&norm2| self.kernel.eval_diag(norm2)).collect()
     }
 }
 

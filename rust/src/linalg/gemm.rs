@@ -1,0 +1,225 @@
+//! The shared cache-blocked GEMM micro-kernel every dense hot path
+//! routes through: the recovery step's `QᵀW` / `Q·Uq` / `Y = Σ^½VᵀQᵀ`,
+//! the Nyström projection, the gram core of
+//! [`NativeBlockSource`](crate::kernels::NativeBlockSource), and the
+//! K-means cross term `YᵀC`.
+//!
+//! Shape of the kernel (same scheme as the gram core it generalizes):
+//! i-outer over rows of `C`, a `b`-wide axpy inner loop that the
+//! compiler vectorizes, and `B` packed once into L2-resident
+//! `KC × NC` panels so the inner loop streams contiguous memory no
+//! matter how `B` was laid out. Threading fans disjoint row ranges of
+//! `C` out through [`crate::util::parallel`].
+//!
+//! # Determinism contract
+//!
+//! Every output element accumulates its `k`-sum in ascending-`k` order,
+//! for any thread count and either code path (single-panel fast path or
+//! packed panels — the panel loops visit `k` blocks in order). Threads
+//! only partition *rows* of `C`, never a reduction, so
+//! `gemm(a, b, 1)` and `gemm(a, b, N)` are bit-identical — the property
+//! the crate-wide `threads=1 ≡ threads=N` contract
+//! (`tests/parallel_determinism.rs`) rests on.
+
+use super::Mat;
+use crate::util::parallel::for_each_row_chunk;
+
+/// Depth (`k` extent) of a packed panel of `B`.
+const KC: usize = 256;
+/// Width (`j` extent) of a packed panel of `B`; `KC·NC` f64 = 256 KiB,
+/// sized to stay L2-resident while a worker sweeps its rows over it.
+const NC: usize = 128;
+
+/// `C = A · B`, cache-blocked and threaded over rows of `C`.
+pub fn gemm(a: &Mat, b: &Mat, threads: usize) -> Mat {
+    assert_eq!(a.cols(), b.rows(), "gemm shape mismatch");
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    gemm_into(c.data_mut(), a, b, threads);
+    c
+}
+
+/// `C = Aᵀ · B` (both operands tall, `a.rows == b.rows`). The transpose
+/// is materialized once — a copy is cheaper than the strided inner loop
+/// it replaces, and it keeps one accumulation order for every variant.
+pub fn gemm_tn(a: &Mat, b: &Mat, threads: usize) -> Mat {
+    assert_eq!(a.rows(), b.rows(), "gemm_tn shape mismatch");
+    gemm(&a.transpose(), b, threads)
+}
+
+/// `C = A · Bᵀ` (`a.cols == b.cols`).
+pub fn gemm_nt(a: &Mat, b: &Mat, threads: usize) -> Mat {
+    assert_eq!(a.cols(), b.cols(), "gemm_nt shape mismatch");
+    gemm(a, &b.transpose(), threads)
+}
+
+/// Accumulate `C += A · B` into a caller-owned row-major buffer of
+/// exactly `a.rows() · b.cols()` elements (callers that need `C = A·B`
+/// pass a zeroed buffer). This is the entry point for callers that own
+/// a larger allocation — the gram core writes the real-row prefix of a
+/// padded block without a copy.
+pub fn gemm_into(c: &mut [f64], a: &Mat, b: &Mat, threads: usize) {
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    assert_eq!(k, b.rows(), "gemm shape mismatch");
+    assert_eq!(c.len(), m * n, "gemm output buffer mismatch");
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let threads = threads.max(1);
+    if k <= KC && n <= NC {
+        // single-panel fast path: B already fits one panel, read it
+        // directly (this covers the crate's tall-skinny hot shapes,
+        // where n is r, r', or the cluster count)
+        for_each_row_chunk(c, n, threads, |i0, rows| {
+            for (di, crow) in rows.chunks_mut(n).enumerate() {
+                let arow = a.row(i0 + di);
+                for (dk, &aik) in arow.iter().enumerate() {
+                    axpy(crow, aik, b.row(dk));
+                }
+            }
+        });
+        return;
+    }
+    let packed = PackedB::new(b);
+    for_each_row_chunk(c, n, threads, |i0, rows| {
+        let nrows = rows.len() / n;
+        for (pj, &(j0, jw)) in packed.jblocks.iter().enumerate() {
+            for (pk, &(k0, kw)) in packed.kblocks.iter().enumerate() {
+                let panel = packed.panel(pj, pk, jw, kw);
+                for di in 0..nrows {
+                    let arow = &a.row(i0 + di)[k0..k0 + kw];
+                    let crow = &mut rows[di * n + j0..di * n + j0 + jw];
+                    for (dk, &aik) in arow.iter().enumerate() {
+                        axpy(crow, aik, &panel[dk * jw..(dk + 1) * jw]);
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// `c += a · b`, the vectorizable inner loop shared by both paths. No
+/// zero-skip branch: on dense operands the branch costs more than the
+/// multiply it saves, and dropping it keeps the loop branch-free.
+#[inline]
+fn axpy(c: &mut [f64], a: f64, b: &[f64]) {
+    for (o, &v) in c.iter_mut().zip(b) {
+        *o += a * v;
+    }
+}
+
+/// `B` repacked into `(j-block, k-block)` panels, each `kw × jw`
+/// row-major and contiguous. Built once per product, shared read-only
+/// by every worker.
+struct PackedB {
+    jblocks: Vec<(usize, usize)>,
+    kblocks: Vec<(usize, usize)>,
+    data: Vec<f64>,
+    /// panel offsets indexed `pj * kblocks.len() + pk`
+    offsets: Vec<usize>,
+}
+
+impl PackedB {
+    fn new(b: &Mat) -> Self {
+        let (k, n) = (b.rows(), b.cols());
+        let jblocks = block_ranges(n, NC);
+        let kblocks = block_ranges(k, KC);
+        let mut data = Vec::with_capacity(k * n);
+        let mut offsets = Vec::with_capacity(jblocks.len() * kblocks.len());
+        for &(j0, jw) in &jblocks {
+            for &(k0, kw) in &kblocks {
+                offsets.push(data.len());
+                for dk in 0..kw {
+                    data.extend_from_slice(&b.row(k0 + dk)[j0..j0 + jw]);
+                }
+            }
+        }
+        PackedB { jblocks, kblocks, data, offsets }
+    }
+
+    #[inline]
+    fn panel(&self, pj: usize, pk: usize, jw: usize, kw: usize) -> &[f64] {
+        let off = self.offsets[pj * self.kblocks.len() + pk];
+        &self.data[off..off + kw * jw]
+    }
+}
+
+/// Split `0..total` into `(start, len)` ranges of at most `step`.
+fn block_ranges(total: usize, step: usize) -> Vec<(usize, usize)> {
+    (0..total).step_by(step).map(|s| (s, step.min(total - s))).collect()
+}
+
+/// Naive j-inner reference matmul — the oracle the GEMM property tests
+/// and `bench_recovery`/`bench_kmeans` before/after rows compare
+/// against. Never used on a hot path.
+pub fn matmul_reference(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
+    Mat::from_fn(a.rows(), b.cols(), |i, j| {
+        (0..a.cols()).map(|k| a[(i, k)] * b[(k, j)]).sum()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::testutil::{assert_mat_close, random_mat};
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn gemm_matches_reference_across_odd_shapes() {
+        let mut rng = Pcg64::seed(1);
+        // empty, 1×1, skinny, and non-multiples of both block sizes
+        for &(m, k, n) in &[
+            (0usize, 3usize, 4usize),
+            (3, 0, 4),
+            (3, 4, 0),
+            (1, 1, 1),
+            (5, 7, 3),
+            (2, KC + 3, NC + 5),
+            (17, KC, NC),
+            (9, 2 * KC + 1, NC - 1),
+        ] {
+            let a = random_mat(&mut rng, m, k);
+            let b = random_mat(&mut rng, k, n);
+            assert_mat_close(&gemm(&a, &b, 1), &matmul_reference(&a, &b), 1e-12);
+        }
+    }
+
+    #[test]
+    fn gemm_is_thread_count_invariant_bitwise() {
+        let mut rng = Pcg64::seed(2);
+        for &(m, k, n) in &[(37usize, 19usize, 23usize), (8, KC + 9, NC + 17)] {
+            let a = random_mat(&mut rng, m, k);
+            let b = random_mat(&mut rng, k, n);
+            let base = gemm(&a, &b, 1);
+            for threads in [2usize, 3, 8] {
+                assert_eq!(base.data(), gemm(&a, &b, threads).data(), "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_variants_match_reference() {
+        let mut rng = Pcg64::seed(3);
+        let a = random_mat(&mut rng, 11, 6);
+        let b = random_mat(&mut rng, 11, 9);
+        assert_mat_close(&gemm_tn(&a, &b, 2), &matmul_reference(&a.transpose(), &b), 1e-12);
+        let c = random_mat(&mut rng, 7, 6);
+        assert_mat_close(&gemm_nt(&a, &c, 2), &matmul_reference(&a, &c.transpose()), 1e-12);
+    }
+
+    #[test]
+    fn gemm_into_accumulates() {
+        let a = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let b = Mat::from_vec(2, 2, vec![5., 6., 7., 8.]);
+        let mut c = vec![1.0; 4];
+        gemm_into(&mut c, &a, &b, 1);
+        // A·B = [[19,22],[43,50]] on top of the existing ones
+        assert_eq!(c, vec![20., 23., 44., 51.]);
+    }
+
+    #[test]
+    #[should_panic(expected = "gemm shape mismatch")]
+    fn gemm_rejects_shape_mismatch() {
+        let _ = gemm(&Mat::zeros(2, 3), &Mat::zeros(2, 3), 1);
+    }
+}

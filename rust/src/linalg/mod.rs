@@ -12,10 +12,12 @@
 //! more than memory here (the matrices are `n × r'` at most).
 
 mod eig;
+mod gemm;
 mod qr;
 mod solve;
 
 pub use eig::{jacobi_eig, power_iteration, spectral_norm};
+pub use gemm::{gemm, gemm_into, gemm_nt, gemm_tn, matmul_reference};
 pub use qr::{householder_qr, leading_left_singular_vectors, orthonormal_columns};
 pub use solve::{cholesky, least_squares, pinv, pinv_psd, pinv_psd_rank, solve_lower, solve_upper};
 
@@ -88,52 +90,24 @@ impl Mat {
         Mat::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
     }
 
-    /// `self @ other` with the cache-friendly i-k-j loop order.
+    /// `self @ other` through the shared cache-blocked [`gemm`] core
+    /// (single-threaded; hot paths that own a thread budget call
+    /// [`gemm`] directly).
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
-        let mut out = Mat::zeros(self.rows, other.cols);
-        for i in 0..self.rows {
-            let arow = self.row(i);
-            let orow = out.row_mut(i);
-            for (k, &aik) in arow.iter().enumerate() {
-                if aik == 0.0 {
-                    continue;
-                }
-                let brow = other.row(k);
-                for (o, &b) in orow.iter_mut().zip(brow) {
-                    *o += aik * b;
-                }
-            }
-        }
-        out
+        gemm(self, other, 1)
     }
 
-    /// `self^T @ other` without materializing the transpose.
+    /// `self^T @ other` through the shared [`gemm`] core.
     pub fn t_matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
-        let mut out = Mat::zeros(self.cols, other.cols);
-        for k in 0..self.rows {
-            let arow = self.row(k);
-            let brow = other.row(k);
-            for (i, &aki) in arow.iter().enumerate() {
-                if aki == 0.0 {
-                    continue;
-                }
-                let orow = out.row_mut(i);
-                for (o, &b) in orow.iter_mut().zip(brow) {
-                    *o += aki * b;
-                }
-            }
-        }
-        out
+        gemm_tn(self, other, 1)
     }
 
-    /// `self @ other^T` without materializing the transpose.
+    /// `self @ other^T` through the shared [`gemm`] core.
     pub fn matmul_t(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.cols, "matmul_t shape mismatch");
-        Mat::from_fn(self.rows, other.rows, |i, j| {
-            dot(self.row(i), other.row(j))
-        })
+        gemm_nt(self, other, 1)
     }
 
     pub fn scale(&mut self, s: f64) {

@@ -16,7 +16,10 @@ mod select;
 pub use error::{normalized_frobenius_error, streamed_frobenius_error, trace_norm_error_psd};
 pub use exact::{exact_topr_dense, exact_topr_streaming};
 pub use nystrom::{nystrom, nystrom_threaded, NystromSampling};
-pub use onepass::{gaussian_one_pass_recovery, one_pass_recovery, OnePassSketch};
+pub use onepass::{
+    gaussian_one_pass_recovery, gaussian_one_pass_recovery_threaded, one_pass_recovery,
+    one_pass_recovery_entrywise_reference, one_pass_recovery_threaded, OnePassSketch,
+};
 pub use select::{infer_clusters_by_eigengap, probe_spectrum, select_rank_by_subset};
 
 use crate::linalg::Mat;

@@ -108,44 +108,24 @@ pub fn nystrom_threaded(
         scale[i] = 1.0 / l.sqrt();
     }
 
-    // Y = Λ_r^{-1/2} U_rᵀ Cᵀ (r × n). The sequential path writes the
-    // row-major result directly (no extra buffer); parallel workers fill
-    // a sample-major (n × rank) buffer in disjoint contiguous row chunks
-    // and transpose once. Every entry keeps the same t-accumulation
-    // order either way, so the two layouts are bit-identical.
-    let workers = crate::util::parallel::resolve_threads(threads).max(1).min(n.max(1));
-    let project = |j: usize, i: usize| {
-        let mut acc = 0.0;
-        for t in 0..m {
-            acc += u[(t, i)] * c_real[(j, t)];
+    // Y = Λ_r^{-1/2} U_rᵀ Cᵀ (r × n): one n × r GEMM `C·U_r` through the
+    // shared micro-kernel (per-entry accumulation stays in ascending-t
+    // order for any thread count, so the result is bit-identical to the
+    // sequential run), then a scale-and-transpose pass. Numerically
+    // absent directions (scale 0) keep exactly-zero rows.
+    let workers = crate::util::parallel::resolve_threads(threads).max(1);
+    let ur = Mat::from_fn(m, rank, |t, i| u[(t, i)]);
+    let cu = crate::linalg::gemm(&c_real, &ur, workers); // n × rank
+    let mut y = Mat::zeros(rank, n);
+    for i in 0..rank {
+        if scale[i] == 0.0 {
+            continue; // direction numerically absent: row stays zero
         }
-        scale[i] * acc
-    };
-    let y = if workers <= 1 || rank == 0 {
-        let mut y = Mat::zeros(rank, n);
-        for i in 0..rank {
-            if scale[i] == 0.0 {
-                continue; // direction numerically absent: row stays zero
-            }
-            for j in 0..n {
-                y[(i, j)] = project(j, i);
-            }
+        let s = scale[i];
+        for (j, out) in y.row_mut(i).iter_mut().enumerate() {
+            *out = s * cu[(j, i)];
         }
-        y
-    } else {
-        let mut yt = Mat::zeros(n, rank);
-        crate::util::parallel::for_each_row_chunk(yt.data_mut(), rank, workers, |j0, rows| {
-            for (dj, yrow) in rows.chunks_mut(rank).enumerate() {
-                let j = j0 + dj;
-                for (i, yv) in yrow.iter_mut().enumerate() {
-                    if scale[i] != 0.0 {
-                        *yv = project(j, i);
-                    }
-                }
-            }
-        });
-        Mat::from_fn(rank, n, |i, j| yt[(j, i)])
-    };
+    }
     Embedding { y, eigenvalues }
 }
 

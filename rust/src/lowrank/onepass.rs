@@ -12,8 +12,8 @@
 //! required by Theorem 1), and return `Y = Σ^{1/2} Vᵀ Qᵀ` restricted to
 //! the unpadded columns.
 
-use crate::linalg::{jacobi_eig, Mat};
-use crate::sketch::Srht;
+use crate::linalg::{gemm, gemm_tn, jacobi_eig, Mat};
+use crate::sketch::{qt_omega_via_fwht, Srht};
 
 use super::Embedding;
 
@@ -75,8 +75,81 @@ impl OnePassSketch {
 /// rows/columns are identically zero, so W's padded rows are zero and the
 /// identity `W = K Ω` restricted to real rows needs Ω's real rows only.
 pub fn one_pass_recovery(sketch: &OnePassSketch, rank: usize) -> Embedding {
+    one_pass_recovery_threaded(sketch, rank, 1)
+}
+
+/// [`one_pass_recovery`] with the dense products (GEMM) and the
+/// per-column FWHTs of `QᵀΩ` fanned out over `threads` workers.
+/// Bit-identical for any thread count: GEMM threads only partition
+/// output rows and the FWHT transforms columns independently.
+pub fn one_pass_recovery_threaded(
+    sketch: &OnePassSketch,
+    rank: usize,
+    threads: usize,
+) -> Embedding {
     assert!(sketch.is_complete(), "recovery before the stream finished");
-    recover(sketch.w(), rank, |q| srht_qt_omega_real_rows(sketch, q))
+    // `QᵀΩ` over the real rows via the FWHT identity: Q's missing padded
+    // rows are implicit zeros (see the module docs — K's padded
+    // rows/columns are identically zero, so W's padded rows are too)
+    recover(sketch.w(), rank, threads, |q, t| qt_omega_via_fwht(sketch.srht(), q, t))
+}
+
+/// The pre-overhaul recovery algorithm, kept verbatim as the before-row
+/// oracle for `bench_recovery`/`bench_pipeline` and the agreement tests
+/// — never on a hot path. What it reproduces of the old code: the
+/// entrywise `QᵀΩ` (O(n·r·r'), a popcount per scalar) and the
+/// column-strided triple loop assembling `Y = Σ^½VᵀQᵀ`; the remaining
+/// `Q·Uq`/`QᵀW` products go through the `Mat` wrappers, whose ascending-k
+/// loop order matches the pre-overhaul `matmul`/`t_matmul` like for like.
+pub fn one_pass_recovery_entrywise_reference(sketch: &OnePassSketch, rank: usize) -> Embedding {
+    assert!(sketch.is_complete(), "recovery before the stream finished");
+    let srht = sketch.srht();
+    let w = sketch.w();
+    let n = w.rows();
+    let rp = w.cols();
+    assert!(rank <= rp, "rank {rank} exceeds sketch width {rp}");
+
+    let (qfull, rmat) = crate::linalg::householder_qr(w);
+    let rrt = rmat.matmul_t(&rmat);
+    let (sv2, u) = jacobi_eig(&rrt);
+    let smax2 = sv2[0].max(0.0);
+    let numerical_rank = sv2.iter().filter(|&&s2| s2 > 1e-14 * smax2).count();
+    let qdim = numerical_rank.clamp(rank.min(rp), rp);
+    let uq = Mat::from_fn(rp, qdim, |i, j| u[(i, j)]);
+    let q = qfull.matmul(&uq);
+
+    // the old entrywise QᵀΩ over the real rows
+    let mut qt_omega = Mat::zeros(qdim, rp);
+    for i in 0..n {
+        for j in 0..rp {
+            let w_ij = srht.omega_entry(i, j);
+            for k in 0..qdim {
+                qt_omega[(k, j)] += w_ij * q[(i, k)];
+            }
+        }
+    }
+    let qt_w = q.t_matmul(w);
+    let bt = crate::linalg::least_squares(&qt_omega.transpose(), &qt_w.transpose());
+    let mut b = bt.transpose();
+    b.symmetrize();
+    let (evals, v) = jacobi_eig(&b);
+
+    // the old column-strided Y assembly
+    let mut clamped: Vec<f64> =
+        evals.iter().take(rank.min(qdim)).map(|&l| l.max(0.0)).collect();
+    clamped.resize(rank, 0.0);
+    let mut y = Mat::zeros(rank, n);
+    for i in 0..rank.min(qdim) {
+        let s = clamped[i].sqrt();
+        for j in 0..n {
+            let mut acc = 0.0;
+            for k in 0..qdim {
+                acc += v[(k, i)] * q[(j, k)];
+            }
+            y[(i, j)] = s * acc;
+        }
+    }
+    Embedding { y, eigenvalues: clamped }
 }
 
 /// One-pass recovery for a dense Gaussian test matrix: identical math to
@@ -85,15 +158,32 @@ pub fn one_pass_recovery(sketch: &OnePassSketch, rank: usize) -> Embedding {
 /// rows only needs Ω's real rows). `w` is the accumulated sketch
 /// `K Ω` (n × r'); `omega_real` is n × r'.
 pub fn gaussian_one_pass_recovery(w: &Mat, omega_real: &Mat, rank: usize) -> Embedding {
+    gaussian_one_pass_recovery_threaded(w, omega_real, rank, 1)
+}
+
+/// [`gaussian_one_pass_recovery`] with the dense products threaded
+/// (bit-identical for any thread count, like the SRHT variant).
+pub fn gaussian_one_pass_recovery_threaded(
+    w: &Mat,
+    omega_real: &Mat,
+    rank: usize,
+    threads: usize,
+) -> Embedding {
     assert_eq!(w.rows(), omega_real.rows(), "sketch/test-matrix row mismatch");
     assert_eq!(w.cols(), omega_real.cols(), "sketch/test-matrix width mismatch");
-    recover(w, rank, |q| q.t_matmul(omega_real))
+    recover(w, rank, threads, |q, t| gemm_tn(q, omega_real, t))
 }
 
 /// Shared recovery core (Alg. 1 steps 3–6) over any test matrix: the
 /// caller supplies `QᵀΩ` (how Ω is represented — implicit SRHT or dense
 /// Gaussian — is the only difference between the variants).
-fn recover(w: &Mat, rank: usize, qt_omega_of: impl FnOnce(&Mat) -> Mat) -> Embedding {
+fn recover(
+    w: &Mat,
+    rank: usize,
+    threads: usize,
+    qt_omega_of: impl FnOnce(&Mat, usize) -> Mat,
+) -> Embedding {
+    let threads = threads.max(1);
     let n = w.rows();
     let rp = w.cols();
     assert!(rank <= rp, "rank {rank} exceeds sketch width {rp}");
@@ -113,13 +203,13 @@ fn recover(w: &Mat, rank: usize, qt_omega_of: impl FnOnce(&Mat) -> Mat) -> Embed
     let numerical_rank = sv2.iter().filter(|&&s2| s2 > 1e-14 * smax2).count();
     let qdim = numerical_rank.clamp(rank.min(rp), rp);
     let uq = Mat::from_fn(rp, qdim, |i, j| u[(i, j)]);
-    let q = qfull.matmul(&uq); // n × q leading left singular vectors of W
+    let q = gemm(&qfull, &uq, threads); // n × q leading left singular vectors of W
 
     // Step 4: solve B (QᵀΩ) = QᵀW without revisiting K, as the
     // least-squares problem (QᵀΩ)ᵀ Bᵀ = (QᵀW)ᵀ over the r' × q tall
     // (well-conditioned) transposed system.
-    let qt_omega = qt_omega_of(&q); // q × r'
-    let qt_w = q.t_matmul(w); // q × r'
+    let qt_omega = qt_omega_of(&q, threads); // q × r'
+    let qt_w = gemm_tn(&q, w, threads); // q × r'
     let bt = crate::linalg::least_squares(&qt_omega.transpose(), &qt_w.transpose());
     let mut b = bt.transpose(); // q × q
 
@@ -130,40 +220,22 @@ fn recover(w: &Mat, rank: usize, qt_omega_of: impl FnOnce(&Mat) -> Mat) -> Embed
     // Step 6: Y = Σ_r^{1/2} V_rᵀ Qᵀ with negative eigenvalues clamped to
     // 0 — the PSD projection that makes K̂ = YᵀY positive semidefinite.
     // If q < rank the missing directions carry zero eigenvalues.
+    // (V_rᵀ Qᵀ)ᵀ = Q·V_r is one n × r_used GEMM; the old triple loop
+    // walked Q column-strided per output entry.
     let mut clamped: Vec<f64> =
         evals.iter().take(rank.min(qdim)).map(|&l| l.max(0.0)).collect();
     clamped.resize(rank, 0.0);
+    let r_used = rank.min(qdim);
+    let v_used = Mat::from_fn(qdim, r_used, |i, j| v[(i, j)]);
+    let qv = gemm(&q, &v_used, threads); // n × r_used
     let mut y = Mat::zeros(rank, n);
-    for i in 0..rank.min(qdim) {
+    for i in 0..r_used {
         let s = clamped[i].sqrt();
-        for j in 0..n {
-            // (V_rᵀ Qᵀ)[i, j] = Σ_k V[k, i] Q[j, k], k over q dims
-            let mut acc = 0.0;
-            for k in 0..qdim {
-                acc += v[(k, i)] * q[(j, k)];
-            }
-            y[(i, j)] = s * acc;
+        for (j, out) in y.row_mut(i).iter_mut().enumerate() {
+            *out = s * qv[(j, i)];
         }
     }
     Embedding { y, eigenvalues: clamped }
-}
-
-/// `QᵀΩ` over the real rows only (see `one_pass_recovery` docs).
-fn srht_qt_omega_real_rows(sketch: &OnePassSketch, q: &Mat) -> Mat {
-    let srht = sketch.srht();
-    let n = q.rows();
-    let r = q.cols();
-    let rp = srht.samples();
-    let mut out = Mat::zeros(r, rp);
-    for i in 0..n {
-        for j in 0..rp {
-            let w = srht.omega_entry(i, j);
-            for k in 0..r {
-                out[(k, j)] += w * q[(i, k)];
-            }
-        }
-    }
-    out
 }
 
 #[cfg(test)]
@@ -235,6 +307,52 @@ mod tests {
         for w in emb.eigenvalues.windows(2) {
             assert!(w[0] >= w[1]);
         }
+    }
+
+    #[test]
+    fn threaded_recovery_is_bit_identical() {
+        let mut rng = Pcg64::seed(8);
+        let x = random_mat(&mut rng, 2, 70);
+        let mut src = NativeBlockSource::pow2(x, Kernel::paper_poly2());
+        let (n, np) = (src.n(), src.n_padded());
+        let mut srht = Srht::draw(&mut Pcg64::seed(21), np, 8);
+        srht.mask_padding(n);
+        let mut sk = OnePassSketch::new(srht, n);
+        for cols in column_batches(n, 16) {
+            let kb = src.block(&cols);
+            let rows = sk.srht().apply_to_block(&kb, 1);
+            sk.ingest(&cols, &rows);
+        }
+        let base = one_pass_recovery_threaded(&sk, 3, 1);
+        for threads in [2usize, 4] {
+            let par = one_pass_recovery_threaded(&sk, 3, threads);
+            assert_eq!(base.y.data(), par.y.data(), "threads={threads}");
+            assert_eq!(base.eigenvalues, par.eigenvalues, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn entrywise_reference_recovery_agrees_with_fwht_path() {
+        // the two QᵀΩ paths differ only by summation-order rounding, so
+        // the recovered kernels must agree far below the sketch error
+        let mut rng = Pcg64::seed(9);
+        let x = random_mat(&mut rng, 2, 60);
+        let mut src = NativeBlockSource::pow2(x, Kernel::paper_poly2());
+        let (n, np) = (src.n(), src.n_padded());
+        let mut srht = Srht::draw(&mut Pcg64::seed(33), np, 9);
+        srht.mask_padding(n);
+        let mut sk = OnePassSketch::new(srht, n);
+        for cols in column_batches(n, 16) {
+            let kb = src.block(&cols);
+            let rows = sk.srht().apply_to_block(&kb, 1);
+            sk.ingest(&cols, &rows);
+        }
+        let fwht = one_pass_recovery(&sk, 3);
+        let entry = one_pass_recovery_entrywise_reference(&sk, 3);
+        let ka = fwht.y.t_matmul(&fwht.y);
+        let kb = entry.y.t_matmul(&entry.y);
+        let rel = ka.sub(&kb).frobenius_norm() / ka.frobenius_norm().max(1e-300);
+        assert!(rel < 1e-8, "paths diverged: {rel}");
     }
 
     #[test]

@@ -75,11 +75,29 @@ impl Srht {
         Mat::from_fn(self.n, self.idx.len(), |i, j| self.omega_entry(i, j))
     }
 
-    /// `Qᵀ Ω` (r × r') without materializing Ω: for each sampled column,
-    /// compute `Qᵀ (D h_idx)` where `h_idx` is a Hadamard column.
-    /// O(n · r · r') — the same cost as the matmul against explicit Ω but
-    /// with O(1) extra memory.
+    /// `Qᵀ Ω` (r × r') without materializing Ω, via the FWHT identity
+    /// `QᵀΩ = ((H (D Q))[idx, :])ᵀ` (H and D are symmetric): scale Q's
+    /// rows by `d`, FWHT each column, gather the r' sampled rows.
+    /// O(n log n · r) — independent of r', versus O(n · r · r') for the
+    /// entrywise path ([`qt_omega_entrywise`](Self::qt_omega_entrywise)).
     pub fn qt_omega(&self, q: &Mat) -> Mat {
+        self.qt_omega_threaded(q, 1)
+    }
+
+    /// [`qt_omega`](Self::qt_omega) with the per-column FWHTs fanned out
+    /// over `threads` workers (bit-identical for any thread count — each
+    /// column transforms independently).
+    pub fn qt_omega_threaded(&self, q: &Mat, threads: usize) -> Mat {
+        assert_eq!(q.rows(), self.n, "basis rows must match SRHT length");
+        qt_omega_via_fwht(self, q, threads)
+    }
+
+    /// The pre-FWHT entrywise `QᵀΩ`: for each sampled column, accumulate
+    /// `Qᵀ (D h_idx)` one Hadamard entry at a time — O(n · r · r') with a
+    /// popcount per scalar. Kept as the reference/oracle for the sketch
+    /// exactness tests and the `bench_recovery` before/after rows; the
+    /// hot path is [`qt_omega`](Self::qt_omega).
+    pub fn qt_omega_entrywise(&self, q: &Mat) -> Mat {
         assert_eq!(q.rows(), self.n, "basis rows must match SRHT length");
         let r = q.cols();
         let rp = self.idx.len();
@@ -101,20 +119,66 @@ impl Srht {
     /// column, and gather the sampled rows. Returns the (b × r') slab of
     /// new sketch rows `W[J, :]` — exactly what the XLA `precond` artifact
     /// plus a row-gather produces on the accelerated path.
+    ///
+    /// Allocates a fresh transform buffer per call; streaming loops pass
+    /// a reused one through
+    /// [`apply_to_block_with`](Self::apply_to_block_with) instead.
     pub fn apply_to_block(&self, kb: &Mat, threads: usize) -> Mat {
-        assert_eq!(kb.rows(), self.n, "block rows must equal SRHT length");
-        // work column-major: transpose block, FWHT along rows
-        let b = kb.cols();
-        let mut buf: Vec<Vec<f64>> = (0..b)
-            .map(|j| {
-                let mut col: Vec<f64> = (0..self.n).map(|i| kb[(i, j)] * self.d[i]).collect();
-                col.shrink_to_fit();
-                col
-            })
-            .collect();
-        fwht_columns(&mut buf, threads);
-        Mat::from_fn(b, self.idx.len(), |j, s| buf[j][self.idx[s]])
+        let mut scratch = Vec::new();
+        self.apply_to_block_with(kb, threads, &mut scratch)
     }
+
+    /// [`apply_to_block`](Self::apply_to_block) with a caller-owned flat
+    /// scratch buffer: grown to `b · n` once and reused across blocks,
+    /// so the streaming pass performs no per-block allocation (the old
+    /// path built a `Vec<Vec<f64>>` per block).
+    pub fn apply_to_block_with(
+        &self,
+        kb: &Mat,
+        threads: usize,
+        scratch: &mut Vec<f64>,
+    ) -> Mat {
+        assert_eq!(kb.rows(), self.n, "block rows must equal SRHT length");
+        let b = kb.cols();
+        let n = self.n;
+        if scratch.len() < b * n {
+            scratch.resize(b * n, 0.0);
+        }
+        let buf = &mut scratch[..b * n];
+        // transpose to column-major while scaling by d: buf row j is
+        // column j of kb times D (every entry written, no clearing)
+        for i in 0..n {
+            let di = self.d[i];
+            for (j, &v) in kb.row(i).iter().enumerate() {
+                buf[j * n + i] = di * v;
+            }
+        }
+        fwht_parallel(buf, n, threads);
+        Mat::from_fn(b, self.idx.len(), |j, s| buf[j * n + self.idx[s]])
+    }
+}
+
+/// Core of the FWHT identity `QᵀΩ = ((H (D Q))[idx, :])ᵀ`, accepting a
+/// basis with `q.rows() ≤ srht.n` rows — missing rows are implicit
+/// zeros, exactly the zero-padded-kernel convention the recovery step
+/// relies on (its Q spans the *real* rows only). Bit-identical for any
+/// thread count; matches the explicit `QᵀΩ` up to FWHT summation-order
+/// rounding.
+pub fn qt_omega_via_fwht(srht: &Srht, q: &Mat, threads: usize) -> Mat {
+    let n = srht.n;
+    let n_real = q.rows();
+    assert!(n_real <= n, "basis taller than the SRHT length");
+    let r = q.cols();
+    // buf row t = column t of Q scaled by D, zero-padded to length n
+    let mut buf = vec![0.0f64; r * n];
+    for i in 0..n_real {
+        let di = srht.d[i];
+        for (t, &v) in q.row(i).iter().enumerate() {
+            buf[t * n + i] = di * v;
+        }
+    }
+    fwht_parallel(&mut buf, n, threads);
+    Mat::from_fn(r, srht.idx.len(), |t, j| buf[t * n + srht.idx[j]])
 }
 
 /// Dense Gaussian test matrix (the un-structured alternative from
@@ -130,9 +194,11 @@ impl GaussianSketch {
         GaussianSketch { omega: Mat::from_vec(n, rp, data) }
     }
 
-    /// `W[J, :] = kbᵀ Ω` for a block of kernel columns.
-    pub fn apply_to_block(&self, kb: &Mat) -> Mat {
-        kb.t_matmul(&self.omega)
+    /// `W[J, :] = kbᵀ Ω` for a block of kernel columns, through the
+    /// shared GEMM core (`threads` fan the output rows; bit-identical
+    /// for any thread count).
+    pub fn apply_to_block(&self, kb: &Mat, threads: usize) -> Mat {
+        crate::linalg::gemm_tn(kb, &self.omega, threads)
     }
 }
 
@@ -191,6 +257,53 @@ mod tests {
         let got = s.qt_omega(&q);
         let want = q.t_matmul(&s.omega());
         crate::linalg::testutil::assert_mat_close(&got, &want, 1e-9);
+    }
+
+    #[test]
+    fn qt_omega_fwht_matches_entrywise_and_is_thread_invariant() {
+        let mut rng = Pcg64::seed(7);
+        let n = 128;
+        let s = Srht::draw(&mut rng, n, 11);
+        let q = crate::linalg::testutil::random_mat(&mut rng, n, 5);
+        let fwht = s.qt_omega(&q);
+        crate::linalg::testutil::assert_mat_close(&fwht, &s.qt_omega_entrywise(&q), 1e-10);
+        for threads in [2usize, 4] {
+            assert_eq!(fwht.data(), s.qt_omega_threaded(&q, threads).data(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn qt_omega_fwht_matches_explicit_on_masked_padding() {
+        // 50 real rows padded to 64 with mask_padding applied: the
+        // real-rows variant (implicit zero rows) and the full padded
+        // basis must agree bit-for-bit with each other and match the
+        // explicit QᵀΩ — the identity the recovery solve rests on
+        let mut rng = Pcg64::seed(8);
+        let (n_real, n) = (50usize, 64usize);
+        let mut s = Srht::draw(&mut rng, n, 9);
+        s.mask_padding(n_real);
+        let q_real = crate::linalg::testutil::random_mat(&mut rng, n_real, 4);
+        let q_pad = Mat::from_fn(n, 4, |i, j| if i < n_real { q_real[(i, j)] } else { 0.0 });
+        let want = q_pad.t_matmul(&s.omega());
+        let got_real = qt_omega_via_fwht(&s, &q_real, 1);
+        let got_pad = s.qt_omega(&q_pad);
+        assert_eq!(got_real.data(), got_pad.data(), "padding rows must be inert");
+        crate::linalg::testutil::assert_mat_close(&got_real, &want, 1e-10);
+    }
+
+    #[test]
+    fn apply_to_block_with_reuses_scratch_across_block_sizes() {
+        let mut rng = Pcg64::seed(9);
+        let n = 64;
+        let s = Srht::draw(&mut rng, n, 6);
+        let mut scratch = Vec::new();
+        // shrinking block sizes must not read stale scratch contents
+        for b in [7usize, 3, 5] {
+            let kb = crate::linalg::testutil::random_mat(&mut rng, n, b);
+            let got = s.apply_to_block_with(&kb, 1, &mut scratch);
+            let want = s.apply_to_block(&kb, 1);
+            assert_eq!(got.data(), want.data(), "b={b}");
+        }
     }
 
     #[test]

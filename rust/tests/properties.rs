@@ -7,7 +7,7 @@
 use rkc::clustering::{accuracy, adjusted_rand_index, kernel_kmeans_objective, kmeans, KmeansOpts};
 use rkc::data;
 use rkc::kernels::{column_batches, full_kernel_matrix, BlockSource, Kernel, NativeBlockSource};
-use rkc::linalg::{jacobi_eig, Mat};
+use rkc::linalg::{gemm, gemm_nt, gemm_tn, jacobi_eig, matmul_reference, Mat};
 use rkc::lowrank::{
     exact_topr_dense, normalized_frobenius_error, one_pass_recovery, trace_norm_error_psd,
     OnePassSketch,
@@ -101,6 +101,67 @@ fn property_embedding_gram_never_exceeds_kernel_trace() {
         let emb = exact_topr_dense(&k, 2);
         let tr_hat = emb.y.frobenius_norm().powi(2);
         assert!(tr_hat <= k.trace() * (1.0 + 1e-9), "case {case}");
+    }
+}
+
+#[test]
+fn property_gemm_matches_naive_reference_across_odd_shapes() {
+    // every GEMM-backed path reduces to this oracle: C = A·B to ≤1e-12
+    // for empty, 1×1, skinny, and non-multiple-of-block shapes, with
+    // all three transpose variants and any thread count bit-identical
+    let mut rng = Pcg64::seed(40);
+    let shapes: &[(usize, usize, usize)] = &[
+        (0, 5, 3),
+        (5, 0, 3),
+        (5, 3, 0),
+        (1, 1, 1),
+        (2, 7, 1),
+        (13, 300, 140), // straddles the KC=256 / NC=128 panel edges
+        (33, 257, 129),
+        (64, 256, 128),
+    ];
+    for &(m, k, n) in shapes {
+        let a = random_mat(&mut rng, m, k);
+        let b = random_mat(&mut rng, k, n);
+        let want = matmul_reference(&a, &b);
+        for threads in [1usize, 3, 8] {
+            let got = gemm(&a, &b, threads);
+            let diff = got.sub(&want).max_abs();
+            assert!(diff <= 1e-12, "gemm {m}x{k}x{n} t={threads}: diff {diff}");
+            assert_eq!(got.data(), gemm(&a, &b, 1).data(), "thread bit-identity {m}x{k}x{n}");
+        }
+        let at = a.transpose();
+        let diff_tn = gemm_tn(&at, &b, 2).sub(&want).max_abs();
+        assert!(diff_tn <= 1e-12, "gemm_tn {m}x{k}x{n}: diff {diff_tn}");
+        let bt = b.transpose();
+        let diff_nt = gemm_nt(&a, &bt, 2).sub(&want).max_abs();
+        assert!(diff_nt <= 1e-12, "gemm_nt {m}x{k}x{n}: diff {diff_nt}");
+    }
+}
+
+#[test]
+fn property_fwht_qt_omega_equals_explicit_on_padded_and_masked_srht() {
+    // the recovery identity across many padded/masked instances: the
+    // FWHT-based QᵀΩ over n_real rows must equal the explicit
+    // q.t_matmul(Ω) with Q zero-extended to the transform length
+    let mut seeds = Pcg64::seed(41);
+    for case in 0..8 {
+        let n_real = 20 + 11 * case;
+        let n = n_real.next_power_of_two();
+        let r = 2 + case % 3;
+        let rp = (r + 3 + case).min(n);
+        let mut rng = Pcg64::seed(seeds.next_u64());
+        let mut srht = Srht::draw(&mut rng, n, rp);
+        srht.mask_padding(n_real);
+        let q = random_mat(&mut rng, n_real, r);
+        let q_pad = Mat::from_fn(n, r, |i, j| if i < n_real { q[(i, j)] } else { 0.0 });
+        let want = q_pad.t_matmul(&srht.omega());
+        let got = rkc::sketch::qt_omega_via_fwht(&srht, &q, 1);
+        let scale = want.max_abs().max(1.0);
+        let diff = got.sub(&want).max_abs();
+        assert!(diff <= 1e-10 * scale, "case {case}: diff {diff} (scale {scale})");
+        // and the padded-basis entry point agrees bit-for-bit
+        assert_eq!(got.data(), srht.qt_omega(&q_pad).data(), "case {case}");
     }
 }
 

@@ -1,0 +1,93 @@
+#!/usr/bin/env python3
+"""Validate the schema of the BENCH_*.json files the benches emit.
+
+Every file must be a non-empty JSON array of objects; every object must
+carry its file's required keys; every numeric value must be finite (the
+emitters route timings through Json::finite_num, which downgrades
+NaN/inf to null — a raw NaN in the file means an emitter bypassed it).
+
+Usage: check_bench_json.py BENCH_foo.json [BENCH_bar.json ...]
+Exits non-zero on the first malformed file. Timings are never gated —
+this guards the schema so the perf trajectory stays machine-diffable.
+"""
+
+import json
+import math
+import sys
+
+# required keys per file (by basename); files not listed here only get
+# the generic array/object/finite checks
+REQUIRED = {
+    "BENCH_pipeline.json": [
+        "backend", "threads", "sketch_s", "recovery_s", "kmeans_s",
+        "error_pass_s", "total_s", "n", "batch", "iters",
+    ],
+    "BENCH_recovery.json": [
+        "bench", "n", "r", "rp", "threads", "before_s", "after_s", "speedup",
+    ],
+    "BENCH_kmeans.json": [
+        "bench", "n", "r", "k", "restarts", "threads", "before_s",
+        "after_s", "speedup",
+    ],
+    "BENCH_fwht.json": ["bench", "n", "batch", "threads", "median_s"],
+    "BENCH_table1.json": ["bench", "method", "trials", "n", "accuracy"],
+    "BENCH_fig3.json": ["bench", "series", "m", "accuracy"],
+    "BENCH_ablation.json": ["bench"],
+    "BENCH_memory.json": [
+        "bench", "workload", "method", "persistent_bytes", "ratio_vs_ours",
+    ],
+    "BENCH_serve.json": [
+        "bench", "n_train", "clients", "requests_per_s", "p50_ms", "p95_ms",
+        "p99_ms",
+    ],
+}
+
+
+def fail(path, msg):
+    print(f"FAIL {path}: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check_finite(path, row_idx, key, value):
+    if isinstance(value, bool):
+        return
+    if isinstance(value, (int, float)) and not math.isfinite(value):
+        fail(path, f"row {row_idx}: key '{key}' is non-finite ({value!r})")
+
+
+def check_file(path):
+    base = path.rsplit("/", 1)[-1]
+    try:
+        with open(path, encoding="utf-8") as fh:
+            data = json.load(fh)
+    except (OSError, ValueError) as exc:
+        fail(path, f"unreadable or invalid JSON: {exc}")
+    if not isinstance(data, list):
+        fail(path, f"top level must be a JSON array, got {type(data).__name__}")
+    if not data:
+        fail(path, "empty record array")
+    required = REQUIRED.get(base, [])
+    for i, row in enumerate(data):
+        if not isinstance(row, dict):
+            fail(path, f"row {i} is not an object")
+        # a required key serialized as null means a timing went
+        # non-finite through Json::finite_num — treat it as missing
+        missing = [k for k in required if row.get(k) is None]
+        if missing:
+            fail(path, f"row {i} missing (or null) required keys {missing}")
+        for key, value in row.items():
+            check_finite(path, i, key, value)
+    print(f"ok   {path}: {len(data)} row(s)")
+
+
+def main(argv):
+    if len(argv) < 2:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    for path in argv[1:]:
+        check_file(path)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
