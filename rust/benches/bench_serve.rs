@@ -1,6 +1,16 @@
 //! Bench: serving throughput and latency of the `rkc::serve` runtime —
 //! concurrent clients hammering a `ModelServer`'s micro-batch queue with
-//! out-of-sample predict requests.
+//! out-of-sample predict requests, three ways:
+//!
+//! 1. `in_process` — `ServerHandle::predict` straight into the batcher
+//!    (no HTTP), the ceiling the front-end is measured against;
+//! 2. `http_close` — one TCP connection **per request**
+//!    (`Connection: close`), the pre-registry front-end's only mode;
+//! 3. `http_keepalive` — one persistent connection per client, all of
+//!    that client's requests riding it (HTTP/1.1 keep-alive).
+//!
+//! The keep-alive row carries `speedup_vs_close` so the
+//! connection-reuse win is machine-diffable across commits.
 //!
 //! Env knobs: `RKC_SERVE_N` (training size, default 1024),
 //! `RKC_SERVE_CLIENTS` (concurrent client threads, default 4),
@@ -12,16 +22,94 @@
 //! machine-diffable across commits.
 
 use std::collections::BTreeMap;
+use std::net::SocketAddr;
+use std::sync::Arc;
 use std::time::Instant;
 
 use rkc::api::KernelClusterer;
+use rkc::bench_harness::MiniHttpClient;
 use rkc::data;
+use rkc::linalg::Mat;
 use rkc::rng::Pcg64;
-use rkc::serve::{ModelServer, ServeOpts};
+use rkc::serve::{serve_http_registry, HttpOpts, ModelRegistry, ServeOpts};
 use rkc::util::{percentile, Json};
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn points_json(x: &Mat) -> String {
+    let pts: Vec<Json> = (0..x.cols())
+        .map(|j| Json::Arr((0..x.rows()).map(|i| Json::Num(x[(i, j)])).collect()))
+        .collect();
+    Json::Obj(BTreeMap::from([("points".to_string(), Json::Arr(pts))])).to_string()
+}
+
+/// Fan `clients` threads out over `reqs` requests each; `run` does one
+/// request and returns nothing. Returns (wall seconds, per-request
+/// latency seconds).
+fn drive(
+    clients: usize,
+    reqs: usize,
+    run: impl Fn(usize, &mut Vec<f64>) + Sync,
+) -> (f64, Vec<f64>) {
+    let t0 = Instant::now();
+    let mut latencies_s: Vec<f64> = Vec::with_capacity(clients * reqs);
+    std::thread::scope(|s| {
+        let workers: Vec<_> = (0..clients)
+            .map(|c| {
+                let run = &run;
+                s.spawn(move || {
+                    let mut lat = Vec::with_capacity(reqs);
+                    run(c, &mut lat);
+                    lat
+                })
+            })
+            .collect();
+        for w in workers {
+            latencies_s.extend(w.join().expect("client thread"));
+        }
+    });
+    (t0.elapsed().as_secs_f64(), latencies_s)
+}
+
+fn record(
+    mode: &str,
+    n: usize,
+    clients: usize,
+    reqs: usize,
+    points_per_req: usize,
+    wall_s: f64,
+    latencies_s: &[f64],
+    extra: Vec<(String, Json)>,
+) -> Json {
+    let total_reqs = (clients * reqs) as f64;
+    let total_points = total_reqs * points_per_req as f64;
+    let p50_ms = percentile(latencies_s, 50.0) * 1e3;
+    let p95_ms = percentile(latencies_s, 95.0) * 1e3;
+    let p99_ms = percentile(latencies_s, 99.0) * 1e3;
+    println!(
+        "serve[{mode}] n={n} clients={clients} reqs/client={reqs} points/req={points_per_req}: \
+         {:.0} req/s | {:.0} points/s | p50 {p50_ms:.2}ms p95 {p95_ms:.2}ms p99 {p99_ms:.2}ms",
+        total_reqs / wall_s,
+        total_points / wall_s,
+    );
+    let mut fields = BTreeMap::from([
+        ("bench".to_string(), Json::Str("serve".to_string())),
+        ("mode".to_string(), Json::Str(mode.to_string())),
+        ("n_train".to_string(), Json::Num(n as f64)),
+        ("clients".to_string(), Json::Num(clients as f64)),
+        ("requests_per_client".to_string(), Json::Num(reqs as f64)),
+        ("points_per_request".to_string(), Json::Num(points_per_req as f64)),
+        ("wall_s".to_string(), Json::finite_num(wall_s)),
+        ("requests_per_s".to_string(), Json::finite_num(total_reqs / wall_s)),
+        ("points_per_s".to_string(), Json::finite_num(total_points / wall_s)),
+        ("p50_ms".to_string(), Json::finite_num(p50_ms)),
+        ("p95_ms".to_string(), Json::finite_num(p95_ms)),
+        ("p99_ms".to_string(), Json::finite_num(p99_ms)),
+    ]);
+    fields.extend(extra);
+    Json::Obj(fields)
 }
 
 fn main() {
@@ -43,66 +131,108 @@ fn main() {
         .expect("fit");
     let fit_s = t_fit.elapsed().as_secs_f64();
     let query = data::cross_lines(&mut Pcg64::seed(8), points_per_req).x;
+    let body = points_json(&query);
 
-    let server =
-        ModelServer::new(model, ServeOpts { threads: 0, ..Default::default() }).expect("server");
-    let t0 = Instant::now();
-    let mut latencies_s: Vec<f64> = Vec::with_capacity(clients * reqs);
-    std::thread::scope(|s| {
-        let workers: Vec<_> = (0..clients)
-            .map(|_| {
-                let h = server.handle();
-                let q = query.clone();
-                s.spawn(move || {
-                    let mut lat = Vec::with_capacity(reqs);
-                    for _ in 0..reqs {
-                        let t = Instant::now();
-                        h.predict(q.clone()).expect("predict");
-                        lat.push(t.elapsed().as_secs_f64());
-                    }
-                    lat
-                })
-            })
-            .collect();
-        for w in workers {
-            latencies_s.extend(w.join().expect("client thread"));
+    // --- row 1: in-process (no HTTP) --------------------------------
+    let registry = Arc::new(ModelRegistry::new(ServeOpts { threads: 0, ..Default::default() }));
+    registry.insert("default", model).expect("register model");
+    let handle = registry.get("default").expect("handle");
+    let (wall_s, latencies_s) = drive(clients, reqs, |_, lat| {
+        let h = handle.clone();
+        for _ in 0..reqs {
+            let t = Instant::now();
+            h.predict(query.clone()).expect("predict");
+            lat.push(t.elapsed().as_secs_f64());
         }
     });
-    let wall_s = t0.elapsed().as_secs_f64();
-    let stats = server.stats();
-    server.shutdown();
-
-    let total_reqs = (clients * reqs) as f64;
-    let total_points = total_reqs * points_per_req as f64;
-    let p50_ms = percentile(&latencies_s, 50.0) * 1e3;
-    let p95_ms = percentile(&latencies_s, 95.0) * 1e3;
-    let p99_ms = percentile(&latencies_s, 99.0) * 1e3;
-    println!(
-        "serve n={n} clients={clients} reqs/client={reqs} points/req={points_per_req}: \
-         {:.0} req/s | {:.0} points/s | p50 {p50_ms:.2}ms p95 {p95_ms:.2}ms p99 {p99_ms:.2}ms \
-         (fit {fit_s:.2}s, mean batch {:.2})",
-        total_reqs / wall_s,
-        total_points / wall_s,
-        stats.mean_batch(),
+    let stats = registry.get("default").expect("handle").stats();
+    let row_inproc = record(
+        "in_process",
+        n,
+        clients,
+        reqs,
+        points_per_req,
+        wall_s,
+        &latencies_s,
+        vec![
+            ("fit_s".to_string(), Json::finite_num(fit_s)),
+            ("batches".to_string(), Json::Num(stats.batches as f64)),
+            ("mean_batch".to_string(), Json::finite_num(stats.mean_batch())),
+            ("mean_latency_us".to_string(), Json::finite_num(stats.mean_latency_us())),
+        ],
     );
 
-    let record = Json::Obj(BTreeMap::from([
-        ("bench".to_string(), Json::Str("serve".to_string())),
-        ("n_train".to_string(), Json::Num(n as f64)),
-        ("clients".to_string(), Json::Num(clients as f64)),
-        ("requests_per_client".to_string(), Json::Num(reqs as f64)),
-        ("points_per_request".to_string(), Json::Num(points_per_req as f64)),
-        ("fit_s".to_string(), Json::finite_num(fit_s)),
-        ("wall_s".to_string(), Json::finite_num(wall_s)),
-        ("requests_per_s".to_string(), Json::finite_num(total_reqs / wall_s)),
-        ("points_per_s".to_string(), Json::finite_num(total_points / wall_s)),
-        ("p50_ms".to_string(), Json::finite_num(p50_ms)),
-        ("p95_ms".to_string(), Json::finite_num(p95_ms)),
-        ("p99_ms".to_string(), Json::finite_num(p99_ms)),
-        ("batches".to_string(), Json::Num(stats.batches as f64)),
-        ("mean_batch".to_string(), Json::finite_num(stats.mean_batch())),
-        ("mean_latency_us".to_string(), Json::finite_num(stats.mean_latency_us())),
-    ]));
-    // one-row array: every BENCH_*.json is a JSON array of row objects
-    rkc::bench_harness::write_bench_json("BENCH_serve.json", vec![record]);
+    // --- rows 2+3: HTTP front-end, close vs keep-alive --------------
+    let http = serve_http_registry(
+        Arc::clone(&registry),
+        "127.0.0.1:0",
+        HttpOpts { workers: clients.max(2), ..Default::default() },
+    )
+    .expect("serve http");
+    let addr: SocketAddr = http.local_addr();
+
+    let (wall_s, latencies_s) = drive(clients, reqs, |_, lat| {
+        for _ in 0..reqs {
+            let t = Instant::now();
+            let mut client = MiniHttpClient::connect(addr);
+            let (status, _) = client.request_with("POST", "/predict", &body, true);
+            assert_eq!(status, 200);
+            lat.push(t.elapsed().as_secs_f64());
+        }
+    });
+    let close_rps = (clients * reqs) as f64 / wall_s;
+    let row_close = record(
+        "http_close",
+        n,
+        clients,
+        reqs,
+        points_per_req,
+        wall_s,
+        &latencies_s,
+        vec![("connections".to_string(), Json::Num((clients * reqs) as f64))],
+    );
+
+    let (wall_s, latencies_s) = drive(clients, reqs, |_, lat| {
+        let mut client = MiniHttpClient::connect(addr);
+        for _ in 0..reqs {
+            let t = Instant::now();
+            let (status, _) = client.request("POST", "/predict", &body);
+            assert_eq!(status, 200);
+            lat.push(t.elapsed().as_secs_f64());
+        }
+    });
+    let keepalive_rps = (clients * reqs) as f64 / wall_s;
+    let fe = http.frontend_stats();
+    assert!(
+        fe.requests > fe.connections,
+        "keep-alive must reuse connections ({} requests over {} connections)",
+        fe.requests,
+        fe.connections
+    );
+    let row_keepalive = record(
+        "http_keepalive",
+        n,
+        clients,
+        reqs,
+        points_per_req,
+        wall_s,
+        &latencies_s,
+        vec![
+            ("connections".to_string(), Json::Num(clients as f64)),
+            ("speedup_vs_close".to_string(), Json::finite_num(keepalive_rps / close_rps)),
+        ],
+    );
+    println!(
+        "keep-alive vs close: {keepalive_rps:.0} vs {close_rps:.0} req/s ({:.2}x); \
+         front-end saw {} requests over {} connections",
+        keepalive_rps / close_rps,
+        fe.requests,
+        fe.connections
+    );
+    http.shutdown();
+
+    rkc::bench_harness::write_bench_json(
+        "BENCH_serve.json",
+        vec![row_inproc, row_close, row_keepalive],
+    );
 }

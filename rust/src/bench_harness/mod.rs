@@ -14,9 +14,117 @@
 //! gated in CI — the JSON trail exists so the perf trajectory is
 //! diffable across commits.
 
-use std::time::Instant;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
 
 use crate::util::{mean, percentile, Json};
+
+/// Minimal Content-Length-framed HTTP/1.1 client for exercising the
+/// serve front-end from benches and integration tests (the only two
+/// in-crate HTTP clients). Sends requests sequentially on ONE socket
+/// and parses each response by its `Content-Length`, so the connection
+/// stays usable for the next request (keep-alive); panics on protocol
+/// violations — it is test/bench plumbing, not production code.
+pub struct MiniHttpClient {
+    stream: TcpStream,
+}
+
+impl MiniHttpClient {
+    /// Connect with a 10 s read timeout, so a server that wrongly stops
+    /// responding fails the caller instead of hanging it.
+    pub fn connect(addr: SocketAddr) -> Self {
+        let stream = TcpStream::connect(addr).expect("connecting to the serve front-end");
+        stream.set_read_timeout(Some(Duration::from_secs(10))).expect("set read timeout");
+        MiniHttpClient { stream }
+    }
+
+    /// Write raw bytes (hand-framed requests for malformed-input tests).
+    pub fn send_raw(&mut self, bytes: &[u8]) {
+        self.stream.write_all(bytes).expect("writing request");
+    }
+
+    /// One keep-alive request → `(status, body)`.
+    pub fn request(&mut self, method: &str, path: &str, body: &str) -> (u16, String) {
+        self.request_with(method, path, body, false)
+    }
+
+    /// One request, optionally asking the server to close afterwards.
+    pub fn request_with(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &str,
+        close: bool,
+    ) -> (u16, String) {
+        let connection = if close { "Connection: close\r\n" } else { "" };
+        let req = format!(
+            "{method} {path} HTTP/1.1\r\nHost: rkc\r\nContent-Type: application/json\r\n\
+             {connection}Content-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        self.send_raw(req.as_bytes());
+        self.read_response().expect("server closed instead of responding")
+    }
+
+    /// Read one Content-Length-framed response; `None` on a clean close
+    /// before any byte arrived.
+    pub fn read_response(&mut self) -> Option<(u16, String)> {
+        let mut buf: Vec<u8> = Vec::with_capacity(1024);
+        let mut chunk = [0u8; 4096];
+        let head_end = loop {
+            if let Some(p) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+                break p;
+            }
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    assert!(buf.is_empty(), "connection closed mid-response-head");
+                    return None;
+                }
+                Ok(n) => buf.extend_from_slice(&chunk[..n]),
+                Err(e) => panic!("reading response head: {e}"),
+            }
+        };
+        let head = std::str::from_utf8(&buf[..head_end]).expect("response head is UTF-8");
+        let status: u16 = head
+            .split_whitespace()
+            .nth(1)
+            .expect("status line")
+            .parse()
+            .expect("numeric status");
+        let content_length: usize = head
+            .lines()
+            .find_map(|l| {
+                let (k, v) = l.split_once(':')?;
+                if k.trim().eq_ignore_ascii_case("content-length") {
+                    v.trim().parse().ok()
+                } else {
+                    None
+                }
+            })
+            .expect("content-length header");
+        let total = head_end + 4 + content_length;
+        while buf.len() < total {
+            let n = self.stream.read(&mut chunk).expect("reading response body");
+            assert!(n > 0, "connection closed mid-response-body");
+            buf.extend_from_slice(&chunk[..n]);
+        }
+        Some((status, String::from_utf8_lossy(&buf[head_end + 4..total]).to_string()))
+    }
+
+    /// Assert the server closes this connection (after draining
+    /// whatever response bytes remain in flight).
+    pub fn assert_closed(mut self) {
+        let mut chunk = [0u8; 256];
+        loop {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => return,
+                Ok(_) => continue,
+                Err(e) => panic!("expected a clean close, got {e}"),
+            }
+        }
+    }
+}
 
 /// One benchmark measurement.
 #[derive(Clone, Debug)]

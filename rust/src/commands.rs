@@ -328,25 +328,52 @@ pub fn cmd_predict(cfg: &ExperimentConfig, data_csv: Option<&str>) -> Result<()>
     Ok(())
 }
 
-/// `rkc serve` — load a saved model and serve it over HTTP until the
-/// process is stopped.
+/// `rkc serve` — serve saved model(s) over HTTP until the process is
+/// stopped. `--models DIR` loads every `.rkc` in the directory into the
+/// registry (name = file stem, runtime `PUT`/`DELETE /models/{name}`
+/// load/unload more); otherwise the single `--model` file is served
+/// under the name `default`. Either way the legacy `/predict`/`/embed`
+/// routes alias the default model.
 pub fn cmd_serve(cfg: &ExperimentConfig) -> Result<()> {
-    use rkc::serve::{serve_http, ModelServer, ServeOpts};
-    let path = cfg.resolved_model_path();
-    let model = FittedModel::load(&path)?;
-    let m = model.metrics();
-    eprintln!(
-        "loaded {path}: method={} n={} k={} rank={}",
-        m.method,
-        m.n,
-        model.k(),
-        m.rank
-    );
-    let server =
-        ModelServer::new(model, ServeOpts { threads: cfg.threads, ..Default::default() })?;
-    let http = serve_http(&server, &cfg.serve_addr)?;
+    use rkc::serve::{serve_http_registry, HttpOpts, ModelRegistry, ServeOpts};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let registry = Arc::new(ModelRegistry::new(ServeOpts {
+        threads: cfg.threads,
+        ..Default::default()
+    }));
+    if cfg.models_dir.is_empty() {
+        let path = cfg.resolved_model_path();
+        registry.load("default", &path)?;
+        eprintln!("loaded default: {path}");
+    } else {
+        let names = registry.load_dir(&cfg.models_dir)?;
+        eprintln!("loaded {} model(s) from {}: {}", names.len(), cfg.models_dir, names.join(", "));
+    }
+    for info in registry.list() {
+        eprintln!(
+            "  {}{}: method={} n={} k={} rank={}",
+            info.name,
+            if info.is_default { " (default)" } else { "" },
+            info.method,
+            info.n_train,
+            info.k,
+            info.rank
+        );
+    }
+    let http = serve_http_registry(
+        registry,
+        &cfg.serve_addr,
+        HttpOpts {
+            workers: cfg.http_workers,
+            keep_alive: Duration::from_secs(cfg.keep_alive_s),
+            ..Default::default()
+        },
+    )?;
     println!(
-        "rkc serve: listening on http://{} (POST /predict, POST /embed, GET /healthz)",
+        "rkc serve: listening on http://{} (POST /models/{{name}}/predict|embed, GET /models, \
+         PUT/DELETE /models/{{name}}, GET /healthz; /predict and /embed hit the default model)",
         http.local_addr()
     );
     http.wait();

@@ -138,6 +138,17 @@ pub struct ExperimentConfig {
     pub model_path: String,
     /// listen address for the `serve` subcommand's HTTP front-end
     pub serve_addr: String,
+    /// directory of `.rkc` files the `serve` subcommand loads into its
+    /// model registry (name = file stem); empty means single-model
+    /// serving from [`model_path`](ExperimentConfig::model_path)
+    pub models_dir: String,
+    /// HTTP front-end pool workers (= concurrent connections); `0`
+    /// means auto-detect from the hardware
+    pub http_workers: usize,
+    /// idle seconds a keep-alive connection may sit between requests
+    /// before the server closes it; `0` disables keep-alive (every
+    /// response closes its connection)
+    pub keep_alive_s: u64,
 }
 
 impl Default for ExperimentConfig {
@@ -164,6 +175,9 @@ impl Default for ExperimentConfig {
             data_dir: "data".into(),
             model_path: String::new(),
             serve_addr: "127.0.0.1:7878".into(),
+            models_dir: String::new(),
+            http_workers: 0,
+            keep_alive_s: 5,
         }
     }
 }
@@ -233,6 +247,12 @@ impl ExperimentConfig {
             "data_dir" => self.data_dir = value.into(),
             "model" | "model_path" => self.model_path = value.into(),
             "addr" | "serve_addr" => self.serve_addr = value.into(),
+            "models" | "models_dir" => self.models_dir = value.into(),
+            "http_workers" => self.http_workers = uint("http_workers", value)?,
+            "keep_alive" | "keep_alive_s" => {
+                self.keep_alive_s =
+                    value.parse().map_err(|_| RkcError::parse("keep_alive_s", value))?;
+            }
             "method" => self.method = value.parse()?,
             "backend" => self.backend = value.parse()?,
             "kernel" => self.kernel = value.parse()?,
@@ -287,6 +307,9 @@ mod tests {
         assert_eq!(c.threads, 1);
         assert_eq!(c.data_dir, "data");
         assert_eq!(c.serve_addr, "127.0.0.1:7878");
+        assert_eq!(c.models_dir, "");
+        assert_eq!(c.http_workers, 0);
+        assert_eq!(c.keep_alive_s, 5);
         // artifacts-dir-driven model path when no explicit override
         assert_eq!(c.resolved_model_path(), "artifacts/model.rkc");
         let t = ExperimentConfig::table1();
@@ -321,6 +344,16 @@ mod tests {
         assert_eq!(c.resolved_model_path(), "models/model.rkc");
         c.set("addr", "0.0.0.0:9000").unwrap();
         assert_eq!(c.serve_addr, "0.0.0.0:9000");
+        c.set("models", "/tmp/model-fleet").unwrap();
+        assert_eq!(c.models_dir, "/tmp/model-fleet");
+        c.set("http_workers", "8").unwrap();
+        assert_eq!(c.http_workers, 8);
+        c.set("keep_alive", "30").unwrap();
+        assert_eq!(c.keep_alive_s, 30);
+        c.set("keep_alive_s", "0").unwrap(); // 0 = close per request
+        assert_eq!(c.keep_alive_s, 0);
+        assert!(c.set("keep_alive", "forever").is_err());
+        assert!(c.set("http_workers", "-1").is_err());
         assert!(c.set("kmeans_tol", "tiny").is_err());
         assert!(c.set("nope", "1").is_err());
         assert!(c.set("backend", "gpu").is_err());

@@ -44,8 +44,11 @@
 //!   bit-exact across the roundtrip.
 //! - [`serve`] — the batched serving runtime: `ModelServer`
 //!   micro-batches concurrent `embed`/`predict` requests through a
-//!   bounded queue onto the fork-join pool, with a zero-dependency
-//!   HTTP/1.1 front-end (`/predict`, `/embed`, `/healthz`).
+//!   bounded queue onto the fork-join pool; `ModelRegistry` serves many
+//!   named models from one process; a zero-dependency HTTP/1.1
+//!   keep-alive front-end (worker pool over a bounded connection queue)
+//!   exposes `/models/{name}/predict|embed`, runtime load/unload, and
+//!   the legacy single-model routes.
 //! - [`error`] — the crate-wide [`error::RkcError`]; every library layer
 //!   returns it (no stringly-typed or `anyhow` errors anywhere).
 //! - [`coordinator`] — L3: the streaming pipeline (scheduler, sketch

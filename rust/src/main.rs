@@ -13,7 +13,8 @@
 //! rkc artifacts                     list compiled artifacts
 //! rkc save     [--model path]       fit once, persist the .rkc model
 //! rkc predict  [--model path] [--data pts.csv]   offline predictions
-//! rkc serve    [--model path] [--addr host:port] HTTP serving runtime
+//! rkc serve    [--model path | --models dir] [--addr host:port]
+//!              multi-model HTTP serving runtime (keep-alive pool)
 //! ```
 //!
 //! Every subcommand accepts the config overrides documented in
@@ -108,7 +109,8 @@ SUBCOMMANDS
   artifacts  list the compiled XLA artifacts
   save       fit once and persist the model to --model (.rkc format)
   predict    load --model, assign --data points.csv (or the dataset)
-  serve      load --model and serve predictions over HTTP at --addr
+  serve      serve --model (or every .rkc in --models DIR, keyed by
+             file stem) over keep-alive HTTP at --addr
 
 COMMON OPTIONS (config overrides)
   --method one_pass|gaussian|exact|full_kernel|plain|nystrom[_m<M>]
@@ -119,12 +121,18 @@ COMMON OPTIONS (config overrides)
   --kmeans_restarts N --kmeans_iters N --kmeans_tol EPS
   --out-dir DIR (fig2/fig3)   --artifacts_dir DIR --data_dir DIR
   --model PATH (default {{artifacts_dir}}/model.rkc)
+  --models DIR (serve; load every .rkc in DIR, name = file stem)
   --addr HOST:PORT (serve; default 127.0.0.1:7878)
+  --http_workers N (serve; connection-pool size, 0 = auto)
+  --keep_alive_s S (serve; idle seconds per connection, 0 = close)
   --data points.csv (predict; one row of coordinates per point)
 
 SERVING PROTOCOL (serve)
-  POST /predict {{\"points\": [[x, y, ...], ...]}}  ->  {{\"labels\": [...]}}
-  POST /embed   same body                         ->  {{\"embedding\": [...]}}
-  GET  /healthz                                   ->  status + counters"
+  POST /models/NAME/predict {{\"points\": [[x, ...], ...]}} -> {{\"labels\": [...]}}
+  POST /models/NAME/embed   same body                     -> {{\"embedding\": [...]}}
+  GET  /models                 -> per-model listing + stats
+  PUT  /models/NAME {{\"path\": \"m.rkc\"}} / DELETE /models/NAME  (load/unload)
+  POST /predict, POST /embed   -> the default model (legacy aliases)
+  GET  /healthz                -> status + counters"
     );
 }

@@ -18,6 +18,9 @@ use super::Request;
 struct State {
     queue: VecDeque<Request>,
     closed: bool,
+    /// deepest the queue has ever been — the per-model backpressure
+    /// signal surfaced in [`super::ServeStats::queue_highwater`]
+    highwater: usize,
 }
 
 /// Bounded multi-producer / single-consumer request queue with
@@ -33,7 +36,7 @@ impl Batcher {
     pub(crate) fn new(cap: usize) -> Self {
         assert!(cap > 0, "queue capacity must be positive");
         Batcher {
-            state: Mutex::new(State { queue: VecDeque::new(), closed: false }),
+            state: Mutex::new(State { queue: VecDeque::new(), closed: false, highwater: 0 }),
             not_full: Condvar::new(),
             not_empty: Condvar::new(),
             cap,
@@ -51,6 +54,7 @@ impl Batcher {
             return Err(RkcError::backend("model server is shut down"));
         }
         st.queue.push_back(req);
+        st.highwater = st.highwater.max(st.queue.len());
         drop(st);
         self.not_empty.notify_one();
         Ok(())
@@ -78,6 +82,12 @@ impl Batcher {
     /// Current queue depth (for health reporting; racy by nature).
     pub(crate) fn depth(&self) -> usize {
         self.state.lock().expect("serve queue poisoned").queue.len()
+    }
+
+    /// Deepest the queue has ever been since the server started — how
+    /// close this model's clients have come to hitting backpressure.
+    pub(crate) fn highwater(&self) -> usize {
+        self.state.lock().expect("serve queue poisoned").highwater
     }
 
     /// Whether the queue has been closed (worker exited or the server

@@ -1,96 +1,300 @@
-//! Zero-dependency HTTP/1.1 front-end over a [`ModelServer`] —
-//! `std::net` only, JSON in/out, one short-lived thread per connection
-//! (`Connection: close`).
+//! Zero-dependency HTTP/1.1 **keep-alive** front-end over a
+//! [`ModelRegistry`] — `std::net` only, JSON in/out, a bounded queue of
+//! accepted connections drained by a fixed worker pool (the same
+//! work-queue discipline as [`crate::util::parallel`] and the sharded
+//! sketch pass: accept loop produces, workers consume, overflow sheds).
 //!
 //! # Protocol
 //!
-//! | endpoint        | request body                          | 200 response              |
-//! |-----------------|---------------------------------------|---------------------------|
-//! | `POST /predict` | `{"points": [[x, y, …], …]}`          | `{"labels": [0, 1, …]}`   |
-//! | `POST /embed`   | `{"points": [[x, y, …], …]}`          | `{"embedding": [[…], …]}` |
-//! | `GET /healthz`  | —                                     | status + serving counters |
+//! | endpoint                       | request body                 | 200 response                |
+//! |--------------------------------|------------------------------|-----------------------------|
+//! | `POST /models/{name}/predict`  | `{"points": [[x, y, …], …]}` | `{"labels": [0, 1, …]}`     |
+//! | `POST /models/{name}/embed`    | `{"points": [[x, y, …], …]}` | `{"embedding": [[…], …]}`   |
+//! | `GET /models`                  | —                            | per-model listing + stats   |
+//! | `GET /models/{name}`           | —                            | one model's info + stats    |
+//! | `PUT /models/{name}`           | `{"path": "model.rkc"}`      | load/replace at runtime     |
+//! | `DELETE /models/{name}`        | —                            | unload at runtime           |
+//! | `POST /predict`, `POST /embed` | `{"points": …}`              | alias for the default model |
+//! | `GET /healthz`                 | —                            | status + serving counters   |
 //!
-//! Each inner `points` array is one query point (its length must match
-//! the model's input dimension); `embedding` returns one r-vector per
-//! point, with any non-finite coordinate (a degenerate query can
-//! overflow the kernel) downgraded to `null` so the body stays valid
-//! JSON. Malformed JSON, wrong shapes, and unsupported model
-//! operations answer **4xx with an `{"error": …}` body** — the server
-//! never crashes on bad input. Backend failures answer 5xx.
+//! Unknown model names answer **404 with an `{"error": …}` body**;
+//! malformed JSON, wrong shapes, and unsupported model operations 4xx —
+//! the server never crashes on bad input. Backend failures answer 5xx.
+//!
+//! # Connection lifecycle
+//!
+//! Connections are HTTP/1.1 persistent by default: each pool worker
+//! loops `read request → dispatch → respond` on one connection until
+//! the client sends `Connection: close`, goes idle past
+//! [`HttpOpts::keep_alive`], or breaks framing (a framing error gets a
+//! 4xx **and then the connection closes** — a poisoned byte stream
+//! cannot be re-synchronized; the worker itself survives and picks up
+//! the next connection). Each request individually keeps the slow-loris
+//! wall-clock budget ([`REQUEST_DEADLINE`]) the close-per-request
+//! front-end had. HTTP/1.0 clients default to close unless they ask for
+//! keep-alive.
 
-use std::collections::BTreeMap;
-use std::io::{Read, Write};
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{ErrorKind, Read, Write};
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::error::RkcError;
 use crate::linalg::Mat;
-use crate::util::Json;
+use crate::util::{parallel, Json};
 
-use super::{ModelServer, ServerHandle};
+use super::registry::valid_name;
+use super::{ModelRegistry, ModelServer, ServeOpts, ServerHandle};
 
 /// request-head cap (request line + headers)
 const MAX_HEAD: usize = 16 * 1024;
 /// request-body cap. Sized for generous predict batches (a 1 MiB JSON
 /// body is ~6k points in 8 dimensions), not for arbitrary uploads: the
 /// body, its parsed JSON tree (~16-32× larger for bodies of tiny
-/// numbers), and the query matrix all live on the per-connection thread
-/// *before* the bounded queue's backpressure applies. The aggregate
-/// worst case — [`MAX_CONNECTIONS`] × this cap × the tree amplification
-/// (64 × 1 MiB × ~32 ≈ 2 GiB) — is what this number actually bounds;
-/// raise it only together with that arithmetic.
+/// numbers), and the query matrix all live on the pool worker *before*
+/// the bounded model queue's backpressure applies. The aggregate worst
+/// case — worker-pool size × this cap × the tree amplification — is
+/// what this number actually bounds; raise it only together with that
+/// arithmetic (and [`HttpOpts::workers`]).
 const MAX_BODY: usize = 1024 * 1024;
-/// total wall-clock budget for reading one request — the per-read
-/// timeout alone would let a slow-loris client dribble bytes and pin a
-/// connection thread indefinitely
+/// total wall-clock budget for reading one request, counted from its
+/// first byte — the idle keep-alive timeout alone would let a
+/// slow-loris client dribble bytes and pin a pool worker indefinitely
 const REQUEST_DEADLINE: Duration = Duration::from_secs(30);
-/// concurrent connection-thread cap: each connection buffers its body,
-/// JSON tree, and query matrix *before* the bounded queue's
-/// backpressure applies, so aggregate pre-queue memory must be bounded
-/// too; excess connections get an immediate 503
-const MAX_CONNECTIONS: usize = 64;
 /// total wall-clock budget for writing one response — the write-side
 /// mirror of [`REQUEST_DEADLINE`]: a client draining its receive window
-/// one byte at a time must not pin a connection thread (and a multi-MB
+/// one byte at a time must not pin a pool worker (and a multi-MB
 /// response buffer) past this
 const RESPONSE_DEADLINE: Duration = Duration::from_secs(30);
+/// how long a fresh connection gets to send its first request byte
+/// (clients that just dialed are given more grace than an idle
+/// keep-alive gap)
+const FIRST_REQUEST_WINDOW: Duration = Duration::from_secs(10);
+/// socket-level read poll tick: bounds how stale the stop flag and the
+/// deadlines can get while a worker waits for bytes
+const POLL_TICK: Duration = Duration::from_millis(500);
+
+/// Front-end tuning knobs (the model-side knobs live in [`ServeOpts`]).
+#[derive(Clone, Copy, Debug)]
+pub struct HttpOpts {
+    /// Pool workers serving connections (`0` = auto: hardware threads
+    /// clamped to `[4, 32]`). Also the concurrent-connection cap — an
+    /// idle keep-alive connection holds its worker until
+    /// [`keep_alive`](HttpOpts::keep_alive) expires.
+    pub workers: usize,
+    /// Idle gap allowed *between* requests on a persistent connection
+    /// before the server closes it. `Duration::ZERO` disables
+    /// keep-alive entirely (every response carries `Connection: close`).
+    pub keep_alive: Duration,
+    /// Bounded queue of accepted-but-unclaimed connections; beyond this
+    /// the accept loop sheds with an immediate 503.
+    pub backlog: usize,
+}
+
+impl Default for HttpOpts {
+    fn default() -> Self {
+        HttpOpts { workers: 0, keep_alive: Duration::from_secs(5), backlog: 128 }
+    }
+}
+
+impl HttpOpts {
+    fn resolved_workers(&self) -> usize {
+        if self.workers == 0 {
+            parallel::available_threads().clamp(4, 32)
+        } else {
+            self.workers
+        }
+    }
+}
+
+/// Front-end-wide counters (per-model traffic lives in each model's
+/// [`super::ServeStats`]).
+#[derive(Default)]
+struct FrontendCounters {
+    connections: AtomicU64,
+    requests: AtomicU64,
+    failures: AtomicU64,
+    shed: AtomicU64,
+}
+
+/// A snapshot of the front-end-wide counters. `requests > connections`
+/// is the keep-alive reuse signal: multiple requests rode one
+/// connection.
+#[derive(Clone, Copy, Debug)]
+pub struct FrontendStats {
+    /// connections a pool worker picked up (shed connections excluded)
+    pub connections: u64,
+    /// HTTP requests handled across all connections — everything that
+    /// sent at least one byte, including requests rejected before
+    /// routing; silent connect-and-close probes and shed connections
+    /// are not counted
+    pub requests: u64,
+    /// requests answered with a non-2xx status (sheds counted
+    /// separately — they were never read)
+    pub failures: u64,
+    /// connections shed with an immediate 503 because the backlog was full
+    pub shed: u64,
+}
+
+impl FrontendCounters {
+    fn snapshot(&self) -> FrontendStats {
+        FrontendStats {
+            connections: self.connections.load(Ordering::Relaxed),
+            requests: self.requests.load(Ordering::Relaxed),
+            failures: self.failures.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Bounded queue of accepted connections: the accept loop pushes
+/// (shedding on overflow rather than blocking — the accept loop must
+/// never stall), pool workers pop. Closing wakes every worker to exit
+/// and drops whatever was still queued.
+struct ConnQueue {
+    state: Mutex<(VecDeque<TcpStream>, bool)>,
+    not_empty: Condvar,
+    cap: usize,
+}
+
+impl ConnQueue {
+    fn new(cap: usize) -> Self {
+        ConnQueue { state: Mutex::new((VecDeque::new(), false)), not_empty: Condvar::new(), cap }
+    }
+
+    /// Non-blocking push; hands the stream back when full or closed so
+    /// the caller can shed it.
+    fn try_push(&self, stream: TcpStream) -> Result<(), TcpStream> {
+        let mut st = self.state.lock().expect("conn queue poisoned");
+        if st.1 || st.0.len() >= self.cap {
+            return Err(stream);
+        }
+        st.0.push_back(stream);
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; `None` once the queue is closed — the worker's
+    /// exit signal.
+    fn pop(&self) -> Option<TcpStream> {
+        let mut st = self.state.lock().expect("conn queue poisoned");
+        loop {
+            if let Some(s) = st.0.pop_front() {
+                return Some(s);
+            }
+            if st.1 {
+                return None;
+            }
+            st = self.not_empty.wait(st).expect("conn queue poisoned");
+        }
+    }
+
+    /// Close and drop any queued connections (their sockets close).
+    fn close(&self) {
+        let mut st = self.state.lock().expect("conn queue poisoned");
+        st.1 = true;
+        st.0.clear();
+        drop(st);
+        self.not_empty.notify_all();
+    }
+}
 
 /// A running HTTP front-end. Dropping (or
-/// [`shutdown`](HttpServer::shutdown)) stops the accept loop;
+/// [`shutdown`](HttpServer::shutdown)) stops the accept loop, closes
+/// the connection queue, and joins the worker pool;
 /// [`wait`](HttpServer::wait) blocks until shutdown — the CLI's serve
 /// loop.
 pub struct HttpServer {
     local: SocketAddr,
     stop: Arc<AtomicBool>,
     accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    queue: Arc<ConnQueue>,
+    frontend: Arc<FrontendCounters>,
+    registry: Arc<ModelRegistry>,
 }
 
 /// Bind `addr` (e.g. `"127.0.0.1:7878"`; port 0 picks a free port) and
-/// serve `server`'s model over HTTP until shutdown. Returns immediately;
-/// the accept loop runs on its own thread and each connection is handled
-/// on a short-lived worker thread feeding the server's micro-batch
-/// queue.
+/// serve `server`'s model over HTTP until shutdown — the single-model
+/// convenience wrapper: the model is registered as `default` in a fresh
+/// [`ModelRegistry`], so the legacy `/predict`/`/embed` routes and the
+/// `/models/default/...` routes both reach it. The caller keeps owning
+/// the `ModelServer`.
 pub fn serve_http(server: &ModelServer, addr: &str) -> crate::error::Result<HttpServer> {
+    let registry = Arc::new(ModelRegistry::new(ServeOpts::default()));
+    registry.register("default", server)?;
+    serve_http_registry(registry, addr, HttpOpts::default())
+}
+
+/// Bind `addr` and serve every model in `registry` until shutdown.
+/// Returns immediately; the accept loop and the pool workers run on
+/// their own threads. The registry stays shared — runtime
+/// `PUT`/`DELETE /models/{name}` and out-of-band
+/// [`ModelRegistry::load`]/[`unload`](ModelRegistry::unload) calls are
+/// visible to in-flight traffic immediately.
+pub fn serve_http_registry(
+    registry: Arc<ModelRegistry>,
+    addr: &str,
+    opts: HttpOpts,
+) -> crate::error::Result<HttpServer> {
     let listener =
         TcpListener::bind(addr).map_err(|e| RkcError::io(format!("binding {addr}"), e))?;
     let local = listener
         .local_addr()
         .map_err(|e| RkcError::io(format!("resolving local address of {addr}"), e))?;
     let stop = Arc::new(AtomicBool::new(false));
+    let frontend = Arc::new(FrontendCounters::default());
+    let queue = Arc::new(ConnQueue::new(opts.backlog.max(1)));
+    let keep_alive = opts.keep_alive;
+
+    let mut workers = Vec::with_capacity(opts.resolved_workers());
+    for i in 0..opts.resolved_workers() {
+        let q = Arc::clone(&queue);
+        let reg = Arc::clone(&registry);
+        let fc = Arc::clone(&frontend);
+        let st = Arc::clone(&stop);
+        let spawned = std::thread::Builder::new()
+            .name(format!("rkc-http-worker-{i}"))
+            .spawn(move || {
+                while let Some(stream) = q.pop() {
+                    fc.connections.fetch_add(1, Ordering::Relaxed);
+                    // a panic while serving costs that one connection,
+                    // never a pool slot — the per-connection isolation
+                    // the old thread-per-connection design had
+                    let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        handle_conn(stream, &reg, &fc, keep_alive, &st);
+                    }));
+                }
+            });
+        match spawned {
+            Ok(h) => workers.push(h),
+            Err(e) => {
+                // never leak half a pool: wake what we did spawn, join
+                // it, and fail construction with a typed error
+                queue.close();
+                for w in workers {
+                    let _ = w.join();
+                }
+                return Err(RkcError::io("spawning the http worker pool".to_string(), e));
+            }
+        }
+    }
+
     let stop_flag = Arc::clone(&stop);
-    let handle = server.handle();
+    let q = Arc::clone(&queue);
+    let fc = Arc::clone(&frontend);
     let accept = std::thread::Builder::new()
         .name("rkc-serve-http".into())
         .spawn(move || {
-            let active = Arc::new(AtomicUsize::new(0));
             for conn in listener.incoming() {
                 if stop_flag.load(Ordering::SeqCst) {
                     break;
                 }
-                let mut stream = match conn {
+                let stream = match conn {
                     Ok(s) => s,
                     // fd exhaustion etc. — back off instead of spinning
                     Err(_) => {
@@ -98,14 +302,13 @@ pub fn serve_http(server: &ModelServer, addr: &str) -> crate::error::Result<Http
                         continue;
                     }
                 };
-                // shed load once the connection-thread cap is reached
-                // (check-then-add may overshoot by a race; the cap is a
-                // resource bound, not an exact count)
-                if active.load(Ordering::Relaxed) >= MAX_CONNECTIONS {
+                if let Err(mut stream) = q.try_push(stream) {
                     // overload is exactly when operators watch the
-                    // counters — shed responses must show up in them
-                    handle.shared.counters.http_requests.fetch_add(1, Ordering::Relaxed);
-                    handle.shared.counters.http_failures.fetch_add(1, Ordering::Relaxed);
+                    // counters — sheds get their own counter (NOT
+                    // `requests`: nothing was read, and inflating
+                    // `requests` would fake the keep-alive reuse signal
+                    // `requests > connections`)
+                    fc.shed.fetch_add(1, Ordering::Relaxed);
                     // write the (tiny) 503 off-thread so a hostile peer
                     // can never stall the accept loop; if even that
                     // spawn fails, dropping the connection sheds harder
@@ -116,37 +319,21 @@ pub fn serve_http(server: &ModelServer, addr: &str) -> crate::error::Result<Http
                             write_response(
                                 &mut stream,
                                 503,
-                                &error_json("too many concurrent connections"),
+                                &error_json("server backlog is full"),
+                                true,
                             );
                         });
-                    continue;
-                }
-                active.fetch_add(1, Ordering::Relaxed);
-                let h = handle.clone();
-                let slot = Arc::clone(&active);
-                // a failed spawn (thread exhaustion) sheds this one
-                // connection — the closure (and stream) drop — instead
-                // of panicking the accept loop
-                let spawned = std::thread::Builder::new()
-                    .name("rkc-serve-conn".into())
-                    .spawn(move || {
-                        // release the slot on normal return and unwind
-                        struct Slot(Arc<AtomicUsize>);
-                        impl Drop for Slot {
-                            fn drop(&mut self) {
-                                self.0.fetch_sub(1, Ordering::Relaxed);
-                            }
-                        }
-                        let _slot = Slot(slot);
-                        handle_conn(stream, &h);
-                    });
-                if spawned.is_err() {
-                    active.fetch_sub(1, Ordering::Relaxed);
                 }
             }
         })
-        .map_err(|e| RkcError::io("spawning the http accept thread".to_string(), e))?;
-    Ok(HttpServer { local, stop, accept: Some(accept) })
+        .map_err(|e| {
+            queue.close();
+            for w in workers.drain(..) {
+                let _ = w.join();
+            }
+            RkcError::io("spawning the http accept thread".to_string(), e)
+        })?;
+    Ok(HttpServer { local, stop, accept: Some(accept), workers, queue, frontend, registry })
 }
 
 impl HttpServer {
@@ -155,7 +342,19 @@ impl HttpServer {
         self.local
     }
 
-    /// Stop accepting connections and join the accept thread.
+    /// The registry this front-end routes into (load/unload models out
+    /// of band; HTTP traffic sees the change immediately).
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
+    }
+
+    /// Snapshot the front-end-wide connection/request counters.
+    pub fn frontend_stats(&self) -> FrontendStats {
+        self.frontend.snapshot()
+    }
+
+    /// Stop accepting connections, close the connection queue, and join
+    /// the accept thread and worker pool.
     pub fn shutdown(mut self) {
         self.stop_and_join();
     }
@@ -169,34 +368,39 @@ impl HttpServer {
     }
 
     fn stop_and_join(&mut self) {
-        if self.accept.is_none() {
+        if self.accept.is_none() && self.workers.is_empty() {
             return;
         }
         self.stop.store(true, Ordering::SeqCst);
-        // the accept loop is blocked in accept(2); poke it awake. A
-        // wildcard bind (0.0.0.0 / ::) is not connectable everywhere —
-        // aim the wake-up at the loopback of the same family instead.
-        let wake = if self.local.ip().is_unspecified() {
-            let loopback: IpAddr = match self.local.ip() {
-                IpAddr::V4(_) => Ipv4Addr::LOCALHOST.into(),
-                IpAddr::V6(_) => Ipv6Addr::LOCALHOST.into(),
+        if let Some(h) = self.accept.take() {
+            // the accept loop is blocked in accept(2); poke it awake. A
+            // wildcard bind (0.0.0.0 / ::) is not connectable everywhere —
+            // aim the wake-up at the loopback of the same family instead.
+            let wake = if self.local.ip().is_unspecified() {
+                let loopback: IpAddr = match self.local.ip() {
+                    IpAddr::V4(_) => Ipv4Addr::LOCALHOST.into(),
+                    IpAddr::V6(_) => Ipv6Addr::LOCALHOST.into(),
+                };
+                SocketAddr::new(loopback, self.local.port())
+            } else {
+                self.local
             };
-            SocketAddr::new(loopback, self.local.port())
-        } else {
-            self.local
-        };
-        match TcpStream::connect_timeout(&wake, Duration::from_secs(1)) {
-            Ok(_) => {
-                if let Some(h) = self.accept.take() {
+            match TcpStream::connect_timeout(&wake, Duration::from_secs(1)) {
+                Ok(_) => {
                     let _ = h.join();
                 }
+                // the wake-up could not reach the listener (self-connect
+                // firewalled?): detach the accept thread instead of
+                // hanging the caller in join(); it exits with the process
+                Err(_) => {}
             }
-            // the wake-up could not reach the listener (self-connect
-            // firewalled?): detach the accept thread instead of hanging
-            // the caller in join(); it exits with the process
-            Err(_) => {
-                self.accept.take();
-            }
+        }
+        // workers drain: the stop flag bounds how long an idle
+        // keep-alive connection can hold a worker (one poll tick), and
+        // in-flight requests finish their reply first
+        self.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
         }
     }
 }
@@ -211,90 +415,294 @@ struct HttpRequest {
     method: String,
     path: String,
     body: Vec<u8>,
+    /// client asked to close (Connection: close, or HTTP/1.0 without
+    /// keep-alive)
+    close: bool,
 }
 
-fn handle_conn(mut stream: TcpStream, handle: &ServerHandle) {
-    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+/// What one attempt to read a request off the stream produced.
+enum ReadOutcome {
+    /// a complete, framed request
+    Request(Box<HttpRequest>),
+    /// nothing to respond to: clean close, idle timeout, probe noise,
+    /// or server shutdown — drop the connection silently
+    Silent,
+    /// framing failure: answer with this status/message, then close
+    /// (the byte stream cannot be re-synchronized)
+    Fatal(u16, String),
+}
+
+/// Serve one connection until close/idle/framing-failure/shutdown: the
+/// pool worker's `read request → dispatch → respond` loop. `carry`
+/// holds bytes read past the previous request's body (pipelined
+/// clients), so framing never loses data between iterations.
+fn handle_conn(
+    mut stream: TcpStream,
+    registry: &ModelRegistry,
+    frontend: &FrontendCounters,
+    keep_alive: Duration,
+    stop: &AtomicBool,
+) {
     // symmetric defense: a client that never reads its response must
-    // not pin this thread (and the response buffer) forever
+    // not pin this worker (and the response buffer) forever
     let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
-    let counters = &handle.shared.counters;
-    let (status, body) = match read_request(&mut stream) {
-        Ok(req) => {
-            counters.http_requests.fetch_add(1, Ordering::Relaxed);
-            route(handle, &req)
+    let mut carry: Vec<u8> = Vec::new();
+    let mut idle = FIRST_REQUEST_WINDOW;
+    loop {
+        match read_request(&mut stream, &mut carry, idle, stop) {
+            ReadOutcome::Silent => return,
+            ReadOutcome::Fatal(status, msg) => {
+                frontend.requests.fetch_add(1, Ordering::Relaxed);
+                frontend.failures.fetch_add(1, Ordering::Relaxed);
+                write_response(&mut stream, status, &error_json(&msg), true);
+                drain_then_close(stream);
+                return;
+            }
+            ReadOutcome::Request(req) => {
+                frontend.requests.fetch_add(1, Ordering::Relaxed);
+                let (status, body) = route(registry, frontend, &req);
+                if status >= 400 {
+                    frontend.failures.fetch_add(1, Ordering::Relaxed);
+                }
+                let close = req.close || keep_alive.is_zero() || stop.load(Ordering::Relaxed);
+                // an abandoned (timed-out / failed) write leaves a
+                // truncated response on the socket — the byte stream is
+                // desynced and the connection must die with it
+                let sent = write_response(&mut stream, status, &body, close);
+                if close || !sent {
+                    drain_then_close(stream);
+                    return;
+                }
+            }
         }
-        // a connection that closed without sending a single byte is
-        // port-scan / LB-probe noise: no response, no counter traffic
-        Err((0, _)) => return,
-        // anything that DID send bytes and failed (413, 431, 408, bad
-        // head) is real rejected traffic operators must see
-        Err((status, msg)) => {
-            counters.http_requests.fetch_add(1, Ordering::Relaxed);
-            (status, error_json(&msg))
-        }
-    };
-    if status >= 400 {
-        counters.http_failures.fetch_add(1, Ordering::Relaxed);
+        idle = keep_alive;
     }
-    write_response(&mut stream, status, &body);
-    // half-close, then briefly drain whatever request bytes are still in
-    // flight (e.g. the body behind a 413 written straight after the
-    // head): closing with unread data makes the kernel RST the
-    // connection, which can destroy the queued response before the
-    // client reads it
+}
+
+/// Half-close, then briefly drain whatever request bytes are still in
+/// flight (e.g. the body behind a 413 written straight after the head):
+/// closing with unread data makes the kernel RST the connection, which
+/// can destroy the queued response before the client reads it.
+fn drain_then_close(mut stream: TcpStream) {
     let _ = stream.shutdown(std::net::Shutdown::Write);
     let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
     let mut sink = [0u8; 8192];
-    let drain_started = std::time::Instant::now();
+    let drain_started = Instant::now();
     while drain_started.elapsed() < Duration::from_secs(2)
         && matches!(stream.read(&mut sink), Ok(n) if n > 0)
     {}
 }
 
-fn route(handle: &ServerHandle, req: &HttpRequest) -> (u16, String) {
-    match (req.method.as_str(), req.path.as_str()) {
-        // a closed queue (worker died / server shut down) must fail the
-        // health probe — a 200 here would keep load balancers routing
-        // traffic to a server that 503s every predict
-        ("GET", "/healthz") => {
-            let closed = handle.shared.queue.is_closed();
-            (if closed { 503 } else { 200 }, health_json(handle, closed))
+/// Dispatch one framed request against the registry. Per-model HTTP
+/// counters are bumped here (on the model the request routed to);
+/// front-end-wide counters are the caller's job.
+fn route(
+    registry: &ModelRegistry,
+    frontend: &FrontendCounters,
+    req: &HttpRequest,
+) -> (u16, String) {
+    let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+    match (req.method.as_str(), segs.as_slice()) {
+        ("GET", ["healthz"]) => health(registry, frontend),
+        ("GET", ["models"]) => (200, models_json(registry, frontend)),
+        ("GET", ["models", name]) => match registry.info(name) {
+            Some(info) => (200, model_info_value(&info).to_string()),
+            None => (404, no_such_model(name)),
+        },
+        ("PUT", ["models", name]) => put_model(registry, name, &req.body),
+        ("DELETE", ["models", name]) => {
+            if registry.unload(name) {
+                (200, obj([("unloaded", Json::Str((*name).to_string()))]))
+            } else {
+                (404, no_such_model(name))
+            }
         }
-        ("POST", "/predict") => match parse_points(&req.body) {
-            Err(msg) => (400, error_json(&msg)),
-            Ok(points) => match handle.predict(points) {
-                Ok(labels) => {
-                    let arr = labels.iter().map(|&l| Json::Num(l as f64)).collect();
-                    (200, obj([("labels", Json::Arr(arr))]))
-                }
-                Err(e) => error_response(&e),
-            },
+        ("POST", ["models", name, op @ ("predict" | "embed")]) => match registry.get(name) {
+            Some(handle) => model_op(&handle, op, &req.body),
+            None => (404, no_such_model(name)),
         },
-        ("POST", "/embed") => match parse_points(&req.body) {
-            Err(msg) => (400, error_json(&msg)),
-            Ok(points) => match handle.embed(points) {
-                Ok(y) => {
-                    // non-finite coordinates (a degenerate query can
-                    // overflow the kernel) become null — JSON has no
-                    // inf/NaN literals and the body must stay parseable
-                    let cols: Vec<Json> = (0..y.cols())
-                        .map(|j| {
-                            Json::Arr(
-                                (0..y.rows()).map(|i| Json::finite_num(y[(i, j)])).collect(),
-                            )
-                        })
-                        .collect();
-                    (200, obj([("embedding", Json::Arr(cols))]))
-                }
-                Err(e) => error_response(&e),
-            },
+        ("POST", [op @ ("predict" | "embed")]) => match registry.default_model() {
+            Some((_, handle)) => model_op(&handle, op, &req.body),
+            None => (503, error_json("no models loaded (PUT /models/{name} to load one)")),
         },
-        (_, "/healthz") | (_, "/predict") | (_, "/embed") => {
+        (_, ["healthz"] | ["predict"] | ["embed"] | ["models"] | ["models", _]) => {
             (405, error_json("method not allowed for this path"))
         }
-        _ => (404, error_json("no such endpoint (try /healthz, /predict, /embed)")),
+        (_, ["models", _, "predict" | "embed"]) => {
+            (405, error_json("method not allowed for this path"))
+        }
+        _ => (404, error_json("no such endpoint (try /healthz, /models, /models/{name}/predict)")),
     }
+}
+
+fn no_such_model(name: &str) -> String {
+    obj([
+        ("error", Json::Str(format!("no model named '{name}'"))),
+        ("hint", Json::Str("GET /models lists loaded models".to_string())),
+    ])
+}
+
+/// Run predict/embed on one model, counting the request against that
+/// model's HTTP counters.
+fn model_op(handle: &ServerHandle, op: &str, body: &[u8]) -> (u16, String) {
+    let counters = &handle.shared.counters;
+    counters.http_requests.fetch_add(1, Ordering::Relaxed);
+    let (status, body) = match parse_points(body) {
+        Err(msg) => (400, error_json(&msg)),
+        Ok(points) if op == "predict" => match handle.predict(points) {
+            Ok(labels) => {
+                let arr = labels.iter().map(|&l| Json::Num(l as f64)).collect();
+                (200, obj([("labels", Json::Arr(arr))]))
+            }
+            Err(e) => error_response(&e),
+        },
+        Ok(points) => match handle.embed(points) {
+            Ok(y) => {
+                // non-finite coordinates (a degenerate query can
+                // overflow the kernel) become null — JSON has no
+                // inf/NaN literals and the body must stay parseable
+                let cols: Vec<Json> = (0..y.cols())
+                    .map(|j| {
+                        Json::Arr((0..y.rows()).map(|i| Json::finite_num(y[(i, j)])).collect())
+                    })
+                    .collect();
+                (200, obj([("embedding", Json::Arr(cols))]))
+            }
+            Err(e) => error_response(&e),
+        },
+    };
+    if status >= 400 {
+        counters.http_failures.fetch_add(1, Ordering::Relaxed);
+    }
+    (status, body)
+}
+
+/// `PUT /models/{name}` with `{"path": "model.rkc"}`: load (or replace)
+/// a model at runtime. The path is read server-side — bind the admin
+/// surface to loopback (the default) unless the network is trusted.
+fn put_model(registry: &ModelRegistry, name: &str, body: &[u8]) -> (u16, String) {
+    if !valid_name(name) {
+        return (400, error_json("invalid model name (want ASCII [A-Za-z0-9._-]+)"));
+    }
+    let path = match std::str::from_utf8(body).ok().and_then(|t| Json::parse(t).ok()) {
+        Some(v) => match v.get("path").and_then(Json::as_str) {
+            Some(p) => p.to_string(),
+            None => return (400, error_json("missing 'path': expected {\"path\": \"model.rkc\"}")),
+        },
+        None => return (400, error_json("malformed JSON: expected {\"path\": \"model.rkc\"}")),
+    };
+    match registry.load(name, &path) {
+        Ok(()) => (
+            200,
+            obj([
+                ("loaded", Json::Str(name.to_string())),
+                ("path", Json::Str(path)),
+                ("models", Json::Num(registry.len() as f64)),
+            ]),
+        ),
+        // a missing file is the caller naming something that isn't
+        // there; everything else (corrupt model, bad name) is a bad
+        // request
+        Err(RkcError::Io { context, source }) => (404, error_json(&format!("{context}: {source}"))),
+        Err(e) => (400, error_json(&e.to_string())),
+    }
+}
+
+/// `GET /healthz` — the legacy single-model health shape, aliased to
+/// the **default** model (its compute counters and metrics), plus the
+/// registry-wide fields (`models`, front-end connection counters). 503
+/// when no model is loaded or the default's queue is closed — a 200
+/// would keep load balancers routing traffic to a server that 503s
+/// every predict.
+fn health(registry: &ModelRegistry, frontend: &FrontendCounters) -> (u16, String) {
+    let fe = frontend.snapshot();
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("models", Json::Num(registry.len() as f64)),
+        ("connections", Json::Num(fe.connections as f64)),
+        ("http_requests", Json::Num(fe.requests as f64)),
+        ("http_failures", Json::Num(fe.failures as f64)),
+        ("shed", Json::Num(fe.shed as f64)),
+    ];
+    let Some((name, handle)) = registry.default_model() else {
+        fields.push(("status", Json::Str("empty".into())));
+        return (503, obj_vec(fields));
+    };
+    let shared = &handle.shared;
+    let closed = shared.queue.is_closed();
+    let stats = shared.snapshot();
+    let m = shared.model.metrics();
+    let input_dim = match shared.model.input_dim() {
+        Some(p) => Json::Num(p as f64),
+        None => Json::Null,
+    };
+    let status = if closed { "shutdown" } else { "ok" };
+    fields.extend([
+        ("status", Json::Str(status.into())),
+        ("default", Json::Str(name)),
+        ("method", Json::Str(m.method.clone())),
+        ("k", Json::Num(shared.model.k() as f64)),
+        ("n_train", Json::Num(m.n as f64)),
+        ("rank", Json::Num(m.rank as f64)),
+        ("input_dim", input_dim),
+        ("queue_depth", Json::Num(shared.queue.depth() as f64)),
+        ("queue_highwater", Json::Num(stats.queue_highwater as f64)),
+        ("requests", Json::Num(stats.requests as f64)),
+        ("points", Json::Num(stats.points as f64)),
+        ("batches", Json::Num(stats.batches as f64)),
+        ("errors", Json::Num(stats.errors as f64)),
+        ("mean_batch", Json::Num(stats.mean_batch())),
+        ("mean_latency_us", Json::Num(stats.mean_latency_us())),
+        ("uptime_s", Json::Num(stats.uptime_s)),
+    ]);
+    (if closed { 503 } else { 200 }, obj_vec(fields))
+}
+
+fn model_info_value(info: &super::ModelInfo) -> Json {
+    let input_dim = match info.input_dim {
+        Some(p) => Json::Num(p as f64),
+        None => Json::Null,
+    };
+    json_obj(vec![
+        ("name", Json::Str(info.name.clone())),
+        ("default", Json::Bool(info.is_default)),
+        ("method", Json::Str(info.method.clone())),
+        ("k", Json::Num(info.k as f64)),
+        ("n_train", Json::Num(info.n_train as f64)),
+        ("rank", Json::Num(info.rank as f64)),
+        ("input_dim", input_dim),
+        ("path", info.path.clone().map(Json::Str).unwrap_or(Json::Null)),
+        ("queue_depth", Json::Num(info.queue_depth as f64)),
+        ("queue_highwater", Json::Num(info.stats.queue_highwater as f64)),
+        ("requests", Json::Num(info.stats.requests as f64)),
+        ("points", Json::Num(info.stats.points as f64)),
+        ("batches", Json::Num(info.stats.batches as f64)),
+        ("errors", Json::Num(info.stats.errors as f64)),
+        ("http_requests", Json::Num(info.stats.http_requests as f64)),
+        ("http_failures", Json::Num(info.stats.http_failures as f64)),
+        ("mean_batch", Json::Num(info.stats.mean_batch())),
+        ("mean_latency_us", Json::Num(info.stats.mean_latency_us())),
+    ])
+}
+
+/// `GET /models` — every model's info + stats, plus the front-end-wide
+/// counters.
+fn models_json(registry: &ModelRegistry, frontend: &FrontendCounters) -> String {
+    let fe = frontend.snapshot();
+    let infos = registry.list();
+    let default = infos
+        .iter()
+        .find(|i| i.is_default)
+        .map(|i| Json::Str(i.name.clone()))
+        .unwrap_or(Json::Null);
+    let rows: Vec<Json> = infos.iter().map(model_info_value).collect();
+    obj_vec(vec![
+        ("default", default),
+        ("models", Json::Arr(rows)),
+        ("connections", Json::Num(fe.connections as f64)),
+        ("http_requests", Json::Num(fe.requests as f64)),
+        ("http_failures", Json::Num(fe.failures as f64)),
+        ("shed", Json::Num(fe.shed as f64)),
+    ])
 }
 
 /// Map a typed serving error onto an HTTP status: caller mistakes are
@@ -306,35 +714,6 @@ fn error_response(e: &RkcError) -> (u16, String) {
         _ => 500,
     };
     (status, error_json(&e.to_string()))
-}
-
-fn health_json(handle: &ServerHandle, closed: bool) -> String {
-    let shared = &handle.shared;
-    let stats = shared.snapshot();
-    let m = shared.model.metrics();
-    let input_dim = match shared.model.input_dim() {
-        Some(p) => Json::Num(p as f64),
-        None => Json::Null,
-    };
-    let status = if closed { "shutdown" } else { "ok" };
-    obj([
-        ("status", Json::Str(status.into())),
-        ("method", Json::Str(m.method.clone())),
-        ("k", Json::Num(shared.model.k() as f64)),
-        ("n_train", Json::Num(m.n as f64)),
-        ("rank", Json::Num(m.rank as f64)),
-        ("input_dim", input_dim),
-        ("queue_depth", Json::Num(shared.queue.depth() as f64)),
-        ("requests", Json::Num(stats.requests as f64)),
-        ("points", Json::Num(stats.points as f64)),
-        ("batches", Json::Num(stats.batches as f64)),
-        ("errors", Json::Num(stats.errors as f64)),
-        ("mean_batch", Json::Num(stats.mean_batch())),
-        ("mean_latency_us", Json::Num(stats.mean_latency_us())),
-        ("http_requests", Json::Num(stats.http_requests as f64)),
-        ("http_failures", Json::Num(stats.http_failures as f64)),
-        ("uptime_s", Json::Num(stats.uptime_s)),
-    ])
 }
 
 /// Decode `{"points": [[…], …]}` into a p × m query matrix (columns are
@@ -377,16 +756,25 @@ fn parse_points(body: &[u8]) -> Result<Mat, String> {
 }
 
 fn obj<const N: usize>(fields: [(&str, Json); N]) -> String {
-    let map: BTreeMap<String, Json> =
-        fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
-    Json::Obj(map).to_string()
+    obj_vec(fields.into_iter().collect())
+}
+
+fn obj_vec(fields: Vec<(&str, Json)>) -> String {
+    json_obj(fields).to_string()
+}
+
+fn json_obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
 }
 
 fn error_json(msg: &str) -> String {
     obj([("error", Json::Str(msg.to_string()))])
 }
 
-fn write_response(stream: &mut TcpStream, status: u16, body: &str) {
+/// Write one framed response. Returns whether every byte was written —
+/// a `false` means the stream now holds a truncated response and a
+/// keep-alive caller must close the connection.
+fn write_response(stream: &mut TcpStream, status: u16, body: &str, close: bool) -> bool {
     let reason = match status {
         200 => "OK",
         400 => "Bad Request",
@@ -400,23 +788,24 @@ fn write_response(stream: &mut TcpStream, status: u16, body: &str) {
         503 => "Service Unavailable",
         _ => "Error",
     };
+    let connection = if close { "close" } else { "keep-alive" };
     let head = format!(
         "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n",
+         Content-Length: {}\r\nConnection: {connection}\r\n\r\n",
         body.len()
     );
-    let started = std::time::Instant::now();
-    if write_all_deadline(stream, head.as_bytes(), started) {
-        let _ = write_all_deadline(stream, body.as_bytes(), started);
-    }
+    let started = Instant::now();
+    let sent = write_all_deadline(stream, head.as_bytes(), started)
+        && write_all_deadline(stream, body.as_bytes(), started);
     let _ = stream.flush();
+    sent
 }
 
 /// `write_all` with an aggregate [`RESPONSE_DEADLINE`]: the 10 s
 /// per-write timeout alone would let a 1-byte-per-window reader keep a
 /// multi-MB response alive indefinitely. Returns false when the write
 /// was abandoned.
-fn write_all_deadline(stream: &mut TcpStream, mut buf: &[u8], started: std::time::Instant) -> bool {
+fn write_all_deadline(stream: &mut TcpStream, mut buf: &[u8], started: Instant) -> bool {
     while !buf.is_empty() {
         if started.elapsed() > RESPONSE_DEADLINE {
             return false;
@@ -433,106 +822,177 @@ fn find_head_end(buf: &[u8]) -> Option<usize> {
     buf.windows(4).position(|w| w == b"\r\n\r\n")
 }
 
-/// Read one HTTP request (head + Content-Length body) off the stream.
-/// Errors carry the status/message pair for the failure response.
-fn read_request(stream: &mut TcpStream) -> Result<HttpRequest, (u16, String)> {
-    let started = std::time::Instant::now();
-    let mut buf: Vec<u8> = Vec::with_capacity(1024);
-    let mut chunk = [0u8; 2048];
+/// Does a `Connection:` header value ask to close? (token list,
+/// case-insensitive — "keep-alive, close" closes)
+fn connection_wants_close(value: &str) -> bool {
+    value.split(',').any(|t| t.trim().eq_ignore_ascii_case("close"))
+}
+
+/// Read one HTTP request (head + Content-Length body) off the stream,
+/// consuming `carry` first and leaving any bytes past this request's
+/// body (pipelined requests) back in `carry`.
+///
+/// Two separate clocks govern the read: while *no* byte of this request
+/// has arrived, the `idle` keep-alive window applies and expiry is a
+/// [`ReadOutcome::Silent`] close; from the first byte on, the
+/// [`REQUEST_DEADLINE`] slow-loris budget applies and expiry is a 408.
+/// The stop flag turns into a silent close at the next poll tick.
+fn read_request(
+    stream: &mut TcpStream,
+    carry: &mut Vec<u8>,
+    idle: Duration,
+    stop: &AtomicBool,
+) -> ReadOutcome {
+    let mut buf = std::mem::take(carry);
+    let idle_started = Instant::now();
+    let mut request_started = if buf.is_empty() { None } else { Some(Instant::now()) };
+    let mut chunk = [0u8; 8192];
+
+    // None = the applicable deadline (idle vs slow-loris) expired
+    let remaining = |request_started: &Option<Instant>| -> Option<Duration> {
+        match request_started {
+            Some(t0) => REQUEST_DEADLINE.checked_sub(t0.elapsed()),
+            None => idle.checked_sub(idle_started.elapsed()),
+        }
+    };
+
     let head_end = loop {
         if let Some(pos) = find_head_end(&buf) {
             break pos;
         }
         if buf.len() > MAX_HEAD {
-            return Err((431, "request head too large".to_string()));
+            return ReadOutcome::Fatal(431, "request head too large".to_string());
         }
-        if started.elapsed() > REQUEST_DEADLINE {
-            return Err((408, "request took too long to arrive".to_string()));
+        if stop.load(Ordering::Relaxed) {
+            return ReadOutcome::Silent;
         }
-        // status 0 = nothing ever arrived (close OR idle timeout): the
-        // caller drops the connection silently — probe noise, not traffic
-        let n = match stream.read(&mut chunk) {
-            Ok(n) => n,
-            Err(_) if buf.is_empty() => return Err((0, String::new())),
-            Err(e) => return Err((400, format!("read error: {e}"))),
+        let Some(left) = remaining(&request_started) else {
+            return match request_started {
+                None => ReadOutcome::Silent, // idle keep-alive expiry
+                Some(_) => ReadOutcome::Fatal(408, "request took too long to arrive".to_string()),
+            };
         };
-        if n == 0 {
-            if buf.is_empty() {
-                return Err((0, String::new()));
+        let _ = stream.set_read_timeout(Some(left.min(POLL_TICK).max(Duration::from_millis(1))));
+        match stream.read(&mut chunk) {
+            Ok(0) => {
+                return if buf.is_empty() {
+                    ReadOutcome::Silent // clean close between requests
+                } else {
+                    ReadOutcome::Fatal(400, "connection closed mid-request".to_string())
+                };
             }
-            return Err((400, "connection closed mid-request".to_string()));
+            Ok(n) => {
+                if request_started.is_none() {
+                    request_started = Some(Instant::now());
+                }
+                buf.extend_from_slice(&chunk[..n]);
+            }
+            // timeout tick: loop back and re-check stop + deadlines
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {}
+            Err(_) if buf.is_empty() => return ReadOutcome::Silent,
+            Err(e) => return ReadOutcome::Fatal(400, format!("read error: {e}")),
         }
-        buf.extend_from_slice(&chunk[..n]);
     };
-    let head = std::str::from_utf8(&buf[..head_end])
-        .map_err(|_| (400, "request head is not UTF-8".to_string()))?;
+
+    let head = match std::str::from_utf8(&buf[..head_end]) {
+        Ok(h) => h,
+        Err(_) => return ReadOutcome::Fatal(400, "request head is not UTF-8".to_string()),
+    };
     let mut lines = head.split("\r\n");
     let request_line = lines.next().unwrap_or_default();
     let mut parts = request_line.split_whitespace();
-    let method = parts
-        .next()
-        .ok_or_else(|| (400, "empty request line".to_string()))?
-        .to_string();
-    let path = parts
-        .next()
-        .ok_or_else(|| (400, "request line is missing a path".to_string()))?
-        .to_string();
-    let mut content_length = 0usize;
+    let Some(method) = parts.next().map(str::to_string) else {
+        return ReadOutcome::Fatal(400, "empty request line".to_string());
+    };
+    let Some(path) = parts.next().map(str::to_string) else {
+        return ReadOutcome::Fatal(400, "request line is missing a path".to_string());
+    };
+    // HTTP/1.0 defaults to close; 1.1 (and anything newer) to keep-alive
+    let version = parts.next().unwrap_or("HTTP/1.1");
+    let mut close = version.eq_ignore_ascii_case("HTTP/1.0");
+    let mut content_length: Option<usize> = None;
     let mut expects_continue = false;
     for line in lines {
         if let Some((key, value)) = line.split_once(':') {
             let key = key.trim();
             let value = value.trim();
             if key.eq_ignore_ascii_case("content-length") {
-                content_length = value
-                    .parse()
-                    .map_err(|_| (400, "unparseable content-length".to_string()))?;
+                let parsed: usize = match value.parse() {
+                    Ok(n) => n,
+                    Err(_) => return ReadOutcome::Fatal(400, "unparseable content-length".into()),
+                };
+                // duplicate-but-different Content-Length headers are a
+                // framing (request-smuggling) hazard on a persistent
+                // connection: a proxy framing by the other value would
+                // desync every later request on this socket — reject
+                if content_length.is_some_and(|prev| prev != parsed) {
+                    return ReadOutcome::Fatal(
+                        400,
+                        "conflicting content-length headers".to_string(),
+                    );
+                }
+                content_length = Some(parsed);
             } else if key.eq_ignore_ascii_case("expect")
                 && value.eq_ignore_ascii_case("100-continue")
             {
                 expects_continue = true;
+            } else if key.eq_ignore_ascii_case("connection") {
+                if connection_wants_close(value) {
+                    close = true;
+                } else if value.trim().eq_ignore_ascii_case("keep-alive") {
+                    close = false; // HTTP/1.0 client opting in
+                }
             } else if key.eq_ignore_ascii_case("transfer-encoding") {
                 // we only speak Content-Length bodies; saying so beats a
                 // misleading 400 after silently dropping a chunked body
-                return Err((
+                return ReadOutcome::Fatal(
                     501,
                     "transfer-encoding is not supported; send Content-Length".to_string(),
-                ));
+                );
             }
         }
     }
+    let content_length = content_length.unwrap_or(0);
     if content_length > MAX_BODY {
-        return Err((413, format!("body of {content_length} bytes exceeds the limit")));
+        return ReadOutcome::Fatal(413, format!("body of {content_length} bytes exceeds the limit"));
     }
     // curl (and friends) pause up to a second waiting for this interim
     // response before sending any body over 1 KiB
-    if expects_continue && content_length > 0 {
+    if expects_continue && content_length > 0 && buf.len() < head_end + 4 + content_length {
         let _ = stream.write_all(b"HTTP/1.1 100 Continue\r\n\r\n");
     }
-    let mut body = buf[head_end + 4..].to_vec();
-    body.truncate(content_length);
-    if body.len() < content_length {
-        // 64 KiB reads (bodies run up to MAX_BODY) with the same overall
-        // deadline as the head. Deliberately NOT reserving the declared
-        // Content-Length up front: headers alone must never commit the
-        // full MAX_BODY per connection — memory grows as bytes arrive
-        body.reserve((content_length - body.len()).min(64 * 1024));
+
+    let total = head_end + 4 + content_length;
+    if buf.len() < total {
+        // 64 KiB reads (bodies run up to MAX_BODY) against the same
+        // per-request deadline as the head. Deliberately NOT reserving
+        // the declared Content-Length up front: headers alone must never
+        // commit the full MAX_BODY per connection — memory grows as
+        // bytes arrive. Reads are not capped at the body boundary:
+        // pipelined follow-up bytes land in `carry` below.
         let mut big = vec![0u8; 64 * 1024];
-        while body.len() < content_length {
-            if started.elapsed() > REQUEST_DEADLINE {
-                return Err((408, "request body took too long to arrive".to_string()));
+        while buf.len() < total {
+            if stop.load(Ordering::Relaxed) {
+                return ReadOutcome::Silent;
             }
-            let want = big.len().min(content_length - body.len());
-            let n = stream
-                .read(&mut big[..want])
-                .map_err(|e| (400, format!("read error: {e}")))?;
-            if n == 0 {
-                return Err((400, "connection closed mid-body".to_string()));
+            let Some(left) = remaining(&request_started) else {
+                return ReadOutcome::Fatal(408, "request body took too long to arrive".to_string());
+            };
+            let _ =
+                stream.set_read_timeout(Some(left.min(POLL_TICK).max(Duration::from_millis(1))));
+            match stream.read(&mut big) {
+                Ok(0) => return ReadOutcome::Fatal(400, "connection closed mid-body".to_string()),
+                Ok(n) => buf.extend_from_slice(&big[..n]),
+                Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {}
+                Err(e) => return ReadOutcome::Fatal(400, format!("read error: {e}")),
             }
-            body.extend_from_slice(&big[..n]);
         }
     }
-    Ok(HttpRequest { method, path, body })
+    // split: this request's body stays in buf, pipelined excess carries
+    // over to the next read_request call on this connection
+    *carry = buf.split_off(total);
+    let body = buf[head_end + 4..].to_vec();
+    ReadOutcome::Request(Box::new(HttpRequest { method, path, body, close }))
 }
 
 #[cfg(test)]
@@ -575,5 +1035,41 @@ mod tests {
     fn head_end_detection() {
         assert_eq!(find_head_end(b"GET / HTTP/1.1\r\n\r\nbody"), Some(16));
         assert_eq!(find_head_end(b"partial\r\n"), None);
+    }
+
+    #[test]
+    fn connection_header_token_semantics() {
+        assert!(connection_wants_close("close"));
+        assert!(connection_wants_close("Close"));
+        assert!(connection_wants_close("keep-alive, close"));
+        assert!(!connection_wants_close("keep-alive"));
+        assert!(!connection_wants_close("Keep-Alive"));
+        // "close" must be its own token, not a substring
+        assert!(!connection_wants_close("closely-related"));
+    }
+
+    #[test]
+    fn conn_queue_bounds_sheds_and_closes() {
+        // listener gives us real TcpStreams to queue
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let q = ConnQueue::new(1);
+        let mk = || {
+            let _c = TcpStream::connect(addr).unwrap();
+            listener.accept().unwrap().0
+        };
+        assert!(q.try_push(mk()).is_ok());
+        assert!(q.try_push(mk()).is_err(), "over capacity sheds");
+        assert!(q.pop().is_some());
+        q.close();
+        assert!(q.try_push(mk()).is_err(), "closed queue sheds");
+        assert!(q.pop().is_none(), "closed and drained");
+    }
+
+    #[test]
+    fn http_opts_resolve_workers() {
+        let auto = HttpOpts::default().resolved_workers();
+        assert!((4..=32).contains(&auto), "{auto}");
+        assert_eq!(HttpOpts { workers: 2, ..Default::default() }.resolved_workers(), 2);
     }
 }

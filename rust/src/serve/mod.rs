@@ -12,8 +12,14 @@
 //!   pass) and a batch worker drains up to `max_batch` requests at a
 //!   time, fanning them out over the shared fork-join pool
 //!   ([`crate::util::parallel`]).
-//! - [`serve_http`] puts an HTTP/1.1 front-end (plain `std::net`, JSON
-//!   request/response, `/healthz`, latency/throughput counters) on top.
+//! - [`ModelRegistry`] holds **many named models** at once, each with
+//!   its own `ModelServer` (independent queue, batcher, stats), with
+//!   runtime load/unload and a default-model alias for the legacy
+//!   single-model routes.
+//! - [`serve_http_registry`] puts an HTTP/1.1 **keep-alive** front-end
+//!   (plain `std::net`, JSON in/out, bounded connection queue drained by
+//!   a fixed worker pool) on top; [`serve_http`] is the single-model
+//!   convenience wrapper.
 //!
 //! Requests are processed *independently* (one model call per request,
 //! never concatenated), so a served answer is bit-identical to calling
@@ -44,8 +50,10 @@
 
 mod batcher;
 mod http;
+mod registry;
 
-pub use http::{serve_http, HttpServer};
+pub use http::{serve_http, serve_http_registry, FrontendStats, HttpOpts, HttpServer};
+pub use registry::{ModelInfo, ModelRegistry};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -127,13 +135,15 @@ pub struct ServeStats {
     pub errors: u64,
     /// cumulative enqueue→reply latency, microseconds
     pub latency_us_total: u64,
-    /// HTTP requests handled by the front-end — connections that sent
-    /// at least one byte plus load-shed 503s, including requests
-    /// rejected before routing (0 without a front-end; silent
-    /// connect-and-close probes are not counted)
+    /// HTTP requests **routed to this model** by the front-end (0
+    /// without a front-end; front-end-wide traffic including 404s and
+    /// shed 503s is counted separately in [`FrontendStats`])
     pub http_requests: u64,
-    /// HTTP requests answered with a non-2xx status
+    /// routed HTTP requests answered with a non-2xx status
     pub http_failures: u64,
+    /// deepest this model's request queue has ever been — how close its
+    /// clients have come to blocking on backpressure
+    pub queue_highwater: u64,
     /// seconds since the server started
     pub uptime_s: f64,
 }
@@ -267,6 +277,13 @@ impl ServerHandle {
         }
     }
 
+    /// Snapshot the served model's latency/throughput counters — same
+    /// numbers as [`ModelServer::stats`], reachable from a handle alone
+    /// (what [`ModelRegistry`] lists per model).
+    pub fn stats(&self) -> ServeStats {
+        self.shared.snapshot()
+    }
+
     fn call(&self, op: Op, points: Mat) -> Result<Reply> {
         let (tx, rx) = mpsc::channel();
         self.shared.queue.push(Request { op, points, reply: tx, enqueued: Instant::now() })?;
@@ -286,6 +303,7 @@ impl Shared {
             latency_us_total: c.latency_us_total.load(Ordering::Relaxed),
             http_requests: c.http_requests.load(Ordering::Relaxed),
             http_failures: c.http_failures.load(Ordering::Relaxed),
+            queue_highwater: self.queue.highwater() as u64,
             uptime_s: self.started.elapsed().as_secs_f64(),
         }
     }

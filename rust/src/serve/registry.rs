@@ -1,0 +1,399 @@
+//! `serve::registry` — many named models behind one serving process.
+//!
+//! The paper's one-pass sketch makes a fitted model *small* (`O(n·r')`
+//! persistent state instead of the `O(n²)` kernel), so the natural
+//! production shape is a fleet of small models sharing one process and
+//! one HTTP front-end. [`ModelRegistry`] is that fleet: a `RwLock` map
+//! from model name to an independently-batched [`ModelServer`] (own
+//! bounded queue, own batch worker, own [`ServeStats`]), with runtime
+//! load/unload and lazy loading from a directory of `.rkc` files.
+//!
+//! Naming rules: a model name is a non-empty ASCII `[A-Za-z0-9._-]+`
+//! token (what a `.rkc` file stem looks like, and what fits in a URL
+//! path segment without escaping). The **first** model registered
+//! becomes the *default* — the target of the legacy single-model
+//! `/predict` and `/embed` routes; unloading it promotes the
+//! alphabetically-first survivor.
+//!
+//! Unloading is graceful: the map drops its `Arc<ModelServer>`, and the
+//! server's `Drop` closes the queue, drains in-flight requests (replies
+//! are still delivered), and joins the batch worker. Requests routed in
+//! the race window get the queue's typed shutdown rejection.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
+
+use crate::api::FittedModel;
+use crate::error::{Result, RkcError};
+
+use super::{ModelServer, ServeOpts, ServeStats, ServerHandle};
+
+/// One registered model: the request-submission handle plus, for models
+/// the registry loaded itself, ownership of the server (dropping it
+/// shuts the model down).
+struct Entry {
+    handle: ServerHandle,
+    /// `None` for models registered by handle ([`ModelRegistry::register`]),
+    /// whose `ModelServer` the caller owns.
+    owner: Option<Arc<ModelServer>>,
+    /// provenance for listings: the `.rkc` path this model was loaded
+    /// from, when the registry did the loading
+    path: Option<String>,
+}
+
+struct Inner {
+    models: BTreeMap<String, Entry>,
+    /// target of the legacy single-model routes; first registered wins,
+    /// unloading it promotes the alphabetically-first survivor
+    default: Option<String>,
+}
+
+/// A point-in-time description of one registered model (the
+/// `GET /models` row).
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    /// registry name (URL path segment)
+    pub name: String,
+    /// whether the legacy `/predict`/`/embed` routes alias this model
+    pub is_default: bool,
+    /// `Method` display form, e.g. `one_pass`
+    pub method: String,
+    /// number of clusters
+    pub k: usize,
+    /// training-set size
+    pub n_train: usize,
+    /// embedding rank
+    pub rank: usize,
+    /// expected query dimension (`None` when the model accepts any)
+    pub input_dim: Option<usize>,
+    /// `.rkc` file this model was loaded from, when the registry loaded it
+    pub path: Option<String>,
+    /// this model's serving counters
+    pub stats: ServeStats,
+    /// current micro-batch queue depth
+    pub queue_depth: usize,
+}
+
+/// A named collection of independently-batched [`ModelServer`]s —
+/// the multi-model serving core behind [`super::serve_http_registry`].
+///
+/// ```
+/// use rkc::api::KernelClusterer;
+/// use rkc::serve::{ModelRegistry, ServeOpts};
+/// use rkc::data;
+/// use rkc::rng::Pcg64;
+///
+/// let ds = data::cross_lines(&mut Pcg64::seed(3), 128);
+/// let model = KernelClusterer::new(2).oversample(8).fit(&ds.x)?;
+/// let direct = model.predict(&ds.x)?;
+///
+/// let reg = ModelRegistry::new(ServeOpts::default());
+/// reg.insert("rings", model)?;
+/// let handle = reg.get("rings").expect("just inserted");
+/// assert_eq!(handle.predict(ds.x.clone())?, direct);
+/// assert_eq!(reg.names(), vec!["rings".to_string()]);
+/// # Ok::<(), rkc::error::RkcError>(())
+/// ```
+pub struct ModelRegistry {
+    inner: RwLock<Inner>,
+    /// queue/batch/thread options every registry-created server gets
+    opts: ServeOpts,
+}
+
+/// Is `name` a legal registry name (non-empty ASCII `[A-Za-z0-9._-]+`)?
+pub(crate) fn valid_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.len() <= 128
+        && name.bytes().all(|b| b.is_ascii_alphanumeric() || matches!(b, b'.' | b'_' | b'-'))
+}
+
+impl ModelRegistry {
+    /// An empty registry; `opts` applies to every model it serves.
+    pub fn new(opts: ServeOpts) -> Self {
+        ModelRegistry {
+            inner: RwLock::new(Inner { models: BTreeMap::new(), default: None }),
+            opts,
+        }
+    }
+
+    fn check_name(name: &str) -> Result<()> {
+        if valid_name(name) {
+            Ok(())
+        } else {
+            Err(RkcError::invalid_config(format!(
+                "invalid model name '{name}' (want non-empty ASCII [A-Za-z0-9._-]+)"
+            )))
+        }
+    }
+
+    /// Fit-in-memory entry point: wrap `model` in its own
+    /// [`ModelServer`] and register it under `name`, replacing (and
+    /// gracefully shutting down) any model already there.
+    pub fn insert(&self, name: &str, model: FittedModel) -> Result<()> {
+        Self::check_name(name)?;
+        let server = ModelServer::new(model, self.opts)?;
+        self.insert_entry(name, server.handle(), Some(Arc::new(server)), None)
+    }
+
+    /// Register a caller-owned server under `name`. The registry holds
+    /// only the submission handle: dropping the `ModelServer` on the
+    /// caller's side shuts the model down, after which routed requests
+    /// get its typed shutdown rejection.
+    pub fn register(&self, name: &str, server: &ModelServer) -> Result<()> {
+        self.insert_entry(name, server.handle(), None, None)
+    }
+
+    /// Load a `.rkc` file and register it under `name` (the runtime
+    /// `PUT /models/{name}` path). Replaces any model already there.
+    pub fn load(&self, name: &str, path: &str) -> Result<()> {
+        Self::check_name(name)?;
+        let model = FittedModel::load(path)?;
+        let server = ModelServer::new(model, self.opts)?;
+        self.insert_entry(name, server.handle(), Some(Arc::new(server)), Some(path.to_string()))
+    }
+
+    /// Load every `*.rkc` file in `dir` (name = file stem, ascending, so
+    /// the alphabetically-first model is the default), and return the
+    /// names loaded. A directory with no `.rkc` files is a config error —
+    /// a registry that can never answer anything is a misconfiguration
+    /// worth failing loudly at startup.
+    pub fn load_dir(&self, dir: &str) -> Result<Vec<String>> {
+        let entries = std::fs::read_dir(dir)
+            .map_err(|e| RkcError::io(format!("reading model directory {dir}"), e))?;
+        let mut paths: Vec<(String, String)> = Vec::new();
+        for entry in entries {
+            let entry = entry.map_err(|e| RkcError::io(format!("reading {dir}"), e))?;
+            let path = entry.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("rkc") {
+                continue;
+            }
+            let stem = path
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .ok_or_else(|| RkcError::invalid_config(format!("unusable model name {path:?}")))?
+                .to_string();
+            let path = path
+                .to_str()
+                .ok_or_else(|| RkcError::invalid_config(format!("non-UTF-8 path {path:?}")))?
+                .to_string();
+            paths.push((stem, path));
+        }
+        if paths.is_empty() {
+            return Err(RkcError::invalid_config(format!("no .rkc models found in {dir}")));
+        }
+        paths.sort();
+        let mut names = Vec::with_capacity(paths.len());
+        for (name, path) in paths {
+            self.load(&name, &path)?;
+            names.push(name);
+        }
+        Ok(names)
+    }
+
+    fn insert_entry(
+        &self,
+        name: &str,
+        handle: ServerHandle,
+        owner: Option<Arc<ModelServer>>,
+        path: Option<String>,
+    ) -> Result<()> {
+        Self::check_name(name)?;
+        // build the entry before taking the write lock; only the map
+        // insert (and the displaced entry's drop) happens under it
+        let displaced;
+        {
+            let mut inner = self.inner.write().expect("registry lock poisoned");
+            displaced = inner.models.insert(name.to_string(), Entry { handle, owner, path });
+            if inner.default.is_none() {
+                inner.default = Some(name.to_string());
+            }
+        }
+        // dropping a displaced owned server joins its batch worker —
+        // do that outside the lock so other routes keep flowing
+        drop(displaced);
+        Ok(())
+    }
+
+    /// Unload `name`, returning whether it was present. Graceful: its
+    /// queue closes, in-flight requests still get replies, and the batch
+    /// worker is joined before this returns. Unloading the default
+    /// promotes the alphabetically-first survivor.
+    pub fn unload(&self, name: &str) -> bool {
+        let removed;
+        {
+            let mut inner = self.inner.write().expect("registry lock poisoned");
+            removed = inner.models.remove(name);
+            if removed.is_some() && inner.default.as_deref() == Some(name) {
+                inner.default = inner.models.keys().next().cloned();
+            }
+        }
+        // the owned server's Drop (queue close + worker join) runs here,
+        // outside the lock
+        removed.is_some()
+    }
+
+    /// The submission handle for `name`, if registered.
+    pub fn get(&self, name: &str) -> Option<ServerHandle> {
+        let inner = self.inner.read().expect("registry lock poisoned");
+        inner.models.get(name).map(|e| e.handle.clone())
+    }
+
+    /// The default model's `(name, handle)` — the legacy single-model
+    /// routes' target — if any model is registered.
+    pub fn default_model(&self) -> Option<(String, ServerHandle)> {
+        let inner = self.inner.read().expect("registry lock poisoned");
+        let name = inner.default.clone()?;
+        let handle = inner.models.get(&name)?.handle.clone();
+        Some((name, handle))
+    }
+
+    /// Registered model names, ascending.
+    pub fn names(&self) -> Vec<String> {
+        let inner = self.inner.read().expect("registry lock poisoned");
+        inner.models.keys().cloned().collect()
+    }
+
+    /// How many models are registered.
+    pub fn len(&self) -> usize {
+        self.inner.read().expect("registry lock poisoned").models.len()
+    }
+
+    /// Whether no models are registered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn make_info(default: Option<&str>, name: &str, entry: &Entry) -> ModelInfo {
+        let shared = &entry.handle.shared;
+        let m = shared.model.metrics();
+        ModelInfo {
+            name: name.to_string(),
+            is_default: default == Some(name),
+            method: m.method.clone(),
+            k: shared.model.k(),
+            n_train: m.n,
+            rank: m.rank,
+            input_dim: shared.model.input_dim(),
+            path: entry.path.clone(),
+            stats: shared.snapshot(),
+            queue_depth: shared.queue.depth(),
+        }
+    }
+
+    /// One model's [`ModelInfo`] (one map lookup — the
+    /// `GET /models/{name}` path; [`list`](ModelRegistry::list) would
+    /// snapshot every model's counters just to keep one).
+    pub fn info(&self, name: &str) -> Option<ModelInfo> {
+        let inner = self.inner.read().expect("registry lock poisoned");
+        let entry = inner.models.get(name)?;
+        Some(Self::make_info(inner.default.as_deref(), name, entry))
+    }
+
+    /// One [`ModelInfo`] per registered model, ascending by name — the
+    /// `GET /models` listing.
+    pub fn list(&self) -> Vec<ModelInfo> {
+        let inner = self.inner.read().expect("registry lock poisoned");
+        inner
+            .models
+            .iter()
+            .map(|(name, entry)| Self::make_info(inner.default.as_deref(), name, entry))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::KernelClusterer;
+    use crate::data;
+    use crate::rng::Pcg64;
+
+    fn fit(seed: u64, n: usize) -> FittedModel {
+        let ds = data::cross_lines(&mut Pcg64::seed(seed), n);
+        KernelClusterer::new(2).oversample(8).seed(seed).fit(&ds.x).unwrap()
+    }
+
+    #[test]
+    fn name_validation() {
+        for ok in ["m", "rings", "model-1.v2_final", "A9"] {
+            assert!(valid_name(ok), "{ok}");
+        }
+        for bad in ["", "a/b", "a b", "ü", "a\nb", &"x".repeat(129)] {
+            assert!(!valid_name(bad), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn first_insert_is_default_and_unload_promotes() {
+        let reg = ModelRegistry::new(ServeOpts::default());
+        assert!(reg.is_empty());
+        assert!(reg.default_model().is_none());
+        reg.insert("zeta", fit(1, 96)).unwrap();
+        reg.insert("alpha", fit(2, 96)).unwrap();
+        assert_eq!(reg.names(), vec!["alpha".to_string(), "zeta".to_string()]);
+        // first registered stays default even though "alpha" sorts first
+        assert_eq!(reg.default_model().unwrap().0, "zeta");
+        assert!(reg.unload("zeta"));
+        assert_eq!(reg.default_model().unwrap().0, "alpha");
+        assert!(!reg.unload("zeta"), "double unload reports absence");
+        assert!(reg.unload("alpha"));
+        assert!(reg.default_model().is_none());
+    }
+
+    #[test]
+    fn models_serve_independently_and_bit_identically() {
+        let m1 = fit(11, 128);
+        let m2 = fit(22, 128);
+        let query = data::cross_lines(&mut Pcg64::seed(33), 17).x;
+        let want1 = m1.predict(&query).unwrap();
+        let want2 = m2.predict(&query).unwrap();
+
+        let reg = ModelRegistry::new(ServeOpts::default());
+        reg.insert("one", m1).unwrap();
+        reg.insert("two", m2).unwrap();
+        let h1 = reg.get("one").unwrap();
+        let h2 = reg.get("two").unwrap();
+        assert_eq!(h1.predict(query.clone()).unwrap(), want1);
+        assert_eq!(h2.predict(query.clone()).unwrap(), want2);
+        assert!(reg.get("three").is_none());
+
+        // per-model stats stay separate
+        let infos = reg.list();
+        assert_eq!(infos.len(), 2);
+        for info in &infos {
+            assert_eq!(info.stats.requests, 1, "{}", info.name);
+            assert_eq!(info.method, "one_pass", "{}", info.name);
+        }
+
+        // unloaded models reject politely; the survivor keeps serving
+        assert!(reg.unload("one"));
+        let err = h1.predict(query.clone()).unwrap_err();
+        assert!(err.to_string().contains("shut down"), "{err}");
+        assert_eq!(h2.predict(query).unwrap(), want2);
+    }
+
+    #[test]
+    fn insert_replaces_and_rejects_bad_names() {
+        let reg = ModelRegistry::new(ServeOpts::default());
+        let query = data::cross_lines(&mut Pcg64::seed(44), 9).x;
+        let m_old = fit(5, 96);
+        let m_new = fit(6, 96);
+        let want_new = m_new.predict(&query).unwrap();
+        reg.insert("m", m_old).unwrap();
+        reg.insert("m", m_new).unwrap();
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.get("m").unwrap().predict(query).unwrap(), want_new);
+        assert!(reg.insert("bad/name", fit(7, 96)).is_err());
+    }
+
+    #[test]
+    fn load_dir_requires_models() {
+        let reg = ModelRegistry::new(ServeOpts::default());
+        let dir = std::env::temp_dir().join(format!("rkc_reg_empty_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = reg.load_dir(dir.to_str().unwrap()).unwrap_err();
+        assert!(err.to_string().contains("no .rkc models"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+        assert!(reg.load_dir("/nonexistent/rkc-models").is_err());
+    }
+}

@@ -3,18 +3,26 @@
 //! in-process and over the HTTP front-end with concurrent clients —
 //! returns predictions bit-identical to `FittedModel::predict` on the
 //! original. Malformed requests get typed 4xx responses, never a crash.
+//!
+//! The keep-alive/registry tests extend the same contract to the
+//! multi-model front-end: several requests ride one persistent
+//! connection, a framing failure poisons only its own connection (the
+//! pool worker survives), and N concurrent keep-alive clients hitting
+//! two registry models stay bit-identical to in-memory predict.
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
 
 use rkc::api::{FittedModel, KernelClusterer};
+use rkc::bench_harness::MiniHttpClient;
 use rkc::config::Method;
 use rkc::data;
 use rkc::error::RkcError;
 use rkc::linalg::Mat;
 use rkc::rng::Pcg64;
-use rkc::serve::{serve_http, ModelServer, ServeOpts};
+use rkc::serve::{serve_http, serve_http_registry, HttpOpts, ModelRegistry, ModelServer, ServeOpts};
 use rkc::util::Json;
 
 fn tmp_path(tag: &str) -> String {
@@ -246,5 +254,225 @@ fn plain_kmeans_models_serve_too() {
     assert_eq!(labels_from(&resp), want);
     http.shutdown();
     server.shutdown();
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn keep_alive_serves_sequential_requests_on_one_socket() {
+    let train = data::cross_lines(&mut Pcg64::seed(75), 128);
+    let model = KernelClusterer::new(2).oversample(8).seed(13).fit(&train.x).unwrap();
+    let query = data::cross_lines(&mut Pcg64::seed(76), 9).x;
+    let want = model.predict(&query).unwrap();
+    let server = ModelServer::new(model, ServeOpts::default()).unwrap();
+    let http = serve_http(&server, "127.0.0.1:0").unwrap();
+
+    let body = points_json(&query);
+    let mut client = MiniHttpClient::connect(http.local_addr());
+    for round in 0..3 {
+        let (status, resp) = client.request("POST", "/predict", &body);
+        assert_eq!(status, 200, "round {round}: {resp}");
+        assert_eq!(labels_from(&resp), want, "round {round}");
+    }
+    // reuse is visible in the front-end counters: 3 requests, 1 connection
+    let fe = http.frontend_stats();
+    assert_eq!(fe.connections, 1, "all requests must ride one connection");
+    assert!(fe.requests >= 3, "{}", fe.requests);
+    assert_eq!(fe.failures, 0);
+
+    // an explicit Connection: close is honored mid-stream
+    client.send_raw(
+        format!(
+            "POST /predict HTTP/1.1\r\nHost: rkc\r\nConnection: close\r\n\
+             Content-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .as_bytes(),
+    );
+    let (status, resp) = client.read_response().expect("final response");
+    assert_eq!(status, 200, "{resp}");
+    assert_eq!(labels_from(&resp), want);
+    client.assert_closed();
+
+    http.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn malformed_second_request_poisons_only_its_connection() {
+    let train = data::cross_lines(&mut Pcg64::seed(77), 128);
+    let model = KernelClusterer::new(2).oversample(8).seed(17).fit(&train.x).unwrap();
+    let query = data::cross_lines(&mut Pcg64::seed(78), 7).x;
+    let want = model.predict(&query).unwrap();
+    let server = ModelServer::new(model, ServeOpts::default()).unwrap();
+    let http = serve_http(&server, "127.0.0.1:0").unwrap();
+    let addr = http.local_addr();
+    let body = points_json(&query);
+
+    let mut poisoned = MiniHttpClient::connect(addr);
+    let (status, _) = poisoned.request("POST", "/predict", &body);
+    assert_eq!(status, 200);
+    // a request line with no path cannot be re-framed: the server must
+    // answer 400 and close THIS connection only
+    poisoned.send_raw(b"NONSENSE\r\n\r\n");
+    let (status, resp) = poisoned.read_response().expect("400 before the close");
+    assert_eq!(status, 400, "{resp}");
+    assert!(resp.contains("error"), "{resp}");
+    poisoned.assert_closed();
+
+    // the pool worker survived and serves fresh connections
+    let mut fresh = MiniHttpClient::connect(addr);
+    let (status, resp) = fresh.request("POST", "/predict", &body);
+    assert_eq!(status, 200, "{resp}");
+    assert_eq!(labels_from(&resp), want);
+
+    // an app-level error (bad JSON body, framing intact) does NOT close
+    let (status, _) = fresh.request("POST", "/predict", "{not json");
+    assert_eq!(status, 400);
+    let (status, resp) = fresh.request("POST", "/predict", &body);
+    assert_eq!(status, 200, "connection survives an app-level 400: {resp}");
+
+    // conflicting Content-Length headers are a smuggling-grade framing
+    // hazard on a persistent connection: 400, then close
+    let mut smuggler = MiniHttpClient::connect(addr);
+    smuggler.send_raw(
+        b"POST /predict HTTP/1.1\r\nHost: rkc\r\nContent-Length: 2\r\n\
+          Content-Length: 5\r\n\r\n{}xyz",
+    );
+    let (status, resp) = smuggler.read_response().expect("400 before the close");
+    assert_eq!(status, 400, "{resp}");
+    assert!(resp.contains("content-length"), "{resp}");
+    smuggler.assert_closed();
+
+    http.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn registry_serves_two_models_concurrently_bit_identical_over_keep_alive() {
+    // two deliberately different models (k=2 rings vs k=3 blobs, same
+    // input dimension) so any routing mix-up shows up as a label diff
+    let train_a = data::cross_lines(&mut Pcg64::seed(81), 192);
+    let model_a = KernelClusterer::new(2).oversample(8).seed(3).fit(&train_a.x).unwrap();
+    let train_b = data::gaussian_blobs(&mut Pcg64::seed(82), 150, 2, 3, 0.4);
+    let model_b = KernelClusterer::new(3).oversample(8).seed(4).fit(&train_b.x).unwrap();
+    let query = data::cross_lines(&mut Pcg64::seed(83), 23).x;
+    let want_a = model_a.predict(&query).unwrap();
+    let want_b = model_b.predict(&query).unwrap();
+
+    let registry =
+        Arc::new(ModelRegistry::new(ServeOpts { max_batch: 4, ..Default::default() }));
+    registry.insert("rings", model_a).unwrap();
+    registry.insert("blobs", model_b).unwrap();
+    let http = serve_http_registry(
+        Arc::clone(&registry),
+        "127.0.0.1:0",
+        HttpOpts { workers: 4, ..Default::default() },
+    )
+    .unwrap();
+    let addr = http.local_addr();
+    let body = points_json(&query);
+
+    std::thread::scope(|s| {
+        let clients: Vec<_> = (0..4)
+            .map(|_| {
+                let b = body.clone();
+                let want_a = &want_a;
+                let want_b = &want_b;
+                s.spawn(move || {
+                    let mut c = MiniHttpClient::connect(addr);
+                    for i in 0..6 {
+                        let (path, want) = if i % 2 == 0 {
+                            ("/models/rings/predict", want_a)
+                        } else {
+                            ("/models/blobs/predict", want_b)
+                        };
+                        let (status, resp) = c.request("POST", path, &b);
+                        assert_eq!(status, 200, "{path}: {resp}");
+                        assert_eq!(&labels_from(&resp), want, "{path}: served != in-memory");
+                    }
+                })
+            })
+            .collect();
+        for c in clients {
+            c.join().unwrap();
+        }
+    });
+
+    // 4 keep-alive connections carried 24 requests between them
+    let fe = http.frontend_stats();
+    assert_eq!(fe.connections, 4);
+    assert!(fe.requests >= 24, "{}", fe.requests);
+    // per-model stats stayed separate: 12 routed requests each, no errors
+    for info in registry.list() {
+        assert_eq!(info.stats.http_requests, 12, "{}", info.name);
+        assert_eq!(info.stats.requests, 12, "{}", info.name);
+        assert_eq!(info.stats.errors, 0, "{}", info.name);
+        assert!(info.stats.queue_highwater >= 1, "{}", info.name);
+    }
+    http.shutdown();
+}
+
+#[test]
+fn registry_admin_load_unload_and_404_over_http() {
+    let train = data::cross_lines(&mut Pcg64::seed(91), 160);
+    let model = KernelClusterer::new(2).oversample(8).seed(7).fit(&train.x).unwrap();
+    let query = data::cross_lines(&mut Pcg64::seed(92), 11).x;
+    let want = model.predict(&query).unwrap();
+    let path = tmp_path("admin");
+    model.save(&path).unwrap();
+
+    let registry = Arc::new(ModelRegistry::new(ServeOpts::default()));
+    registry.insert("base", model).unwrap();
+    let http =
+        serve_http_registry(Arc::clone(&registry), "127.0.0.1:0", HttpOpts::default()).unwrap();
+    let addr = http.local_addr();
+    let body = points_json(&query);
+
+    // unknown names are 404 with a JSON error body
+    let (status, resp) = http_request(addr, "POST", "/models/ghost/predict", &body);
+    assert_eq!(status, 404, "{resp}");
+    assert!(Json::parse(&resp).unwrap().get("error").is_some(), "{resp}");
+
+    // runtime PUT-load under a new name; it serves the same bits
+    let put = format!(r#"{{"path": "{path}"}}"#);
+    let (status, resp) = http_request(addr, "PUT", "/models/extra", &put);
+    assert_eq!(status, 200, "{resp}");
+    let (status, resp) = http_request(addr, "POST", "/models/extra/predict", &body);
+    assert_eq!(status, 200, "{resp}");
+    assert_eq!(labels_from(&resp), want);
+
+    // the listing shows both, with the first-registered model as default
+    let (status, resp) = http_request(addr, "GET", "/models", "");
+    assert_eq!(status, 200);
+    let listing = Json::parse(&resp).unwrap();
+    assert_eq!(listing.get("models").unwrap().as_arr().unwrap().len(), 2, "{resp}");
+    assert_eq!(listing.get("default").unwrap().as_str().unwrap(), "base", "{resp}");
+    let (status, resp) = http_request(addr, "GET", "/models/extra", "");
+    assert_eq!(status, 200);
+    assert_eq!(Json::parse(&resp).unwrap().str_field("method").unwrap(), "one_pass");
+
+    // DELETE unloads; the name 404s afterwards (and double-DELETE 404s)
+    let (status, _) = http_request(addr, "DELETE", "/models/extra", "");
+    assert_eq!(status, 200);
+    let (status, _) = http_request(addr, "POST", "/models/extra/predict", &body);
+    assert_eq!(status, 404);
+    let (status, _) = http_request(addr, "DELETE", "/models/extra", "");
+    assert_eq!(status, 404);
+
+    // bad admin input: missing file 404s, bad name 400s, bad body 400s
+    let (status, _) =
+        http_request(addr, "PUT", "/models/extra", r#"{"path": "/nonexistent/m.rkc"}"#);
+    assert_eq!(status, 404);
+    let (status, _) = http_request(addr, "PUT", "/models/bad$name", &put);
+    assert_eq!(status, 400);
+    let (status, _) = http_request(addr, "PUT", "/models/extra2", "{nope");
+    assert_eq!(status, 400);
+
+    // legacy aliases keep hitting the default model
+    let (status, resp) = http_request(addr, "POST", "/predict", &body);
+    assert_eq!(status, 200, "{resp}");
+    assert_eq!(labels_from(&resp), want);
+
+    http.shutdown();
     std::fs::remove_file(&path).unwrap();
 }

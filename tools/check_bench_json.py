@@ -1,18 +1,34 @@
 #!/usr/bin/env python3
-"""Validate the schema of the BENCH_*.json files the benches emit.
+"""Validate — and optionally baseline-compare — the BENCH_*.json files.
 
-Every file must be a non-empty JSON array of objects; every object must
-carry its file's required keys; every numeric value must be finite (the
-emitters route timings through Json::finite_num, which downgrades
-NaN/inf to null — a raw NaN in the file means an emitter bypassed it).
+Schema check (always): every file must be a non-empty JSON array of
+objects; every object must carry its file's required keys; every numeric
+value must be finite (the emitters route timings through
+Json::finite_num, which downgrades NaN/inf to null — a raw NaN in the
+file means an emitter bypassed it). Exits non-zero on the first
+malformed file.
 
-Usage: check_bench_json.py BENCH_foo.json [BENCH_bar.json ...]
-Exits non-zero on the first malformed file. Timings are never gated —
-this guards the schema so the perf trajectory stays machine-diffable.
+Baseline compare (--baseline PATH): for each checked file that has an
+entry in the baseline snapshot, diff the key timing fields of row 0
+against the recorded values and print a per-bench delta table (also
+appended to $GITHUB_STEP_SUMMARY when set, so it lands in the CI job
+summary). Deltas beyond +/-WARN_PCT emit GitHub warning annotations but
+NEVER fail the run — CI timings are too noisy to gate on; the table is
+the regression trail, the schema is the gate.
+
+Baseline regen (--write-baseline PATH): snapshot the current files' key
+timing fields into a fresh baseline (run locally or from a CI artifact
+after an intentional perf change).
+
+Usage:
+  check_bench_json.py BENCH_foo.json [BENCH_bar.json ...]
+  check_bench_json.py --baseline tools/bench_baseline.json BENCH_*.json
+  check_bench_json.py --write-baseline tools/bench_baseline.json BENCH_*.json
 """
 
 import json
 import math
+import os
 import sys
 
 # required keys per file (by basename); files not listed here only get
@@ -42,6 +58,23 @@ REQUIRED = {
     ],
 }
 
+# the key timing fields the baseline records / compares, per file (row 0
+# only — for BENCH_serve.json that is the in_process row). Keep this
+# list small and stable: it IS the regression trail's schema.
+KEY_TIMINGS = {
+    "BENCH_pipeline.json": ["sketch_s", "recovery_s", "kmeans_s", "total_s"],
+    "BENCH_recovery.json": ["before_s", "after_s", "speedup"],
+    "BENCH_kmeans.json": ["before_s", "after_s", "speedup"],
+    "BENCH_fwht.json": ["median_s"],
+    "BENCH_table1.json": ["accuracy"],
+    "BENCH_fig3.json": ["accuracy"],
+    "BENCH_memory.json": ["persistent_bytes"],
+    "BENCH_serve.json": ["requests_per_s", "p50_ms", "p95_ms"],
+}
+
+# warn (never fail) when a compared value drifts beyond this
+WARN_PCT = 25.0
+
 
 def fail(path, msg):
     print(f"FAIL {path}: {msg}", file=sys.stderr)
@@ -56,7 +89,7 @@ def check_finite(path, row_idx, key, value):
 
 
 def check_file(path):
-    base = path.rsplit("/", 1)[-1]
+    base = os.path.basename(path)
     try:
         with open(path, encoding="utf-8") as fh:
             data = json.load(fh)
@@ -78,14 +111,114 @@ def check_file(path):
         for key, value in row.items():
             check_finite(path, i, key, value)
     print(f"ok   {path}: {len(data)} row(s)")
+    return data
+
+
+def snapshot(paths):
+    """The baseline view of the given (already-validated) bench files."""
+    snap = {}
+    for path in paths:
+        base = os.path.basename(path)
+        keys = KEY_TIMINGS.get(base)
+        if not keys:
+            continue
+        with open(path, encoding="utf-8") as fh:
+            row0 = json.load(fh)[0]
+        values = {k: row0[k] for k in keys if isinstance(row0.get(k), (int, float))}
+        if values:
+            snap[base] = values
+    return snap
+
+
+def compare_against_baseline(paths, baseline_path):
+    """Print (and append to $GITHUB_STEP_SUMMARY) a per-bench delta
+    table; emit ::warning:: annotations beyond +/-WARN_PCT. Never
+    fails."""
+    try:
+        with open(baseline_path, encoding="utf-8") as fh:
+            baseline = json.load(fh)
+    except (OSError, ValueError) as exc:
+        print(f"warn: baseline {baseline_path} unusable ({exc}); skipping compare")
+        return
+    current = snapshot(paths)
+    lines = [
+        "## Bench deltas vs committed baseline",
+        "",
+        f"Baseline: `{baseline_path}` — informational only; drift beyond "
+        f"±{WARN_PCT:.0f}% warns, never fails.",
+        "",
+        "| bench | key | baseline | current | delta |",
+        "|---|---|---:|---:|---:|",
+    ]
+    warnings = []
+    for base in sorted(current):
+        recorded = baseline.get(base)
+        if not isinstance(recorded, dict):
+            lines.append(f"| {base} | — | *(not in baseline)* | | |")
+            continue
+        for key, cur in current[base].items():
+            ref = recorded.get(key)
+            if not isinstance(ref, (int, float)) or isinstance(ref, bool):
+                continue
+            if ref == 0:
+                delta = "n/a (baseline 0)"
+            else:
+                pct = (cur - ref) / abs(ref) * 100.0
+                flag = " ⚠️" if abs(pct) > WARN_PCT else ""
+                delta = f"{pct:+.1f}%{flag}"
+                if abs(pct) > WARN_PCT:
+                    warnings.append(
+                        f"{base}:{key} drifted {pct:+.1f}% vs baseline "
+                        f"({ref:g} -> {cur:g})"
+                    )
+            lines.append(f"| {base} | {key} | {ref:g} | {cur:g} | {delta} |")
+    table = "\n".join(lines)
+    print(table)
+    summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary_path:
+        with open(summary_path, "a", encoding="utf-8") as fh:
+            fh.write(table + "\n")
+    for w in warnings:
+        # GitHub annotation syntax — visible on the run page, non-fatal
+        print(f"::warning title=bench drift::{w}")
 
 
 def main(argv):
-    if len(argv) < 2:
+    args = argv[1:]
+    baseline = None
+    write_baseline = None
+    paths = []
+    i = 0
+    while i < len(args):
+        if args[i] == "--baseline":
+            i += 1
+            baseline = args[i] if i < len(args) else fail("args", "--baseline needs a path")
+        elif args[i] == "--write-baseline":
+            i += 1
+            write_baseline = (
+                args[i] if i < len(args) else fail("args", "--write-baseline needs a path")
+            )
+        else:
+            paths.append(args[i])
+        i += 1
+    if not paths:
         print(__doc__.strip(), file=sys.stderr)
         return 2
-    for path in argv[1:]:
+    for path in paths:
         check_file(path)
+    if write_baseline:
+        snap = snapshot(paths)
+        snap["_note"] = (
+            "Quick-mode (RKC_BENCH_QUICK=1) key-timing snapshot; regenerate with "
+            "`python3 tools/check_bench_json.py --write-baseline tools/bench_baseline.json "
+            "BENCH_*.json` after an intentional perf change."
+        )
+        with open(write_baseline, "w", encoding="utf-8") as fh:
+            json.dump(snap, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"wrote baseline {write_baseline} ({len(snap) - 1} bench entries)")
+    if baseline:
+        compare_against_baseline(paths, baseline)
     return 0
 
 
