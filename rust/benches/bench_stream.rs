@@ -1,0 +1,149 @@
+//! Bench: online one-pass clustering (`rkc::stream`) under drift —
+//! refresh latency and accuracy lag versus a full batch refit.
+//!
+//! Two synthetic non-stationary sources (`data::DriftStream`):
+//!
+//! 1. `moving_blobs` — cluster centers translate a little per chunk;
+//! 2. `label_churn` — the class mixture rotates while geometry holds.
+//!
+//! For each scenario the `StreamClusterer` ingests `chunk`-sized
+//! batches and refreshes on the point trigger; every refresh is timed
+//! (p50/p95 across the run). After the stream drains, a batch
+//! `KernelClusterer` refit on the identical point set gives the
+//! accuracy ceiling, and `acc_lag = acc_refit − acc_stream` is the cost
+//! of folding incrementally + warm-starting instead of refitting cold.
+//!
+//! Env knobs: `RKC_STREAM_N` (total points, default 2000),
+//! `RKC_STREAM_CHUNK` (points per ingest batch, default 250),
+//! `RKC_STREAM_REFRESH` (refresh-every-points trigger, default 500).
+//!
+//! Besides the stdout summary, every run rewrites `BENCH_stream.json`
+//! in the working directory so the streaming perf trajectory is
+//! machine-diffable across commits.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use rkc::api::KernelClusterer;
+use rkc::clustering::accuracy;
+use rkc::data::DriftStream;
+use rkc::linalg::Mat;
+use rkc::stream::StreamClusterer;
+use rkc::util::{percentile, Json};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn run_scenario(
+    scenario: &str,
+    mut source: DriftStream,
+    k: usize,
+    n_total: usize,
+    chunk: usize,
+    refresh_points: usize,
+) -> Json {
+    let mut sc = StreamClusterer::new(k)
+        .rank(2)
+        .oversample(10)
+        .seed(42)
+        .threads(0)
+        .capacity(n_total)
+        .refresh_every_points(refresh_points);
+
+    let mut truth: Vec<usize> = Vec::with_capacity(n_total);
+    let mut coords: Vec<f64> = Vec::new(); // point-major replay buffer
+    let mut refresh_s: Vec<f64> = Vec::new();
+    let t_run = Instant::now();
+    let mut fed = 0usize;
+    while fed < n_total {
+        let m = chunk.min(n_total - fed);
+        let ds = source.chunk(m);
+        truth.extend_from_slice(&ds.labels);
+        for j in 0..m {
+            for i in 0..ds.x.rows() {
+                coords.push(ds.x[(i, j)]);
+            }
+        }
+        sc.ingest(&ds.x).expect("ingest");
+        fed += m;
+        let flush = fed == n_total && sc.pending_points() > 0;
+        if (sc.refresh_due() || flush) && sc.can_refresh() {
+            let t = Instant::now();
+            sc.refresh().expect("refresh");
+            refresh_s.push(t.elapsed().as_secs_f64());
+        }
+    }
+    let wall_s = t_run.elapsed().as_secs_f64();
+
+    let acc_stream = accuracy(sc.last_labels().expect("refreshed at least once"), &truth, k);
+
+    // batch ceiling: one cold fit on the identical point set
+    let p = coords.len() / n_total;
+    let x = Mat::from_fn(p, n_total, |i, j| coords[j * p + i]);
+    let t_refit = Instant::now();
+    let refit = KernelClusterer::new(k)
+        .rank(2)
+        .oversample(10)
+        .seed(42)
+        .threads(0)
+        .fit(&x)
+        .expect("batch refit");
+    let refit_s = t_refit.elapsed().as_secs_f64();
+    let acc_refit = accuracy(refit.labels(), &truth, k);
+
+    let p50_ms = percentile(&refresh_s, 50.0) * 1e3;
+    let p95_ms = percentile(&refresh_s, 95.0) * 1e3;
+    println!(
+        "stream[{scenario}] n={n_total} chunk={chunk} refreshes={}: \
+         refresh p50 {p50_ms:.1}ms p95 {p95_ms:.1}ms | \
+         acc stream {acc_stream:.3} vs refit {acc_refit:.3} (lag {:+.3}) | \
+         stream wall {wall_s:.2}s, one refit {refit_s:.2}s",
+        refresh_s.len(),
+        acc_refit - acc_stream,
+    );
+    Json::Obj(BTreeMap::from([
+            ("bench".to_string(), Json::Str("stream".to_string())),
+            ("scenario".to_string(), Json::Str(scenario.to_string())),
+            ("n_total".to_string(), Json::Num(n_total as f64)),
+            ("chunk".to_string(), Json::Num(chunk as f64)),
+            ("refresh_every_points".to_string(), Json::Num(refresh_points as f64)),
+            ("refreshes".to_string(), Json::Num(refresh_s.len() as f64)),
+            ("refresh_p50_ms".to_string(), Json::finite_num(p50_ms)),
+            ("refresh_p95_ms".to_string(), Json::finite_num(p95_ms)),
+            ("acc_stream".to_string(), Json::finite_num(acc_stream)),
+            ("acc_refit".to_string(), Json::finite_num(acc_refit)),
+            ("acc_lag".to_string(), Json::finite_num(acc_refit - acc_stream)),
+            ("wall_s".to_string(), Json::finite_num(wall_s)),
+            ("refit_s".to_string(), Json::finite_num(refit_s)),
+    ]))
+}
+
+fn main() {
+    // quick mode (RKC_BENCH_QUICK=1) shrinks the defaults to a CI smoke
+    // shape; explicit RKC_STREAM_* env knobs still win
+    let quick = rkc::bench_harness::quick_mode();
+    let n_total = env_usize("RKC_STREAM_N", if quick { 600 } else { 2000 });
+    let chunk = env_usize("RKC_STREAM_CHUNK", if quick { 150 } else { 250 }).max(1);
+    let refresh_points =
+        env_usize("RKC_STREAM_REFRESH", if quick { 300 } else { 500 }).max(chunk);
+
+    let blobs_row = run_scenario(
+        "moving_blobs",
+        DriftStream::moving_blobs(7, 2, 2, 0.5, 0.02),
+        2,
+        n_total,
+        chunk,
+        refresh_points,
+    );
+    let churn_row = run_scenario(
+        "label_churn",
+        DriftStream::label_churn(7, 2, 2, 0.5, 0.4),
+        2,
+        n_total,
+        chunk,
+        refresh_points,
+    );
+
+    rkc::bench_harness::write_bench_json("BENCH_stream.json", vec![blobs_row, churn_row]);
+}

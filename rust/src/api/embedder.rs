@@ -13,7 +13,7 @@ use crate::error::{Result, RkcError};
 use crate::kernels::{column_batches, BlockSource};
 use crate::linalg::Mat;
 use crate::lowrank::{
-    exact_topr_dense, exact_topr_streaming, gaussian_one_pass_recovery_threaded,
+    exact_topr_dense, exact_topr_streaming_threaded, gaussian_one_pass_recovery_threaded,
     nystrom_threaded, one_pass_recovery_threaded, Embedding, NystromSampling, OnePassSketch,
 };
 use crate::metrics::{MemoryModel, MethodMemory};
@@ -220,6 +220,8 @@ pub struct ExactEmbedder {
     pub rank: usize,
     pub iters: usize,
     pub batch: usize,
+    /// worker threads for the streamed `K V` products
+    pub threads: usize,
 }
 
 impl Embedder for ExactEmbedder {
@@ -236,7 +238,13 @@ impl Embedder for ExactEmbedder {
             )));
         }
         let t0 = Instant::now();
-        let embedding = exact_topr_streaming(src, self.rank, self.iters, self.batch);
+        let embedding = exact_topr_streaming_threaded(
+            src,
+            self.rank,
+            self.iters,
+            self.batch,
+            self.threads.max(1),
+        );
         Ok(EmbedOutcome { embedding, sketch_time: t0.elapsed(), recovery_time: Duration::ZERO })
     }
 
@@ -332,7 +340,7 @@ pub fn embedder_for(
             sampling: NystromSampling::Uniform,
             threads,
         })),
-        Method::Exact => Some(Box::new(ExactEmbedder { rank, iters: 40, batch })),
+        Method::Exact => Some(Box::new(ExactEmbedder { rank, iters: 40, batch, threads })),
         Method::FullKernel => Some(Box::new(FullKernelEmbedder { rank, batch })),
         Method::PlainKmeans => None,
     }

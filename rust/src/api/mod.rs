@@ -384,6 +384,7 @@ impl KernelClusterer {
                     assigner: Assigner::Input { centroids: res.centroids },
                     train_x: Some(x.clone()),
                     train_cols: OnceLock::new(),
+                    generation: 0,
                     n_pad: n.next_power_of_two(),
                     batch: self.batch,
                     metrics: FitMetrics {
@@ -437,6 +438,7 @@ impl KernelClusterer {
                     assigner: Assigner::KernelClusters { sizes, self_terms },
                     train_x: Some(x.clone()),
                     train_cols: OnceLock::new(),
+                    generation: 0,
                     n_pad: n.next_power_of_two(),
                     batch: self.batch,
                     metrics: FitMetrics {
@@ -551,6 +553,7 @@ impl KernelClusterer {
             assigner: Assigner::Embedded { centroids: res.centroids },
             train_x,
             train_cols: OnceLock::new(),
+            generation: 0,
             n_pad,
             batch: self.batch,
             metrics: FitMetrics {

@@ -86,6 +86,11 @@ pub struct FittedModel {
     pub(crate) n_pad: usize,
     pub(crate) batch: usize,
     pub(crate) metrics: FitMetrics,
+    /// refresh generation: 0 for a plain batch fit; the streaming
+    /// subsystem stamps each published refresh with a monotonically
+    /// increasing value. Serialized as a `.rkc` header field (older
+    /// files load as generation 0).
+    pub(crate) generation: u64,
     /// lazily materialized columns of `train_x` (the p × n matrix is
     /// row-major, so the κ(z, x_j) loops want contiguous per-column
     /// slices). Built once on the first out-of-sample call instead of
@@ -129,6 +134,20 @@ impl FittedModel {
     /// Timings, memory model, and the final objective of the fit.
     pub fn metrics(&self) -> &FitMetrics {
         &self.metrics
+    }
+
+    /// Refresh generation of this model: `0` for a plain batch fit,
+    /// `g ≥ 1` for the g-th model a [`StreamClusterer`](crate::stream)
+    /// refresh published. Survives save/load (a `.rkc` header field;
+    /// files written before the field existed load as generation 0).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Stamp this model with a refresh generation (used by the
+    /// streaming refresh loop before publishing into a registry).
+    pub fn set_generation(&mut self, generation: u64) {
+        self.generation = generation;
     }
 
     /// The input-space dimension p that [`embed`](Self::embed) /

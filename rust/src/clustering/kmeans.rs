@@ -258,9 +258,25 @@ fn kmeans_once_on(
     rng: &mut Pcg64,
     threads: usize,
 ) -> KmeansResult {
+    let ct = kmeanspp_init(yt, yn, opts.k, rng); // k × r
+    lloyd_from(yt, yn, ct, opts, threads)
+}
+
+/// The Lloyd loop proper, starting from caller-provided point-major
+/// centroids `ct` (k × r). Shared by the seeded path
+/// ([`kmeans_once_on`], which draws `ct` via k-means++) and the
+/// warm-started path ([`kmeans_warm_threaded`], which inherits `ct`
+/// from a previous model). Pure function of `(yt, yn, ct, opts)` —
+/// no RNG — and bit-identical for any thread count.
+fn lloyd_from(
+    yt: &Mat,
+    yn: &[f64],
+    mut ct: Mat,
+    opts: &KmeansOpts,
+    threads: usize,
+) -> KmeansResult {
     let (n, r) = (yt.rows(), yt.cols());
     let k = opts.k;
-    let mut ct = kmeanspp_init(yt, yn, k, rng); // k × r
     let mut cn: Vec<f64> = (0..k).map(|c| sq_norm(ct.row(c))).collect();
     let mut labels = vec![0usize; n];
     let mut dist = vec![0.0f64; n];
@@ -379,6 +395,33 @@ pub fn kmeans_threaded(
         }
     }
     best.expect("restarts >= 1")
+}
+
+/// Warm-started Lloyd: one K-means run seeded from caller-provided
+/// centroids (r × k, the [`KmeansResult::centroids`] layout) instead of
+/// k-means++ — the refresh path of the streaming subsystem, where the
+/// previous generation's clustering is a far better start than a fresh
+/// draw. No restarts and no RNG: the result is a pure function of
+/// `(y, init_centroids, opts)`, and the assignment fan-out preserves the
+/// crate-wide `threads = 1 ≡ threads = N` bit-identity contract.
+///
+/// Empty clusters (a warm centroid stranded by drifted data) go through
+/// the same farthest-point repair as the seeded path.
+pub fn kmeans_warm_threaded(
+    y: &Mat,
+    init_centroids: &Mat,
+    opts: &KmeansOpts,
+    threads: usize,
+) -> KmeansResult {
+    assert_eq!(
+        init_centroids.rows(),
+        y.rows(),
+        "warm centroids must live in the embedding space of y"
+    );
+    assert_eq!(init_centroids.cols(), opts.k, "warm centroids must have k columns");
+    assert!(opts.k <= y.cols(), "more clusters than points");
+    let (yt, yn) = point_major(y);
+    lloyd_from(&yt, &yn, init_centroids.transpose(), opts, threads)
 }
 
 /// The pre-GEMM Lloyd implementation: per-(point, centroid) squared
@@ -608,6 +651,53 @@ mod tests {
         let _ = kmeans(&y, &KmeansOpts::paper(3), &mut a);
         let _ = kmeans_threaded(&y, &KmeansOpts::paper(3), &mut b, 4);
         assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn warm_start_from_good_centroids_converges_fast() {
+        let mut rng = Pcg64::seed(21);
+        let (y, truth) = blobs(&mut rng, 40);
+        let cold = kmeans(&y, &KmeansOpts::paper(3), &mut rng);
+        // warm-start from the converged centroids: one pass, same labels
+        let warm = kmeans_warm_threaded(&y, &cold.centroids, &KmeansOpts::paper(3), 1);
+        assert_eq!(warm.labels, cold.labels);
+        assert!(warm.objective <= cold.objective + 1e-12);
+        assert!(warm.iterations <= 2, "iterations {}", warm.iterations);
+        let acc = crate::clustering::accuracy(&warm.labels, &truth, 3);
+        assert!(acc > 0.99, "accuracy {acc}");
+    }
+
+    #[test]
+    fn warm_start_is_thread_count_invariant() {
+        let mut rng = Pcg64::seed(22);
+        let (y, _) = blobs(&mut rng, 35);
+        // a deliberately poor warm start so the loop actually iterates
+        let init = Mat::from_vec(2, 3, vec![0.0, 0.0, 1.0, 1.0, 2.0, 2.0]);
+        let opts = KmeansOpts { k: 3, restarts: 1, max_iters: 20, tol: 1e-9 };
+        let base = kmeans_warm_threaded(&y, &init, &opts, 1);
+        for threads in [2usize, 4, 16] {
+            let par = kmeans_warm_threaded(&y, &init, &opts, threads);
+            assert_eq!(base.labels, par.labels, "threads={threads}");
+            assert_eq!(base.objective.to_bits(), par.objective.to_bits(), "threads={threads}");
+            assert_eq!(base.centroids.data(), par.centroids.data(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn warm_start_repairs_stranded_centroids() {
+        // all mass near two blobs, but three warm centroids — one lands
+        // empty and must be re-seeded, not silently kept
+        let y = Mat::from_vec(1, 6, vec![0.0, 0.1, 0.2, 9.0, 9.1, 9.2]);
+        let init = Mat::from_vec(1, 3, vec![0.1, 9.1, 100.0]);
+        let opts = KmeansOpts { k: 3, restarts: 1, max_iters: 10, tol: 0.0 };
+        let res = kmeans_warm_threaded(&y, &init, &opts, 1);
+        assert_eq!(res.labels.len(), 6);
+        // every cluster ends non-empty after repair
+        let mut counts = [0usize; 3];
+        for &l in &res.labels {
+            counts[l] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 0), "counts {counts:?}");
     }
 
     #[test]

@@ -18,7 +18,7 @@ mod metrics;
 pub use hungarian::hungarian_min_cost;
 pub use kernel_kmeans::{kernel_kmeans, kernel_kmeans_objective, KernelKmeansResult};
 pub use kmeans::{
-    kmeans, kmeans_once, kmeans_once_threaded, kmeans_reference, kmeans_threaded, KmeansOpts,
-    KmeansResult,
+    kmeans, kmeans_once, kmeans_once_threaded, kmeans_reference, kmeans_threaded,
+    kmeans_warm_threaded, KmeansOpts, KmeansResult,
 };
 pub use metrics::{accuracy, adjusted_rand_index, confusion_matrix, normalized_mutual_info};

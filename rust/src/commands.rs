@@ -100,7 +100,13 @@ pub fn cmd_fig2(
     // Fig. 2(a): exact rank-r embedding; (b): our one-pass embedding.
     // Streaming exact: O(rn) memory even at the full n = 4000.
     let mut src = rkc::kernels::NativeBlockSource::pow2(ds.x.clone(), cfg.kernel);
-    let exact = rkc::lowrank::exact_topr_streaming(&mut src, cfg.rank, 40, cfg.batch);
+    let exact = rkc::lowrank::exact_topr_streaming_threaded(
+        &mut src,
+        cfg.rank,
+        40,
+        cfg.batch,
+        rkc::util::parallel::resolve_threads(cfg.threads).max(1),
+    );
     data::write_points_csv(&format!("{out_dir}/fig2a_exact.csv"), &exact.y, &ds.labels)?;
 
     // one-pass embedding via the method object (no K-means needed here)
@@ -377,6 +383,166 @@ pub fn cmd_serve(cfg: &ExperimentConfig) -> Result<()> {
         http.local_addr()
     );
     http.wait();
+    Ok(())
+}
+
+/// `rkc stream` — online one-pass clustering over an unbounded-style
+/// source. Points arrive in `--chunk`-sized batches from one of:
+///
+/// - `--scenario moving_blobs|label_churn` — the synthetic drift
+///   generators (drift magnitude `--drift`, `--n` total points);
+/// - `--data points.csv` (or `--data -` for stdin) — CSV coordinates;
+/// - the configured `--dataset` otherwise (stationary replay).
+///
+/// Each batch folds into the running SRHT sketch; whenever the refresh
+/// policy fires (`--refresh_points` / `--refresh_secs`), the model is
+/// refit warm-started from the previous labels and atomically published
+/// into the registry under the name `stream` with a new generation.
+/// `--stream_http true` additionally serves every published generation
+/// on `--addr` while ingestion continues.
+pub fn cmd_stream(cfg: &ExperimentConfig, data_csv: Option<&str>) -> Result<()> {
+    use rkc::serve::{serve_http_registry, HttpOpts, ModelRegistry, ServeOpts};
+    use rkc::stream::StreamClusterer;
+    use std::io::Read as _;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    // --- source: synthetic drift scenario, CSV/stdin, or dataset replay
+    let chunk = cfg.chunk.max(1);
+    let mut drift: Option<data::DriftStream> = match cfg.scenario.as_str() {
+        "" => None,
+        "moving_blobs" => {
+            Some(data::DriftStream::moving_blobs(cfg.seed, cfg.p, cfg.k, 0.5, cfg.drift))
+        }
+        "label_churn" => {
+            Some(data::DriftStream::label_churn(cfg.seed, cfg.p, cfg.k, 0.5, cfg.drift))
+        }
+        other => {
+            return Err(rkc::error::RkcError::invalid_config(format!(
+                "unknown scenario '{other}' (expected moving_blobs or label_churn)"
+            )))
+        }
+    };
+    // finite replay source: full matrix + truth labels (when known)
+    let replay: Option<(Mat, Vec<usize>)> = if drift.is_some() {
+        None
+    } else {
+        match data_csv {
+            Some("-") => {
+                let mut text = String::new();
+                std::io::stdin().read_to_string(&mut text)?;
+                Some((data::parse_points_csv("stdin", &text)?, Vec::new()))
+            }
+            Some(f) => Some((data::load_points_csv(f)?, Vec::new())),
+            None => {
+                let ds = build_dataset(cfg)?;
+                Some((ds.x, ds.labels))
+            }
+        }
+    };
+    let total = replay.as_ref().map(|(x, _)| x.cols()).unwrap_or(cfg.n);
+
+    let mut sc = StreamClusterer::new(cfg.k)
+        .kernel(cfg.kernel)
+        .rank(cfg.rank)
+        .oversample(cfg.oversample)
+        .batch(cfg.batch)
+        .seed(cfg.seed)
+        .threads(cfg.threads)
+        .kmeans_restarts(cfg.kmeans_restarts)
+        .kmeans_iters(cfg.kmeans_iters)
+        .kmeans_tol(cfg.kmeans_tol)
+        .refresh_every_points(cfg.refresh_points)
+        // config rejects non-finite/negative values; the cap keeps any
+        // in-range f64 inside Duration::from_secs_f64's panic-free domain
+        .refresh_every(Duration::from_secs_f64(cfg.refresh_secs.min(1.0e9)))
+        .capacity(total);
+
+    // the registry (and the ModelServer each publish spins up inside
+    // it) only exists when something can actually query it — without
+    // --stream_http a plain refresh() gives the same generations with
+    // no dead server churn inside the timed loop
+    let serving = if cfg.stream_http {
+        let registry = Arc::new(ModelRegistry::new(ServeOpts {
+            threads: cfg.threads,
+            ..Default::default()
+        }));
+        let http = serve_http_registry(
+            Arc::clone(&registry),
+            &cfg.serve_addr,
+            HttpOpts {
+                workers: cfg.http_workers,
+                keep_alive: Duration::from_secs(cfg.keep_alive_s),
+                ..Default::default()
+            },
+        )?;
+        println!("rkc stream: serving generations on http://{}", http.local_addr());
+        Some((registry, http))
+    } else {
+        None
+    };
+
+    println!(
+        "rkc stream: source={} total={total} chunk={chunk} refresh_points={} refresh_secs={}",
+        if drift.is_some() {
+            cfg.scenario.clone()
+        } else {
+            data_csv.map(str::to_string).unwrap_or_else(|| cfg.dataset.clone())
+        },
+        cfg.refresh_points,
+        cfg.refresh_secs,
+    );
+
+    let mut truth: Vec<usize> = Vec::new();
+    let mut fed = 0usize;
+    while fed < total {
+        let m = chunk.min(total - fed);
+        let batch = match (&mut drift, &replay) {
+            (Some(d), _) => {
+                let ds = d.chunk(m);
+                truth.extend_from_slice(&ds.labels);
+                ds.x
+            }
+            (None, Some((x, labels))) => {
+                if !labels.is_empty() {
+                    truth.extend_from_slice(&labels[fed..fed + m]);
+                }
+                Mat::from_fn(x.rows(), m, |i, j| x[(i, fed + j)])
+            }
+            (None, None) => unreachable!("stream source resolved above"),
+        };
+        sc.ingest(&batch)?;
+        fed += m;
+
+        let flush = fed == total && sc.pending_points() > 0;
+        if (sc.refresh_due() || flush) && sc.can_refresh() {
+            let t0 = Instant::now();
+            let generation = match &serving {
+                Some((registry, _)) => sc.publish(registry, "stream")?,
+                None => {
+                    sc.refresh()?;
+                    sc.refreshes()
+                }
+            };
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            let acc = sc
+                .last_labels()
+                .filter(|l| l.len() == truth.len())
+                .map(|l| rkc::clustering::accuracy(l, &truth, cfg.k));
+            println!(
+                "  generation={generation} n={} refresh={ms:.1}ms{}",
+                sc.n_points(),
+                acc.map(|a| format!(" accuracy={a:.3}")).unwrap_or_default()
+            );
+        }
+    }
+    println!(
+        "rkc stream: ingested {fed} points, published {} generation(s)",
+        sc.refreshes()
+    );
+    if let Some((_registry, http)) = serving {
+        http.wait();
+    }
     Ok(())
 }
 

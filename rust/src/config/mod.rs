@@ -149,6 +149,25 @@ pub struct ExperimentConfig {
     /// before the server closes it; `0` disables keep-alive (every
     /// response closes its connection)
     pub keep_alive_s: u64,
+    /// points per ingest chunk for the `stream` subcommand
+    pub chunk: usize,
+    /// refresh the streaming model every this many ingested points;
+    /// `0` disables the point trigger
+    pub refresh_points: usize,
+    /// refresh the streaming model at least every this many seconds;
+    /// `0` disables the time trigger
+    pub refresh_secs: f64,
+    /// drift scenario for the `stream` subcommand's synthetic source
+    /// (`"moving_blobs"` or `"label_churn"`); empty means a stationary
+    /// source built from `dataset`
+    pub scenario: String,
+    /// per-chunk drift magnitude for the synthetic scenarios (center
+    /// step for `moving_blobs`, phase advance for `label_churn`)
+    pub drift: f64,
+    /// serve each published streaming generation over HTTP (the
+    /// `stream` subcommand starts the registry front-end on
+    /// [`serve_addr`](ExperimentConfig::serve_addr))
+    pub stream_http: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -178,6 +197,12 @@ impl Default for ExperimentConfig {
             models_dir: String::new(),
             http_workers: 0,
             keep_alive_s: 5,
+            chunk: 200,
+            refresh_points: 1000,
+            refresh_secs: 0.0,
+            scenario: String::new(),
+            drift: 0.05,
+            stream_http: false,
         }
     }
 }
@@ -253,6 +278,25 @@ impl ExperimentConfig {
                 self.keep_alive_s =
                     value.parse().map_err(|_| RkcError::parse("keep_alive_s", value))?;
             }
+            "chunk" => self.chunk = uint("chunk", value)?,
+            "refresh_points" => self.refresh_points = uint("refresh_points", value)?,
+            "refresh_secs" => {
+                // non-finite or negative seconds would panic later in
+                // Duration::from_secs_f64 — reject at the parse boundary
+                self.refresh_secs = value
+                    .parse()
+                    .ok()
+                    .filter(|s: &f64| s.is_finite() && *s >= 0.0)
+                    .ok_or_else(|| RkcError::parse("refresh_secs", value))?;
+            }
+            "scenario" => self.scenario = value.into(),
+            "drift" => {
+                self.drift = value.parse().map_err(|_| RkcError::parse("drift", value))?;
+            }
+            "stream_http" => {
+                self.stream_http =
+                    value.parse().map_err(|_| RkcError::parse("stream_http", value))?;
+            }
             "method" => self.method = value.parse()?,
             "backend" => self.backend = value.parse()?,
             "kernel" => self.kernel = value.parse()?,
@@ -310,6 +354,12 @@ mod tests {
         assert_eq!(c.models_dir, "");
         assert_eq!(c.http_workers, 0);
         assert_eq!(c.keep_alive_s, 5);
+        assert_eq!(c.chunk, 200);
+        assert_eq!(c.refresh_points, 1000);
+        assert_eq!(c.refresh_secs, 0.0);
+        assert_eq!(c.scenario, "");
+        assert_eq!(c.drift, 0.05);
+        assert!(!c.stream_http);
         // artifacts-dir-driven model path when no explicit override
         assert_eq!(c.resolved_model_path(), "artifacts/model.rkc");
         let t = ExperimentConfig::table1();
@@ -352,6 +402,23 @@ mod tests {
         assert_eq!(c.keep_alive_s, 30);
         c.set("keep_alive_s", "0").unwrap(); // 0 = close per request
         assert_eq!(c.keep_alive_s, 0);
+        c.set("chunk", "64").unwrap();
+        assert_eq!(c.chunk, 64);
+        c.set("refresh_points", "0").unwrap(); // 0 = point trigger off
+        assert_eq!(c.refresh_points, 0);
+        c.set("refresh_secs", "2.5").unwrap();
+        assert_eq!(c.refresh_secs, 2.5);
+        c.set("scenario", "label_churn").unwrap();
+        assert_eq!(c.scenario, "label_churn");
+        c.set("drift", "0.3").unwrap();
+        assert_eq!(c.drift, 0.3);
+        c.set("stream_http", "true").unwrap();
+        assert!(c.stream_http);
+        assert!(c.set("stream_http", "yep").is_err());
+        assert!(c.set("drift", "lots").is_err());
+        assert!(c.set("refresh_secs", "inf").is_err());
+        assert!(c.set("refresh_secs", "NaN").is_err());
+        assert!(c.set("refresh_secs", "-1").is_err());
         assert!(c.set("keep_alive", "forever").is_err());
         assert!(c.set("http_workers", "-1").is_err());
         assert!(c.set("kmeans_tol", "tiny").is_err());

@@ -254,6 +254,14 @@ pub fn load_points_csv(path: &str) -> crate::error::Result<Mat> {
     use crate::error::RkcError;
     let text = std::fs::read_to_string(path)
         .map_err(|e| RkcError::io(format!("reading points csv {path}"), e))?;
+    parse_points_csv(path, &text)
+}
+
+/// [`load_points_csv`] on already-read text (`origin` labels parse
+/// errors — a path, or `"stdin"` for the `rkc stream` pipe source).
+pub fn parse_points_csv(origin: &str, text: &str) -> crate::error::Result<Mat> {
+    use crate::error::RkcError;
+    let path = origin;
     let mut rows: Vec<Vec<f64>> = Vec::new();
     for (idx, line) in text.lines().enumerate() {
         let line = line.trim();
@@ -304,9 +312,188 @@ pub fn write_points_csv(path: &str, x: &Mat, labels: &[usize]) -> std::io::Resul
     Ok(())
 }
 
+/// Deterministic non-stationary source for the streaming subsystem's
+/// drift scenarios: k Gaussian blobs whose generating process changes a
+/// little after every [`chunk`](DriftStream::chunk).
+///
+/// - [`moving_blobs`](DriftStream::moving_blobs): every blob center
+///   translates along its own fixed random direction by `step` per
+///   chunk — the geometry drifts, the class mixture stays uniform.
+/// - [`label_churn`](DriftStream::label_churn): centers stay put, but
+///   the class mixture rotates — class c's sampling weight is
+///   `1 + 0.9·sin(phase + 2πc/k)` with `phase` advancing by `churn` per
+///   chunk, so the dominant class cycles through `0..k`.
+///
+/// Everything derives from the constructor seed: two streams built with
+/// the same parameters emit bit-identical chunk sequences.
+pub struct DriftStream {
+    rng: Pcg64,
+    centers: Mat,
+    velocity: Mat,
+    spread: f64,
+    phase: f64,
+    churn: f64,
+    k: usize,
+    chunks: usize,
+    name: String,
+}
+
+impl DriftStream {
+    /// Blobs translating by `step` (input-space distance) per chunk.
+    pub fn moving_blobs(seed: u64, p: usize, k: usize, spread: f64, step: f64) -> Self {
+        let mut rng = Pcg64::seed_stream(seed, 0xd51f7);
+        let centers = Mat::from_fn(p, k, |_, _| 4.0 * rng.normal());
+        // unit direction per blob, scaled to `step`
+        let mut velocity = Mat::from_fn(p, k, |_, _| rng.normal());
+        for c in 0..k {
+            let norm: f64 = (0..p).map(|i| velocity[(i, c)].powi(2)).sum::<f64>().sqrt();
+            let s = if norm > 1e-12 { step / norm } else { 0.0 };
+            for i in 0..p {
+                velocity[(i, c)] *= s;
+            }
+        }
+        DriftStream {
+            rng,
+            centers,
+            velocity,
+            spread,
+            phase: 0.0,
+            churn: 0.0,
+            k,
+            chunks: 0,
+            name: format!("moving_blobs(p={p},K={k},step={step})"),
+        }
+    }
+
+    /// Fixed blobs with a rotating class mixture (`churn` radians of
+    /// phase advance per chunk).
+    pub fn label_churn(seed: u64, p: usize, k: usize, spread: f64, churn: f64) -> Self {
+        let mut rng = Pcg64::seed_stream(seed, 0xd51f8);
+        let centers = Mat::from_fn(p, k, |_, _| 4.0 * rng.normal());
+        DriftStream {
+            rng,
+            centers,
+            velocity: Mat::zeros(p, k),
+            spread,
+            phase: 0.0,
+            churn,
+            k,
+            chunks: 0,
+            name: format!("label_churn(p={p},K={k},churn={churn})"),
+        }
+    }
+
+    /// Current class-sampling weights (uniform unless churning).
+    fn weights(&self) -> Vec<f64> {
+        let tau = std::f64::consts::TAU;
+        (0..self.k)
+            .map(|c| {
+                if self.churn == 0.0 {
+                    1.0
+                } else {
+                    1.0 + 0.9 * (self.phase + tau * c as f64 / self.k as f64).sin()
+                }
+            })
+            .collect()
+    }
+
+    /// Draw the next `m` points, then advance the drift state by one
+    /// step. Labels are the generating class indices (ground truth for
+    /// accuracy-lag measurements).
+    pub fn chunk(&mut self, m: usize) -> Dataset {
+        let p = self.centers.rows();
+        let weights = self.weights();
+        let total: f64 = weights.iter().sum();
+        let mut x = Mat::zeros(p, m);
+        let mut labels = Vec::with_capacity(m);
+        for j in 0..m {
+            let mut u = self.rng.next_f64() * total;
+            let mut class = self.k - 1;
+            for (c, &wc) in weights.iter().enumerate() {
+                if u < wc {
+                    class = c;
+                    break;
+                }
+                u -= wc;
+            }
+            labels.push(class);
+            for i in 0..p {
+                x[(i, j)] = self.centers[(i, class)] + self.spread * self.rng.normal();
+            }
+        }
+        // advance the process: translate centers, rotate the mixture
+        for c in 0..self.k {
+            for i in 0..p {
+                self.centers[(i, c)] += self.velocity[(i, c)];
+            }
+        }
+        self.phase += self.churn;
+        self.chunks += 1;
+        Dataset {
+            x,
+            labels,
+            k: self.k,
+            name: format!("{}#{}", self.name, self.chunks),
+        }
+    }
+
+    /// Chunks emitted so far.
+    pub fn chunks_emitted(&self) -> usize {
+        self.chunks
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn drift_streams_are_deterministic() {
+        let mut a = DriftStream::moving_blobs(9, 3, 2, 0.2, 0.5);
+        let mut b = DriftStream::moving_blobs(9, 3, 2, 0.2, 0.5);
+        for _ in 0..3 {
+            let (ca, cb) = (a.chunk(17), b.chunk(17));
+            assert_eq!(ca.x.data(), cb.x.data());
+            assert_eq!(ca.labels, cb.labels);
+        }
+        let mut c = DriftStream::label_churn(9, 3, 2, 0.2, 0.8);
+        let mut d = DriftStream::label_churn(9, 3, 2, 0.2, 0.8);
+        let (cc, cd) = (c.chunk(25), d.chunk(25));
+        assert_eq!(cc.x.data(), cd.x.data());
+        assert_eq!(cc.labels, cd.labels);
+    }
+
+    #[test]
+    fn moving_blobs_actually_move() {
+        let mut s = DriftStream::moving_blobs(4, 2, 1, 0.0, 1.0);
+        // spread 0 => every point IS the (current) center
+        let first = s.chunk(4);
+        for _ in 0..9 {
+            s.chunk(4);
+        }
+        let late = s.chunk(4);
+        let dist = ((first.x[(0, 0)] - late.x[(0, 0)]).powi(2)
+            + (first.x[(1, 0)] - late.x[(1, 0)]).powi(2))
+        .sqrt();
+        // 10 advances at unit step: the center walked 10 units
+        assert!((dist - 10.0).abs() < 1e-9, "center drifted {dist}, expected 10");
+        assert_eq!(s.chunks_emitted(), 11);
+    }
+
+    #[test]
+    fn label_churn_rotates_the_dominant_class() {
+        // with k = 2 the class sine offsets are 0 and π, so the mixture
+        // is balanced at integer multiples of π and maximally skewed at
+        // odd multiples of π/2; churn π/2 per chunk walks through both
+        let mut s = DriftStream::label_churn(7, 2, 2, 0.1, std::f64::consts::FRAC_PI_2);
+        let count0 = |ds: &Dataset| ds.labels.iter().filter(|&&l| l == 0).count();
+        s.chunk(10); // phase 0: balanced, discard
+        let a = count0(&s.chunk(400)); // phase π/2: weights 1.9 vs 0.1
+        s.chunk(10); // phase π: balanced, discard
+        let b = count0(&s.chunk(400)); // phase 3π/2: weights 0.1 vs 1.9
+        assert!(a > 300, "phase-π/2 chunk should be class-0 heavy, got {a}/400");
+        assert!(b < 100, "phase-3π/2 chunk should be class-1 heavy, got {b}/400");
+    }
 
     #[test]
     fn load_points_csv_roundtrips_coordinates() {

@@ -42,6 +42,11 @@
 //! - [`model_io`] — versioned, endianness-explicit `.rkc` binary
 //!   persistence for fitted models (`FittedModel::save`/`load`),
 //!   bit-exact across the roundtrip.
+//! - [`stream`] — online one-pass clustering: `StreamClusterer` folds
+//!   unbounded point batches into a running SRHT sketch and, on a
+//!   refresh policy, publishes warm-started refits into a live
+//!   [`serve::ModelRegistry`] under monotone generations (atomic
+//!   hot-swap — requests see old or new, never a blend).
 //! - [`serve`] — the batched serving runtime: `ModelServer`
 //!   micro-batches concurrent `embed`/`predict` requests through a
 //!   bounded queue onto the fork-join pool; `ModelRegistry` serves many
@@ -83,6 +88,7 @@ pub mod metrics;
 pub mod model_io;
 pub mod runtime;
 pub mod serve;
+pub mod stream;
 
 pub use api::{FittedModel, KernelClusterer};
 pub use error::{Result, RkcError};

@@ -43,6 +43,21 @@ pub fn exact_topr_streaming(
     iters: usize,
     batch: usize,
 ) -> Embedding {
+    exact_topr_streaming_threaded(src, rank, iters, batch, 1)
+}
+
+/// [`exact_topr_streaming`] with the `K V` products fanned out over
+/// `threads` workers. Each worker owns a disjoint contiguous span of the
+/// product's output rows and accumulates them in the same per-element
+/// order as the sequential loop, so `threads = 1` and `threads = N`
+/// are bit-identical (the crate-wide determinism contract).
+pub fn exact_topr_streaming_threaded(
+    src: &mut dyn BlockSource,
+    rank: usize,
+    iters: usize,
+    batch: usize,
+    threads: usize,
+) -> Embedding {
     let n = src.n();
     assert!(rank <= n);
     // deterministic full-rank start: mixed cosine basis
@@ -54,7 +69,7 @@ pub fn exact_topr_streaming(
     v = q0;
 
     for it in 0..iters {
-        let kv = stream_k_times(src, &v, batch); // n × r
+        let kv = stream_k_times(src, &v, batch, threads); // n × r
         let (q, _) = householder_qr(&kv);
         // convergence: principal angles between successive subspaces via
         // the singular values of VᵀQ (all ≈ 1 when converged). Cheap
@@ -74,7 +89,7 @@ pub fn exact_topr_streaming(
     }
 
     // Rayleigh–Ritz: project K into span(V), diagonalize the r × r core.
-    let kv = stream_k_times(src, &v, batch);
+    let kv = stream_k_times(src, &v, batch, threads);
     let mut core = v.t_matmul(&kv); // r × r ≈ VᵀKV
     core.symmetrize();
     let (evals, u) = jacobi_eig(&core);
@@ -95,29 +110,35 @@ pub fn exact_topr_streaming(
 
 /// One streamed product `K V` (n × r) using blocks of `batch` columns.
 /// Uses symmetry: `(K V)[J, :] = K[:, J]ᵀ V` block by block.
-fn stream_k_times(src: &mut dyn BlockSource, v: &Mat, batch: usize) -> Mat {
+///
+/// Column batches are contiguous, so each block's output rows form one
+/// contiguous span of `out`; the span is split across workers via
+/// [`parallel::for_each_row_chunk`](crate::util::parallel), each worker
+/// accumulating its rows over `i` ascending with the same zero-skip —
+/// the per-element add sequence is identical at every thread count.
+fn stream_k_times(src: &mut dyn BlockSource, v: &Mat, batch: usize, threads: usize) -> Mat {
     let n = src.n();
     let r = v.cols();
     let mut out = Mat::zeros(n, r);
     for cols in crate::kernels::column_batches(n, batch) {
         let kb = src.block(&cols); // n_padded × b, padded rows zero
-        // rows J of K V: kbᵀ restricted to real rows times v. Iterate kb
-        // row-major (i outer) so both kb and v stream sequentially; the
-        // scattered writes go to only |cols| distinct out rows.
-        for i in 0..n {
-            let krow = kb.row(i);
-            let vrow = v.row(i);
-            for (bj, &j) in cols.iter().enumerate() {
-                let kij = krow[bj];
-                if kij == 0.0 {
-                    continue;
-                }
-                let orow = out.row_mut(j);
-                for (o, &vv) in orow.iter_mut().zip(vrow) {
-                    *o += kij * vv;
+        let j0 = cols[0];
+        let span = &mut out.data_mut()[j0 * r..(j0 + cols.len()) * r];
+        crate::util::parallel::for_each_row_chunk(span, r, threads, |first, rows| {
+            for (dj, orow) in rows.chunks_mut(r).enumerate() {
+                let bj = first + dj;
+                for i in 0..n {
+                    let kij = kb[(i, bj)];
+                    if kij == 0.0 {
+                        continue;
+                    }
+                    let vrow = v.row(i);
+                    for (o, &vv) in orow.iter_mut().zip(vrow) {
+                        *o += kij * vv;
+                    }
                 }
             }
-        }
+        });
     }
     out
 }
@@ -182,6 +203,27 @@ mod tests {
         for i in 0..3 {
             assert!((a.eigenvalues[i] - b.eigenvalues[i]).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn streaming_thread_count_bit_identity() {
+        let mut rng = Pcg64::seed(5);
+        let x = random_mat(&mut rng, 3, 41);
+        let kern = Kernel::Rbf { gamma: 0.8 };
+        let run = |threads: usize| {
+            let mut src = NativeBlockSource::pow2(x.clone(), kern);
+            exact_topr_streaming_threaded(&mut src, 3, 25, 8, threads)
+        };
+        let base = run(1);
+        for threads in [2usize, 4, 7] {
+            let got = run(threads);
+            assert_eq!(got.y.data(), base.y.data(), "threads={threads}");
+            assert_eq!(got.eigenvalues, base.eigenvalues, "threads={threads}");
+        }
+        // the threads=1 wrapper is the same code path
+        let mut src = NativeBlockSource::pow2(x.clone(), kern);
+        let wrapped = exact_topr_streaming(&mut src, 3, 25, 8);
+        assert_eq!(wrapped.y.data(), base.y.data());
     }
 
     #[test]

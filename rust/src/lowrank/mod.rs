@@ -14,7 +14,7 @@ mod onepass;
 mod select;
 
 pub use error::{normalized_frobenius_error, streamed_frobenius_error, trace_norm_error_psd};
-pub use exact::{exact_topr_dense, exact_topr_streaming};
+pub use exact::{exact_topr_dense, exact_topr_streaming, exact_topr_streaming_threaded};
 pub use nystrom::{nystrom, nystrom_threaded, NystromSampling};
 pub use onepass::{
     gaussian_one_pass_recovery, gaussian_one_pass_recovery_threaded, one_pass_recovery,

@@ -33,6 +33,17 @@ impl OnePassSketch {
         OnePassSketch { w: Mat::zeros(n_real, rp), srht, filled: vec![false; n_real] }
     }
 
+    /// Wrap an already-complete sketch matrix `w` (n_real × r') — the
+    /// streaming refresh path holds W in exactly this layout and would
+    /// otherwise pay a second full copy (plus a filled-flag pass) just
+    /// to route it through [`ingest`](Self::ingest) column by column.
+    pub fn from_rows(srht: Srht, w: Mat) -> Self {
+        assert!(w.rows() <= srht.n, "more real samples than transform length");
+        assert_eq!(w.cols(), srht.samples(), "sketch width must match the operator");
+        let filled = vec![true; w.rows()];
+        OnePassSketch { w, srht, filled }
+    }
+
     pub fn srht(&self) -> &Srht {
         &self.srht
     }

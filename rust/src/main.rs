@@ -15,6 +15,8 @@
 //! rkc predict  [--model path] [--data pts.csv]   offline predictions
 //! rkc serve    [--model path | --models dir] [--addr host:port]
 //!              multi-model HTTP serving runtime (keep-alive pool)
+//! rkc stream   [--scenario moving_blobs|label_churn | --data pts.csv|-]
+//!              online clustering with live generation hot-swap
 //! ```
 //!
 //! Every subcommand accepts the config overrides documented in
@@ -59,9 +61,13 @@ fn real_main(args: Vec<String>) -> Result<()> {
         cfg.apply_json(&json)?;
     }
     for (k, v) in &cli.options {
-        // "data" is predict's query CSV, not a config key — but only
-        // there; everywhere else an unknown key still fails loudly
-        if k == "config" || k == "out-dir" || (k == "data" && sub == "predict") {
+        // "data" is the query/source CSV for predict and stream, not a
+        // config key — but only there; everywhere else an unknown key
+        // still fails loudly
+        if k == "config"
+            || k == "out-dir"
+            || (k == "data" && (sub == "predict" || sub == "stream"))
+        {
             continue;
         }
         cfg.set(k, v)?;
@@ -87,6 +93,7 @@ fn real_main(args: Vec<String>) -> Result<()> {
         "save" => commands::cmd_save(&cfg, registry.as_ref()),
         "predict" => commands::cmd_predict(&cfg, cli.get("data")),
         "serve" => commands::cmd_serve(&cfg),
+        "stream" => commands::cmd_stream(&cfg, cli.get("data")),
         other => Err(RkcError::invalid_config(format!(
             "unknown subcommand '{other}' (try --help)"
         ))),
@@ -111,6 +118,9 @@ SUBCOMMANDS
   predict    load --model, assign --data points.csv (or the dataset)
   serve      serve --model (or every .rkc in --models DIR, keyed by
              file stem) over keep-alive HTTP at --addr
+  stream     ingest --chunk-sized batches from --scenario / --data
+             (- = stdin) / the dataset, fold them into a running
+             sketch, and hot-swap refreshed models into the registry
 
 COMMON OPTIONS (config overrides)
   --method one_pass|gaussian|exact|full_kernel|plain|nystrom[_m<M>]
@@ -125,7 +135,13 @@ COMMON OPTIONS (config overrides)
   --addr HOST:PORT (serve; default 127.0.0.1:7878)
   --http_workers N (serve; connection-pool size, 0 = auto)
   --keep_alive_s S (serve; idle seconds per connection, 0 = close)
-  --data points.csv (predict; one row of coordinates per point)
+  --data points.csv (predict/stream; one coordinate row per point)
+  --chunk N (stream; points per ingest batch, default 200)
+  --refresh_points N (stream; refresh every N points, 0 = off)
+  --refresh_secs S (stream; refresh every S seconds, 0 = off)
+  --scenario moving_blobs|label_churn (stream; synthetic drift source)
+  --drift X (stream; per-chunk drift magnitude, default 0.05)
+  --stream_http true (stream; serve generations on --addr while running)
 
 SERVING PROTOCOL (serve)
   POST /models/NAME/predict {{\"points\": [[x, ...], ...]}} -> {{\"labels\": [...]}}

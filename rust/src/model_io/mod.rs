@@ -161,6 +161,7 @@ pub fn model_to_bytes(model: &FittedModel) -> Vec<u8> {
     header.insert("rank".into(), uint(m.rank));
     header.insert("n_pad".into(), uint(model.n_padded()));
     header.insert("batch".into(), uint(model.batch));
+    header.insert("generation".into(), uint(model.generation() as usize));
     header.insert("objective".into(), Json::finite_num(m.objective));
     header.insert(
         "times".into(),
@@ -368,6 +369,10 @@ fn assemble_model(
     if batch == 0 {
         return Err(bad("batch must be at least 1".into()));
     }
+    // absent in files written before the streaming subsystem: those are
+    // batch fits, i.e. generation 0
+    let generation =
+        header.get("generation").and_then(Json::as_usize).unwrap_or(0) as u64;
     let method = str_of("method")?.to_string();
     let objective = header.get("objective").and_then(Json::as_f64).unwrap_or(f64::NAN);
     let time_of = |key: &str| {
@@ -520,6 +525,7 @@ fn assemble_model(
         train_cols: std::sync::OnceLock::new(),
         n_pad,
         batch,
+        generation,
         metrics: FitMetrics {
             method,
             n,
@@ -701,6 +707,33 @@ mod tests {
             .unwrap();
         let back = model_from_bytes(&model_to_bytes(&model), "mem").unwrap();
         assert_eq!(back.predict(&ds.x).unwrap(), model.predict(&ds.x).unwrap());
+    }
+
+    #[test]
+    fn generation_survives_the_roundtrip_and_defaults_to_zero() {
+        let mut model = fit(Method::OnePass);
+        assert_eq!(model.generation(), 0, "batch fits are generation 0");
+        model.set_generation(42);
+        let back = model_from_bytes(&model_to_bytes(&model), "mem").unwrap();
+        assert_eq!(back.generation(), 42);
+
+        // a file written without the field (pre-streaming) loads as 0:
+        // strip it from the header and re-seal
+        let bytes = model_to_bytes(&model);
+        let hlen = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+        let text = std::str::from_utf8(&bytes[FIXED_PREFIX..FIXED_PREFIX + hlen]).unwrap();
+        let stripped = text.replace("\"generation\":42,", "");
+        assert_ne!(stripped, text, "header must have carried the field");
+        let mut out = Vec::new();
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        out.extend_from_slice(&(stripped.len() as u32).to_le_bytes());
+        out.extend_from_slice(stripped.as_bytes());
+        out.extend_from_slice(&bytes[FIXED_PREFIX + hlen..bytes.len() - 8]);
+        let ck = checksum(&out);
+        out.extend_from_slice(&ck.to_le_bytes());
+        let old = model_from_bytes(&out, "mem").unwrap();
+        assert_eq!(old.generation(), 0);
     }
 
     #[test]

@@ -644,6 +644,7 @@ fn health(registry: &ModelRegistry, frontend: &FrontendCounters) -> (u16, String
         ("n_train", Json::Num(m.n as f64)),
         ("rank", Json::Num(m.rank as f64)),
         ("input_dim", input_dim),
+        ("generation", Json::Num(shared.model.generation() as f64)),
         ("queue_depth", Json::Num(shared.queue.depth() as f64)),
         ("queue_highwater", Json::Num(stats.queue_highwater as f64)),
         ("requests", Json::Num(stats.requests as f64)),
@@ -670,6 +671,7 @@ fn model_info_value(info: &super::ModelInfo) -> Json {
         ("n_train", Json::Num(info.n_train as f64)),
         ("rank", Json::Num(info.rank as f64)),
         ("input_dim", input_dim),
+        ("generation", Json::Num(info.generation as f64)),
         ("path", info.path.clone().map(Json::Str).unwrap_or(Json::Null)),
         ("queue_depth", Json::Num(info.queue_depth as f64)),
         ("queue_highwater", Json::Num(info.stats.queue_highwater as f64)),

@@ -46,6 +46,10 @@ struct Inner {
     /// target of the legacy single-model routes; first registered wins,
     /// unloading it promotes the alphabetically-first survivor
     default: Option<String>,
+    /// per-name publish counter backing [`ModelRegistry::publish`]:
+    /// monotone per name, surviving replaces and unloads, so generations
+    /// observed by clients never repeat or go backwards
+    generations: BTreeMap<String, u64>,
 }
 
 /// A point-in-time description of one registered model (the
@@ -72,6 +76,9 @@ pub struct ModelInfo {
     pub stats: ServeStats,
     /// current micro-batch queue depth
     pub queue_depth: usize,
+    /// refresh generation of the served model (0 = plain batch fit,
+    /// g ≥ 1 = the g-th [`ModelRegistry::publish`] under this name)
+    pub generation: u64,
 }
 
 /// A named collection of independently-batched [`ModelServer`]s —
@@ -111,7 +118,11 @@ impl ModelRegistry {
     /// An empty registry; `opts` applies to every model it serves.
     pub fn new(opts: ServeOpts) -> Self {
         ModelRegistry {
-            inner: RwLock::new(Inner { models: BTreeMap::new(), default: None }),
+            inner: RwLock::new(Inner {
+                models: BTreeMap::new(),
+                default: None,
+                generations: BTreeMap::new(),
+            }),
             opts,
         }
     }
@@ -133,6 +144,67 @@ impl ModelRegistry {
         Self::check_name(name)?;
         let server = ModelServer::new(model, self.opts)?;
         self.insert_entry(name, server.handle(), Some(Arc::new(server)), None)
+    }
+
+    /// Atomically publish a refreshed `model` under `name`, stamping it
+    /// with that name's next generation (1 for the first publish,
+    /// +1 per publish; the counter survives replaces and unloads, so
+    /// observed generations never repeat). Returns the generation
+    /// assigned.
+    ///
+    /// Swap semantics are **old-or-new, never a blend**: the new
+    /// [`ModelServer`] (queue + batch worker) is fully constructed
+    /// before the map pointer flips under the write lock; requests
+    /// already queued on the displaced server drain to completion
+    /// against the old model (its handle — and any response it
+    /// computes — references only the old `FittedModel`), while
+    /// requests routed after the flip see only the new one. The
+    /// displaced server's drain + worker join happens outside the
+    /// lock. `tests/stream_hotswap.rs` drives concurrent keep-alive
+    /// clients across a publish to enforce this.
+    ///
+    /// Generations are assigned per publish *call*; with several
+    /// threads publishing the same name concurrently each gets a
+    /// distinct generation, and an install that lost the build race to
+    /// a newer generation is skipped — the served generation never goes
+    /// backwards. The intended topology is still one refresh loop per
+    /// name.
+    pub fn publish(&self, name: &str, mut model: FittedModel) -> Result<u64> {
+        Self::check_name(name)?;
+        let generation = {
+            let mut inner = self.inner.write().expect("registry lock poisoned");
+            let slot = inner.generations.entry(name.to_string()).or_insert(0);
+            *slot += 1;
+            *slot
+        };
+        model.set_generation(generation);
+        // build the new server (queue + batch worker) outside the lock
+        let server = ModelServer::new(model, self.opts)?;
+        let handle = server.handle();
+        let owner = Some(Arc::new(server));
+        let displaced;
+        {
+            let mut inner = self.inner.write().expect("registry lock poisoned");
+            // between reserving the generation above and this insert a
+            // concurrent publish may have installed a NEWER generation;
+            // installing ours now would serve stale results under a
+            // lower generation number. Skip the install instead (the
+            // stale server is dropped below, outside the lock).
+            if let Some(current) = inner.models.get(name) {
+                if current.handle.shared.model.generation() > generation {
+                    return Ok(generation);
+                }
+            }
+            displaced =
+                inner.models.insert(name.to_string(), Entry { handle, owner, path: None });
+            if inner.default.is_none() {
+                inner.default = Some(name.to_string());
+            }
+        }
+        // dropping the displaced owned server joins its batch worker —
+        // outside the lock so other routes keep flowing
+        drop(displaced);
+        Ok(generation)
     }
 
     /// Register a caller-owned server under `name`. The registry holds
@@ -277,6 +349,7 @@ impl ModelRegistry {
             path: entry.path.clone(),
             stats: shared.snapshot(),
             queue_depth: shared.queue.depth(),
+            generation: shared.model.generation(),
         }
     }
 
@@ -384,6 +457,22 @@ mod tests {
         assert_eq!(reg.len(), 1);
         assert_eq!(reg.get("m").unwrap().predict(query).unwrap(), want_new);
         assert!(reg.insert("bad/name", fit(7, 96)).is_err());
+    }
+
+    #[test]
+    fn publish_assigns_monotone_generations() {
+        let reg = ModelRegistry::new(ServeOpts::default());
+        assert_eq!(reg.publish("live", fit(1, 96)).unwrap(), 1);
+        assert_eq!(reg.info("live").unwrap().generation, 1);
+        assert_eq!(reg.publish("live", fit(2, 96)).unwrap(), 2);
+        assert_eq!(reg.info("live").unwrap().generation, 2);
+        // the counter survives unload: a re-published name never repeats
+        assert!(reg.unload("live"));
+        assert_eq!(reg.publish("live", fit(3, 96)).unwrap(), 3);
+        // other names count independently; plain inserts stay generation 0
+        assert_eq!(reg.publish("other", fit(4, 96)).unwrap(), 1);
+        reg.insert("batch", fit(5, 96)).unwrap();
+        assert_eq!(reg.info("batch").unwrap().generation, 0);
     }
 
     #[test]

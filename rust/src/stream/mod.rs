@@ -1,0 +1,848 @@
+//! `rkc::stream` — online one-pass clustering with live model hot-swap.
+//!
+//! A [`StreamClusterer`] ingests point batches from an unbounded source
+//! and folds them into a *running* SRHT sketch `W = K Ω` without ever
+//! materializing the kernel matrix. On a configurable refresh policy
+//! (every N points, every T seconds, or on demand) it runs the paper's
+//! recovery step on the accumulated sketch, re-clusters with a K-means
+//! warm-started from the previous generation's assignment, and publishes
+//! the resulting [`FittedModel`] into a live
+//! [`ModelRegistry`](crate::serve::ModelRegistry) — requests racing the
+//! swap see the old model or the new one, never a blend.
+//!
+//! # The incremental fold
+//!
+//! The batch pipeline streams *columns* of a fixed kernel matrix; here
+//! the matrix itself grows. When `m` new points arrive (global indices
+//! `n_old..n_old+m`), one padded kernel block `kb = K[:, new]`
+//! (`n_cap × m`, rows above the current count zero) yields **both**
+//! halves of the update:
+//!
+//! 1. the new sketch rows `W[new, :]` via the usual scale-by-`D` →
+//!    FWHT → row-gather ([`Srht::apply_to_block_with`]), and
+//! 2. the fold of the new columns into every existing row — by symmetry
+//!    `K[j, new_c] = kb[(j, c)]`, so
+//!    `W[j, s] += Σ_c kb[(j, c)] · Ω[n_old + c, s]`
+//!    with `Ω` entries generated on the fly
+//!    ([`Srht::omega_entry`]) — zero extra kernel evaluations.
+//!
+//! The padded rows of the operator are **not** masked: future points
+//! will claim those Rademacher signs, and masking is redundant anyway
+//! (kernel blocks zero-pad their rows, and the recovery's
+//! `QᵀΩ`-via-FWHT implicitly zero-pads `Q`).
+//!
+//! When the point count outgrows the operator (`n > n_cap`), a fresh
+//! SRHT is drawn deterministically at the next power of two and the
+//! sketch is rebuilt by one bulk pass over the buffered points —
+//! amortized O(1) redraws per doubling.
+//!
+//! # Determinism
+//!
+//! Every published generation independently satisfies the crate's
+//! `threads = 1 ≡ threads = N` contract: the fold writes disjoint sketch
+//! rows per worker with a fixed per-entry accumulation order, the FWHT
+//! path is per-column independent, and the warm-started K-means is a
+//! pure function of (embedding, previous labels). Fix the seed and the
+//! ingest sequence and the g-th published model is bit-identical
+//! regardless of thread count — and round-trips bit-exactly through
+//! `.rkc` save/load like any batch fit.
+//!
+//! # Memory bound
+//!
+//! The running state is the sketch `W` (n × r' doubles), the operator
+//! (`n_cap` signs + r' indices), and the raw point buffer (p × n,
+//! retained so refreshed models can answer out-of-sample queries) —
+//! O(n·(p + r')) total, never O(n²).
+
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+use crate::api::{Assigner, FitMetrics, FittedModel};
+use crate::clustering::{kmeans_threaded, kmeans_warm_threaded, KmeansOpts};
+use crate::error::{Result, RkcError};
+use crate::kernels::{column_batches, Kernel};
+use crate::linalg::Mat;
+use crate::lowrank::{one_pass_recovery_threaded, OnePassSketch};
+use crate::metrics::MemoryModel;
+use crate::rng::Pcg64;
+use crate::serve::ModelRegistry;
+use crate::sketch::{next_pow2, Srht};
+use crate::util::parallel;
+
+/// Sub-stream of the master seed the SRHT operators draw from (the
+/// g-th redraw consumes the next draw of this one stream, so the
+/// operator sequence depends only on seed + capacity crossings).
+const SRHT_STREAM: u64 = 0x57cea;
+/// Sub-stream for the cold-start K-means of refresh g (warm refreshes
+/// consume no randomness at all).
+const KMEANS_STREAM: u64 = 0x57c1d;
+
+/// When a [`StreamClusterer`] considers a refresh due: after `points`
+/// newly ingested points, after `interval` wall time, or — with both
+/// unset (the default) — only on explicit demand.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RefreshPolicy {
+    /// refresh once this many points arrived since the last refresh
+    pub points: Option<usize>,
+    /// refresh once this much wall time passed since the last refresh
+    pub interval: Option<Duration>,
+}
+
+/// Online one-pass kernel clusterer: ingest → fold → refresh → publish.
+///
+/// Built like [`KernelClusterer`](crate::api::KernelClusterer) (same
+/// defaults, consuming setters), then driven imperatively:
+/// [`ingest`](Self::ingest) point chunks, check
+/// [`refresh_due`](Self::refresh_due), and either take a refreshed
+/// [`FittedModel`](Self::refresh) or
+/// [`publish`](Self::publish) it straight into a registry under a
+/// monotone generation number.
+///
+/// ```
+/// use rkc::stream::StreamClusterer;
+/// use rkc::data;
+/// use rkc::rng::Pcg64;
+///
+/// let mut sc = StreamClusterer::new(2).oversample(10).seed(7);
+/// let ds = data::cross_lines(&mut Pcg64::seed(3), 256);
+/// sc.ingest(&ds.x)?;
+/// let model = sc.refresh()?;
+/// let acc = rkc::clustering::accuracy(model.labels(), &ds.labels, 2);
+/// assert!(acc > 0.9, "streamed accuracy {acc}");
+/// # Ok::<(), rkc::error::RkcError>(())
+/// ```
+pub struct StreamClusterer {
+    // configuration (consuming setters, fixed once ingestion starts)
+    k: usize,
+    kernel: Kernel,
+    rank: usize,
+    oversample: usize,
+    batch: usize,
+    seed: u64,
+    threads: usize,
+    kmeans_restarts: usize,
+    kmeans_iters: usize,
+    kmeans_tol: f64,
+    policy: RefreshPolicy,
+    capacity_hint: usize,
+    // runtime state
+    p: Option<usize>,
+    /// point-major buffer: point j occupies `buf[j*p..(j+1)*p]`
+    buf: Vec<f64>,
+    n: usize,
+    srht: Option<Srht>,
+    srht_rng: Option<Pcg64>,
+    /// running sketch `W = K Ω`, row-major n × r'
+    w: Vec<f64>,
+    scratch: Vec<f64>,
+    prev_labels: Option<Vec<usize>>,
+    refreshes: u64,
+    points_since_refresh: usize,
+    last_refresh: Instant,
+    /// cumulative ingest/fold time since the last refresh — becomes the
+    /// published model's `sketch_time`
+    fold_time: Duration,
+}
+
+impl StreamClusterer {
+    /// A stream clusterer for `k` clusters with the paper's defaults
+    /// (quadratic kernel, r = 2, l = 5, 10×20 K-means) and no automatic
+    /// refresh policy (refreshes happen on demand).
+    pub fn new(k: usize) -> Self {
+        StreamClusterer {
+            k,
+            kernel: Kernel::paper_poly2(),
+            rank: 2,
+            oversample: 5,
+            batch: 256,
+            seed: 2016,
+            threads: 1,
+            kmeans_restarts: 10,
+            kmeans_iters: 20,
+            kmeans_tol: 1e-9,
+            policy: RefreshPolicy::default(),
+            capacity_hint: 0,
+            p: None,
+            buf: Vec::new(),
+            n: 0,
+            srht: None,
+            srht_rng: None,
+            w: Vec::new(),
+            scratch: Vec::new(),
+            prev_labels: None,
+            refreshes: 0,
+            points_since_refresh: 0,
+            last_refresh: Instant::now(),
+            fold_time: Duration::ZERO,
+        }
+    }
+
+    /// The Mercer kernel to cluster under.
+    pub fn kernel(mut self, kernel: Kernel) -> Self {
+        self.kernel = kernel;
+        self
+    }
+
+    /// Embedding rank r.
+    pub fn rank(mut self, rank: usize) -> Self {
+        self.rank = rank;
+        self
+    }
+
+    /// Oversampling l; the sketch width is r' = r + l.
+    pub fn oversample(mut self, oversample: usize) -> Self {
+        self.oversample = oversample;
+        self
+    }
+
+    /// Column-batch width for the bulk rebuild passes.
+    pub fn batch(mut self, batch: usize) -> Self {
+        self.batch = batch.max(1);
+        self
+    }
+
+    /// Master seed: the SRHT draw/redraw sequence and every cold-start
+    /// K-means derive from it through split PCG streams.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Worker threads (0 = auto-detect); bit-identical results for any
+    /// value, per the crate determinism contract.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// K-means++ restarts for the *cold* (first) refresh; warm refreshes
+    /// run one Lloyd descent from the inherited centroids.
+    pub fn kmeans_restarts(mut self, restarts: usize) -> Self {
+        self.kmeans_restarts = restarts;
+        self
+    }
+
+    /// Lloyd-iteration cap per refresh.
+    pub fn kmeans_iters(mut self, iters: usize) -> Self {
+        self.kmeans_iters = iters;
+        self
+    }
+
+    /// Relative objective-improvement tolerance for K-means early stop.
+    pub fn kmeans_tol(mut self, tol: f64) -> Self {
+        self.kmeans_tol = tol;
+        self
+    }
+
+    /// Consider a refresh due every `points` newly ingested points.
+    pub fn refresh_every_points(mut self, points: usize) -> Self {
+        self.policy.points = if points == 0 { None } else { Some(points) };
+        self
+    }
+
+    /// Consider a refresh due every `interval` of wall time.
+    pub fn refresh_every(mut self, interval: Duration) -> Self {
+        self.policy.interval =
+            if interval == Duration::ZERO { None } else { Some(interval) };
+        self
+    }
+
+    /// Pre-size the SRHT operator for roughly this many points, so
+    /// streams with a known scale avoid the early redraw/rebuild cycles
+    /// (the operator capacity is `next_pow2(max(hint, n, r'))`).
+    pub fn capacity(mut self, points: usize) -> Self {
+        self.capacity_hint = points;
+        self
+    }
+
+    /// r' = r + l, the sketch width.
+    pub fn sketch_width(&self) -> usize {
+        self.rank + self.oversample
+    }
+
+    /// Points ingested so far.
+    pub fn n_points(&self) -> usize {
+        self.n
+    }
+
+    /// Points ingested since the last refresh.
+    pub fn pending_points(&self) -> usize {
+        self.points_since_refresh
+    }
+
+    /// Refreshes performed so far (== the generation the *next* publish
+    /// into a fresh registry would receive, minus any external bumps).
+    pub fn refreshes(&self) -> u64 {
+        self.refreshes
+    }
+
+    /// The latest refresh's training labels (None before any refresh).
+    pub fn last_labels(&self) -> Option<&[usize]> {
+        self.prev_labels.as_deref()
+    }
+
+    /// Bytes held by the running sketch state (sketch rows + operator),
+    /// excluding the raw point buffer — the paper's O(r'n) figure.
+    pub fn sketch_bytes(&self) -> usize {
+        let f64s = std::mem::size_of::<f64>();
+        let op = self.srht.as_ref().map_or(0, |s| {
+            s.d.len() * f64s + s.idx.len() * std::mem::size_of::<usize>()
+        });
+        self.w.len() * f64s + op
+    }
+
+    /// Bytes held by the retained raw point buffer (kept so refreshed
+    /// models can answer out-of-sample `embed`/`predict`).
+    pub fn buffer_bytes(&self) -> usize {
+        self.buf.len() * std::mem::size_of::<f64>()
+    }
+
+    /// Whether the configured policy (points and/or interval) says a
+    /// refresh is due. Always false while nothing new was ingested; on
+    /// demand-only streams (no policy) it is never true — call
+    /// [`refresh`](Self::refresh) directly.
+    pub fn refresh_due(&self) -> bool {
+        if self.points_since_refresh == 0 {
+            return false;
+        }
+        if let Some(points) = self.policy.points {
+            if self.points_since_refresh >= points {
+                return true;
+            }
+        }
+        if let Some(interval) = self.policy.interval {
+            if self.last_refresh.elapsed() >= interval {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Whether enough points arrived for a refresh to succeed
+    /// (`n ≥ max(k, r')`; below that [`refresh`](Self::refresh) is a
+    /// typed error).
+    pub fn can_refresh(&self) -> bool {
+        self.n >= self.k.max(self.sketch_width()).max(1)
+    }
+
+    fn threads_resolved(&self) -> usize {
+        parallel::resolve_threads(self.threads).max(1)
+    }
+
+    /// Ingest a chunk of points (p × m, columns are samples) into the
+    /// running sketch. The first chunk fixes the stream's dimension p;
+    /// later chunks must match it. O(n·m) kernel evaluations — each
+    /// new column is evaluated against every point exactly once, ever.
+    pub fn ingest(&mut self, chunk: &Mat) -> Result<()> {
+        let m = chunk.cols();
+        if m == 0 {
+            return Err(RkcError::invalid_config("cannot ingest an empty chunk"));
+        }
+        match self.p {
+            None => {
+                if chunk.rows() == 0 {
+                    return Err(RkcError::invalid_config(
+                        "cannot ingest zero-dimensional points",
+                    ));
+                }
+                self.p = Some(chunk.rows());
+            }
+            Some(p) if p != chunk.rows() => {
+                return Err(RkcError::invalid_config(format!(
+                    "chunk dimension {} does not match the stream dimension {p}",
+                    chunk.rows()
+                )))
+            }
+            _ => {}
+        }
+        let p = self.p.expect("just set");
+        let t0 = Instant::now();
+        let n_old = self.n;
+        self.buf.reserve(m * p);
+        for j in 0..m {
+            for i in 0..p {
+                self.buf.push(chunk[(i, j)]);
+            }
+        }
+        self.n = n_old + m;
+
+        let needs_rebuild = match &self.srht {
+            None => true,
+            Some(s) => self.n > s.n,
+        };
+        if needs_rebuild {
+            self.rebuild_operator();
+        } else {
+            self.fold_chunk(n_old, m);
+        }
+        self.points_since_refresh += m;
+        self.fold_time += t0.elapsed();
+        Ok(())
+    }
+
+    /// Incremental fold of `m` freshly buffered points (global indices
+    /// `n_old..n_old+m`) into the running sketch — see the module docs
+    /// for the math.
+    fn fold_chunk(&mut self, n_old: usize, m: usize) {
+        let StreamClusterer { srht, buf, w, scratch, kernel, p, threads, n, .. } = self;
+        let srht = srht.as_ref().expect("fold requires a drawn operator");
+        let buf: &[f64] = buf;
+        let (p, threads) = ((*p).expect("points buffered"), parallel::resolve_threads(*threads).max(1));
+        let rp = srht.samples();
+        let n_new = *n;
+
+        // one padded kernel block K[:, new]: all current rows × the m
+        // new columns (padded rows stay zero)
+        let mut kb = Mat::zeros(srht.n, m);
+        {
+            let kernel = *kernel;
+            let live = &mut kb.data_mut()[..n_new * m];
+            parallel::for_each_row_chunk(live, m, threads, |first, rows| {
+                for (di, row) in rows.chunks_mut(m).enumerate() {
+                    let i = first + di;
+                    let xi = &buf[i * p..(i + 1) * p];
+                    for (c, slot) in row.iter_mut().enumerate() {
+                        let zc = &buf[(n_old + c) * p..(n_old + c + 1) * p];
+                        *slot = kernel.eval(xi, zc);
+                    }
+                }
+            });
+        }
+
+        // half 1: the new columns' own sketch rows, via the FWHT path
+        let rows = srht.apply_to_block_with(&kb, threads, scratch);
+        w.extend_from_slice(rows.data());
+
+        // half 2: fold the new columns into every existing row. By
+        // symmetry K[j, new_c] = kb[(j, c)], so no kernel re-evaluation;
+        // disjoint rows per worker + a fixed (c ascending, s ascending)
+        // per-entry order keep this bit-identical for any thread count.
+        if n_old > 0 {
+            // only the m × r' Ω block for the new rows is ever read here;
+            // tabulate it once instead of redoing the popcount-based
+            // omega_entry for every one of the n_old existing rows
+            // (same values, same (c asc, s asc) order ⇒ bit-identical)
+            let mut om = vec![0.0; m * rp];
+            for (c, orow) in om.chunks_mut(rp).enumerate() {
+                for (s, o) in orow.iter_mut().enumerate() {
+                    *o = srht.omega_entry(n_old + c, s);
+                }
+            }
+            let om = &om;
+            let w_old = &mut w[..n_old * rp];
+            parallel::for_each_row_chunk(w_old, rp, threads, |first, out| {
+                for (dj, wrow) in out.chunks_mut(rp).enumerate() {
+                    let j = first + dj;
+                    for c in 0..m {
+                        let kjc = kb[(j, c)];
+                        if kjc == 0.0 {
+                            continue;
+                        }
+                        let orow = &om[c * rp..(c + 1) * rp];
+                        for (ws, o) in wrow.iter_mut().zip(orow) {
+                            *ws += kjc * o;
+                        }
+                    }
+                }
+            });
+        }
+    }
+
+    /// Draw (or redraw) the SRHT at the capacity the current point count
+    /// demands and rebuild the whole sketch with one bulk pass over the
+    /// buffer. Draws come from a dedicated PCG stream of the master
+    /// seed, so the operator sequence is reproducible.
+    fn rebuild_operator(&mut self) {
+        let rp = self.sketch_width();
+        let cap = next_pow2(self.n.max(rp).max(self.capacity_hint.max(1)));
+        let rng = self
+            .srht_rng
+            .get_or_insert_with(|| Pcg64::seed_stream(self.seed, SRHT_STREAM));
+        let srht = Srht::draw(rng, cap, rp);
+
+        let StreamClusterer { buf, w, scratch, kernel, p, threads, n, batch, .. } = self;
+        let buf: &[f64] = buf;
+        let (p, threads) = ((*p).expect("points buffered"), parallel::resolve_threads(*threads).max(1));
+        let (n, batch, kernel) = (*n, *batch, *kernel);
+        w.clear();
+        w.reserve(n * rp);
+        let mut kb = Mat::zeros(srht.n, 0);
+        for cols in column_batches(n, batch) {
+            let b = cols.len();
+            if kb.cols() != b {
+                kb = Mat::zeros(srht.n, b);
+            }
+            let j0 = cols[0];
+            let live = &mut kb.data_mut()[..n * b];
+            parallel::for_each_row_chunk(live, b, threads, |first, rows| {
+                for (di, row) in rows.chunks_mut(b).enumerate() {
+                    let i = first + di;
+                    let xi = &buf[i * p..(i + 1) * p];
+                    for (c, slot) in row.iter_mut().enumerate() {
+                        let zc = &buf[(j0 + c) * p..(j0 + c + 1) * p];
+                        *slot = kernel.eval(xi, zc);
+                    }
+                }
+            });
+            let rows = srht.apply_to_block_with(&kb, threads, scratch);
+            w.extend_from_slice(rows.data());
+        }
+        self.srht = Some(srht);
+    }
+
+    /// Run recovery + K-means on the current sketch and return the
+    /// refreshed model (generation 0 — publishing through a registry
+    /// stamps the real one). The first refresh cold-starts K-means++
+    /// with the configured restarts; later refreshes warm-start one
+    /// Lloyd descent from the previous generation's assignment, re-based
+    /// into the *new* embedding (per-cluster means of the new embedding
+    /// columns grouped by the old labels), which is invariant to the
+    /// eigenbasis sign/rotation flips between refreshes.
+    pub fn refresh(&mut self) -> Result<FittedModel> {
+        let n = self.n;
+        let rp = self.sketch_width();
+        if n == 0 {
+            return Err(RkcError::invalid_config(
+                "refresh before any points were ingested",
+            ));
+        }
+        if self.k == 0 || self.rank == 0 {
+            return Err(RkcError::invalid_config(
+                "k and rank must both be at least 1",
+            ));
+        }
+        if self.k > n {
+            return Err(RkcError::invalid_config(format!(
+                "k={} clusters exceed the {n} points ingested so far",
+                self.k
+            )));
+        }
+        if rp > n {
+            return Err(RkcError::invalid_config(format!(
+                "sketch width r'={rp} exceeds the {n} points ingested so far"
+            )));
+        }
+        let threads = self.threads_resolved();
+        let srht = self.srht.as_ref().expect("points exist, so the operator does");
+        let n_pad = srht.n;
+
+        // wrap the accumulated rows as a complete one-pass sketch and
+        // run the batch recovery on it. from_rows takes the W matrix
+        // directly — one clone (streaming continues on self.w), no
+        // column-by-column re-ingest copy on the latency-measured path
+        let t0 = Instant::now();
+        let sketch =
+            OnePassSketch::from_rows(srht.clone(), Mat::from_vec(n, rp, self.w.clone()));
+        let embedding = one_pass_recovery_threaded(&sketch, self.rank, threads);
+        let recovery_time = t0.elapsed();
+
+        let kopts = KmeansOpts {
+            k: self.k,
+            restarts: self.kmeans_restarts,
+            max_iters: self.kmeans_iters,
+            tol: self.kmeans_tol,
+        };
+        let t1 = Instant::now();
+        let res = match self.prev_labels.as_deref() {
+            Some(prev) => {
+                let init = warm_centroids(&embedding.y, prev, self.k);
+                kmeans_warm_threaded(&embedding.y, &init, &kopts, threads)
+            }
+            None => {
+                let mut rng = Pcg64::seed_stream(
+                    self.seed,
+                    KMEANS_STREAM.wrapping_add(self.refreshes),
+                );
+                kmeans_threaded(&embedding.y, &kopts, &mut rng, threads)
+            }
+        };
+        let kmeans_time = t1.elapsed();
+
+        self.prev_labels = Some(res.labels.clone());
+        self.refreshes += 1;
+        let sketch_time = self.fold_time;
+        self.fold_time = Duration::ZERO;
+        self.points_since_refresh = 0;
+        self.last_refresh = Instant::now();
+
+        let p = self.p.expect("points buffered");
+        let buf = &self.buf;
+        let x = Mat::from_fn(p, n, |i, j| buf[j * p + i]);
+        Ok(FittedModel {
+            kernel: self.kernel,
+            k: self.k,
+            labels: res.labels,
+            assigner: Assigner::Embedded { centroids: res.centroids },
+            train_x: Some(x),
+            train_cols: OnceLock::new(),
+            generation: 0,
+            n_pad,
+            batch: self.batch,
+            metrics: FitMetrics {
+                method: "stream_one_pass".into(),
+                n,
+                rank: embedding.rank(),
+                objective: res.objective,
+                memory: MemoryModel::one_pass(n, n_pad, rp, self.rank, self.batch),
+                sketch_time,
+                recovery_time,
+                kmeans_time,
+            },
+            embedding: Some(embedding),
+        })
+    }
+
+    /// [`refresh`](Self::refresh) and atomically publish the result into
+    /// `registry` under `name`; returns the generation the registry
+    /// stamped. In-flight requests see the previous generation or this
+    /// one — never a mixture (see
+    /// [`ModelRegistry::publish`](crate::serve::ModelRegistry::publish)).
+    pub fn publish(&mut self, registry: &ModelRegistry, name: &str) -> Result<u64> {
+        let model = self.refresh()?;
+        registry.publish(name, model)
+    }
+}
+
+/// Warm-start centroids: per-cluster means of the new embedding's
+/// columns, grouped by the previous generation's labels (over the prefix
+/// both generations share). Rotation-invariant — old centroid
+/// *coordinates* are meaningless after the eigenbasis moves, but old
+/// *membership* transfers directly. Clusters with no previous members
+/// start at the origin and are repaired by the Lloyd loop's
+/// empty-cluster handling.
+fn warm_centroids(y: &Mat, prev: &[usize], k: usize) -> Mat {
+    let r = y.rows();
+    let shared = prev.len().min(y.cols());
+    let mut counts = vec![0usize; k];
+    let mut c = Mat::zeros(r, k);
+    for j in 0..shared {
+        let g = prev[j];
+        counts[g] += 1;
+        for i in 0..r {
+            c[(i, g)] += y[(i, j)];
+        }
+    }
+    for (g, &cnt) in counts.iter().enumerate() {
+        if cnt > 0 {
+            let inv = 1.0 / cnt as f64;
+            for i in 0..r {
+                c[(i, g)] *= inv;
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::accuracy;
+    use crate::data;
+
+    fn chunked(x: &Mat, width: usize) -> Vec<Mat> {
+        let (p, n) = (x.rows(), x.cols());
+        let mut out = Vec::new();
+        let mut j0 = 0;
+        while j0 < n {
+            let m = width.min(n - j0);
+            out.push(Mat::from_fn(p, m, |i, j| x[(i, j0 + j)]));
+            j0 += m;
+        }
+        out
+    }
+
+    /// Dense reference: W[j, s] = Σ_i K[j, i]·Ω[i, s] over the real
+    /// points only (padded rows of K are zero by construction).
+    fn dense_sketch(x: &Mat, kernel: Kernel, srht: &Srht) -> Mat {
+        let n = x.cols();
+        let rp = srht.samples();
+        let cols: Vec<Vec<f64>> = (0..n).map(|j| x.col(j)).collect();
+        let mut w = Mat::zeros(n, rp);
+        for j in 0..n {
+            for i in 0..n {
+                let kij = kernel.eval(&cols[i], &cols[j]);
+                for s in 0..rp {
+                    w[(j, s)] += kij * srht.omega_entry(i, s);
+                }
+            }
+        }
+        w
+    }
+
+    #[test]
+    fn incremental_fold_matches_dense_reference() {
+        let ds = data::gaussian_blobs(&mut Pcg64::seed(11), 90, 3, 3, 0.4);
+        let mut sc = StreamClusterer::new(3).oversample(5).seed(5).capacity(90);
+        for chunk in chunked(&ds.x, 17) {
+            sc.ingest(&chunk).unwrap();
+        }
+        let srht = sc.srht.as_ref().unwrap();
+        let reference = dense_sketch(&ds.x, sc.kernel, srht);
+        assert_eq!(sc.w.len(), reference.data().len());
+        let scale = reference.data().iter().fold(1.0f64, |a, v| a.max(v.abs()));
+        for (got, want) in sc.w.iter().zip(reference.data()) {
+            assert!(
+                (got - want).abs() <= 1e-9 * scale,
+                "fold diverged from dense sketch: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn capacity_regrowth_rebuilds_an_equivalent_sketch() {
+        // no capacity hint: 20 points fit in cap 32, the next 30 force a
+        // redraw at 64 — the rebuilt sketch must still match the dense
+        // reference under the *new* operator
+        let ds = data::gaussian_blobs(&mut Pcg64::seed(12), 50, 4, 2, 0.5);
+        let mut sc = StreamClusterer::new(2).oversample(4).seed(9);
+        for chunk in chunked(&ds.x, 10) {
+            sc.ingest(&chunk).unwrap();
+        }
+        let srht = sc.srht.as_ref().unwrap();
+        assert_eq!(srht.n, 64, "50 points should have forced a 64-cap redraw");
+        let reference = dense_sketch(&ds.x, sc.kernel, srht);
+        let scale = reference.data().iter().fold(1.0f64, |a, v| a.max(v.abs()));
+        for (got, want) in sc.w.iter().zip(reference.data()) {
+            assert!((got - want).abs() <= 1e-9 * scale);
+        }
+        // and a refresh on the regrown state still clusters
+        let model = sc.refresh().unwrap();
+        assert_eq!(model.labels().len(), 50);
+        assert_eq!(model.n_padded(), 64);
+    }
+
+    #[test]
+    fn published_generations_are_thread_count_invariant() {
+        let ds = data::cross_lines(&mut Pcg64::seed(21), 240);
+        let chunks = chunked(&ds.x, 60);
+        let run = |threads: usize| {
+            let mut sc = StreamClusterer::new(2)
+                .oversample(10)
+                .seed(33)
+                .threads(threads)
+                .capacity(240);
+            let mut models = Vec::new();
+            for chunk in &chunks {
+                sc.ingest(chunk).unwrap();
+                if sc.can_refresh() {
+                    models.push(sc.refresh().unwrap());
+                }
+            }
+            models
+        };
+        let base = run(1);
+        assert!(base.len() >= 2, "expected a cold and at least one warm refresh");
+        for threads in [2, 4, 7] {
+            let other = run(threads);
+            assert_eq!(base.len(), other.len());
+            for (a, b) in base.iter().zip(&other) {
+                assert_eq!(a.labels(), b.labels(), "threads={threads}");
+                let (ea, eb) = (a.embedding().unwrap(), b.embedding().unwrap());
+                assert_eq!(ea.y.data(), eb.y.data(), "threads={threads}");
+                assert_eq!(ea.eigenvalues, eb.eigenvalues, "threads={threads}");
+                assert_eq!(
+                    a.centroids().unwrap().data(),
+                    b.centroids().unwrap().data(),
+                    "threads={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn refresh_policy_triggers() {
+        let ds = data::gaussian_blobs(&mut Pcg64::seed(13), 60, 3, 2, 0.3);
+        let chunks = chunked(&ds.x, 20);
+        // on-demand stream: never due by itself
+        let mut demand = StreamClusterer::new(2).seed(1).capacity(60);
+        demand.ingest(&chunks[0]).unwrap();
+        assert!(!demand.refresh_due());
+        // point-count policy
+        let mut byn = StreamClusterer::new(2)
+            .seed(1)
+            .capacity(60)
+            .refresh_every_points(40);
+        byn.ingest(&chunks[0]).unwrap();
+        assert!(!byn.refresh_due(), "20 < 40 points");
+        byn.ingest(&chunks[1]).unwrap();
+        assert!(byn.refresh_due(), "40 >= 40 points");
+        byn.refresh().unwrap();
+        assert!(!byn.refresh_due(), "counter resets on refresh");
+        // wall-time policy: a zero-ish interval is due as soon as
+        // anything new arrived
+        let mut byt = StreamClusterer::new(2)
+            .seed(1)
+            .capacity(60)
+            .refresh_every(Duration::from_nanos(1));
+        byt.ingest(&chunks[0]).unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(byt.refresh_due());
+    }
+
+    #[test]
+    fn warm_refresh_tracks_the_stream_accurately() {
+        let ds = data::cross_lines(&mut Pcg64::seed(30), 300);
+        let mut sc = StreamClusterer::new(2).oversample(10).seed(8).capacity(300);
+        let mut seen = 0usize;
+        for chunk in chunked(&ds.x, 100) {
+            sc.ingest(&chunk).unwrap();
+            seen += chunk.cols();
+            let model = sc.refresh().unwrap();
+            let acc = accuracy(model.labels(), &ds.labels[..seen], 2);
+            assert!(acc > 0.9, "generation at n={seen} has accuracy {acc}");
+            assert_eq!(model.metrics().method, "stream_one_pass");
+        }
+        assert_eq!(sc.refreshes(), 3);
+    }
+
+    #[test]
+    fn refreshed_models_roundtrip_and_predict_out_of_sample() {
+        let ds = data::cross_lines(&mut Pcg64::seed(40), 200);
+        let mut sc = StreamClusterer::new(2).oversample(10).seed(4).capacity(200);
+        sc.ingest(&ds.x).unwrap();
+        let model = sc.refresh().unwrap();
+        let novel = data::cross_lines(&mut Pcg64::seed(41), 32);
+        let direct = model.predict(&novel.x).unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("rkc_stream_model_{}.rkc", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        model.save(&path).unwrap();
+        let back = FittedModel::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.predict(&novel.x).unwrap(), direct);
+        assert_eq!(back.labels(), model.labels());
+    }
+
+    #[test]
+    fn publish_stamps_monotone_generations_into_the_registry() {
+        use crate::serve::{ModelRegistry, ServeOpts};
+        let ds = data::gaussian_blobs(&mut Pcg64::seed(50), 120, 3, 3, 0.3);
+        let registry = ModelRegistry::new(ServeOpts::default());
+        let mut sc = StreamClusterer::new(3).oversample(5).seed(2).capacity(120);
+        let mut generation = 0;
+        for chunk in chunked(&ds.x, 40) {
+            sc.ingest(&chunk).unwrap();
+            generation = sc.publish(&registry, "stream").unwrap();
+        }
+        assert_eq!(generation, 3);
+        let info = registry
+            .list()
+            .into_iter()
+            .find(|i| i.name == "stream")
+            .expect("published model listed");
+        assert_eq!(info.generation, 3);
+        assert_eq!(info.n_train, 120);
+    }
+
+    #[test]
+    fn ingest_and_refresh_reject_bad_shapes() {
+        let mut sc = StreamClusterer::new(2);
+        assert!(sc.refresh().is_err(), "refresh before any ingest");
+        assert!(sc.ingest(&Mat::zeros(3, 0)).is_err(), "empty chunk");
+        sc.ingest(&Mat::zeros(3, 4)).unwrap();
+        assert!(sc.ingest(&Mat::zeros(2, 4)).is_err(), "dimension change");
+        // 4 points < r' = 7
+        assert!(!sc.can_refresh());
+        assert!(sc.refresh().is_err());
+    }
+}

@@ -1,0 +1,184 @@
+//! Hot-swap contract of the streaming subsystem: while `StreamClusterer`
+//! keeps publishing refreshed generations into a live `ModelRegistry`,
+//! every concurrent HTTP client response is bit-identical to **exactly
+//! one** published generation — never a blend of two, never a torn
+//! model. Generations observed over the wire are monotone
+//! non-decreasing, and the counters (`generation`, `queue_highwater`)
+//! surface in `GET /models/{name}` and `/healthz`.
+//!
+//! The harness exploits that the main thread is the only publisher: the
+//! expected response body for generation g is snapshotted immediately
+//! after publishing g (no publish can intervene), so the set of
+//! snapshots is the exact universe of legal responses.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use rkc::bench_harness::MiniHttpClient;
+use rkc::data;
+use rkc::linalg::Mat;
+use rkc::rng::Pcg64;
+use rkc::serve::{serve_http_registry, HttpOpts, ModelRegistry, ServeOpts};
+use rkc::stream::StreamClusterer;
+use rkc::util::Json;
+
+fn points_json(x: &Mat) -> String {
+    let pts: Vec<Json> = (0..x.cols())
+        .map(|j| Json::Arr((0..x.rows()).map(|i| Json::Num(x[(i, j)])).collect()))
+        .collect();
+    Json::Obj(BTreeMap::from([("points".to_string(), Json::Arr(pts))])).to_string()
+}
+
+fn column_slice(x: &Mat, lo: usize, m: usize) -> Mat {
+    Mat::from_fn(x.rows(), m, |i, j| x[(i, lo + j)])
+}
+
+/// One `Connection: close` request, so snapshots never interleave with
+/// the keep-alive observers' connections.
+fn fetch(addr: std::net::SocketAddr, method: &str, path: &str, body: &str) -> String {
+    let mut c = MiniHttpClient::connect(addr);
+    let (status, resp) = c.request_with(method, path, body, true);
+    assert_eq!(status, 200, "{method} {path}: {resp}");
+    resp
+}
+
+#[test]
+fn concurrent_clients_see_exactly_one_published_generation_per_response() {
+    let ds = data::cross_lines(&mut Pcg64::seed(101), 240);
+    let chunk = 60;
+    let mut sc = StreamClusterer::new(2)
+        .oversample(8)
+        .seed(33)
+        .threads(0)
+        .capacity(ds.x.cols());
+
+    let registry = Arc::new(ModelRegistry::new(ServeOpts::default()));
+    let http = serve_http_registry(
+        Arc::clone(&registry),
+        "127.0.0.1:0",
+        HttpOpts { workers: 6, ..Default::default() },
+    )
+    .unwrap();
+    let addr = http.local_addr();
+    let query = data::cross_lines(&mut Pcg64::seed(102), 7).x;
+    let body = points_json(&query);
+
+    // generation 1 is live before any traffic starts
+    sc.ingest(&column_slice(&ds.x, 0, chunk)).unwrap();
+    assert_eq!(sc.publish(&registry, "stream").unwrap(), 1);
+    let mut expected = vec![fetch(addr, "POST", "/models/stream/embed", &body)];
+
+    let stop = AtomicBool::new(false);
+    let (observed, last_polled) = std::thread::scope(|s| {
+        let observers: Vec<_> = (0..3)
+            .map(|_| {
+                let (stop, body) = (&stop, &body);
+                s.spawn(move || {
+                    let mut c = MiniHttpClient::connect(addr);
+                    let mut seen = Vec::new();
+                    while !stop.load(Ordering::Relaxed) {
+                        let (status, resp) =
+                            c.request("POST", "/models/stream/embed", body);
+                        assert_eq!(status, 200, "{resp}");
+                        seen.push(resp);
+                    }
+                    seen
+                })
+            })
+            .collect();
+        // a fourth client watches the generation counter for monotonicity
+        let poller = {
+            let stop = &stop;
+            s.spawn(move || {
+                let mut c = MiniHttpClient::connect(addr);
+                let mut last = 0.0_f64;
+                while !stop.load(Ordering::Relaxed) {
+                    let (status, resp) = c.request("GET", "/models/stream", "");
+                    assert_eq!(status, 200, "{resp}");
+                    let info = Json::parse(&resp).unwrap();
+                    let g = info.get("generation").unwrap().as_f64().unwrap();
+                    assert!(
+                        g >= last,
+                        "generation went backwards over the wire: {last} -> {g}"
+                    );
+                    assert!(
+                        info.get("queue_highwater").unwrap().as_f64().is_some(),
+                        "{resp}"
+                    );
+                    last = g;
+                }
+                last
+            })
+        };
+
+        // three more generations hot-swap in under live traffic; each
+        // expected body is snapshotted while its generation is current
+        for round in 1..4 {
+            sc.ingest(&column_slice(&ds.x, round * chunk, chunk)).unwrap();
+            let g = sc.publish(&registry, "stream").unwrap();
+            assert_eq!(g, round as u64 + 1);
+            expected.push(fetch(addr, "POST", "/models/stream/embed", &body));
+        }
+        stop.store(true, Ordering::Relaxed);
+
+        let mut observed = Vec::new();
+        for o in observers {
+            observed.extend(o.join().unwrap());
+        }
+        (observed, poller.join().unwrap())
+    });
+    assert_eq!(expected.len(), 4);
+
+    // the generations are genuinely different models (different n_train
+    // ⇒ different embeddings), so "matches exactly one" is meaningful
+    for a in 0..expected.len() {
+        for b in a + 1..expected.len() {
+            assert_ne!(
+                expected[a], expected[b],
+                "generations {a} and {b} must answer differently"
+            );
+        }
+    }
+    assert!(!observed.is_empty(), "observers made no requests");
+    for resp in &observed {
+        assert!(
+            expected.contains(resp),
+            "a concurrent response matches NO published generation (torn swap?): {resp}"
+        );
+    }
+    assert!(last_polled <= 4.0, "polled generation beyond the publish count");
+
+    // final registry + health state: generation == publish count
+    let info = Json::parse(&fetch(addr, "GET", "/models/stream", "")).unwrap();
+    assert_eq!(info.get("generation").unwrap().as_f64().unwrap(), 4.0);
+    assert_eq!(info.get("n_train").unwrap().as_f64().unwrap(), 240.0);
+    let health = Json::parse(&fetch(addr, "GET", "/healthz", "")).unwrap();
+    assert_eq!(health.get("status").unwrap().as_str().unwrap(), "ok");
+    assert_eq!(health.get("generation").unwrap().as_f64().unwrap(), 4.0);
+
+    http.shutdown();
+}
+
+#[test]
+fn republish_after_unload_does_not_reuse_generations() {
+    // the per-name generation counter survives unload, so a client that
+    // cached "generation 2" can never see a *different* model under the
+    // same (name, generation) pair later
+    let ds = data::cross_lines(&mut Pcg64::seed(103), 120);
+    let mut sc = StreamClusterer::new(2).oversample(8).seed(9).capacity(120);
+    let registry = Arc::new(ModelRegistry::new(ServeOpts::default()));
+
+    sc.ingest(&column_slice(&ds.x, 0, 60)).unwrap();
+    assert_eq!(sc.publish(&registry, "stream").unwrap(), 1);
+    assert_eq!(sc.publish(&registry, "stream").unwrap(), 2);
+    assert!(registry.unload("stream"));
+    sc.ingest(&column_slice(&ds.x, 60, 60)).unwrap();
+    assert_eq!(
+        sc.publish(&registry, "stream").unwrap(),
+        3,
+        "generation counter must survive unload"
+    );
+    let info = registry.info("stream").unwrap();
+    assert_eq!(info.generation, 3);
+}

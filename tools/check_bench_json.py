@@ -56,6 +56,11 @@ REQUIRED = {
         "bench", "n_train", "clients", "requests_per_s", "p50_ms", "p95_ms",
         "p99_ms",
     ],
+    "BENCH_stream.json": [
+        "bench", "scenario", "n_total", "chunk", "refreshes",
+        "refresh_p50_ms", "refresh_p95_ms", "acc_stream", "acc_refit",
+        "acc_lag",
+    ],
 }
 
 # the key timing fields the baseline records / compares, per file (row 0
@@ -70,6 +75,8 @@ KEY_TIMINGS = {
     "BENCH_fig3.json": ["accuracy"],
     "BENCH_memory.json": ["persistent_bytes"],
     "BENCH_serve.json": ["requests_per_s", "p50_ms", "p95_ms"],
+    # row 0 is the moving_blobs scenario
+    "BENCH_stream.json": ["refresh_p50_ms", "refresh_p95_ms", "acc_lag"],
 }
 
 # warn (never fail) when a compared value drifts beyond this
