@@ -27,12 +27,12 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use rkc::api::KernelClusterer;
-use rkc::bench_harness::MiniHttpClient;
+use rkc::bench_harness::{latency_summary, MiniHttpClient};
 use rkc::data;
 use rkc::linalg::Mat;
 use rkc::rng::Pcg64;
 use rkc::serve::{serve_http_registry, HttpOpts, ModelRegistry, ServeOpts};
-use rkc::util::{percentile, Json};
+use rkc::util::Json;
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -85,14 +85,15 @@ fn record(
 ) -> Json {
     let total_reqs = (clients * reqs) as f64;
     let total_points = total_reqs * points_per_req as f64;
-    let p50_ms = percentile(latencies_s, 50.0) * 1e3;
-    let p95_ms = percentile(latencies_s, 95.0) * 1e3;
-    let p99_ms = percentile(latencies_s, 99.0) * 1e3;
+    let lat = latency_summary(latencies_s);
     println!(
         "serve[{mode}] n={n} clients={clients} reqs/client={reqs} points/req={points_per_req}: \
-         {:.0} req/s | {:.0} points/s | p50 {p50_ms:.2}ms p95 {p95_ms:.2}ms p99 {p99_ms:.2}ms",
+         {:.0} req/s | {:.0} points/s | p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms",
         total_reqs / wall_s,
         total_points / wall_s,
+        lat.p50_ms,
+        lat.p95_ms,
+        lat.p99_ms,
     );
     let mut fields = BTreeMap::from([
         ("bench".to_string(), Json::Str("serve".to_string())),
@@ -104,10 +105,8 @@ fn record(
         ("wall_s".to_string(), Json::finite_num(wall_s)),
         ("requests_per_s".to_string(), Json::finite_num(total_reqs / wall_s)),
         ("points_per_s".to_string(), Json::finite_num(total_points / wall_s)),
-        ("p50_ms".to_string(), Json::finite_num(p50_ms)),
-        ("p95_ms".to_string(), Json::finite_num(p95_ms)),
-        ("p99_ms".to_string(), Json::finite_num(p99_ms)),
     ]);
+    fields.extend(lat.json_fields(""));
     fields.extend(extra);
     Json::Obj(fields)
 }

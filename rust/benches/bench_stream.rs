@@ -25,11 +25,12 @@ use std::collections::BTreeMap;
 use std::time::Instant;
 
 use rkc::api::KernelClusterer;
+use rkc::bench_harness::latency_summary;
 use rkc::clustering::accuracy;
 use rkc::data::DriftStream;
 use rkc::linalg::Mat;
 use rkc::stream::StreamClusterer;
-use rkc::util::{percentile, Json};
+use rkc::util::Json;
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -92,31 +93,32 @@ fn run_scenario(
     let refit_s = t_refit.elapsed().as_secs_f64();
     let acc_refit = accuracy(refit.labels(), &truth, k);
 
-    let p50_ms = percentile(&refresh_s, 50.0) * 1e3;
-    let p95_ms = percentile(&refresh_s, 95.0) * 1e3;
+    let lat = latency_summary(&refresh_s);
     println!(
         "stream[{scenario}] n={n_total} chunk={chunk} refreshes={}: \
-         refresh p50 {p50_ms:.1}ms p95 {p95_ms:.1}ms | \
+         refresh p50 {:.1}ms p95 {:.1}ms | \
          acc stream {acc_stream:.3} vs refit {acc_refit:.3} (lag {:+.3}) | \
          stream wall {wall_s:.2}s, one refit {refit_s:.2}s",
         refresh_s.len(),
+        lat.p50_ms,
+        lat.p95_ms,
         acc_refit - acc_stream,
     );
-    Json::Obj(BTreeMap::from([
-            ("bench".to_string(), Json::Str("stream".to_string())),
-            ("scenario".to_string(), Json::Str(scenario.to_string())),
-            ("n_total".to_string(), Json::Num(n_total as f64)),
-            ("chunk".to_string(), Json::Num(chunk as f64)),
-            ("refresh_every_points".to_string(), Json::Num(refresh_points as f64)),
-            ("refreshes".to_string(), Json::Num(refresh_s.len() as f64)),
-            ("refresh_p50_ms".to_string(), Json::finite_num(p50_ms)),
-            ("refresh_p95_ms".to_string(), Json::finite_num(p95_ms)),
-            ("acc_stream".to_string(), Json::finite_num(acc_stream)),
-            ("acc_refit".to_string(), Json::finite_num(acc_refit)),
-            ("acc_lag".to_string(), Json::finite_num(acc_refit - acc_stream)),
-            ("wall_s".to_string(), Json::finite_num(wall_s)),
-            ("refit_s".to_string(), Json::finite_num(refit_s)),
-    ]))
+    let mut fields = BTreeMap::from([
+        ("bench".to_string(), Json::Str("stream".to_string())),
+        ("scenario".to_string(), Json::Str(scenario.to_string())),
+        ("n_total".to_string(), Json::Num(n_total as f64)),
+        ("chunk".to_string(), Json::Num(chunk as f64)),
+        ("refresh_every_points".to_string(), Json::Num(refresh_points as f64)),
+        ("refreshes".to_string(), Json::Num(refresh_s.len() as f64)),
+        ("acc_stream".to_string(), Json::finite_num(acc_stream)),
+        ("acc_refit".to_string(), Json::finite_num(acc_refit)),
+        ("acc_lag".to_string(), Json::finite_num(acc_refit - acc_stream)),
+        ("wall_s".to_string(), Json::finite_num(wall_s)),
+        ("refit_s".to_string(), Json::finite_num(refit_s)),
+    ]);
+    fields.extend(lat.json_fields("refresh_"));
+    Json::Obj(fields)
 }
 
 fn main() {

@@ -34,9 +34,16 @@ impl MiniHttpClient {
     /// Connect with a 10 s read timeout, so a server that wrongly stops
     /// responding fails the caller instead of hanging it.
     pub fn connect(addr: SocketAddr) -> Self {
-        let stream = TcpStream::connect(addr).expect("connecting to the serve front-end");
-        stream.set_read_timeout(Some(Duration::from_secs(10))).expect("set read timeout");
-        MiniHttpClient { stream }
+        Self::try_connect(addr).expect("connecting to the serve front-end")
+    }
+
+    /// Non-panicking `connect`: `None` when the dial itself fails
+    /// (refused, OS backlog overflow). Load replays count that as a
+    /// dropped attempt instead of aborting the run.
+    pub fn try_connect(addr: SocketAddr) -> Option<Self> {
+        let stream = TcpStream::connect(addr).ok()?;
+        stream.set_read_timeout(Some(Duration::from_secs(10))).ok()?;
+        Some(MiniHttpClient { stream })
     }
 
     /// Write raw bytes (hand-framed requests for malformed-input tests).
@@ -57,19 +64,60 @@ impl MiniHttpClient {
         body: &str,
         close: bool,
     ) -> (u16, String) {
-        let connection = if close { "Connection: close\r\n" } else { "" };
-        let req = format!(
-            "{method} {path} HTTP/1.1\r\nHost: rkc\r\nContent-Type: application/json\r\n\
-             {connection}Content-Length: {}\r\n\r\n{body}",
-            body.len()
-        );
-        self.send_raw(req.as_bytes());
+        self.send_raw(frame_request(method, path, body, close).as_bytes());
         self.read_response().expect("server closed instead of responding")
     }
 
     /// Read one Content-Length-framed response; `None` on a clean close
     /// before any byte arrived.
     pub fn read_response(&mut self) -> Option<(u16, String)> {
+        match self.read_response_impl() {
+            Ok(resp) => resp,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Non-panicking `send_raw`: false when the socket refuses the
+    /// write (the peer reset or closed it). For fault-injection traffic
+    /// where broken connections are the point, not a bug.
+    pub fn try_send_raw(&mut self, bytes: &[u8]) -> bool {
+        self.stream.write_all(bytes).is_ok()
+    }
+
+    /// Non-panicking request/response pair: `None` on any transport or
+    /// framing failure instead of a panic, so load replays can count a
+    /// dead connection and move on.
+    pub fn try_request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &str,
+        close: bool,
+    ) -> Option<(u16, String)> {
+        if !self.try_send_raw(frame_request(method, path, body, close).as_bytes()) {
+            return None;
+        }
+        self.try_read_response()
+    }
+
+    /// Non-panicking `read_response`: `None` on close, reset, timeout,
+    /// or a malformed head.
+    pub fn try_read_response(&mut self) -> Option<(u16, String)> {
+        self.read_response_impl().ok().flatten()
+    }
+
+    /// Wait up to `timeout` for a response the server pushed WITHOUT a
+    /// request — the shed 503 a full connection queue writes at accept.
+    /// `None` means nothing arrived (the connection was admitted and is
+    /// still usable). Restores the default 10 s read timeout afterwards.
+    pub fn probe(&mut self, timeout: Duration) -> Option<(u16, String)> {
+        let _ = self.stream.set_read_timeout(Some(timeout));
+        let got = self.read_response_impl().ok().flatten();
+        let _ = self.stream.set_read_timeout(Some(Duration::from_secs(10)));
+        got
+    }
+
+    fn read_response_impl(&mut self) -> Result<Option<(u16, String)>, String> {
         let mut buf: Vec<u8> = Vec::with_capacity(1024);
         let mut chunk = [0u8; 4096];
         let head_end = loop {
@@ -77,21 +125,20 @@ impl MiniHttpClient {
                 break p;
             }
             match self.stream.read(&mut chunk) {
-                Ok(0) => {
-                    assert!(buf.is_empty(), "connection closed mid-response-head");
-                    return None;
-                }
+                Ok(0) if buf.is_empty() => return Ok(None),
+                Ok(0) => return Err("connection closed mid-response-head".to_string()),
                 Ok(n) => buf.extend_from_slice(&chunk[..n]),
-                Err(e) => panic!("reading response head: {e}"),
+                Err(e) => return Err(format!("reading response head: {e}")),
             }
         };
-        let head = std::str::from_utf8(&buf[..head_end]).expect("response head is UTF-8");
+        let head = std::str::from_utf8(&buf[..head_end])
+            .map_err(|_| "response head is not UTF-8".to_string())?;
         let status: u16 = head
             .split_whitespace()
             .nth(1)
-            .expect("status line")
+            .ok_or_else(|| "response is missing its status line".to_string())?
             .parse()
-            .expect("numeric status");
+            .map_err(|_| "non-numeric response status".to_string())?;
         let content_length: usize = head
             .lines()
             .find_map(|l| {
@@ -102,14 +149,16 @@ impl MiniHttpClient {
                     None
                 }
             })
-            .expect("content-length header");
+            .ok_or_else(|| "response is missing content-length".to_string())?;
         let total = head_end + 4 + content_length;
         while buf.len() < total {
-            let n = self.stream.read(&mut chunk).expect("reading response body");
-            assert!(n > 0, "connection closed mid-response-body");
-            buf.extend_from_slice(&chunk[..n]);
+            match self.stream.read(&mut chunk) {
+                Ok(0) => return Err("connection closed mid-response-body".to_string()),
+                Ok(n) => buf.extend_from_slice(&chunk[..n]),
+                Err(e) => return Err(format!("reading response body: {e}")),
+            }
         }
-        Some((status, String::from_utf8_lossy(&buf[head_end + 4..total]).to_string()))
+        Ok(Some((status, String::from_utf8_lossy(&buf[head_end + 4..total]).to_string())))
     }
 
     /// Assert the server closes this connection (after draining
@@ -123,6 +172,67 @@ impl MiniHttpClient {
                 Err(e) => panic!("expected a clean close, got {e}"),
             }
         }
+    }
+}
+
+fn frame_request(method: &str, path: &str, body: &str, close: bool) -> String {
+    let connection = if close { "Connection: close\r\n" } else { "" };
+    format!(
+        "{method} {path} HTTP/1.1\r\nHost: rkc\r\nContent-Type: application/json\r\n\
+         {connection}Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+}
+
+/// Percentile summary of per-request latencies, in milliseconds — the
+/// single implementation behind `bench_serve`, `bench_stream`, and the
+/// experiment load replayer (each used to hand-roll the same
+/// `percentile(..) * 1e3` math).
+#[derive(Clone, Copy, Debug)]
+pub struct LatencySummary {
+    pub count: usize,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+}
+
+impl LatencySummary {
+    /// The `{prefix}p50_ms` / `{prefix}p95_ms` / `{prefix}p99_ms` /
+    /// `{prefix}mean_ms` JSON fields every latency row shares
+    /// (`BENCH_serve.json` rows use no prefix, `BENCH_stream.json` rows
+    /// use `refresh_`). Non-finite values — the empty-sample case —
+    /// serialize as `null`.
+    pub fn json_fields(&self, prefix: &str) -> Vec<(String, Json)> {
+        vec![
+            (format!("{prefix}p50_ms"), Json::finite_num(self.p50_ms)),
+            (format!("{prefix}p95_ms"), Json::finite_num(self.p95_ms)),
+            (format!("{prefix}p99_ms"), Json::finite_num(self.p99_ms)),
+            (format!("{prefix}mean_ms"), Json::finite_num(self.mean_ms)),
+        ]
+    }
+}
+
+/// Summarize latencies measured in SECONDS (what `Instant::elapsed`
+/// yields) into milliseconds. An empty sample yields `count == 0` and
+/// NaN statistics rather than panicking, so a scenario in which every
+/// request died still produces a row.
+pub fn latency_summary(latencies_s: &[f64]) -> LatencySummary {
+    if latencies_s.is_empty() {
+        return LatencySummary {
+            count: 0,
+            p50_ms: f64::NAN,
+            p95_ms: f64::NAN,
+            p99_ms: f64::NAN,
+            mean_ms: f64::NAN,
+        };
+    }
+    LatencySummary {
+        count: latencies_s.len(),
+        p50_ms: percentile(latencies_s, 50.0) * 1e3,
+        p95_ms: percentile(latencies_s, 95.0) * 1e3,
+        p99_ms: percentile(latencies_s, 99.0) * 1e3,
+        mean_ms: mean(latencies_s) * 1e3,
     }
 }
 
@@ -252,6 +362,41 @@ mod tests {
     fn bench_for_respects_min_iters() {
         let r = bench_for("noop", 0.0, 3, || 42);
         assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn latency_summary_converts_seconds_to_ms() {
+        // 1..=100 ms; rank = round(p/100 * 99) lands on exact samples
+        let lat_s: Vec<f64> = (1..=100).map(|i| i as f64 * 1e-3).collect();
+        let s = latency_summary(&lat_s);
+        assert_eq!(s.count, 100);
+        assert!((s.p50_ms - 51.0).abs() < 1e-9);
+        assert!((s.p95_ms - 95.0).abs() < 1e-9);
+        assert!((s.p99_ms - 99.0).abs() < 1e-9);
+        assert!((s.mean_ms - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_summary_empty_is_nan_not_panic() {
+        let s = latency_summary(&[]);
+        assert_eq!(s.count, 0);
+        assert!(s.p50_ms.is_nan() && s.p95_ms.is_nan() && s.p99_ms.is_nan());
+        // finite_num turns those NaNs into null in the JSON row
+        for (key, value) in s.json_fields("refresh_") {
+            assert!(key.starts_with("refresh_"));
+            assert_eq!(value.to_string(), "null");
+        }
+    }
+
+    #[test]
+    fn latency_json_fields_use_prefix_and_finite_values() {
+        let s = latency_summary(&[0.002, 0.004, 0.006]);
+        let fields = s.json_fields("");
+        assert_eq!(fields.len(), 4);
+        assert_eq!(fields[0].0, "p50_ms");
+        assert_eq!(fields[0].1.to_string(), "4");
+        assert_eq!(fields[3].0, "mean_ms");
+        assert_eq!(fields[3].1.to_string(), "4");
     }
 
     #[test]

@@ -546,6 +546,44 @@ pub fn cmd_stream(cfg: &ExperimentConfig, data_csv: Option<&str>) -> Result<()> 
     Ok(())
 }
 
+/// `rkc experiment --plan plans/foo.plan [--out results.jsonl]`: run a
+/// declarative grid or load-scenario plan (see `rkc::experiment`) and
+/// write its JSONL report. `--threads` sets the grid runner's
+/// parallelism only — per-trial thread counts come from the plan.
+pub fn cmd_experiment(cfg: &ExperimentConfig) -> Result<()> {
+    use rkc::error::RkcError;
+
+    if cfg.plan_path.is_empty() {
+        return Err(RkcError::invalid_config("experiment needs --plan <file.plan>"));
+    }
+    let text = std::fs::read_to_string(&cfg.plan_path)
+        .map_err(|e| RkcError::io(format!("reading plan {}", cfg.plan_path), e))?;
+    let t0 = Instant::now();
+    let report = rkc::experiment::run_plan_text(&text, cfg.threads)?;
+    let out = if cfg.out_path.is_empty() {
+        // exp_<stem>.jsonl: the exp_* prefix is what CI globs for the
+        // artifact upload next to BENCH_*.json
+        let stem = std::path::Path::new(&cfg.plan_path)
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("experiment");
+        format!("exp_{stem}.jsonl")
+    } else {
+        cfg.out_path.clone()
+    };
+    std::fs::write(&out, &report.jsonl).map_err(|e| RkcError::io(format!("writing {out}"), e))?;
+    println!(
+        "experiment: {} ({} plan, hash {:016x}) -> {} row(s) in {} [{:.2}s]",
+        cfg.plan_path,
+        report.kind,
+        report.plan_hash,
+        report.rows,
+        out,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
 pub fn cmd_artifacts(registry: Option<&ArtifactRegistry>) -> Result<()> {
     match registry {
         None => println!("no artifacts/ directory (run `make artifacts`)"),

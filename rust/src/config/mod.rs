@@ -168,6 +168,12 @@ pub struct ExperimentConfig {
     /// `stream` subcommand starts the registry front-end on
     /// [`serve_addr`](ExperimentConfig::serve_addr))
     pub stream_http: bool,
+    /// `.plan` file the `experiment` subcommand runs (grid or load
+    /// kind; see [`crate::experiment::Plan`])
+    pub plan_path: String,
+    /// where the `experiment` subcommand writes its JSONL report;
+    /// empty means `exp_<plan stem>.jsonl` in the working directory
+    pub out_path: String,
 }
 
 impl Default for ExperimentConfig {
@@ -203,6 +209,8 @@ impl Default for ExperimentConfig {
             scenario: String::new(),
             drift: 0.05,
             stream_http: false,
+            plan_path: String::new(),
+            out_path: String::new(),
         }
     }
 }
@@ -297,6 +305,8 @@ impl ExperimentConfig {
                 self.stream_http =
                     value.parse().map_err(|_| RkcError::parse("stream_http", value))?;
             }
+            "plan" | "plan_path" => self.plan_path = value.into(),
+            "out" | "out_path" => self.out_path = value.into(),
             "method" => self.method = value.parse()?,
             "backend" => self.backend = value.parse()?,
             "kernel" => self.kernel = value.parse()?,
@@ -360,6 +370,8 @@ mod tests {
         assert_eq!(c.scenario, "");
         assert_eq!(c.drift, 0.05);
         assert!(!c.stream_http);
+        assert_eq!(c.plan_path, "");
+        assert_eq!(c.out_path, "");
         // artifacts-dir-driven model path when no explicit override
         assert_eq!(c.resolved_model_path(), "artifacts/model.rkc");
         let t = ExperimentConfig::table1();
@@ -410,6 +422,10 @@ mod tests {
         assert_eq!(c.refresh_secs, 2.5);
         c.set("scenario", "label_churn").unwrap();
         assert_eq!(c.scenario, "label_churn");
+        c.set("plan", "plans/smoke.plan").unwrap();
+        assert_eq!(c.plan_path, "plans/smoke.plan");
+        c.set("out", "results.jsonl").unwrap();
+        assert_eq!(c.out_path, "results.jsonl");
         c.set("drift", "0.3").unwrap();
         assert_eq!(c.drift, 0.3);
         c.set("stream_http", "true").unwrap();

@@ -1,0 +1,250 @@
+//! Grid expansion and the deterministic trial runner.
+//!
+//! [`expand`] turns a [`GridPlan`] into the full cartesian product of
+//! its axes (a fixed nesting order, so trial indices are stable), and
+//! [`trial_seed`] derives every trial's RNG seed purely from the plan
+//! seed and the trial's coordinates — NOT from its position in the
+//! expansion or the thread that happens to run it. That is the whole
+//! determinism argument: reordering axis values, re-running, or raising
+//! the runner's parallelism cannot change any trial's inputs, so the
+//! emitted JSONL is byte-identical (with `timings false`) across all of
+//! them. `rust/tests/experiment_golden.rs` pins this end to end.
+
+use std::collections::BTreeMap;
+
+use crate::config::{ExperimentConfig, Method};
+use crate::coordinator::{build_dataset, run_experiment, RunOutcome};
+use crate::data::Dataset;
+use crate::error::Result;
+use crate::kernels::Kernel;
+use crate::util::parallel::{map_indexed, resolve_threads};
+use crate::util::Json;
+
+use super::plan::GridPlan;
+use super::PlanReport;
+
+/// One fully-specified grid point: every axis pinned plus the derived
+/// per-trial seed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trial {
+    /// position in the expansion (row order in the JSONL)
+    pub index: usize,
+    pub dataset: String,
+    pub n: usize,
+    pub method: Method,
+    pub kernel: Kernel,
+    pub rank: usize,
+    pub oversample: usize,
+    pub threads: usize,
+    pub repeat: usize,
+    /// derived via [`trial_seed`] — a pure function of the coordinates
+    pub seed: u64,
+}
+
+/// Derive a trial's seed from the plan seed and its coordinates by
+/// hashing their canonical spec strings (FNV-1a 64, the same checksum
+/// the `.rkc` model format trails with). Coordinates, not positions:
+/// permuting an axis's value order moves a trial in the expansion but
+/// never changes its seed.
+#[allow(clippy::too_many_arguments)]
+pub fn trial_seed(
+    plan_seed: u64,
+    dataset: &str,
+    n: usize,
+    method: Method,
+    kernel: Kernel,
+    rank: usize,
+    oversample: usize,
+    threads: usize,
+    repeat: usize,
+) -> u64 {
+    let coords = format!(
+        "{plan_seed}|{dataset}|{n}|{method}|{kernel}|{rank}|{oversample}|{threads}|{repeat}"
+    );
+    crate::model_io::checksum(coords.as_bytes())
+}
+
+/// Expand the grid in its fixed nesting order (dataset → n → method →
+/// kernel → rank → oversample → threads → repeat). The trial count is
+/// exactly the product of the axis lengths times `repeats`.
+pub fn expand(plan: &GridPlan) -> Vec<Trial> {
+    let mut trials = Vec::new();
+    for dataset in &plan.datasets {
+        for &n in &plan.ns {
+            for &method in &plan.methods {
+                for &kernel in &plan.kernels {
+                    for &rank in &plan.ranks {
+                        for &oversample in &plan.oversamples {
+                            for &threads in &plan.threads {
+                                for repeat in 0..plan.repeats {
+                                    let seed = trial_seed(
+                                        plan.seed, dataset, n, method, kernel, rank, oversample,
+                                        threads, repeat,
+                                    );
+                                    trials.push(Trial {
+                                        index: trials.len(),
+                                        dataset: dataset.clone(),
+                                        n,
+                                        method,
+                                        kernel,
+                                        rank,
+                                        oversample,
+                                        threads,
+                                        repeat,
+                                        seed,
+                                    });
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    trials
+}
+
+/// Run every trial of the grid through [`run_experiment`] (the
+/// `rkc::api` fit + metrics path) and assemble the JSONL report.
+///
+/// `runner_threads` only sets how many trials run concurrently
+/// ([`map_indexed`] keeps results in trial-index order); it never
+/// enters any trial's computation, which is why `threads=1` and
+/// `threads=N` runners emit identical bytes. Datasets are built once
+/// per `(dataset, n)` key, sequentially, before the fan-out.
+pub fn run_grid(plan: &GridPlan, plan_hash: u64, runner_threads: usize) -> Result<PlanReport> {
+    let trials = expand(plan);
+    let mut datasets: BTreeMap<(String, usize), Dataset> = BTreeMap::new();
+    for t in &trials {
+        let key = (t.dataset.clone(), t.n);
+        if let std::collections::btree_map::Entry::Vacant(e) = datasets.entry(key) {
+            e.insert(build_dataset(&trial_config(plan, t))?);
+        }
+    }
+
+    let workers = resolve_threads(runner_threads);
+    let outcomes = map_indexed(trials.len(), workers, |i| {
+        let t = &trials[i];
+        let ds = &datasets[&(t.dataset.clone(), t.n)];
+        run_experiment(&trial_config(plan, t), ds, None, t.seed)
+    });
+
+    let mut jsonl = String::new();
+    jsonl.push_str(&super::header_json("grid", plan_hash, trials.len(), plan.timings).to_string());
+    jsonl.push('\n');
+    for (t, outcome) in trials.iter().zip(outcomes) {
+        let k = datasets[&(t.dataset.clone(), t.n)].k;
+        jsonl.push_str(&trial_json(plan, t, k, &outcome?).to_string());
+        jsonl.push('\n');
+    }
+    Ok(PlanReport { kind: "grid", plan_hash, rows: trials.len(), jsonl })
+}
+
+/// The [`ExperimentConfig`] a trial hands to the fit path — plan
+/// scalars plus this trial's coordinates. The per-trial seed is passed
+/// to [`run_experiment`] separately; `cfg.seed` only drives dataset
+/// construction, which stays at the plan seed so every trial on the
+/// same `(dataset, n)` key sees the same points.
+fn trial_config(plan: &GridPlan, t: &Trial) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.dataset = t.dataset.clone();
+    cfg.n = t.n;
+    cfg.p = plan.p;
+    cfg.k = plan.k;
+    cfg.method = t.method;
+    cfg.kernel = t.kernel;
+    cfg.rank = t.rank;
+    cfg.oversample = t.oversample;
+    cfg.batch = plan.batch;
+    cfg.trials = 1;
+    cfg.seed = plan.seed;
+    cfg.kmeans_restarts = plan.kmeans_restarts;
+    cfg.kmeans_iters = plan.kmeans_iters;
+    cfg.threads = t.threads;
+    cfg
+}
+
+/// One schema-stable JSONL row. `Json::Obj` is a `BTreeMap`, so key
+/// order is sorted and stable; u64 seeds are emitted as 16-hex strings
+/// (f64-backed JSON numbers cannot hold them exactly); non-finite
+/// metrics (e.g. `approx_error` for `plain_kmeans`) become `null`.
+fn trial_json(plan: &GridPlan, t: &Trial, k: usize, out: &RunOutcome) -> Json {
+    let mut fields = BTreeMap::from([
+        ("row".to_string(), Json::Str("trial".to_string())),
+        ("trial".to_string(), Json::Num(t.index as f64)),
+        ("repeat".to_string(), Json::Num(t.repeat as f64)),
+        ("dataset".to_string(), Json::Str(t.dataset.clone())),
+        ("n".to_string(), Json::Num(t.n as f64)),
+        ("k".to_string(), Json::Num(k as f64)),
+        ("method".to_string(), Json::Str(t.method.to_string())),
+        ("kernel".to_string(), Json::Str(t.kernel.to_string())),
+        ("rank".to_string(), Json::Num(t.rank as f64)),
+        ("oversample".to_string(), Json::Num(t.oversample as f64)),
+        ("threads".to_string(), Json::Num(t.threads as f64)),
+        ("batch".to_string(), Json::Num(plan.batch as f64)),
+        ("seed".to_string(), Json::Str(format!("{:016x}", t.seed))),
+        ("accuracy".to_string(), Json::finite_num(out.accuracy)),
+        ("ari".to_string(), Json::finite_num(out.ari)),
+        ("nmi".to_string(), Json::finite_num(out.nmi)),
+        ("approx_error".to_string(), Json::finite_num(out.approx_error)),
+        ("objective".to_string(), Json::finite_num(out.kmeans_objective)),
+        ("peak_bytes".to_string(), Json::Num(out.memory.peak() as f64)),
+        ("persistent_bytes".to_string(), Json::Num(out.memory.persistent as f64)),
+    ]);
+    if plan.timings {
+        let stages = [
+            ("sketch_s", out.sketch_time),
+            ("recovery_s", out.recovery_time),
+            ("kmeans_s", out.kmeans_time),
+            ("error_s", out.error_time),
+        ];
+        for (key, d) in stages {
+            fields.insert(key.to_string(), Json::finite_num(d.as_secs_f64()));
+        }
+    }
+    Json::Obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_plan() -> GridPlan {
+        GridPlan {
+            seed: 5,
+            ns: vec![96, 128],
+            methods: vec![Method::OnePass, Method::PlainKmeans],
+            oversamples: vec![4, 6],
+            repeats: 2,
+            ..GridPlan::default()
+        }
+    }
+
+    #[test]
+    fn expansion_is_the_axis_product_in_index_order() {
+        let plan = tiny_plan();
+        let trials = expand(&plan);
+        assert_eq!(trials.len(), 2 * 2 * 2 * 2);
+        for (i, t) in trials.iter().enumerate() {
+            assert_eq!(t.index, i);
+        }
+        // innermost axis varies fastest
+        assert_eq!(trials[0].repeat, 0);
+        assert_eq!(trials[1].repeat, 1);
+        assert_eq!(trials[0].oversample, trials[1].oversample);
+    }
+
+    #[test]
+    fn trial_seed_depends_on_coordinates_not_position() {
+        let a = tiny_plan();
+        let mut b = tiny_plan();
+        b.ns.reverse();
+        b.methods.reverse();
+        b.oversamples.reverse();
+        let key = |t: &Trial| (t.n, t.method.to_string(), t.oversample, t.repeat);
+        let seeds_a: BTreeMap<_, _> = expand(&a).iter().map(|t| (key(t), t.seed)).collect();
+        for t in expand(&b) {
+            assert_eq!(seeds_a[&key(&t)], t.seed);
+        }
+    }
+}

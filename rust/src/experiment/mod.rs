@@ -1,0 +1,107 @@
+//! `rkc::experiment` — the declarative experiment + load-scenario
+//! harness behind the `rkc experiment` subcommand.
+//!
+//! A `.plan` file (see [`Plan::parse`]) declares either:
+//!
+//! - a **grid**: method × kernel × rank × oversample × threads ×
+//!   dataset × repeats. [`run_grid`] expands it deterministically
+//!   ([`expand`]), derives every trial's seed purely from the plan seed
+//!   and the trial's coordinates ([`trial_seed`]), runs each trial
+//!   through the [`crate::api`] fit path via
+//!   [`crate::coordinator::run_experiment`] (accuracy/ARI/NMI,
+//!   approximation error, peak approximation memory, per-stage wall
+//!   times), and emits one schema-stable JSONL row per trial; or
+//! - a **load** scenario list: traffic shapes (open-loop, burst,
+//!   slow-loris, partial-write; keep-alive or close; round-robin over
+//!   several served models) replayed by [`run_load`] against a live
+//!   [`crate::serve`] registry, emitting one latency-histogram row per
+//!   scenario (p50/p95/p99 plus shed/failure deltas from
+//!   [`crate::serve::FrontendStats`]).
+//!
+//! Every JSONL file opens with a header row carrying the FNV-1a hash
+//! of the plan text ([`plan_hash`]), so a result file can always be
+//! matched to the exact plan that produced it
+//! (`tools/check_experiment_jsonl.py` enforces this in CI). With
+//! `timings false`, grid output is **byte-identical** across reruns
+//! and runner thread counts — the determinism contract
+//! `rust/tests/experiment_golden.rs` pins.
+
+mod grid;
+mod plan;
+mod replay;
+
+pub use grid::{expand, run_grid, trial_seed, Trial};
+pub use plan::{GridPlan, LoadPlan, Plan, ScenarioMode, ScenarioSpec};
+pub use replay::{points_body, replay_scenario, run_load, ReplayTarget, ScenarioOutcome};
+
+use std::collections::BTreeMap;
+
+use crate::error::Result;
+use crate::util::Json;
+
+/// JSONL schema version stamped into every header row; bump when a
+/// required key changes meaning or disappears.
+pub const JSONL_SCHEMA: u32 = 1;
+
+/// A completed plan run: the full JSONL text (header + one row per
+/// trial/scenario) plus what the summary line needs.
+#[derive(Clone, Debug)]
+pub struct PlanReport {
+    /// `"grid"` or `"load"`
+    pub kind: &'static str,
+    pub plan_hash: u64,
+    /// data rows (excluding the header)
+    pub rows: usize,
+    pub jsonl: String,
+}
+
+/// FNV-1a 64 over the plan text — the same checksum `.rkc` files trail
+/// with, here binding a JSONL result file to the exact plan bytes that
+/// produced it.
+pub fn plan_hash(text: &str) -> u64 {
+    crate::model_io::checksum(text.as_bytes())
+}
+
+/// Parse and run a plan's text: hash it, dispatch on its kind, return
+/// the JSONL report. `runner_threads` (grid only) sets how many trials
+/// run concurrently — never what any trial computes (`0` = auto).
+pub fn run_plan_text(text: &str, runner_threads: usize) -> Result<PlanReport> {
+    let hash = plan_hash(text);
+    match Plan::parse(text)? {
+        Plan::Grid(p) => run_grid(&p, hash, runner_threads),
+        Plan::Load(p) => run_load(&p, hash),
+    }
+}
+
+/// The header row every experiment JSONL file opens with.
+pub(crate) fn header_json(kind: &str, plan_hash: u64, rows: usize, timings: bool) -> Json {
+    Json::Obj(BTreeMap::from([
+        ("row".to_string(), Json::Str("header".to_string())),
+        ("kind".to_string(), Json::Str(kind.to_string())),
+        ("plan_hash".to_string(), Json::Str(format!("{plan_hash:016x}"))),
+        ("schema".to_string(), Json::Num(JSONL_SCHEMA as f64)),
+        ("rows".to_string(), Json::Num(rows as f64)),
+        ("timings".to_string(), Json::Bool(timings)),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_hash_matches_model_io_checksum() {
+        assert_eq!(plan_hash(""), 0xcbf2_9ce4_8422_2325);
+        assert_ne!(plan_hash("kind grid"), plan_hash("kind load"));
+    }
+
+    #[test]
+    fn header_row_is_schema_stable() {
+        let h = header_json("grid", 0xabc, 3, false).to_string();
+        assert_eq!(
+            h,
+            "{\"kind\":\"grid\",\"plan_hash\":\"0000000000000abc\",\"row\":\"header\",\
+             \"rows\":3,\"schema\":1,\"timings\":false}"
+        );
+    }
+}

@@ -1,0 +1,582 @@
+//! The declarative `.plan` format: a line-based `key value` file (the
+//! same zero-dependency shape as the CLI config parser) describing
+//! either a **grid** of clustering trials or a list of **load
+//! scenarios** to replay against a live serve registry.
+//!
+//! Grammar: one `key value` pair per line, split on the first
+//! whitespace; blank lines and `#` comments are ignored; axis-valued
+//! keys (grid `dataset`/`n`/`method`/`kernel`/`rank`/`oversample`/
+//! `threads`) take comma-separated lists. The mandatory `kind` line
+//! (`grid` or `load`) selects the schema. Parsing is strict — unknown
+//! keys, duplicate keys, empty axis entries, and malformed values are
+//! typed [`RkcError`]s, never panics — and [`fmt::Display`] emits a
+//! canonical form that parses back to an equal plan (the round-trip
+//! property `rust/tests/properties.rs` pins).
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::str::FromStr;
+
+use crate::config::Method;
+use crate::error::{Result, RkcError};
+use crate::kernels::Kernel;
+
+/// A parsed plan file: the experiment grid or the load-scenario list.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Plan {
+    Grid(GridPlan),
+    Load(LoadPlan),
+}
+
+impl Plan {
+    /// Parse a plan file's text. The `kind` line decides the schema.
+    pub fn parse(text: &str) -> Result<Plan> {
+        let mut pairs: Vec<(String, String)> = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let Some((key, value)) = line.split_once(char::is_whitespace) else {
+                return Err(RkcError::invalid_config(format!(
+                    "plan line {}: expected 'key value', got '{line}'",
+                    lineno + 1
+                )));
+            };
+            pairs.push((key.to_string(), value.trim().to_string()));
+        }
+        let kind = pairs
+            .iter()
+            .find(|(k, _)| k == "kind")
+            .map(|(_, v)| v.clone())
+            .ok_or_else(|| {
+                RkcError::invalid_config("plan is missing its 'kind' line (grid or load)")
+            })?;
+        match kind.as_str() {
+            "grid" => Ok(Plan::Grid(GridPlan::from_pairs(&pairs)?)),
+            "load" => Ok(Plan::Load(LoadPlan::from_pairs(&pairs)?)),
+            other => Err(RkcError::parse("plan kind", other)),
+        }
+    }
+}
+
+impl fmt::Display for Plan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Plan::Grid(p) => p.fmt(f),
+            Plan::Load(p) => p.fmt(f),
+        }
+    }
+}
+
+/// A grid of clustering trials: the cartesian product of the axis
+/// fields (`datasets × ns × methods × kernels × ranks × oversamples ×
+/// threads`) times `repeats`, every trial seeded purely from its
+/// coordinates (see [`super::trial_seed`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GridPlan {
+    /// root seed; every trial seed is derived from it + the trial's
+    /// coordinates, so the plan text fully determines every RNG stream
+    pub seed: u64,
+    /// axis: dataset names ([`crate::coordinator::build_dataset`] vocabulary)
+    pub datasets: Vec<String>,
+    /// axis: dataset sizes
+    pub ns: Vec<usize>,
+    /// input dimension (synthetic generators that honor it)
+    pub p: usize,
+    /// cluster count handed to the fit (generators may override)
+    pub k: usize,
+    /// axis: clustering methods
+    pub methods: Vec<Method>,
+    /// axis: kernels
+    pub kernels: Vec<Kernel>,
+    /// axis: recovery ranks r
+    pub ranks: Vec<usize>,
+    /// axis: sketch oversampling (sketch size d = r + oversample)
+    pub oversamples: Vec<usize>,
+    /// axis: worker threads per trial (`0` = auto)
+    pub threads: Vec<usize>,
+    /// sketch pass batch size
+    pub batch: usize,
+    /// repeats per grid point (distinct seeds)
+    pub repeats: usize,
+    pub kmeans_restarts: usize,
+    pub kmeans_iters: usize,
+    /// emit per-stage wall times in the JSONL rows. `false` keeps the
+    /// output byte-identical across reruns — the golden-determinism
+    /// mode the committed smoke plan uses.
+    pub timings: bool,
+}
+
+impl Default for GridPlan {
+    fn default() -> Self {
+        GridPlan {
+            seed: 2016,
+            datasets: vec!["cross_lines".to_string()],
+            ns: vec![256],
+            p: 2,
+            k: 2,
+            methods: vec![Method::OnePass],
+            kernels: vec![Kernel::paper_poly2()],
+            ranks: vec![2],
+            oversamples: vec![8],
+            threads: vec![1],
+            batch: 64,
+            repeats: 1,
+            kmeans_restarts: 5,
+            kmeans_iters: 20,
+            timings: true,
+        }
+    }
+}
+
+impl GridPlan {
+    fn from_pairs(pairs: &[(String, String)]) -> Result<GridPlan> {
+        let mut plan = GridPlan::default();
+        let mut seen = BTreeSet::new();
+        for (key, value) in pairs {
+            if !seen.insert(key.clone()) {
+                return Err(RkcError::invalid_config(format!("duplicate plan key '{key}'")));
+            }
+            match key.as_str() {
+                "kind" => {}
+                "seed" => plan.seed = scalar("seed", value)?,
+                "dataset" => plan.datasets = axis("dataset", value, |s| Ok(s.to_string()))?,
+                "n" => plan.ns = axis("n", value, |s| scalar("n", s))?,
+                "p" => plan.p = scalar("p", value)?,
+                "k" => plan.k = scalar("k", value)?,
+                "method" => plan.methods = axis("method", value, Method::from_str)?,
+                "kernel" => plan.kernels = axis("kernel", value, Kernel::from_str)?,
+                "rank" => plan.ranks = axis("rank", value, |s| scalar("rank", s))?,
+                "oversample" => {
+                    plan.oversamples = axis("oversample", value, |s| scalar("oversample", s))?
+                }
+                "threads" => plan.threads = axis("threads", value, |s| scalar("threads", s))?,
+                "batch" => plan.batch = scalar("batch", value)?,
+                "repeats" => plan.repeats = scalar("repeats", value)?,
+                "kmeans_restarts" => plan.kmeans_restarts = scalar("kmeans_restarts", value)?,
+                "kmeans_iters" => plan.kmeans_iters = scalar("kmeans_iters", value)?,
+                "timings" => {
+                    plan.timings =
+                        value.parse().map_err(|_| RkcError::parse("timings", value.clone()))?
+                }
+                other => {
+                    return Err(RkcError::invalid_config(format!(
+                        "unknown grid-plan key '{other}'"
+                    )))
+                }
+            }
+        }
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    fn validate(&self) -> Result<()> {
+        for (name, v) in [
+            ("p", self.p),
+            ("k", self.k),
+            ("batch", self.batch),
+            ("repeats", self.repeats),
+            ("kmeans_restarts", self.kmeans_restarts),
+            ("kmeans_iters", self.kmeans_iters),
+        ] {
+            if v == 0 {
+                return Err(RkcError::invalid_config(format!("plan {name} must be >= 1")));
+            }
+        }
+        if self.ns.iter().any(|&n| n < 8) {
+            return Err(RkcError::invalid_config("plan n axis values must be >= 8"));
+        }
+        if self.ranks.contains(&0) || self.oversamples.contains(&0) {
+            return Err(RkcError::invalid_config(
+                "plan rank/oversample axis values must be >= 1",
+            ));
+        }
+        // duplicate axis values would collapse coordinate tuples onto
+        // the same derived seed — the uniqueness property forbids that
+        no_axis_duplicates("dataset", &self.datasets)?;
+        no_axis_duplicates("n", &self.ns)?;
+        no_axis_duplicates("method", &self.methods)?;
+        no_axis_duplicates("kernel", &self.kernels)?;
+        no_axis_duplicates("rank", &self.ranks)?;
+        no_axis_duplicates("oversample", &self.oversamples)?;
+        no_axis_duplicates("threads", &self.threads)?;
+        Ok(())
+    }
+}
+
+impl fmt::Display for GridPlan {
+    /// Canonical form: every key, fixed order, axes comma-joined.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "kind grid")?;
+        writeln!(f, "seed {}", self.seed)?;
+        writeln!(f, "dataset {}", self.datasets.join(","))?;
+        writeln!(f, "n {}", join_csv(&self.ns))?;
+        writeln!(f, "p {}", self.p)?;
+        writeln!(f, "k {}", self.k)?;
+        writeln!(f, "method {}", join_csv(&self.methods))?;
+        writeln!(f, "kernel {}", join_csv(&self.kernels))?;
+        writeln!(f, "rank {}", join_csv(&self.ranks))?;
+        writeln!(f, "oversample {}", join_csv(&self.oversamples))?;
+        writeln!(f, "threads {}", join_csv(&self.threads))?;
+        writeln!(f, "batch {}", self.batch)?;
+        writeln!(f, "repeats {}", self.repeats)?;
+        writeln!(f, "kmeans_restarts {}", self.kmeans_restarts)?;
+        writeln!(f, "kmeans_iters {}", self.kmeans_iters)?;
+        write!(f, "timings {}", self.timings)
+    }
+}
+
+/// Traffic shape a load scenario replays against the live front-end.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScenarioMode {
+    /// paced request stream (`rate` req/s across all clients; `0`
+    /// means unpaced), honoring `keep_alive`
+    OpenLoop,
+    /// every client connects at once BEFORE any request is sent —
+    /// exercises the bounded connection queue and its shed 503s
+    Burst,
+    /// sends half a request head and then nothing — must be cut by the
+    /// server's request deadline with a 408
+    SlowLoris,
+    /// promises a Content-Length then disconnects mid-body; each
+    /// aborted write is followed by a fresh-connection good request to
+    /// prove the poison stayed on its own connection
+    PartialWrite,
+}
+
+impl fmt::Display for ScenarioMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ScenarioMode::OpenLoop => write!(f, "open_loop"),
+            ScenarioMode::Burst => write!(f, "burst"),
+            ScenarioMode::SlowLoris => write!(f, "slow_loris"),
+            ScenarioMode::PartialWrite => write!(f, "partial_write"),
+        }
+    }
+}
+
+impl FromStr for ScenarioMode {
+    type Err = RkcError;
+
+    fn from_str(s: &str) -> Result<ScenarioMode> {
+        match s {
+            "open_loop" => Ok(ScenarioMode::OpenLoop),
+            "burst" => Ok(ScenarioMode::Burst),
+            "slow_loris" => Ok(ScenarioMode::SlowLoris),
+            "partial_write" => Ok(ScenarioMode::PartialWrite),
+            _ => Err(RkcError::parse("scenario mode", s)),
+        }
+    }
+}
+
+/// One `scenario` line of a load plan.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub mode: ScenarioMode,
+    /// concurrent client threads
+    pub clients: usize,
+    /// requests per client
+    pub requests: usize,
+    /// aggregate open-loop arrival rate in req/s (`0` = unpaced)
+    pub rate_hz: f64,
+    /// reuse one connection per client (`false` = close per request)
+    pub keep_alive: bool,
+}
+
+impl ScenarioSpec {
+    /// Parse the value of a `scenario` line:
+    /// `<name> mode=<m> [clients=<c>] [requests=<r>] [rate=<hz>] [keep_alive=<bool>]`.
+    fn parse(value: &str) -> Result<ScenarioSpec> {
+        let mut tokens = value.split_whitespace();
+        let name = tokens
+            .next()
+            .filter(|t| !t.contains('='))
+            .ok_or_else(|| {
+                RkcError::invalid_config(format!(
+                    "scenario line needs a name before its settings: '{value}'"
+                ))
+            })?
+            .to_string();
+        let mut mode = None;
+        let mut spec = ScenarioSpec {
+            name,
+            mode: ScenarioMode::OpenLoop,
+            clients: 1,
+            requests: 1,
+            rate_hz: 0.0,
+            keep_alive: true,
+        };
+        let mut seen = BTreeSet::new();
+        for tok in tokens {
+            let Some((k, v)) = tok.split_once('=') else {
+                return Err(RkcError::invalid_config(format!(
+                    "scenario setting '{tok}' must be key=value"
+                )));
+            };
+            if !seen.insert(k.to_string()) {
+                return Err(RkcError::invalid_config(format!(
+                    "duplicate scenario setting '{k}' in '{}'",
+                    spec.name
+                )));
+            }
+            match k {
+                "mode" => mode = Some(v.parse::<ScenarioMode>()?),
+                "clients" => spec.clients = scalar("scenario clients", v)?,
+                "requests" => spec.requests = scalar("scenario requests", v)?,
+                "rate" => {
+                    let r: f64 =
+                        v.parse().map_err(|_| RkcError::parse("scenario rate", v.to_string()))?;
+                    if !r.is_finite() || r < 0.0 {
+                        return Err(RkcError::parse("scenario rate", v.to_string()));
+                    }
+                    spec.rate_hz = r;
+                }
+                "keep_alive" => {
+                    spec.keep_alive = v
+                        .parse()
+                        .map_err(|_| RkcError::parse("scenario keep_alive", v.to_string()))?
+                }
+                other => {
+                    return Err(RkcError::invalid_config(format!(
+                        "unknown scenario setting '{other}'"
+                    )))
+                }
+            }
+        }
+        spec.mode = mode.ok_or_else(|| {
+            RkcError::invalid_config(format!("scenario '{}' is missing mode=...", spec.name))
+        })?;
+        if spec.clients == 0 || spec.requests == 0 {
+            return Err(RkcError::invalid_config(format!(
+                "scenario '{}' clients/requests must be >= 1",
+                spec.name
+            )));
+        }
+        Ok(spec)
+    }
+}
+
+impl fmt::Display for ScenarioSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "scenario {} mode={} clients={} requests={} rate={} keep_alive={}",
+            self.name, self.mode, self.clients, self.requests, self.rate_hz, self.keep_alive
+        )
+    }
+}
+
+/// A load plan: a small registry of fitted models served over HTTP plus
+/// the scenario list replayed against it, in order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LoadPlan {
+    /// seeds the fitted models and the shared query batch
+    pub seed: u64,
+    /// points per fitted model's training set
+    pub n: usize,
+    /// clusters per fitted model
+    pub k: usize,
+    /// how many models to fit and serve (`m0`, `m1`, …; scenarios
+    /// round-robin across them — the mixed-models shape)
+    pub models: usize,
+    /// points per predict request body
+    pub points: usize,
+    /// front-end pool workers (`0` = auto)
+    pub workers: usize,
+    /// front-end connection-queue bound (beyond it: shed 503)
+    pub backlog: usize,
+    /// server-side idle keep-alive seconds (`0` = close per request)
+    pub keep_alive_s: u64,
+    /// server-side request deadline in ms (`0` = the 30 s default);
+    /// the slow-loris scenario needs this well under the client's 10 s
+    /// read timeout
+    pub deadline_ms: u64,
+    pub scenarios: Vec<ScenarioSpec>,
+}
+
+impl Default for LoadPlan {
+    fn default() -> Self {
+        LoadPlan {
+            seed: 2016,
+            n: 256,
+            k: 2,
+            models: 1,
+            points: 4,
+            workers: 0,
+            backlog: 128,
+            keep_alive_s: 5,
+            deadline_ms: 0,
+            scenarios: Vec::new(),
+        }
+    }
+}
+
+impl LoadPlan {
+    fn from_pairs(pairs: &[(String, String)]) -> Result<LoadPlan> {
+        let mut plan = LoadPlan::default();
+        let mut seen = BTreeSet::new();
+        for (key, value) in pairs {
+            if key != "scenario" && !seen.insert(key.clone()) {
+                return Err(RkcError::invalid_config(format!("duplicate plan key '{key}'")));
+            }
+            match key.as_str() {
+                "kind" => {}
+                "seed" => plan.seed = scalar("seed", value)?,
+                "n" => plan.n = scalar("n", value)?,
+                "k" => plan.k = scalar("k", value)?,
+                "models" => plan.models = scalar("models", value)?,
+                "points" => plan.points = scalar("points", value)?,
+                "workers" => plan.workers = scalar("workers", value)?,
+                "backlog" => plan.backlog = scalar("backlog", value)?,
+                "keep_alive_s" => plan.keep_alive_s = scalar("keep_alive_s", value)?,
+                "deadline_ms" => plan.deadline_ms = scalar("deadline_ms", value)?,
+                "scenario" => plan.scenarios.push(ScenarioSpec::parse(value)?),
+                other => {
+                    return Err(RkcError::invalid_config(format!(
+                        "unknown load-plan key '{other}'"
+                    )))
+                }
+            }
+        }
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.scenarios.is_empty() {
+            return Err(RkcError::invalid_config(
+                "load plan needs at least one 'scenario' line",
+            ));
+        }
+        if self.models == 0 || self.points == 0 || self.k == 0 {
+            return Err(RkcError::invalid_config(
+                "load plan models/points/k must be >= 1",
+            ));
+        }
+        if self.n < 16 {
+            return Err(RkcError::invalid_config("load plan n must be >= 16"));
+        }
+        let names: BTreeSet<_> = self.scenarios.iter().map(|s| s.name.as_str()).collect();
+        if names.len() != self.scenarios.len() {
+            return Err(RkcError::invalid_config("scenario names must be unique"));
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for LoadPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "kind load")?;
+        writeln!(f, "seed {}", self.seed)?;
+        writeln!(f, "n {}", self.n)?;
+        writeln!(f, "k {}", self.k)?;
+        writeln!(f, "models {}", self.models)?;
+        writeln!(f, "points {}", self.points)?;
+        writeln!(f, "workers {}", self.workers)?;
+        writeln!(f, "backlog {}", self.backlog)?;
+        writeln!(f, "keep_alive_s {}", self.keep_alive_s)?;
+        write!(f, "deadline_ms {}", self.deadline_ms)?;
+        for s in &self.scenarios {
+            write!(f, "\n{s}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Parse one unsigned scalar with a typed error naming the key.
+fn scalar<T: FromStr>(what: &'static str, value: &str) -> Result<T> {
+    value.parse().map_err(|_| RkcError::parse(what, value.to_string()))
+}
+
+/// Split a comma-separated axis value; empty items are errors.
+fn axis<T>(what: &'static str, value: &str, parse: impl Fn(&str) -> Result<T>) -> Result<Vec<T>> {
+    let mut out = Vec::new();
+    for item in value.split(',') {
+        let item = item.trim();
+        if item.is_empty() {
+            return Err(RkcError::parse(what, value.to_string()));
+        }
+        out.push(parse(item)?);
+    }
+    Ok(out)
+}
+
+fn no_axis_duplicates<T: fmt::Display>(axis: &str, values: &[T]) -> Result<()> {
+    let mut seen = BTreeSet::new();
+    for v in values {
+        if !seen.insert(v.to_string()) {
+            return Err(RkcError::invalid_config(format!(
+                "duplicate value '{v}' in plan axis '{axis}'"
+            )));
+        }
+    }
+    Ok(())
+}
+
+fn join_csv<T: fmt::Display>(values: &[T]) -> String {
+    values.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(",")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GRID: &str = "\
+# smoke grid
+kind grid
+seed 7
+dataset cross_lines
+n 96
+method one_pass,exact
+kernel poly2,rbf:0.5
+rank 2
+oversample 4,6
+threads 1,2
+repeats 2
+timings false
+";
+
+    #[test]
+    fn grid_plan_parses_axes_and_scalars() {
+        let Plan::Grid(p) = Plan::parse(GRID).unwrap() else { panic!("expected grid") };
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.methods, vec![Method::OnePass, Method::Exact]);
+        assert_eq!(p.kernels, vec![Kernel::paper_poly2(), Kernel::Rbf { gamma: 0.5 }]);
+        assert_eq!(p.oversamples, vec![4, 6]);
+        assert!(!p.timings);
+        // unset keys keep their defaults
+        assert_eq!(p.batch, GridPlan::default().batch);
+    }
+
+    #[test]
+    fn load_plan_parses_scenarios_in_order() {
+        let text = "kind load\nseed 3\nmodels 2\n\
+                    scenario a mode=burst clients=4\n\
+                    scenario b mode=slow_loris requests=2 keep_alive=false\n";
+        let Plan::Load(p) = Plan::parse(text).unwrap() else { panic!("expected load") };
+        assert_eq!(p.models, 2);
+        assert_eq!(p.scenarios.len(), 2);
+        assert_eq!(p.scenarios[0].mode, ScenarioMode::Burst);
+        assert_eq!(p.scenarios[0].clients, 4);
+        assert_eq!(p.scenarios[1].requests, 2);
+        assert!(!p.scenarios[1].keep_alive);
+    }
+
+    #[test]
+    fn display_is_canonical_and_reparses() {
+        let plan = Plan::parse(GRID).unwrap();
+        let text = plan.to_string();
+        let again = Plan::parse(&text).unwrap();
+        assert_eq!(plan, again);
+        assert_eq!(text, again.to_string());
+    }
+
+    #[test]
+    fn strictness_rejects_unknown_and_duplicate_keys() {
+        assert!(Plan::parse("kind grid\nwat 1\n").is_err());
+        assert!(Plan::parse("kind grid\nseed 1\nseed 2\n").is_err());
+        assert!(Plan::parse("kind load\nscenario a mode=burst\nwat 1\n").is_err());
+    }
+}

@@ -1,0 +1,401 @@
+//! Load-scenario replay: drive traffic shapes against a live serve
+//! front-end with [`MiniHttpClient`] and measure what came back.
+//!
+//! [`run_load`] fits a small model registry, serves it over HTTP with
+//! the plan's front-end knobs (workers, backlog, keep-alive, request
+//! deadline), replays every scenario in order, and emits one latency
+//! row per scenario (p50/p95/p99 via the shared
+//! [`latency_summary`] helper, plus the [`FrontendStats`] deltas —
+//! shed 503s, failures — the scenario provoked). [`replay_scenario`]
+//! is also callable directly against any served registry; the
+//! failure-injection tests use it to assert the 408 deadline, mid-body
+//! poisoning, and queue-shed behaviors without hand-rolled sockets.
+//!
+//! All client failure handling is tolerant (`try_*` methods): broken
+//! connections are the *subject* of several scenarios, so a dead socket
+//! is counted as `dropped`, never a panic.
+
+use std::collections::BTreeMap;
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::api::KernelClusterer;
+use crate::bench_harness::{latency_summary, MiniHttpClient};
+use crate::data;
+use crate::error::Result;
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
+use crate::serve::{serve_http_registry, FrontendStats, HttpOpts, ModelRegistry, ServeOpts};
+use crate::util::Json;
+
+use super::plan::{LoadPlan, ScenarioMode, ScenarioSpec};
+use super::PlanReport;
+
+/// Where a scenario sends its traffic: the front-end address and the
+/// predict paths to round-robin across (one per served model — the
+/// mixed-models shape when there are several).
+#[derive(Clone, Debug)]
+pub struct ReplayTarget {
+    pub addr: SocketAddr,
+    pub paths: Vec<String>,
+}
+
+impl ReplayTarget {
+    fn path(&self, client: usize, requests_per_client: usize, r: usize) -> &str {
+        &self.paths[(client * requests_per_client + r) % self.paths.len()]
+    }
+}
+
+/// What one scenario's replay observed. `sent` counts request attempts
+/// actually written (partial-write scenarios write an aborted attempt
+/// AND a follow-up good request per nominal request, so `sent` can
+/// exceed `clients × requests`); `dropped` counts attempts that ended
+/// without any parseable response.
+#[derive(Clone, Debug, Default)]
+pub struct ScenarioOutcome {
+    pub sent: usize,
+    /// 2xx responses
+    pub ok: usize,
+    /// attempts with no response (reset, close, client-side timeout)
+    pub dropped: usize,
+    /// responses by status code
+    pub statuses: BTreeMap<u16, usize>,
+    /// per-response latencies (seconds), all clients concatenated
+    pub latencies_s: Vec<f64>,
+    pub wall_s: f64,
+}
+
+impl ScenarioOutcome {
+    /// Responses with this exact status code.
+    pub fn count(&self, status: u16) -> usize {
+        self.statuses.get(&status).copied().unwrap_or(0)
+    }
+
+    fn record(&mut self, resp: Option<(u16, String)>, latency_s: f64) {
+        self.sent += 1;
+        match resp {
+            Some((status, _)) => {
+                *self.statuses.entry(status).or_insert(0) += 1;
+                if (200..300).contains(&status) {
+                    self.ok += 1;
+                }
+                self.latencies_s.push(latency_s);
+            }
+            None => self.dropped += 1,
+        }
+    }
+
+    fn absorb(&mut self, other: ScenarioOutcome) {
+        self.sent += other.sent;
+        self.ok += other.ok;
+        self.dropped += other.dropped;
+        for (status, count) in other.statuses {
+            *self.statuses.entry(status).or_insert(0) += count;
+        }
+        self.latencies_s.extend(other.latencies_s);
+    }
+}
+
+/// Replay one scenario with `spec.clients` concurrent client threads
+/// and merge their observations (client order, so the merge itself is
+/// deterministic). `body` is the JSON predict body every good request
+/// sends.
+pub fn replay_scenario(target: &ReplayTarget, spec: &ScenarioSpec, body: &str) -> ScenarioOutcome {
+    let t0 = Instant::now();
+    // burst: ALL clients connect here, sequentially, BEFORE any request
+    // byte moves — the accept loop sees the full connection spike and
+    // its shed decisions are made while the worker pool is idle.
+    // Outer None = not a burst client; Some(None) = the dial itself
+    // failed (OS backlog overflow), which the client records as a drop.
+    let preconnected: Vec<Option<Option<MiniHttpClient>>> = (0..spec.clients)
+        .map(|_| {
+            (spec.mode == ScenarioMode::Burst).then(|| MiniHttpClient::try_connect(target.addr))
+        })
+        .collect();
+
+    let mut merged = ScenarioOutcome::default();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = preconnected
+            .into_iter()
+            .enumerate()
+            .map(|(client, pre)| s.spawn(move || run_client(target, spec, body, client, pre)))
+            .collect();
+        for h in handles {
+            merged.absorb(h.join().expect("replay client thread"));
+        }
+    });
+    merged.wall_s = t0.elapsed().as_secs_f64();
+    merged
+}
+
+fn run_client(
+    target: &ReplayTarget,
+    spec: &ScenarioSpec,
+    body: &str,
+    client: usize,
+    pre: Option<Option<MiniHttpClient>>,
+) -> ScenarioOutcome {
+    let mut st = ScenarioOutcome::default();
+    match spec.mode {
+        ScenarioMode::OpenLoop => open_loop(target, spec, body, client, &mut st),
+        ScenarioMode::Burst => burst(target, spec, body, client, pre, &mut st),
+        ScenarioMode::SlowLoris => slow_loris(target, spec, client, &mut st),
+        ScenarioMode::PartialWrite => partial_write(target, spec, body, client, &mut st),
+    }
+    st
+}
+
+/// Paced request stream. With `keep_alive`, one connection per client
+/// is reused, and a request that dies on a *reused* socket is retried
+/// once on a fresh one (a server that idle-closed between requests is
+/// healthy, not failing); otherwise every request dials fresh and asks
+/// for `Connection: close`. `rate` is the aggregate target across all
+/// clients, so each client paces at `clients / rate` seconds per
+/// request. Pacing is closed-loop: each client waits for its response
+/// before sleeping out the remainder of the interval, so under server
+/// stalls the achieved rate (`sent / wall_s` in the row) slips below
+/// the configured `rate` rather than queueing sends.
+fn open_loop(
+    target: &ReplayTarget,
+    spec: &ScenarioSpec,
+    body: &str,
+    client: usize,
+    st: &mut ScenarioOutcome,
+) {
+    let interval_s = if spec.rate_hz > 0.0 { spec.clients as f64 / spec.rate_hz } else { 0.0 };
+    let mut conn: Option<MiniHttpClient> = None;
+    for r in 0..spec.requests {
+        let path = target.path(client, spec.requests, r);
+        let t0 = Instant::now();
+        let resp = if spec.keep_alive {
+            let reused = conn.is_some();
+            let mut got = keep_alive_request(&mut conn, target.addr, path, body);
+            if got.is_none() && reused {
+                got = keep_alive_request(&mut conn, target.addr, path, body);
+            }
+            got
+        } else {
+            MiniHttpClient::try_connect(target.addr)
+                .and_then(|mut c| c.try_request("POST", path, body, true))
+        };
+        st.record(resp, t0.elapsed().as_secs_f64());
+        if interval_s > 0.0 {
+            let elapsed = t0.elapsed().as_secs_f64();
+            if elapsed < interval_s {
+                std::thread::sleep(Duration::from_secs_f64(interval_s - elapsed));
+            }
+        }
+    }
+}
+
+/// One request over the client's cached keep-alive connection, dialing
+/// a fresh one if none is cached. The connection is kept only when the
+/// request got a response; a dead socket is dropped so the next
+/// attempt re-dials.
+fn keep_alive_request(
+    conn: &mut Option<MiniHttpClient>,
+    addr: SocketAddr,
+    path: &str,
+    body: &str,
+) -> Option<(u16, String)> {
+    let mut c = conn.take().or_else(|| MiniHttpClient::try_connect(addr))?;
+    let got = c.try_request("POST", path, body, false);
+    if got.is_some() {
+        *conn = Some(c);
+    }
+    got
+}
+
+/// Connection-spike client. Its pre-dialed connection is probed first:
+/// a connection the server shed already carries an unsolicited 503,
+/// which must be read *instead of* sending a request into a closed
+/// socket. Admitted connections (and every later request) run as
+/// ordinary close-per-request traffic.
+fn burst(
+    target: &ReplayTarget,
+    spec: &ScenarioSpec,
+    body: &str,
+    client: usize,
+    pre: Option<Option<MiniHttpClient>>,
+    st: &mut ScenarioOutcome,
+) {
+    let mut first = pre;
+    for r in 0..spec.requests {
+        let path = target.path(client, spec.requests, r);
+        match first.take() {
+            Some(Some(mut c)) => {
+                if let Some((status, _)) = c.probe(Duration::from_millis(500)) {
+                    // shed at accept: the 503 consumed this request slot
+                    st.sent += 1;
+                    *st.statuses.entry(status).or_insert(0) += 1;
+                    continue;
+                }
+                let t0 = Instant::now();
+                let resp = c.try_request("POST", path, body, true);
+                st.record(resp, t0.elapsed().as_secs_f64());
+            }
+            Some(None) => {
+                // the spike's own dial was refused at the OS level
+                st.sent += 1;
+                st.dropped += 1;
+            }
+            None => {
+                let t0 = Instant::now();
+                let resp = MiniHttpClient::try_connect(target.addr)
+                    .and_then(|mut c| c.try_request("POST", path, body, true));
+                st.record(resp, t0.elapsed().as_secs_f64());
+            }
+        }
+    }
+}
+
+/// Slow-loris client: sends half a request head and then goes quiet.
+/// The server's request deadline must cut it off with a 408 (counted
+/// here as a response, with the latency showing the deadline).
+fn slow_loris(target: &ReplayTarget, spec: &ScenarioSpec, client: usize, st: &mut ScenarioOutcome) {
+    for r in 0..spec.requests {
+        let path = target.path(client, spec.requests, r);
+        let Some(mut c) = MiniHttpClient::try_connect(target.addr) else {
+            st.sent += 1;
+            st.dropped += 1;
+            continue;
+        };
+        let t0 = Instant::now();
+        let partial = format!("POST {path} HTTP/1.1\r\nHost: rkc\r\n");
+        if !c.try_send_raw(partial.as_bytes()) {
+            st.sent += 1;
+            st.dropped += 1;
+            continue;
+        }
+        st.record(c.try_read_response(), t0.elapsed().as_secs_f64());
+    }
+}
+
+/// Mid-body disconnect client: each nominal request is an aborted
+/// write (full head promising `Content-Length`, half the body, socket
+/// dropped) followed by a fresh-connection good request — the pair
+/// proves the poisoned framing died with its own connection while the
+/// pool worker and every other connection kept serving.
+fn partial_write(
+    target: &ReplayTarget,
+    spec: &ScenarioSpec,
+    body: &str,
+    client: usize,
+    st: &mut ScenarioOutcome,
+) {
+    for r in 0..spec.requests {
+        let path = target.path(client, spec.requests, r);
+        {
+            let c = MiniHttpClient::try_connect(target.addr);
+            st.sent += 1;
+            st.dropped += 1;
+            if let Some(mut c) = c {
+                let head = format!(
+                    "POST {path} HTTP/1.1\r\nHost: rkc\r\nContent-Type: application/json\r\n\
+                     Content-Length: {}\r\n\r\n",
+                    body.len()
+                );
+                let sent_head = c.try_send_raw(head.as_bytes());
+                let _ = sent_head && c.try_send_raw(&body.as_bytes()[..body.len() / 2]);
+                // dropping `c` closes the socket mid-body
+            }
+        }
+        let t0 = Instant::now();
+        let resp = MiniHttpClient::try_connect(target.addr)
+            .and_then(|mut c| c.try_request("POST", path, body, true));
+        st.record(resp, t0.elapsed().as_secs_f64());
+    }
+}
+
+/// Column-major points matrix → the serve front-end's predict body.
+pub fn points_body(x: &Mat) -> String {
+    let pts: Vec<Json> = (0..x.cols())
+        .map(|j| Json::Arr((0..x.rows()).map(|i| Json::Num(x[(i, j)])).collect()))
+        .collect();
+    Json::Obj(BTreeMap::from([("points".to_string(), Json::Arr(pts))])).to_string()
+}
+
+/// Run a load plan: fit `plan.models` models, serve them, replay every
+/// scenario in order, and emit one JSONL latency row per scenario.
+pub fn run_load(plan: &LoadPlan, plan_hash: u64) -> Result<PlanReport> {
+    let registry = Arc::new(ModelRegistry::new(ServeOpts { threads: 1, ..Default::default() }));
+    let mut paths = Vec::with_capacity(plan.models);
+    for m in 0..plan.models {
+        let ds = data::cross_lines(&mut Pcg64::seed_stream(plan.seed, 0x10ad + m as u64), plan.n);
+        let model = KernelClusterer::new(plan.k)
+            .rank(2)
+            .oversample(8)
+            .seed(plan.seed.wrapping_add(m as u64))
+            .threads(1)
+            .fit(&ds.x)?;
+        let name = format!("m{m}");
+        registry.insert(&name, model)?;
+        paths.push(format!("/models/{name}/predict"));
+    }
+    let http = serve_http_registry(
+        Arc::clone(&registry),
+        "127.0.0.1:0",
+        HttpOpts {
+            workers: plan.workers,
+            keep_alive: Duration::from_secs(plan.keep_alive_s),
+            backlog: plan.backlog,
+            request_deadline: Duration::from_millis(plan.deadline_ms),
+        },
+    )?;
+    let target = ReplayTarget { addr: http.local_addr(), paths };
+    let query = data::cross_lines(&mut Pcg64::seed_stream(plan.seed, 0xb0d7), plan.points).x;
+    let body = points_body(&query);
+
+    let mut jsonl = String::new();
+    jsonl.push_str(&super::header_json("load", plan_hash, plan.scenarios.len(), true).to_string());
+    jsonl.push('\n');
+    for spec in &plan.scenarios {
+        let before = http.frontend_stats();
+        let outcome = replay_scenario(&target, spec, &body);
+        let after = http.frontend_stats();
+        jsonl.push_str(&scenario_json(spec, &outcome, &before, &after).to_string());
+        jsonl.push('\n');
+    }
+    http.shutdown();
+    Ok(PlanReport { kind: "load", plan_hash, rows: plan.scenarios.len(), jsonl })
+}
+
+/// One latency-histogram row: the scenario's shape, what the clients
+/// observed, the shared percentile summary, and the front-end counter
+/// deltas the scenario provoked.
+fn scenario_json(
+    spec: &ScenarioSpec,
+    out: &ScenarioOutcome,
+    before: &FrontendStats,
+    after: &FrontendStats,
+) -> Json {
+    let mut fields = BTreeMap::from([
+        ("row".to_string(), Json::Str("scenario".to_string())),
+        ("scenario".to_string(), Json::Str(spec.name.clone())),
+        ("mode".to_string(), Json::Str(spec.mode.to_string())),
+        ("clients".to_string(), Json::Num(spec.clients as f64)),
+        ("requests_per_client".to_string(), Json::Num(spec.requests as f64)),
+        ("rate_hz".to_string(), Json::finite_num(spec.rate_hz)),
+        ("keep_alive".to_string(), Json::Bool(spec.keep_alive)),
+        ("sent".to_string(), Json::Num(out.sent as f64)),
+        ("ok".to_string(), Json::Num(out.ok as f64)),
+        ("dropped".to_string(), Json::Num(out.dropped as f64)),
+        ("http_408".to_string(), Json::Num(out.count(408) as f64)),
+        ("http_503".to_string(), Json::Num(out.count(503) as f64)),
+        ("wall_s".to_string(), Json::finite_num(out.wall_s)),
+    ]);
+    let deltas = [
+        ("fe_connections", after.connections - before.connections),
+        ("fe_requests", after.requests - before.requests),
+        ("fe_failures", after.failures - before.failures),
+        ("fe_shed", after.shed - before.shed),
+    ];
+    for (key, delta) in deltas {
+        fields.insert(key.to_string(), Json::Num(delta as f64));
+    }
+    for (key, value) in latency_summary(&out.latencies_s).json_fields("") {
+        fields.insert(key, value);
+    }
+    Json::Obj(fields)
+}

@@ -59,6 +59,12 @@
 //! - [`coordinator`] — L3: the streaming pipeline (scheduler, sketch
 //!   accumulator, sharded multi-producer/consumer) plus the experiment
 //!   driver, now a thin compatibility client of [`api`].
+//! - [`experiment`] — the declarative harness: `.plan` files describing
+//!   a trial grid (method × kernel × rank × …, seed-per-trial derived
+//!   from coordinates, JSONL rows byte-identical across reruns and
+//!   thread counts) or load scenarios replayed against a live [`serve`]
+//!   registry (open-loop/burst/slow-loris/partial-write, latency
+//!   percentiles + shed counts).
 //! - [`util::parallel`] — the scoped fork-join substrate every parallel
 //!   stage shares; `threads(0)` auto-detection and the determinism
 //!   contract (`threads = 1` ≡ `threads = N`, bit for bit).
@@ -84,6 +90,7 @@ pub mod api;
 pub mod bench_harness;
 pub mod config;
 pub mod coordinator;
+pub mod experiment;
 pub mod metrics;
 pub mod model_io;
 pub mod runtime;

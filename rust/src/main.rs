@@ -17,6 +17,8 @@
 //!              multi-model HTTP serving runtime (keep-alive pool)
 //! rkc stream   [--scenario moving_blobs|label_churn | --data pts.csv|-]
 //!              online clustering with live generation hot-swap
+//! rkc experiment --plan plans/file.plan [--out results.jsonl]
+//!              declarative trial grid / load-scenario replay -> JSONL
 //! ```
 //!
 //! Every subcommand accepts the config overrides documented in
@@ -94,6 +96,7 @@ fn real_main(args: Vec<String>) -> Result<()> {
         "predict" => commands::cmd_predict(&cfg, cli.get("data")),
         "serve" => commands::cmd_serve(&cfg),
         "stream" => commands::cmd_stream(&cfg, cli.get("data")),
+        "experiment" => commands::cmd_experiment(&cfg),
         other => Err(RkcError::invalid_config(format!(
             "unknown subcommand '{other}' (try --help)"
         ))),
@@ -121,6 +124,9 @@ SUBCOMMANDS
   stream     ingest --chunk-sized batches from --scenario / --data
              (- = stdin) / the dataset, fold them into a running
              sketch, and hot-swap refreshed models into the registry
+  experiment run a declarative --plan file (grid of trials, or load
+             scenarios replayed against a live registry) and write one
+             schema-stable JSONL row per trial/scenario
 
 COMMON OPTIONS (config overrides)
   --method one_pass|gaussian|exact|full_kernel|plain|nystrom[_m<M>]
@@ -142,6 +148,8 @@ COMMON OPTIONS (config overrides)
   --scenario moving_blobs|label_churn (stream; synthetic drift source)
   --drift X (stream; per-chunk drift magnitude, default 0.05)
   --stream_http true (stream; serve generations on --addr while running)
+  --plan plans/file.plan (experiment; grid or load plan to run)
+  --out results.jsonl (experiment; default exp_<plan-stem>.jsonl)
 
 SERVING PROTOCOL (serve)
   POST /models/NAME/predict {{\"points\": [[x, ...], ...]}} -> {{\"labels\": [...]}}

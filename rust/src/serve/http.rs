@@ -92,15 +92,34 @@ pub struct HttpOpts {
     /// Bounded queue of accepted-but-unclaimed connections; beyond this
     /// the accept loop sheds with an immediate 503.
     pub backlog: usize,
+    /// Total wall-clock budget for reading one request, counted from
+    /// its first byte (the slow-loris 408 deadline). `Duration::ZERO`
+    /// means the default 30 s — so `..Default::default()` call sites
+    /// keep their behavior, while load scenarios and fault tests can
+    /// shrink it to trigger the 408 path in milliseconds.
+    pub request_deadline: Duration,
 }
 
 impl Default for HttpOpts {
     fn default() -> Self {
-        HttpOpts { workers: 0, keep_alive: Duration::from_secs(5), backlog: 128 }
+        HttpOpts {
+            workers: 0,
+            keep_alive: Duration::from_secs(5),
+            backlog: 128,
+            request_deadline: Duration::ZERO,
+        }
     }
 }
 
 impl HttpOpts {
+    fn resolved_request_deadline(&self) -> Duration {
+        if self.request_deadline == Duration::ZERO {
+            REQUEST_DEADLINE
+        } else {
+            self.request_deadline
+        }
+    }
+
     fn resolved_workers(&self) -> usize {
         if self.workers == 0 {
             parallel::available_threads().clamp(4, 32)
@@ -250,6 +269,7 @@ pub fn serve_http_registry(
     let frontend = Arc::new(FrontendCounters::default());
     let queue = Arc::new(ConnQueue::new(opts.backlog.max(1)));
     let keep_alive = opts.keep_alive;
+    let request_deadline = opts.resolved_request_deadline();
 
     let mut workers = Vec::with_capacity(opts.resolved_workers());
     for i in 0..opts.resolved_workers() {
@@ -266,7 +286,7 @@ pub fn serve_http_registry(
                     // never a pool slot — the per-connection isolation
                     // the old thread-per-connection design had
                     let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        handle_conn(stream, &reg, &fc, keep_alive, &st);
+                        handle_conn(stream, &reg, &fc, keep_alive, request_deadline, &st);
                     }));
                 }
             });
@@ -441,6 +461,7 @@ fn handle_conn(
     registry: &ModelRegistry,
     frontend: &FrontendCounters,
     keep_alive: Duration,
+    request_deadline: Duration,
     stop: &AtomicBool,
 ) {
     // symmetric defense: a client that never reads its response must
@@ -449,7 +470,7 @@ fn handle_conn(
     let mut carry: Vec<u8> = Vec::new();
     let mut idle = FIRST_REQUEST_WINDOW;
     loop {
-        match read_request(&mut stream, &mut carry, idle, stop) {
+        match read_request(&mut stream, &mut carry, idle, request_deadline, stop) {
             ReadOutcome::Silent => return,
             ReadOutcome::Fatal(status, msg) => {
                 frontend.requests.fetch_add(1, Ordering::Relaxed);
@@ -837,12 +858,14 @@ fn connection_wants_close(value: &str) -> bool {
 /// Two separate clocks govern the read: while *no* byte of this request
 /// has arrived, the `idle` keep-alive window applies and expiry is a
 /// [`ReadOutcome::Silent`] close; from the first byte on, the
-/// [`REQUEST_DEADLINE`] slow-loris budget applies and expiry is a 408.
-/// The stop flag turns into a silent close at the next poll tick.
+/// `request_deadline` slow-loris budget (see
+/// [`HttpOpts::request_deadline`]) applies and expiry is a 408. The
+/// stop flag turns into a silent close at the next poll tick.
 fn read_request(
     stream: &mut TcpStream,
     carry: &mut Vec<u8>,
     idle: Duration,
+    request_deadline: Duration,
     stop: &AtomicBool,
 ) -> ReadOutcome {
     let mut buf = std::mem::take(carry);
@@ -853,7 +876,7 @@ fn read_request(
     // None = the applicable deadline (idle vs slow-loris) expired
     let remaining = |request_started: &Option<Instant>| -> Option<Duration> {
         match request_started {
-            Some(t0) => REQUEST_DEADLINE.checked_sub(t0.elapsed()),
+            Some(t0) => request_deadline.checked_sub(t0.elapsed()),
             None => idle.checked_sub(idle_started.elapsed()),
         }
     };

@@ -1,0 +1,43 @@
+//! Golden determinism for the experiment harness: the committed
+//! `plans/smoke.plan` (16 trials, `timings false`) must produce
+//! **byte-identical** JSONL on every run and at every runner thread
+//! count. Trial seeds are pure functions of the trial coordinates and
+//! runner parallelism never enters a trial's computation, so the
+//! output is pinned by the plan text alone — the same contract the CI
+//! smoke job re-checks with `cmp` on the real binary's output.
+
+use rkc::experiment::{expand, plan_hash, run_plan_text, Plan};
+
+const SMOKE: &str = include_str!(concat!(env!("CARGO_MANIFEST_DIR"), "/plans/smoke.plan"));
+
+#[test]
+fn smoke_plan_jsonl_is_byte_identical_across_reruns_and_threads() {
+    let first = run_plan_text(SMOKE, 1).expect("run smoke plan");
+    let again = run_plan_text(SMOKE, 1).expect("rerun smoke plan");
+    let parallel = run_plan_text(SMOKE, 4).expect("run smoke plan threaded");
+    assert_eq!(first.jsonl, again.jsonl, "rerun diverged");
+    assert_eq!(first.jsonl, parallel.jsonl, "threads=4 diverged from threads=1");
+}
+
+#[test]
+fn smoke_plan_report_shape_matches_the_plan() {
+    let Plan::Grid(grid) = Plan::parse(SMOKE).expect("parse smoke plan") else {
+        panic!("smoke.plan must be a grid plan");
+    };
+    let trials = expand(&grid);
+    let report = run_plan_text(SMOKE, 0).expect("run smoke plan");
+    assert_eq!(report.kind, "grid");
+    assert_eq!(report.rows, trials.len());
+    assert_eq!(report.plan_hash, plan_hash(SMOKE));
+    // one header line plus one line per trial, newline-terminated
+    assert_eq!(report.jsonl.lines().count(), trials.len() + 1);
+    assert!(report.jsonl.ends_with('\n'));
+    let header = report.jsonl.lines().next().expect("header line");
+    assert!(header.contains("\"row\":\"header\""), "first line must be the header: {header}");
+    assert!(
+        header.contains(&format!("\"plan_hash\":\"{:016x}\"", report.plan_hash)),
+        "header must carry the plan hash: {header}"
+    );
+    // timings false: no per-stage wall-time fields anywhere
+    assert!(!report.jsonl.contains("sketch_s"), "timings false must suppress stage times");
+}

@@ -173,6 +173,144 @@ fn json_parser_does_not_panic_on_fuzz() {
     }
 }
 
+// ---- serve-layer failure injection via the scenario replayer -------
+//
+// These drive the live HTTP front-end with `rkc::experiment`'s load
+// replayer instead of hand-rolled sockets: the same code path `rkc
+// experiment` runs in CI exercises the deadline, poisoning, and shed
+// behaviors here.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use rkc::api::KernelClusterer;
+use rkc::data;
+use rkc::experiment::{points_body, replay_scenario, ReplayTarget, ScenarioMode, ScenarioSpec};
+use rkc::rng::Pcg64;
+use rkc::serve::{serve_http_registry, HttpOpts, HttpServer, ModelRegistry, ServeOpts};
+
+/// Fit one small model, serve it with the given front-end knobs, and
+/// hand back the replay target plus a valid predict body.
+fn serve_fixture(opts: HttpOpts) -> (HttpServer, ReplayTarget, String) {
+    let ds = data::cross_lines(&mut Pcg64::seed(21), 128);
+    let model = KernelClusterer::new(2).oversample(8).seed(3).threads(1).fit(&ds.x).expect("fit");
+    let registry = Arc::new(ModelRegistry::new(ServeOpts { threads: 1, ..Default::default() }));
+    registry.insert("m0", model).expect("register model");
+    let http = serve_http_registry(registry, "127.0.0.1:0", opts).expect("serve http");
+    let paths = vec!["/models/m0/predict".to_string()];
+    let target = ReplayTarget { addr: http.local_addr(), paths };
+    let body = points_body(&data::cross_lines(&mut Pcg64::seed(22), 4).x);
+    (http, target, body)
+}
+
+/// Server-side counters settle asynchronously (a pool worker records
+/// the failure after the client already moved on) — poll briefly.
+fn wait_until(mut cond: impl FnMut() -> bool) -> bool {
+    for _ in 0..100 {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    cond()
+}
+
+#[test]
+fn slow_loris_is_cut_by_the_request_deadline_with_408() {
+    let (http, target, body) = serve_fixture(HttpOpts {
+        workers: 2,
+        request_deadline: Duration::from_millis(300),
+        ..Default::default()
+    });
+    let spec = ScenarioSpec {
+        name: "loris".to_string(),
+        mode: ScenarioMode::SlowLoris,
+        clients: 1,
+        requests: 2,
+        rate_hz: 0.0,
+        keep_alive: true,
+    };
+    let out = replay_scenario(&target, &spec, &body);
+    assert_eq!(out.sent, 2);
+    assert_eq!(out.count(408), 2, "deadline must answer 408: {:?}", out.statuses);
+    assert_eq!(out.dropped, 0, "the 408 must arrive before the client read timeout");
+    // the stalled connection was held for roughly the 300 ms deadline,
+    // not the client's 10 s read timeout
+    for &l in &out.latencies_s {
+        assert!((0.2..5.0).contains(&l), "latency {l}s is not near the 300ms deadline");
+    }
+    http.shutdown();
+}
+
+#[test]
+fn mid_body_disconnect_poisons_only_its_own_connection() {
+    let (http, target, body) = serve_fixture(HttpOpts { workers: 2, ..Default::default() });
+    let before = http.frontend_stats();
+    let drip = ScenarioSpec {
+        name: "drip".to_string(),
+        mode: ScenarioMode::PartialWrite,
+        clients: 1,
+        requests: 2,
+        rate_hz: 0.0,
+        keep_alive: false,
+    };
+    let out = replay_scenario(&target, &drip, &body);
+    // each nominal request is one aborted write plus one good follow-up
+    assert_eq!(out.sent, 4);
+    assert_eq!(out.ok, 2, "follow-up requests must succeed: {:?}", out.statuses);
+    assert_eq!(out.dropped, 2);
+    // both aborted bodies surface as framing failures on the server —
+    // and nothing else does
+    assert!(
+        wait_until(|| http.frontend_stats().failures - before.failures >= 2),
+        "server never recorded the two aborted bodies as failures"
+    );
+    assert_eq!(http.frontend_stats().failures - before.failures, 2);
+    // the registry is still fully alive afterwards
+    let steady = ScenarioSpec {
+        name: "steady".to_string(),
+        mode: ScenarioMode::OpenLoop,
+        clients: 2,
+        requests: 3,
+        rate_hz: 0.0,
+        keep_alive: true,
+    };
+    let again = replay_scenario(&target, &steady, &body);
+    assert_eq!(again.ok, 6, "poison must not outlive its connection: {:?}", again.statuses);
+    http.shutdown();
+}
+
+#[test]
+fn burst_beyond_the_connection_queue_records_sheds() {
+    let (http, target, body) = serve_fixture(HttpOpts {
+        workers: 1,
+        backlog: 1,
+        keep_alive: Duration::ZERO,
+        ..Default::default()
+    });
+    let before = http.frontend_stats();
+    let spike = ScenarioSpec {
+        name: "spike".to_string(),
+        mode: ScenarioMode::Burst,
+        clients: 4,
+        requests: 1,
+        rate_hz: 0.0,
+        keep_alive: false,
+    };
+    let out = replay_scenario(&target, &spike, &body);
+    let shed = http.frontend_stats().shed - before.shed;
+    assert!(shed >= 2, "backlog 1 must shed most of a 4-connection spike (shed {shed})");
+    assert_eq!(out.sent, 4);
+    assert_eq!(out.ok as u64, 4 - shed, "admitted connections must be served: {:?}", out.statuses);
+    assert_eq!(
+        out.count(503) as u64 + out.dropped as u64,
+        shed,
+        "every shed connection must be observed as a 503 or a dead socket: {:?}",
+        out.statuses
+    );
+    http.shutdown();
+}
+
 #[test]
 fn sketch_ingest_shape_mismatch_panics_with_context() {
     use rkc::lowrank::OnePassSketch;

@@ -4,8 +4,13 @@
 //! driven by the crate's own deterministic PCG64 across many random
 //! instances — same idea, explicit seeds, fully reproducible failures.
 
+use std::collections::BTreeSet;
+
 use rkc::clustering::{accuracy, adjusted_rand_index, kernel_kmeans_objective, kmeans, KmeansOpts};
+use rkc::config::Method;
 use rkc::data;
+use rkc::error::RkcError;
+use rkc::experiment::{expand, trial_seed, GridPlan, LoadPlan, Plan, ScenarioMode, ScenarioSpec};
 use rkc::kernels::{column_batches, full_kernel_matrix, BlockSource, Kernel, NativeBlockSource};
 use rkc::linalg::{gemm, gemm_nt, gemm_tn, jacobi_eig, matmul_reference, Mat};
 use rkc::lowrank::{
@@ -302,5 +307,182 @@ fn property_nystrom_exact_at_full_sampling_any_kernel() {
         );
         let err = normalized_frobenius_error(&k, &emb);
         assert!(err < 1e-6, "case {case}: err {err} (rank {true_rank})");
+    }
+}
+
+// ---- experiment-plan properties ------------------------------------
+
+/// Draw a random (but always valid) grid plan: every axis gets 1–3
+/// distinct values, scalars stay in-range.
+fn random_grid_plan(rng: &mut Pcg64) -> GridPlan {
+    let take = |rng: &mut Pcg64, pool: &[&str]| -> Vec<String> {
+        let len = 1 + rng.below(pool.len());
+        pool[..len].iter().map(|s| s.to_string()).collect()
+    };
+    let methods = [Method::OnePass, Method::Exact, Method::PlainKmeans, Method::Nystrom { m: 40 }];
+    let kernels = [Kernel::paper_poly2(), Kernel::Rbf { gamma: 0.5 }, Kernel::Linear];
+    let mut plan = GridPlan::default();
+    plan.seed = rng.next_u64();
+    plan.datasets = take(rng, &["cross_lines", "gaussian_blobs", "segmentation_like"]);
+    plan.ns = (0..1 + rng.below(3)).map(|i| 64 + 32 * i).collect();
+    plan.methods = methods[..1 + rng.below(methods.len())].to_vec();
+    plan.kernels = kernels[..1 + rng.below(kernels.len())].to_vec();
+    plan.ranks = (0..1 + rng.below(2)).map(|i| 2 + i).collect();
+    plan.oversamples = (0..1 + rng.below(3)).map(|i| 4 + 2 * i).collect();
+    plan.threads = (0..1 + rng.below(2)).map(|i| 1 + i).collect();
+    plan.repeats = 1 + rng.below(3);
+    plan.timings = rng.below(2) == 0;
+    plan
+}
+
+/// Draw a random (valid) load plan with 1–3 scenarios.
+fn random_load_plan(rng: &mut Pcg64) -> LoadPlan {
+    let modes = [
+        ScenarioMode::OpenLoop,
+        ScenarioMode::Burst,
+        ScenarioMode::SlowLoris,
+        ScenarioMode::PartialWrite,
+    ];
+    let mut plan = LoadPlan::default();
+    plan.seed = rng.next_u64();
+    plan.models = 1 + rng.below(3);
+    plan.deadline_ms = 100 * rng.below(5) as u64;
+    plan.scenarios = (0..1 + rng.below(3))
+        .map(|i| ScenarioSpec {
+            name: format!("s{i}"),
+            mode: modes[rng.below(modes.len())],
+            clients: 1 + rng.below(4),
+            requests: 1 + rng.below(4),
+            rate_hz: [0.0, 12.5, 50.0][rng.below(3)],
+            keep_alive: rng.below(2) == 0,
+        })
+        .collect();
+    plan
+}
+
+#[test]
+fn property_grid_expansion_count_is_the_axis_product() {
+    let mut rng = Pcg64::seed(50);
+    for case in 0..40 {
+        let plan = random_grid_plan(&mut rng);
+        let want = plan.datasets.len()
+            * plan.ns.len()
+            * plan.methods.len()
+            * plan.kernels.len()
+            * plan.ranks.len()
+            * plan.oversamples.len()
+            * plan.threads.len()
+            * plan.repeats;
+        let trials = expand(&plan);
+        assert_eq!(trials.len(), want, "case {case}");
+        for (i, t) in trials.iter().enumerate() {
+            assert_eq!(t.index, i, "case {case}: indices must be the row order");
+        }
+    }
+}
+
+#[test]
+fn property_trial_seeds_are_unique_and_order_independent() {
+    let mut rng = Pcg64::seed(51);
+    for case in 0..40 {
+        let plan = random_grid_plan(&mut rng);
+        let trials = expand(&plan);
+        // distinct coordinates -> distinct seeds (FNV over the spec
+        // string; a collision would silently correlate two trials)
+        let seeds: BTreeSet<u64> = trials.iter().map(|t| t.seed).collect();
+        assert_eq!(seeds.len(), trials.len(), "case {case}: seed collision");
+        // the seed is a pure function of the coordinates...
+        for t in &trials {
+            let again = trial_seed(
+                plan.seed,
+                &t.dataset,
+                t.n,
+                t.method,
+                t.kernel,
+                t.rank,
+                t.oversample,
+                t.threads,
+                t.repeat,
+            );
+            assert_eq!(t.seed, again, "case {case}");
+        }
+        // ...so permuting every axis moves trials but never reseeds them
+        let mut permuted = plan.clone();
+        permuted.datasets.reverse();
+        permuted.ns.reverse();
+        permuted.methods.reverse();
+        permuted.kernels.reverse();
+        permuted.ranks.reverse();
+        permuted.oversamples.reverse();
+        permuted.threads.reverse();
+        let key = |t: &rkc::experiment::Trial| {
+            (
+                t.dataset.clone(),
+                t.n,
+                t.method.to_string(),
+                t.kernel.to_string(),
+                t.rank,
+                t.oversample,
+                t.threads,
+                t.repeat,
+            )
+        };
+        let by_coords: std::collections::BTreeMap<_, _> =
+            trials.iter().map(|t| (key(t), t.seed)).collect();
+        for t in expand(&permuted) {
+            assert_eq!(by_coords[&key(&t)], t.seed, "case {case}");
+        }
+    }
+}
+
+#[test]
+fn property_plan_display_reparses_to_an_equal_plan() {
+    let mut rng = Pcg64::seed(52);
+    for case in 0..40 {
+        let plan = if case % 2 == 0 {
+            Plan::Grid(random_grid_plan(&mut rng))
+        } else {
+            Plan::Load(random_load_plan(&mut rng))
+        };
+        let text = plan.to_string();
+        let again = Plan::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(plan, again, "case {case}: round-trip changed the plan");
+        assert_eq!(text, again.to_string(), "case {case}: display must be canonical");
+    }
+}
+
+#[test]
+fn property_malformed_plans_are_typed_errors_never_panics() {
+    let bad: &[&str] = &[
+        "",                                            // missing kind
+        "seed 1\n",                                    // missing kind with content
+        "kind tournament\n",                           // unknown kind
+        "kind grid\nwat 1\n",                          // unknown grid key
+        "kind load\nscenario a mode=burst\nwat 1\n",   // unknown load key
+        "kind grid\nseed 1\nseed 2\n",                 // duplicate key
+        "kind grid\nmethod one_pass,,exact\n",         // empty axis item
+        "kind grid\nmethod frobnicate\n",              // bad method
+        "kind grid\nkernel poly9000\n",                // bad kernel
+        "kind grid\nseed banana\n",                    // non-numeric scalar
+        "kind grid\nrank 0\n",                         // rank below 1
+        "kind grid\nrepeats 0\n",                      // repeats below 1
+        "kind grid\nn 4\n",                            // n below the floor
+        "kind grid\nmethod one_pass,one_pass\n",       // duplicate axis value
+        "kind grid\njust-one-token\n",                 // no key/value split
+        "kind load\n",                                 // load without scenarios
+        "kind load\nscenario a clients=2\n",           // scenario missing mode
+        "kind load\nscenario mode=burst\n",            // scenario missing name
+        "kind load\nscenario a mode=warp\n",           // bad scenario mode
+        "kind load\nscenario a mode=burst requests=0\n", // zero requests
+        "kind load\nscenario a mode=burst rate=-1\n",  // negative rate
+        "kind load\nscenario a mode=burst wat=1\n",    // unknown scenario setting
+        "kind load\nscenario a mode=burst\nscenario a mode=burst\n", // duplicate name
+        "kind load\nscenario a mode=burst mode=open_loop\n", // duplicate scenario setting
+    ];
+    for text in bad {
+        match Plan::parse(text) {
+            Err(RkcError::InvalidConfig(_)) | Err(RkcError::Parse { .. }) => {}
+            other => panic!("plan {text:?}: expected a typed parse error, got {other:?}"),
+        }
     }
 }

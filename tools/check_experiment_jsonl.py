@@ -1,0 +1,165 @@
+#!/usr/bin/env python3
+"""Validate the JSONL files `rkc experiment` emits.
+
+Every file must open with a header row binding it to the exact plan
+that produced it: `row:"header"`, `kind` (grid|load), `plan_hash`
+(16-hex FNV-1a 64 of the plan text — recomputed here when --plan is
+given), `schema` (this script understands schema 1), `rows` (the data
+row count, cross-checked), and `timings` (grid: whether per-stage
+wall-time keys are present).
+
+Grid data rows must carry every trial coordinate and metric key;
+`approx_error` is the one key allowed to be null (plain_kmeans has no
+kernel approximation). Load (scenario) rows must carry the traffic
+shape, outcome counters, front-end deltas, and the latency percentiles
+— null percentiles are only legal when the scenario saw no 2xx at all.
+All numerics must be finite (the emitters route metrics through
+Json::finite_num, which downgrades NaN/inf to null — a raw NaN means an
+emitter bypassed it). Exits non-zero on the first malformed file.
+
+Usage:
+  check_experiment_jsonl.py results.jsonl [more.jsonl ...]
+  check_experiment_jsonl.py --plan plans/smoke.plan exp_smoke.jsonl
+"""
+
+import json
+import math
+import sys
+
+SCHEMA = 1
+
+HEADER_KEYS = ["row", "kind", "plan_hash", "schema", "rows", "timings"]
+
+GRID_KEYS = [
+    "row", "trial", "repeat", "dataset", "n", "k", "method", "kernel",
+    "rank", "oversample", "threads", "batch", "seed", "accuracy", "ari",
+    "nmi", "objective", "peak_bytes", "persistent_bytes",
+]
+GRID_TIMING_KEYS = ["sketch_s", "recovery_s", "kmeans_s", "error_s"]
+# plain_kmeans has no kernel approximation: the key must exist, null OK
+GRID_NULLABLE = ["approx_error"]
+
+LOAD_KEYS = [
+    "row", "scenario", "mode", "clients", "requests_per_client",
+    "rate_hz", "keep_alive", "sent", "ok", "dropped", "http_408",
+    "http_503", "wall_s", "fe_connections", "fe_requests",
+    "fe_failures", "fe_shed",
+]
+# latency stats of an empty latency set are legitimately null
+LOAD_PERCENTILES = ["p50_ms", "p95_ms", "p99_ms", "mean_ms"]
+
+
+def fail(path, msg):
+    print(f"FAIL {path}: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def fnv1a64(data):
+    """FNV-1a 64 — must match rust/src/model_io checksum()."""
+    h = 0xCBF29CE484222325
+    for byte in data:
+        h = ((h ^ byte) * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def check_finite(path, lineno, key, value):
+    if isinstance(value, bool):
+        return
+    if isinstance(value, (int, float)) and not math.isfinite(value):
+        fail(path, f"line {lineno}: key '{key}' is non-finite ({value!r})")
+
+
+def require(path, lineno, row, keys, nullable=()):
+    missing = [k for k in keys if k not in row or (k not in nullable and row[k] is None)]
+    if missing:
+        fail(path, f"line {lineno}: missing (or null) required keys {missing}")
+    for key, value in row.items():
+        check_finite(path, lineno, key, value)
+
+
+def check_file(path, plan_hash):
+    try:
+        with open(path, encoding="utf-8") as fh:
+            lines = fh.read().splitlines()
+    except OSError as exc:
+        fail(path, f"unreadable: {exc}")
+    if not lines:
+        fail(path, "empty file")
+    rows = []
+    for lineno, line in enumerate(lines, start=1):
+        try:
+            row = json.loads(line)
+        except ValueError as exc:
+            fail(path, f"line {lineno}: invalid JSON: {exc}")
+        if not isinstance(row, dict):
+            fail(path, f"line {lineno}: not a JSON object")
+        rows.append(row)
+
+    header = rows[0]
+    require(path, 1, header, HEADER_KEYS)
+    if header["row"] != "header":
+        fail(path, f"first line must be the header row, got row={header['row']!r}")
+    if header["schema"] != SCHEMA:
+        fail(path, f"schema {header['schema']!r} (this validator understands {SCHEMA})")
+    kind = header["kind"]
+    if kind not in ("grid", "load"):
+        fail(path, f"unknown kind {kind!r}")
+    data = rows[1:]
+    if header["rows"] != len(data):
+        fail(path, f"header claims {header['rows']} rows, file has {len(data)}")
+    if not data:
+        fail(path, "no data rows after the header")
+    if plan_hash is not None and header["plan_hash"] != plan_hash:
+        fail(
+            path,
+            f"plan_hash {header['plan_hash']} does not match the plan file ({plan_hash})",
+        )
+
+    if kind == "grid":
+        keys = GRID_KEYS + (GRID_TIMING_KEYS if header["timings"] else [])
+        for lineno, row in enumerate(data, start=2):
+            require(path, lineno, row, keys, nullable=GRID_NULLABLE)
+            if row["row"] != "trial":
+                fail(path, f"line {lineno}: grid data rows must have row='trial'")
+            if not header["timings"]:
+                present = [k for k in GRID_TIMING_KEYS if k in row]
+                if present:
+                    fail(path, f"line {lineno}: timings=false but found {present}")
+    else:
+        for lineno, row in enumerate(data, start=2):
+            require(path, lineno, row, LOAD_KEYS)
+            if row["row"] != "scenario":
+                fail(path, f"line {lineno}: load data rows must have row='scenario'")
+            for key in LOAD_PERCENTILES:
+                if key not in row:
+                    fail(path, f"line {lineno}: missing percentile key '{key}'")
+                if row[key] is None and row["ok"] > 0:
+                    fail(path, f"line {lineno}: '{key}' is null but ok={row['ok']}")
+    print(f"ok   {path}: header + {len(data)} {kind} row(s)")
+
+
+def main(argv):
+    args = argv[1:]
+    plan_hash = None
+    paths = []
+    i = 0
+    while i < len(args):
+        if args[i] == "--plan":
+            i += 1
+            if i >= len(args):
+                fail("args", "--plan needs a path")
+            with open(args[i], "rb") as fh:
+                plan_hash = f"{fnv1a64(fh.read()):016x}"
+        else:
+            paths.append(args[i])
+        i += 1
+    if not paths:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    for path in paths:
+        check_file(path, plan_hash)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
