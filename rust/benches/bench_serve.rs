@@ -230,8 +230,41 @@ fn main() {
     );
     http.shutdown();
 
+    // --- row 4: obs overhead (in-process hot path, recording on/off) -
+    // same drive as row 1; the delta is the cost of the request/batch
+    // counters + latency histogram on the serving fast path
+    let measure = |on: bool| {
+        rkc::obs::set_enabled(on);
+        drive(clients, reqs, |_, lat| {
+            let h = handle.clone();
+            for _ in 0..reqs {
+                let t = Instant::now();
+                h.predict(query.clone()).expect("predict");
+                lat.push(t.elapsed().as_secs_f64());
+            }
+        })
+    };
+    let _ = measure(true); // warm-up, discarded
+    let (on_s, on_lat) = measure(true);
+    let (off_s, _) = measure(false);
+    rkc::obs::set_enabled(true);
+    let obs_overhead_pct = (on_s / off_s - 1.0) * 100.0;
+    println!(
+        "obs overhead: instrumented {on_s:.3}s vs disabled {off_s:.3}s ({obs_overhead_pct:+.1}%)"
+    );
+    let row_obs = record(
+        "obs_overhead",
+        n,
+        clients,
+        reqs,
+        points_per_req,
+        on_s,
+        &on_lat,
+        vec![("obs_overhead_pct".to_string(), Json::finite_num(obs_overhead_pct))],
+    );
+
     rkc::bench_harness::write_bench_json(
         "BENCH_serve.json",
-        vec![row_inproc, row_close, row_keepalive],
+        vec![row_inproc, row_close, row_keepalive, row_obs],
     );
 }

@@ -36,6 +36,10 @@ fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
+/// One streaming run. With `refit` the full batch ceiling (a cold
+/// `KernelClusterer` fit on the identical points) and the accuracy-lag
+/// fields are computed; without it those fields serialize as null —
+/// the obs-overhead "off" run only needs `wall_s`, not a second refit.
 fn run_scenario(
     scenario: &str,
     mut source: DriftStream,
@@ -43,6 +47,7 @@ fn run_scenario(
     n_total: usize,
     chunk: usize,
     refresh_points: usize,
+    refit: bool,
 ) -> Json {
     let mut sc = StreamClusterer::new(k)
         .rank(2)
@@ -60,6 +65,9 @@ fn run_scenario(
     while fed < n_total {
         let m = chunk.min(n_total - fed);
         let ds = source.chunk(m);
+        // coords are only consumed by the refit, but collecting them
+        // unconditionally keeps the timed loop identical between the
+        // obs-overhead on/off runs (wall_s covers this loop)
         truth.extend_from_slice(&ds.labels);
         for j in 0..m {
             for i in 0..ds.x.rows() {
@@ -80,18 +88,21 @@ fn run_scenario(
     let acc_stream = accuracy(sc.last_labels().expect("refreshed at least once"), &truth, k);
 
     // batch ceiling: one cold fit on the identical point set
-    let p = coords.len() / n_total;
-    let x = Mat::from_fn(p, n_total, |i, j| coords[j * p + i]);
-    let t_refit = Instant::now();
-    let refit = KernelClusterer::new(k)
-        .rank(2)
-        .oversample(10)
-        .seed(42)
-        .threads(0)
-        .fit(&x)
-        .expect("batch refit");
-    let refit_s = t_refit.elapsed().as_secs_f64();
-    let acc_refit = accuracy(refit.labels(), &truth, k);
+    let (acc_refit, refit_s) = if refit {
+        let p = coords.len() / n_total;
+        let x = Mat::from_fn(p, n_total, |i, j| coords[j * p + i]);
+        let t_refit = Instant::now();
+        let refitted = KernelClusterer::new(k)
+            .rank(2)
+            .oversample(10)
+            .seed(42)
+            .threads(0)
+            .fit(&x)
+            .expect("batch refit");
+        (accuracy(refitted.labels(), &truth, k), t_refit.elapsed().as_secs_f64())
+    } else {
+        (f64::NAN, f64::NAN)
+    };
 
     let lat = latency_summary(&refresh_s);
     println!(
@@ -137,6 +148,7 @@ fn main() {
         n_total,
         chunk,
         refresh_points,
+        true,
     );
     let churn_row = run_scenario(
         "label_churn",
@@ -145,7 +157,56 @@ fn main() {
         n_total,
         chunk,
         refresh_points,
+        true,
     );
 
-    rkc::bench_harness::write_bench_json("BENCH_stream.json", vec![blobs_row, churn_row]);
+    // --- obs overhead row: the moving_blobs scenario with recording on
+    // vs off; the wall-clock delta is the cost of the ingest/refresh
+    // histograms, gauges, and fit-stage series on the streaming path
+    let wall = |row: &Json| match row {
+        Json::Obj(m) => match m.get("wall_s") {
+            Some(Json::Num(v)) => *v,
+            _ => f64::NAN,
+        },
+        _ => f64::NAN,
+    };
+    rkc::obs::set_enabled(true);
+    let on_row = run_scenario(
+        "obs_overhead",
+        DriftStream::moving_blobs(7, 2, 2, 0.5, 0.02),
+        2,
+        n_total,
+        chunk,
+        refresh_points,
+        true,
+    );
+    rkc::obs::set_enabled(false);
+    let off_row = run_scenario(
+        "obs_overhead_off",
+        DriftStream::moving_blobs(7, 2, 2, 0.5, 0.02),
+        2,
+        n_total,
+        chunk,
+        refresh_points,
+        false,
+    );
+    rkc::obs::set_enabled(true);
+    let obs_overhead_pct = (wall(&on_row) / wall(&off_row) - 1.0) * 100.0;
+    println!(
+        "obs overhead: instrumented {:.3}s vs disabled {:.3}s ({obs_overhead_pct:+.1}%)",
+        wall(&on_row),
+        wall(&off_row),
+    );
+    let obs_row = match on_row {
+        Json::Obj(mut m) => {
+            m.insert("obs_overhead_pct".to_string(), Json::finite_num(obs_overhead_pct));
+            Json::Obj(m)
+        }
+        other => other,
+    };
+
+    rkc::bench_harness::write_bench_json(
+        "BENCH_stream.json",
+        vec![blobs_row, churn_row, obs_row],
+    );
 }

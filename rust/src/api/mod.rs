@@ -358,6 +358,7 @@ impl KernelClusterer {
         x: &Mat,
         registry: Option<&ArtifactRegistry>,
     ) -> Result<FittedModel> {
+        let _fit_span = crate::obs::span("api.fit");
         let n = x.cols();
         self.validate(n)?;
         // only the embedding methods can route compute through XLA;
@@ -376,6 +377,7 @@ impl KernelClusterer {
                 let t0 = Instant::now();
                 let res = kmeans_threaded(x, &kopts, &mut rng, self.threads_resolved());
                 let kmeans_time = t0.elapsed();
+                crate::obs::record_stage("kmeans", kmeans_time);
                 Ok(FittedModel {
                     kernel: self.kernel,
                     k: self.k,
@@ -430,6 +432,8 @@ impl KernelClusterer {
                     .zip(&sizes)
                     .map(|(&s, &c)| if c > 0 { s / (c * c) as f64 } else { f64::INFINITY })
                     .collect();
+                crate::obs::record_stage("sketch", sketch_time);
+                crate::obs::record_stage("kmeans", kmeans_time);
                 Ok(FittedModel {
                     kernel: self.kernel,
                     k: self.k,
@@ -476,6 +480,7 @@ impl KernelClusterer {
 
     /// Object-safe flavor of [`fit_stream`](Self::fit_stream).
     pub fn fit_stream_dyn(&self, src: &mut dyn BlockSource) -> Result<FittedModel> {
+        let _fit_span = crate::obs::span("api.fit_stream");
         let n = src.n();
         self.validate(n)?;
         match self.method {
@@ -546,6 +551,9 @@ impl KernelClusterer {
             _ => kmeans_threaded(&emb.y, &kopts, rng, threads),
         };
         let kmeans_time = t0.elapsed();
+        crate::obs::record_stage("sketch", outcome.sketch_time);
+        crate::obs::record_stage("recovery", outcome.recovery_time);
+        crate::obs::record_stage("kmeans", kmeans_time);
         Ok(FittedModel {
             kernel: self.kernel,
             k: self.k,

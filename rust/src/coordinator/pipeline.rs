@@ -26,7 +26,37 @@ use std::time::Duration;
 use crate::kernels::{column_batches, BlockSource, NativeBlockSource};
 use crate::linalg::Mat;
 use crate::lowrank::OnePassSketch;
+use crate::obs;
 use crate::sketch::Srht;
+
+/// Publish one finished pass's [`StageStats`] into the process-wide
+/// metric registry and backfill a `pipeline.sketch_pass` span. Strictly
+/// out-of-band: called once after the pass completes, never inside it.
+fn record_pass_obs(stats: &StageStats, wall: Duration) {
+    let r = obs::registry();
+    r.counter(
+        "rkc_pipeline_gram_blocks_total",
+        "Kernel column blocks streamed through the sketch pass.",
+        &[],
+    )
+    .add(stats.blocks as u64);
+    let stage_help = "Cumulative per-pass stage time inside the sketch pass.";
+    r.histogram(
+        "rkc_pipeline_stage_seconds",
+        stage_help,
+        &[("stage", "produce")],
+        obs::latency_buckets(),
+    )
+    .observe(stats.produce_time.as_secs_f64());
+    r.histogram(
+        "rkc_pipeline_stage_seconds",
+        stage_help,
+        &[("stage", "transform")],
+        obs::latency_buckets(),
+    )
+    .observe(stats.transform_time.as_secs_f64());
+    obs::record_span("pipeline.sketch_pass", wall);
+}
 
 /// Per-stage wall-clock accounting for the sketch pass.
 #[derive(Clone, Debug, Default)]
@@ -66,6 +96,7 @@ pub fn run_sketch_pass(
     n_real: usize,
     batch: usize,
 ) -> (OnePassSketch, StageStats) {
+    let wall = std::time::Instant::now();
     let mut sketch = OnePassSketch::new(producer.srht().clone(), n_real);
     let mut stats = StageStats::default();
     for cols in column_batches(n_real, batch) {
@@ -78,6 +109,7 @@ pub fn run_sketch_pass(
         stats.blocks += 1;
     }
     stats.peak_in_flight = 1;
+    record_pass_obs(&stats, wall.elapsed());
     (sketch, stats)
 }
 
@@ -110,6 +142,7 @@ pub fn run_sketch_pass_sharded(
     fwht_threads: usize,
 ) -> (OnePassSketch, StageStats) {
     let n_real = src.n();
+    let wall = std::time::Instant::now();
     let mut sketch = OnePassSketch::new(srht.clone(), n_real);
     let mut stats = StageStats::default();
     let batches = column_batches(n_real, batch);
@@ -163,6 +196,7 @@ pub fn run_sketch_pass_sharded(
 
     assert_eq!(stats.blocks, nbatches);
     stats.peak_in_flight = channel_cap.max(1) + producers;
+    record_pass_obs(&stats, wall.elapsed());
     (sketch, stats)
 }
 

@@ -68,6 +68,11 @@
 //! - [`util::parallel`] — the scoped fork-join substrate every parallel
 //!   stage shares; `threads(0)` auto-detection and the determinism
 //!   contract (`threads = 1` ≡ `threads = N`, bit for bit).
+//! - [`obs`] — process-wide observability: the metrics registry
+//!   (counters / gauges / log-bucket histograms rendered as Prometheus
+//!   text at `GET /metrics`), span tracing into a bounded lock-striped
+//!   ring (`--trace out.jsonl`), strictly out-of-band — determinism
+//!   contracts hold with tracing on or off.
 //! - [`runtime`] — PJRT wrapper loading `artifacts/*.hlo.txt` (L2/L1
 //!   compute compiled from JAX + Pallas by `python/compile/aot.py`);
 //!   gated behind the `xla` cargo feature with a graceful native
@@ -93,6 +98,7 @@ pub mod coordinator;
 pub mod experiment;
 pub mod metrics;
 pub mod model_io;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod stream;

@@ -43,6 +43,7 @@ fn main() {
 }
 
 fn real_main(args: Vec<String>) -> Result<()> {
+    rkc::obs::init_from_env();
     let cli = Cli::parse(args, FLAGS)?;
     if cli.has_flag("help") || cli.subcommand.is_none() {
         print_help();
@@ -68,6 +69,7 @@ fn real_main(args: Vec<String>) -> Result<()> {
         // still fails loudly
         if k == "config"
             || k == "out-dir"
+            || k == "trace"
             || (k == "data" && (sub == "predict" || sub == "stream"))
         {
             continue;
@@ -84,7 +86,7 @@ fn real_main(args: Vec<String>) -> Result<()> {
     }
 
     let out_dir = cli.get("out-dir").unwrap_or("results").to_string();
-    match sub.as_str() {
+    let result = match sub.as_str() {
         "run" => commands::cmd_run(&cfg, registry.as_ref()),
         "table1" => commands::cmd_table1(&cfg, registry.as_ref()),
         "fig2" => commands::cmd_fig2(&cfg, registry.as_ref(), &out_dir),
@@ -100,7 +102,23 @@ fn real_main(args: Vec<String>) -> Result<()> {
         other => Err(RkcError::invalid_config(format!(
             "unknown subcommand '{other}' (try --help)"
         ))),
+    };
+
+    // dump the span ring last (even after a failed subcommand — partial
+    // traces are exactly what you want when diagnosing the failure)
+    let trace = cli
+        .get("trace")
+        .map(str::to_string)
+        .or_else(|| std::env::var("RKC_TRACE").ok().filter(|p| !p.is_empty()));
+    if let Some(path) = trace {
+        match rkc::obs::dump_trace(std::path::Path::new(&path)) {
+            Ok(n) => eprintln!("rkc: wrote {n} span(s) to {path}"),
+            Err(e) if result.is_ok() => return Err(e),
+            // don't let a failed dump mask the subcommand's own error
+            Err(e) => eprintln!("rkc: failed to write trace {path}: {e}"),
+        }
     }
+    result
 }
 
 fn print_help() {
@@ -151,12 +169,19 @@ COMMON OPTIONS (config overrides)
   --plan plans/file.plan (experiment; grid or load plan to run)
   --out results.jsonl (experiment; default exp_<plan-stem>.jsonl)
 
+OBSERVABILITY
+  --trace out.jsonl   dump the span ring (stage/request timings) on exit;
+                      the RKC_TRACE env var does the same thing
+  RKC_OBS=0           disable all metric/span recording (out-of-band
+                      either way: results are bit-identical on or off)
+
 SERVING PROTOCOL (serve)
   POST /models/NAME/predict {{\"points\": [[x, ...], ...]}} -> {{\"labels\": [...]}}
   POST /models/NAME/embed   same body                     -> {{\"embedding\": [...]}}
   GET  /models                 -> per-model listing + stats
   PUT  /models/NAME {{\"path\": \"m.rkc\"}} / DELETE /models/NAME  (load/unload)
   POST /predict, POST /embed   -> the default model (legacy aliases)
-  GET  /healthz                -> status + counters"
+  GET  /healthz                -> status + counters + per-model latency
+  GET  /metrics                -> Prometheus text exposition"
     );
 }

@@ -1,11 +1,15 @@
-//! Observability: wall-clock timers, the byte-accounting memory model
-//! (the paper's headline axis — §1: "around 10 times lower memory"), and
-//! a table reporter for the experiment harness.
+//! The byte-accounting memory model (the paper's headline axis — §1:
+//! "around 10 times lower memory") and a table reporter for the
+//! experiment harness.
+//!
+//! Wall-clock timing moved to [`crate::obs`] (the registry + span ring
+//! are the one timing system); `Stopwatch`/`ScopedTimer` are re-exported
+//! here for compatibility. The table/CSV reporter stays — it renders
+//! results, it doesn't measure.
 
 mod memory;
 mod report;
-mod timer;
 
+pub use crate::obs::{ScopedTimer, Stopwatch};
 pub use memory::{MemoryModel, MethodMemory};
 pub use report::{Table, write_csv};
-pub use timer::{ScopedTimer, Stopwatch};

@@ -1,0 +1,613 @@
+//! Process-wide observability: metrics registry, span tracing, and a
+//! hand-rolled Prometheus text renderer — all zero-dependency.
+//!
+//! # Registry
+//!
+//! [`registry()`] returns the global [`Registry`]: a name → family map
+//! of [`Counter`]s, [`Gauge`]s, and fixed-bucket [`Histogram`]s, each
+//! family holding one series per label set. Lookups are get-or-create
+//! and return `Arc` handles; hot paths grab their handle once and bump
+//! lock-free atomics from then on. [`Registry::render`] emits the whole
+//! registry in Prometheus text exposition format (served by the HTTP
+//! front-end at `GET /metrics`).
+//!
+//! # Histograms
+//!
+//! [`Histogram`]s use fixed log-spaced bucket bounds ([`latency_buckets`],
+//! [`size_buckets`]); an observation lands in the first bucket whose
+//! upper bound is `>= v` (Prometheus `le` semantics), with a final
+//! overflow (`+Inf`) bucket. [`HistogramSnapshot`]s are mergeable
+//! (associative, bound-checked) and answer upper-bound
+//! [`quantile`](HistogramSnapshot::quantile) queries for `/healthz`.
+//!
+//! # Spans
+//!
+//! [`span`] returns an RAII guard that records `{name, start, duration,
+//! thread}` into a bounded lock-striped ring buffer on drop;
+//! [`record_span`] backfills a span from an already-measured duration.
+//! [`dump_trace`] exports the ring as JSONL — the CLI wires it to
+//! `--trace out.jsonl` / the `RKC_TRACE` env var.
+//!
+//! # Out-of-band rule
+//!
+//! Observability must never perturb computation: no record path touches
+//! an RNG, reorders floating-point work, or feeds anything back into a
+//! pipeline. The `threads=1 ≡ threads=N` bit-identity and byte-identical
+//! experiment JSONL contracts hold with tracing on or off (enforced by
+//! `tests/experiment_golden.rs` and `tests/parallel_determinism.rs`).
+//! The whole layer can be switched off with [`set_enabled`]`(false)` or
+//! `RKC_OBS=0` (read by [`init_from_env`]); disabled record paths are a
+//! single relaxed atomic load.
+
+mod span;
+mod stopwatch;
+
+pub use span::{
+    clear_trace, dump_trace, record_span, span, trace_snapshot, SpanGuard, SpanRecord,
+};
+pub use stopwatch::{ScopedTimer, Stopwatch};
+
+use crate::error::{Result, RkcError};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock, RwLock};
+use std::time::Duration;
+
+// ---------------------------------------------------------------------------
+// global enable switch
+
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Whether metric/span recording is active (default: yes).
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn all recording on or off process-wide. Disabled record paths
+/// cost one relaxed atomic load — the `obs_overhead` bench rows measure
+/// the instrumented-vs-disabled delta on the serve hot path.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Apply the `RKC_OBS` environment variable (`0` / `false` / `off`
+/// disables recording). Called once by the CLI at startup.
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("RKC_OBS") {
+        let v = v.trim().to_ascii_lowercase();
+        if v == "0" || v == "false" || v == "off" {
+            set_enabled(false);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// metric primitives
+
+/// Monotone counter (lock-free, relaxed).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        if enabled() {
+            self.0.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge (lock-free, relaxed).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        if enabled() {
+            self.0.store(v, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bucket histogram: log-spaced upper bounds plus an overflow
+/// bucket, a CAS-accumulated `f64` sum, all relaxed atomics. An
+/// observation lands in the first bucket whose bound is `>= v`
+/// (Prometheus `le` semantics — boundary values land *in* the bucket
+/// they name).
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: Arc<[f64]>,
+    /// per-bucket (non-cumulative) counts; `bounds.len() + 1` entries,
+    /// the last being the overflow (`+Inf`) bucket
+    buckets: Box<[AtomicU64]>,
+    sum_bits: AtomicU64,
+}
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Self {
+        debug_assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]) && bounds.iter().all(|b| b.is_finite()),
+            "histogram bounds must be finite and strictly increasing"
+        );
+        let buckets: Box<[AtomicU64]> = (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect();
+        Histogram { bounds: bounds.into(), buckets, sum_bits: AtomicU64::new(0.0f64.to_bits()) }
+    }
+
+    pub fn observe(&self, v: f64) {
+        if !enabled() {
+            return;
+        }
+        let idx = self.bounds.partition_point(|&b| b < v);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self
+                .sum_bits
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Point-in-time copy. Concurrent `observe` calls may land between
+    /// the bucket loads, so `sum` can lag the bucket counts by a few
+    /// in-flight observations; `count` is derived from the buckets
+    /// themselves so the rendered `+Inf` cumulative always equals
+    /// `_count`.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let buckets: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let count = buckets.iter().sum();
+        HistogramSnapshot {
+            bounds: self.bounds.to_vec(),
+            buckets,
+            count,
+            sum: f64::from_bits(self.sum_bits.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+/// Mergeable point-in-time histogram state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistogramSnapshot {
+    pub bounds: Vec<f64>,
+    /// per-bucket counts, `bounds.len() + 1` entries (last = overflow)
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: f64,
+}
+
+impl HistogramSnapshot {
+    /// Fold `other` into `self`. Associative and commutative on the
+    /// counts (exact integer adds); the sums are `f64` adds, associative
+    /// up to rounding. Errors if the bucket bounds differ.
+    pub fn merge(&mut self, other: &HistogramSnapshot) -> Result<()> {
+        if self.bounds != other.bounds {
+            return Err(RkcError::invalid_config(
+                "histogram merge: bucket bounds differ between snapshots",
+            ));
+        }
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        Ok(())
+    }
+
+    /// Upper-bound quantile estimate: the smallest bucket bound whose
+    /// cumulative count reaches `q * count`. Observations in the
+    /// overflow bucket report the largest finite bound (the histogram
+    /// cannot resolve beyond it). Returns 0 for an empty snapshot.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return match self.bounds.get(i) {
+                    Some(&b) => b,
+                    None => self.bounds.last().copied().unwrap_or(0.0),
+                };
+            }
+        }
+        self.bounds.last().copied().unwrap_or(0.0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// bucket presets
+
+/// Log-spaced latency bounds, 10 µs … 10 s (seconds).
+pub fn latency_buckets() -> &'static [f64] {
+    &[
+        1e-5, 2.5e-5, 5e-5, 1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3, 1e-2, 2.5e-2, 5e-2, 0.1,
+        0.25, 0.5, 1.0, 2.5, 5.0, 10.0,
+    ]
+}
+
+/// Power-of-two size bounds, 1 … 1024 (batch sizes, chunk counts).
+pub fn size_buckets() -> &'static [f64] {
+    &[1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 1024.0]
+}
+
+// ---------------------------------------------------------------------------
+// registry
+
+#[derive(Clone)]
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+struct Family {
+    help: &'static str,
+    kind: &'static str,
+    /// label-set key (rendered `{k="v",…}`, `""` for unlabeled) → series
+    series: BTreeMap<String, Metric>,
+}
+
+/// Global name → family map behind [`registry()`]. Lookups take the
+/// `RwLock` once to fetch an `Arc` handle; recording through the handle
+/// never locks.
+pub struct Registry {
+    families: RwLock<BTreeMap<&'static str, Family>>,
+}
+
+/// The process-wide registry.
+pub fn registry() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(|| Registry { families: RwLock::new(BTreeMap::new()) })
+}
+
+/// Render a label set as the Prometheus series suffix: `{k="v",…}`
+/// with keys sorted and values escaped, `""` when empty.
+fn label_key(labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let mut sorted: Vec<(&str, &str)> = labels.to_vec();
+    sorted.sort_by(|a, b| a.0.cmp(b.0));
+    let mut s = String::from("{");
+    for (i, (k, v)) in sorted.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(k);
+        s.push_str("=\"");
+        for c in v.chars() {
+            match c {
+                '\\' => s.push_str("\\\\"),
+                '"' => s.push_str("\\\""),
+                '\n' => s.push_str("\\n"),
+                c => s.push(c),
+            }
+        }
+        s.push('"');
+    }
+    s.push('}');
+    s
+}
+
+/// Splice an `le` label into an existing label-set key.
+fn with_le(key: &str, le: &str) -> String {
+    if key.is_empty() {
+        format!("{{le=\"{le}\"}}")
+    } else {
+        format!("{},le=\"{le}\"}}", &key[..key.len() - 1])
+    }
+}
+
+impl Registry {
+    fn get_or_insert(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        kind: &'static str,
+        labels: &[(&str, &str)],
+        make: impl FnOnce() -> Metric,
+    ) -> Metric {
+        let key = label_key(labels);
+        {
+            let fams = self.families.read().unwrap_or_else(|p| p.into_inner());
+            if let Some(f) = fams.get(name) {
+                if f.kind == kind {
+                    if let Some(m) = f.series.get(&key) {
+                        return m.clone();
+                    }
+                }
+            }
+        }
+        let mut fams = self.families.write().unwrap_or_else(|p| p.into_inner());
+        let fam = fams.entry(name).or_insert_with(|| Family {
+            help,
+            kind,
+            series: BTreeMap::new(),
+        });
+        if fam.kind != kind {
+            // name registered under another kind: hand back a detached
+            // metric rather than corrupting the family (programming
+            // error; loud in debug builds, harmless in release)
+            debug_assert!(false, "metric '{name}' re-registered as {kind}, was {}", fam.kind);
+            return make();
+        }
+        fam.series.entry(key).or_insert_with(make).clone()
+    }
+
+    /// Get-or-create a counter series.
+    pub fn counter(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        labels: &[(&str, &str)],
+    ) -> Arc<Counter> {
+        match self.get_or_insert(name, help, "counter", labels, || {
+            Metric::Counter(Arc::new(Counter::default()))
+        }) {
+            Metric::Counter(c) => c,
+            _ => Arc::new(Counter::default()),
+        }
+    }
+
+    /// Get-or-create a gauge series.
+    pub fn gauge(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        labels: &[(&str, &str)],
+    ) -> Arc<Gauge> {
+        match self.get_or_insert(name, help, "gauge", labels, || {
+            Metric::Gauge(Arc::new(Gauge::default()))
+        }) {
+            Metric::Gauge(g) => g,
+            _ => Arc::new(Gauge::default()),
+        }
+    }
+
+    /// Get-or-create a histogram series. The bounds are fixed at first
+    /// creation; later callers get the existing series regardless of
+    /// the bounds they pass.
+    pub fn histogram(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        labels: &[(&str, &str)],
+        bounds: &[f64],
+    ) -> Arc<Histogram> {
+        match self.get_or_insert(name, help, "histogram", labels, || {
+            Metric::Histogram(Arc::new(Histogram::new(bounds)))
+        }) {
+            Metric::Histogram(h) => h,
+            _ => Arc::new(Histogram::new(bounds)),
+        }
+    }
+
+    /// Snapshot an existing histogram series, if registered.
+    pub fn histogram_snapshot(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+    ) -> Option<HistogramSnapshot> {
+        let key = label_key(labels);
+        let fams = self.families.read().unwrap_or_else(|p| p.into_inner());
+        match fams.get(name)?.series.get(&key)? {
+            Metric::Histogram(h) => Some(h.snapshot()),
+            _ => None,
+        }
+    }
+
+    /// Prometheus text exposition (format version 0.0.4): `# HELP` /
+    /// `# TYPE` per family, families and series in sorted order,
+    /// histogram series as cumulative `_bucket{le=…}` plus `_sum` /
+    /// `_count`.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let fams = self.families.read().unwrap_or_else(|p| p.into_inner());
+        let mut out = String::new();
+        for (name, fam) in fams.iter() {
+            let _ = writeln!(out, "# HELP {name} {}", fam.help);
+            let _ = writeln!(out, "# TYPE {name} {}", fam.kind);
+            for (key, metric) in &fam.series {
+                match metric {
+                    Metric::Counter(c) => {
+                        let _ = writeln!(out, "{name}{key} {}", c.get());
+                    }
+                    Metric::Gauge(g) => {
+                        let _ = writeln!(out, "{name}{key} {}", g.get());
+                    }
+                    Metric::Histogram(h) => {
+                        let snap = h.snapshot();
+                        let mut cum = 0u64;
+                        for (i, &c) in snap.buckets.iter().enumerate() {
+                            cum += c;
+                            let le = match snap.bounds.get(i) {
+                                Some(b) => format!("{b}"),
+                                None => "+Inf".to_string(),
+                            };
+                            let _ =
+                                writeln!(out, "{name}_bucket{} {cum}", with_le(key, &le));
+                        }
+                        let _ = writeln!(out, "{name}_sum{key} {}", snap.sum);
+                        let _ = writeln!(out, "{name}_count{key} {}", snap.count);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fit-stage shorthand
+
+/// Record one fit pipeline stage: an observation in
+/// `rkc_fit_stage_seconds{stage=…}` plus a backfilled span. Called from
+/// the `api` fit paths and `stream::StreamClusterer::refresh` — the one
+/// choke point, so batch and streaming fits land in the same series.
+pub fn record_stage(stage: &'static str, d: Duration) {
+    if !enabled() {
+        return;
+    }
+    registry()
+        .histogram(
+            "rkc_fit_stage_seconds",
+            "Wall time of fit pipeline stages (sketch pass, recovery, K-means).",
+            &[("stage", stage)],
+            latency_buckets(),
+        )
+        .observe(d.as_secs_f64());
+    let span_name = match stage {
+        "sketch" => "fit.sketch",
+        "recovery" => "fit.recovery",
+        "kmeans" => "fit.kmeans",
+        other => other,
+    };
+    record_span(span_name, d);
+}
+
+/// Unit tests that toggle [`set_enabled`] or assert on gated record
+/// paths serialize on this lock — `cargo test` runs tests in parallel
+/// threads and the enable switch is process-global.
+#[cfg(test)]
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static GUARD: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    GUARD.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let _g = test_guard();
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::default();
+        g.set(17);
+        assert_eq!(g.get(), 17);
+        g.set(3);
+        assert_eq!(g.get(), 3);
+    }
+
+    #[test]
+    fn histogram_boundary_lands_in_named_bucket() {
+        let _g = test_guard();
+        let h = Histogram::new(&[1.0, 2.0, 4.0]);
+        h.observe(1.0); // le="1" bucket, not le="2"
+        h.observe(1.5);
+        h.observe(4.0);
+        h.observe(100.0); // overflow
+        let s = h.snapshot();
+        assert_eq!(s.buckets, vec![1, 1, 1, 1]);
+        assert_eq!(s.count, 4);
+        assert!((s.sum - 106.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_quantile_is_bucket_upper_bound() {
+        let _g = test_guard();
+        let h = Histogram::new(&[1.0, 2.0, 4.0]);
+        for _ in 0..9 {
+            h.observe(0.5);
+        }
+        h.observe(3.0);
+        let s = h.snapshot();
+        assert_eq!(s.quantile(0.5), 1.0);
+        assert_eq!(s.quantile(0.95), 4.0);
+        // overflow reports the largest finite bound
+        let h2 = Histogram::new(&[1.0, 2.0]);
+        h2.observe(50.0);
+        assert_eq!(h2.snapshot().quantile(0.5), 2.0);
+        // empty
+        assert_eq!(Histogram::new(&[1.0]).snapshot().quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn snapshot_merge_checks_bounds() {
+        let _g = test_guard();
+        let a = Histogram::new(&[1.0, 2.0]);
+        a.observe(0.5);
+        let b = Histogram::new(&[1.0, 2.0]);
+        b.observe(1.5);
+        let mut m = a.snapshot();
+        m.merge(&b.snapshot()).unwrap();
+        assert_eq!(m.count, 2);
+        assert_eq!(m.buckets, vec![1, 1, 0]);
+        let other = Histogram::new(&[1.0, 3.0]);
+        assert!(m.merge(&other.snapshot()).is_err());
+    }
+
+    #[test]
+    fn registry_reuses_series_and_renders_exposition() {
+        let _g = test_guard();
+        let r = registry();
+        let c1 = r.counter("rkc_test_registry_total", "test counter", &[("who", "a")]);
+        let c2 = r.counter("rkc_test_registry_total", "test counter", &[("who", "a")]);
+        c1.add(2);
+        c2.inc();
+        assert_eq!(c1.get(), 3, "same labels must share one series");
+        let h = r.histogram(
+            "rkc_test_registry_seconds",
+            "test histogram",
+            &[],
+            &[0.1, 1.0],
+        );
+        h.observe(0.05);
+        h.observe(5.0);
+        let snap = r
+            .histogram_snapshot("rkc_test_registry_seconds", &[])
+            .expect("registered histogram is snapshottable by name");
+        assert_eq!(snap.count, 2);
+        assert_eq!(snap.buckets, vec![1, 0, 1]);
+        // unknown label set and non-histogram families both miss
+        assert!(r.histogram_snapshot("rkc_test_registry_seconds", &[("who", "b")]).is_none());
+        assert!(r.histogram_snapshot("rkc_test_registry_total", &[("who", "a")]).is_none());
+        let text = r.render();
+        assert!(text.contains("# TYPE rkc_test_registry_total counter"));
+        assert!(text.contains("rkc_test_registry_total{who=\"a\"} 3"));
+        assert!(text.contains("# TYPE rkc_test_registry_seconds histogram"));
+        assert!(text.contains("rkc_test_registry_seconds_bucket{le=\"0.1\"} 1"));
+        assert!(text.contains("rkc_test_registry_seconds_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("rkc_test_registry_seconds_count 2"));
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        assert_eq!(label_key(&[("m", "a\"b\\c")]), "{m=\"a\\\"b\\\\c\"}");
+        assert_eq!(with_le("{m=\"x\"}", "0.5"), "{m=\"x\",le=\"0.5\"}");
+        assert_eq!(with_le("", "+Inf"), "{le=\"+Inf\"}");
+    }
+
+    #[test]
+    fn disabled_recording_is_inert() {
+        let _g = test_guard();
+        let h = Histogram::new(&[1.0]);
+        let c = Counter::default();
+        set_enabled(false);
+        h.observe(0.5);
+        c.inc();
+        set_enabled(true);
+        assert_eq!(h.snapshot().count, 0);
+        assert_eq!(c.get(), 0);
+    }
+}

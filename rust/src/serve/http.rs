@@ -16,6 +16,7 @@
 //! | `DELETE /models/{name}`        | —                            | unload at runtime           |
 //! | `POST /predict`, `POST /embed` | `{"points": …}`              | alias for the default model |
 //! | `GET /healthz`                 | —                            | status + serving counters   |
+//! | `GET /metrics`                 | —                            | Prometheus text exposition  |
 //!
 //! Unknown model names answer **404 with an `{"error": …}` body**;
 //! malformed JSON, wrong shapes, and unsupported model operations 4xx —
@@ -44,6 +45,7 @@ use std::time::{Duration, Instant};
 
 use crate::error::RkcError;
 use crate::linalg::Mat;
+use crate::obs;
 use crate::util::{parallel, Json};
 
 use super::registry::valid_name;
@@ -130,13 +132,21 @@ impl HttpOpts {
 }
 
 /// Front-end-wide counters (per-model traffic lives in each model's
-/// [`super::ServeStats`]).
-#[derive(Default)]
+/// [`super::ServeStats`]). Each event bumps both the per-server atomic
+/// (what [`FrontendStats`] snapshots — per front-end instance, so tests
+/// running several servers in one process stay independent) and the
+/// process-wide obs registry series (`rkc_http_*_total`, cumulative
+/// across front-ends, what `GET /metrics` exposes).
 struct FrontendCounters {
     connections: AtomicU64,
     requests: AtomicU64,
     failures: AtomicU64,
     shed: AtomicU64,
+    started: Instant,
+    obs_connections: Arc<obs::Counter>,
+    obs_requests: Arc<obs::Counter>,
+    obs_failures: Arc<obs::Counter>,
+    obs_shed: Arc<obs::Counter>,
 }
 
 /// A snapshot of the front-end-wide counters. `requests > connections`
@@ -156,15 +166,79 @@ pub struct FrontendStats {
     pub failures: u64,
     /// connections shed with an immediate 503 because the backlog was full
     pub shed: u64,
+    /// seconds since this front-end started
+    pub uptime_s: f64,
 }
 
 impl FrontendCounters {
+    fn new() -> Self {
+        let r = obs::registry();
+        FrontendCounters {
+            connections: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+            failures: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            started: Instant::now(),
+            obs_connections: r.counter(
+                "rkc_http_connections_total",
+                "Connections picked up by a pool worker (shed connections excluded).",
+                &[],
+            ),
+            obs_requests: r.counter(
+                "rkc_http_requests_total",
+                "HTTP requests handled across all connections.",
+                &[],
+            ),
+            obs_failures: r.counter(
+                "rkc_http_failures_total",
+                "HTTP requests answered with a non-2xx status.",
+                &[],
+            ),
+            obs_shed: r.counter(
+                "rkc_http_shed_total",
+                "Connections shed with an immediate 503 (backlog full).",
+                &[],
+            ),
+        }
+    }
+
+    fn hit_connection(&self) {
+        self.connections.fetch_add(1, Ordering::Relaxed);
+        self.obs_connections.inc();
+    }
+
+    fn hit_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.obs_requests.inc();
+    }
+
+    fn hit_failure(&self) {
+        self.failures.fetch_add(1, Ordering::Relaxed);
+        self.obs_failures.inc();
+    }
+
+    fn hit_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+        self.obs_shed.inc();
+    }
+
+    /// Load every counter in one pass, back to back — the tightest
+    /// coherence independent relaxed atomics allow. Fields may still
+    /// race pairwise: a request finishing mid-snapshot can show in
+    /// `requests` but not yet in `failures` (loads happen in field
+    /// order), and `connections` vs `requests` can be one event apart
+    /// under load. Each field is individually monotone.
     fn snapshot(&self) -> FrontendStats {
+        let connections = self.connections.load(Ordering::Relaxed);
+        let requests = self.requests.load(Ordering::Relaxed);
+        let failures = self.failures.load(Ordering::Relaxed);
+        let shed = self.shed.load(Ordering::Relaxed);
         FrontendStats {
-            connections: self.connections.load(Ordering::Relaxed),
-            requests: self.requests.load(Ordering::Relaxed),
-            failures: self.failures.load(Ordering::Relaxed),
-            shed: self.shed.load(Ordering::Relaxed),
+            connections,
+            requests,
+            failures,
+            shed,
+            uptime_s: self.started.elapsed().as_secs_f64(),
         }
     }
 }
@@ -266,7 +340,7 @@ pub fn serve_http_registry(
         .local_addr()
         .map_err(|e| RkcError::io(format!("resolving local address of {addr}"), e))?;
     let stop = Arc::new(AtomicBool::new(false));
-    let frontend = Arc::new(FrontendCounters::default());
+    let frontend = Arc::new(FrontendCounters::new());
     let queue = Arc::new(ConnQueue::new(opts.backlog.max(1)));
     let keep_alive = opts.keep_alive;
     let request_deadline = opts.resolved_request_deadline();
@@ -281,7 +355,7 @@ pub fn serve_http_registry(
             .name(format!("rkc-http-worker-{i}"))
             .spawn(move || {
                 while let Some(stream) = q.pop() {
-                    fc.connections.fetch_add(1, Ordering::Relaxed);
+                    fc.hit_connection();
                     // a panic while serving costs that one connection,
                     // never a pool slot — the per-connection isolation
                     // the old thread-per-connection design had
@@ -328,7 +402,7 @@ pub fn serve_http_registry(
                     // `requests`: nothing was read, and inflating
                     // `requests` would fake the keep-alive reuse signal
                     // `requests > connections`)
-                    fc.shed.fetch_add(1, Ordering::Relaxed);
+                    fc.hit_shed();
                     // write the (tiny) 503 off-thread so a hostile peer
                     // can never stall the accept loop; if even that
                     // spawn fails, dropping the connection sheds harder
@@ -473,23 +547,23 @@ fn handle_conn(
         match read_request(&mut stream, &mut carry, idle, request_deadline, stop) {
             ReadOutcome::Silent => return,
             ReadOutcome::Fatal(status, msg) => {
-                frontend.requests.fetch_add(1, Ordering::Relaxed);
-                frontend.failures.fetch_add(1, Ordering::Relaxed);
+                frontend.hit_request();
+                frontend.hit_failure();
                 write_response(&mut stream, status, &error_json(&msg), true);
                 drain_then_close(stream);
                 return;
             }
             ReadOutcome::Request(req) => {
-                frontend.requests.fetch_add(1, Ordering::Relaxed);
-                let (status, body) = route(registry, frontend, &req);
+                frontend.hit_request();
+                let (status, ctype, body) = route(registry, frontend, &req);
                 if status >= 400 {
-                    frontend.failures.fetch_add(1, Ordering::Relaxed);
+                    frontend.hit_failure();
                 }
                 let close = req.close || keep_alive.is_zero() || stop.load(Ordering::Relaxed);
                 // an abandoned (timed-out / failed) write leaves a
                 // truncated response on the socket — the byte stream is
                 // desynced and the connection must die with it
-                let sent = write_response(&mut stream, status, &body, close);
+                let sent = write_response_with(&mut stream, status, ctype, &body, close);
                 if close || !sent {
                     drain_then_close(stream);
                     return;
@@ -514,20 +588,39 @@ fn drain_then_close(mut stream: TcpStream) {
     {}
 }
 
-/// Dispatch one framed request against the registry. Per-model HTTP
-/// counters are bumped here (on the model the request routed to);
-/// front-end-wide counters are the caller's job.
+/// Dispatch one framed request against the registry, returning
+/// `(status, content type, body)`. Per-model HTTP counters are bumped
+/// here (on the model the request routed to); front-end-wide counters
+/// are the caller's job.
 fn route(
     registry: &ModelRegistry,
     frontend: &FrontendCounters,
     req: &HttpRequest,
-) -> (u16, String) {
+) -> (u16, &'static str, String) {
     let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
-    match (req.method.as_str(), segs.as_slice()) {
+    // /metrics is the one non-JSON response (Prometheus text
+    // exposition); its non-GET methods still fall through to the JSON
+    // 405 arm below
+    if let ("GET", ["metrics"]) = (req.method.as_str(), segs.as_slice()) {
+        return (200, "text/plain; version=0.0.4", metrics_text(registry, frontend));
+    }
+    let (status, body) = match (req.method.as_str(), segs.as_slice()) {
         ("GET", ["healthz"]) => health(registry, frontend),
         ("GET", ["models"]) => (200, models_json(registry, frontend)),
         ("GET", ["models", name]) => match registry.info(name) {
-            Some(info) => (200, model_info_value(&info).to_string()),
+            Some(info) => {
+                // `shed` is front-end-wide (connections shed before any
+                // routing), merged here so the per-model view carries
+                // the same overload signal as `/metrics` and `/models`
+                let mut v = model_info_value(&info);
+                if let Json::Obj(map) = &mut v {
+                    map.insert(
+                        "shed".to_string(),
+                        Json::Num(frontend.snapshot().shed as f64),
+                    );
+                }
+                (200, v.to_string())
+            }
             None => (404, no_such_model(name)),
         },
         ("PUT", ["models", name]) => put_model(registry, name, &req.body),
@@ -546,14 +639,15 @@ fn route(
             Some((_, handle)) => model_op(&handle, op, &req.body),
             None => (503, error_json("no models loaded (PUT /models/{name} to load one)")),
         },
-        (_, ["healthz"] | ["predict"] | ["embed"] | ["models"] | ["models", _]) => {
+        (_, ["healthz"] | ["metrics"] | ["predict"] | ["embed"] | ["models"] | ["models", _]) => {
             (405, error_json("method not allowed for this path"))
         }
         (_, ["models", _, "predict" | "embed"]) => {
             (405, error_json("method not allowed for this path"))
         }
         _ => (404, error_json("no such endpoint (try /healthz, /models, /models/{name}/predict)")),
-    }
+    };
+    (status, "application/json", body)
 }
 
 fn no_such_model(name: &str) -> String {
@@ -637,12 +731,29 @@ fn put_model(registry: &ModelRegistry, name: &str, body: &[u8]) -> (u16, String)
 /// every predict.
 fn health(registry: &ModelRegistry, frontend: &FrontendCounters) -> (u16, String) {
     let fe = frontend.snapshot();
+    // per-model enqueue→reply p50/p95 from the obs latency histograms
+    // (upper-bound estimates: the bucket bound the quantile falls in)
+    let mut latency = BTreeMap::new();
+    for info in registry.list() {
+        if let Some(handle) = registry.get(&info.name) {
+            let snap = handle.shared.obs.latency.snapshot();
+            latency.insert(
+                info.name.clone(),
+                json_obj(vec![
+                    ("p50_ms", Json::Num(snap.quantile(0.5) * 1e3)),
+                    ("p95_ms", Json::Num(snap.quantile(0.95) * 1e3)),
+                ]),
+            );
+        }
+    }
     let mut fields: Vec<(&str, Json)> = vec![
         ("models", Json::Num(registry.len() as f64)),
         ("connections", Json::Num(fe.connections as f64)),
         ("http_requests", Json::Num(fe.requests as f64)),
         ("http_failures", Json::Num(fe.failures as f64)),
         ("shed", Json::Num(fe.shed as f64)),
+        ("frontend_uptime_s", Json::Num(fe.uptime_s)),
+        ("latency_ms", Json::Obj(latency)),
     ];
     let Some((name, handle)) = registry.default_model() else {
         fields.push(("status", Json::Str("empty".into())));
@@ -728,6 +839,43 @@ fn models_json(registry: &ModelRegistry, frontend: &FrontendCounters) -> String 
     ])
 }
 
+/// `GET /metrics` — the whole obs registry in Prometheus text
+/// exposition format. Counters and histograms are recorded at source;
+/// the point-in-time gauges (queue depth/highwater, generation, models
+/// loaded, uptime) are set here at scrape time from the registry's live
+/// state, then everything renders in one pass. A gauge series for a
+/// model that has since unloaded keeps its last value (Prometheus
+/// semantics: series go stale, they don't vanish).
+fn metrics_text(registry: &ModelRegistry, frontend: &FrontendCounters) -> String {
+    let r = obs::registry();
+    for info in registry.list() {
+        let labels: &[(&str, &str)] = &[("model", &info.name)];
+        r.gauge(
+            "rkc_serve_queue_depth",
+            "Requests pending in the model's bounded queue at scrape time.",
+            labels,
+        )
+        .set(info.queue_depth as u64);
+        r.gauge(
+            "rkc_serve_queue_highwater",
+            "Deepest the model's request queue has ever been.",
+            labels,
+        )
+        .set(info.stats.queue_highwater);
+        r.gauge(
+            "rkc_model_generation",
+            "Generation of the live model (monotone across hot-swaps).",
+            labels,
+        )
+        .set(info.generation);
+    }
+    r.gauge("rkc_models_loaded", "Models currently loaded in the registry.", &[])
+        .set(registry.len() as u64);
+    r.gauge("rkc_http_uptime_seconds", "Seconds since the HTTP front-end started.", &[])
+        .set(frontend.started.elapsed().as_secs());
+    r.render()
+}
+
 /// Map a typed serving error onto an HTTP status: caller mistakes are
 /// 4xx, backend unavailability is 503, anything else 500.
 fn error_response(e: &RkcError) -> (u16, String) {
@@ -794,10 +942,22 @@ fn error_json(msg: &str) -> String {
     obj([("error", Json::Str(msg.to_string()))])
 }
 
-/// Write one framed response. Returns whether every byte was written —
-/// a `false` means the stream now holds a truncated response and a
-/// keep-alive caller must close the connection.
+/// Write one framed JSON response. Returns whether every byte was
+/// written — a `false` means the stream now holds a truncated response
+/// and a keep-alive caller must close the connection.
 fn write_response(stream: &mut TcpStream, status: u16, body: &str, close: bool) -> bool {
+    write_response_with(stream, status, "application/json", body, close)
+}
+
+/// [`write_response`] with an explicit content type (`/metrics` answers
+/// Prometheus text, everything else JSON).
+fn write_response_with(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &str,
+    close: bool,
+) -> bool {
     let reason = match status {
         200 => "OK",
         400 => "Bad Request",
@@ -813,7 +973,7 @@ fn write_response(stream: &mut TcpStream, status: u16, body: &str, close: bool) 
     };
     let connection = if close { "close" } else { "keep-alive" };
     let head = format!(
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
          Content-Length: {}\r\nConnection: {connection}\r\n\r\n",
         body.len()
     );

@@ -63,6 +63,7 @@ use std::time::Instant;
 use crate::api::FittedModel;
 use crate::error::{Result, RkcError};
 use crate::linalg::Mat;
+use crate::obs;
 use crate::util::parallel;
 
 use batcher::Batcher;
@@ -107,6 +108,63 @@ pub(crate) struct Request {
     points: Mat,
     reply: mpsc::Sender<Result<Reply>>,
     enqueued: Instant,
+}
+
+/// Registry-backed observability handles for one served model name.
+/// Fetched once at server creation; the worker then records through the
+/// `Arc`s lock-free. Servers that re-publish under the same name share
+/// the same series, so `/metrics` counters stay cumulative across
+/// generations (Prometheus counter semantics).
+struct ServeObs {
+    requests: Arc<obs::Counter>,
+    points: Arc<obs::Counter>,
+    errors: Arc<obs::Counter>,
+    batches: Arc<obs::Counter>,
+    /// enqueue→reply latency (seconds), `rkc_serve_request_seconds`
+    latency: Arc<obs::Histogram>,
+    /// requests drained per micro-batch, `rkc_serve_batch_size`
+    batch_size: Arc<obs::Histogram>,
+}
+
+impl ServeObs {
+    fn for_model(name: &str) -> ServeObs {
+        let r = obs::registry();
+        let labels: &[(&str, &str)] = &[("model", name)];
+        ServeObs {
+            requests: r.counter(
+                "rkc_serve_requests_total",
+                "Model calls answered by the batch worker (including per-request errors).",
+                labels,
+            ),
+            points: r.counter(
+                "rkc_serve_points_total",
+                "Query points across all answered requests.",
+                labels,
+            ),
+            errors: r.counter(
+                "rkc_serve_errors_total",
+                "Requests answered with a per-request error.",
+                labels,
+            ),
+            batches: r.counter(
+                "rkc_serve_batches_total",
+                "Micro-batches executed by the batch worker.",
+                labels,
+            ),
+            latency: r.histogram(
+                "rkc_serve_request_seconds",
+                "Enqueue-to-reply latency of served requests.",
+                labels,
+                obs::latency_buckets(),
+            ),
+            batch_size: r.histogram(
+                "rkc_serve_batch_size",
+                "Requests drained per micro-batch.",
+                labels,
+                obs::size_buckets(),
+            ),
+        }
+    }
 }
 
 /// Monotonic serving counters (all atomics; written by the batch worker
@@ -172,6 +230,7 @@ struct Shared {
     model: FittedModel,
     queue: Batcher,
     counters: Counters,
+    obs: ServeObs,
     threads: usize,
     max_batch: usize,
     started: Instant,
@@ -190,12 +249,24 @@ pub struct ModelServer {
 impl ModelServer {
     /// Start serving `model` with the given options. Spawns the batch
     /// worker thread immediately; a failed spawn (thread exhaustion) is
-    /// a typed error, per the crate-wide contract.
+    /// a typed error, per the crate-wide contract. Metrics are recorded
+    /// under `model="default"` — the label is fixed at construction, so
+    /// use [`named`](ModelServer::named) for a server that will be
+    /// registered (or served) under any other name. The registry's own
+    /// load paths do this; `ModelRegistry::register` cannot relabel a
+    /// caller-built server after the fact.
     pub fn new(model: FittedModel, opts: ServeOpts) -> Result<Self> {
+        Self::named("default", model, opts)
+    }
+
+    /// [`new`](ModelServer::new), with the registry metric series for
+    /// this server labeled `model="name"`.
+    pub fn named(name: &str, model: FittedModel, opts: ServeOpts) -> Result<Self> {
         let shared = Arc::new(Shared {
             model,
             queue: Batcher::new(opts.queue_cap.max(1)),
             counters: Counters::default(),
+            obs: ServeObs::for_model(name),
             threads: parallel::resolve_threads(opts.threads).max(1),
             max_batch: opts.max_batch.max(1),
             started: Instant::now(),
@@ -293,16 +364,32 @@ impl ServerHandle {
 }
 
 impl Shared {
+    /// Snapshot every counter in one pass, back to back, before any
+    /// derived work — the tightest coherence the independent relaxed
+    /// atomics allow. Fields may still race pairwise: a request
+    /// delivered mid-snapshot can appear in `requests` but not yet in
+    /// `points`/`latency_us_total` (or vice versa, load order above),
+    /// and `queue_highwater` is read after the counters. The worker
+    /// bumps `batches` *before* delivering replies, so `batches` never
+    /// reads 0 while `requests` is nonzero — the one cross-field
+    /// ordering clients rely on ([`ServeStats::mean_batch`]).
     fn snapshot(&self) -> ServeStats {
         let c = &self.counters;
+        let requests = c.requests.load(Ordering::Relaxed);
+        let points = c.points.load(Ordering::Relaxed);
+        let batches = c.batches.load(Ordering::Relaxed);
+        let errors = c.errors.load(Ordering::Relaxed);
+        let latency_us_total = c.latency_us_total.load(Ordering::Relaxed);
+        let http_requests = c.http_requests.load(Ordering::Relaxed);
+        let http_failures = c.http_failures.load(Ordering::Relaxed);
         ServeStats {
-            requests: c.requests.load(Ordering::Relaxed),
-            points: c.points.load(Ordering::Relaxed),
-            batches: c.batches.load(Ordering::Relaxed),
-            errors: c.errors.load(Ordering::Relaxed),
-            latency_us_total: c.latency_us_total.load(Ordering::Relaxed),
-            http_requests: c.http_requests.load(Ordering::Relaxed),
-            http_failures: c.http_failures.load(Ordering::Relaxed),
+            requests,
+            points,
+            batches,
+            errors,
+            latency_us_total,
+            http_requests,
+            http_failures,
             queue_highwater: self.queue.highwater() as u64,
             uptime_s: self.started.elapsed().as_secs_f64(),
         }
@@ -334,6 +421,8 @@ fn worker_loop(shared: &Shared) {
         // snapshot the stats before this loop iteration finishes, and
         // must never observe completed requests with zero batches
         shared.counters.batches.fetch_add(1, Ordering::Relaxed);
+        shared.obs.batches.inc();
+        shared.obs.batch_size.observe(batch.len() as f64);
         // split the (!Sync) reply senders from the Sync compute inputs
         // before fanning out
         let mut jobs: Vec<(Op, Mat, Instant)> = Vec::with_capacity(batch.len());
@@ -357,11 +446,16 @@ fn worker_loop(shared: &Shared) {
         {
             c.requests.fetch_add(1, Ordering::Relaxed);
             c.points.fetch_add(points.cols() as u64, Ordering::Relaxed);
+            shared.obs.requests.inc();
+            shared.obs.points.add(points.cols() as u64);
             if result.is_err() {
                 c.errors.fetch_add(1, Ordering::Relaxed);
+                shared.obs.errors.inc();
             }
-            let us = delivered.duration_since(enqueued).as_micros().min(u64::MAX as u128);
+            let wait = delivered.duration_since(enqueued);
+            let us = wait.as_micros().min(u64::MAX as u128);
             c.latency_us_total.fetch_add(us as u64, Ordering::Relaxed);
+            shared.obs.latency.observe(wait.as_secs_f64());
             // a vanished caller is not an error; drop the reply
             let _ = reply.send(result);
         }

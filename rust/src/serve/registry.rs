@@ -142,7 +142,7 @@ impl ModelRegistry {
     /// gracefully shutting down) any model already there.
     pub fn insert(&self, name: &str, model: FittedModel) -> Result<()> {
         Self::check_name(name)?;
-        let server = ModelServer::new(model, self.opts)?;
+        let server = ModelServer::named(name, model, self.opts)?;
         self.insert_entry(name, server.handle(), Some(Arc::new(server)), None)
     }
 
@@ -178,8 +178,10 @@ impl ModelRegistry {
             *slot
         };
         model.set_generation(generation);
-        // build the new server (queue + batch worker) outside the lock
-        let server = ModelServer::new(model, self.opts)?;
+        // build the new server (queue + batch worker) outside the lock;
+        // same-name generations share one metric series, so /metrics
+        // counters stay cumulative across hot-swaps
+        let server = ModelServer::named(name, model, self.opts)?;
         let handle = server.handle();
         let owner = Some(Arc::new(server));
         let displaced;
@@ -211,6 +213,13 @@ impl ModelRegistry {
     /// only the submission handle: dropping the `ModelServer` on the
     /// caller's side shuts the model down, after which routed requests
     /// get its typed shutdown rejection.
+    ///
+    /// The server's `rkc_serve_*` metric series keep the `model` label
+    /// it was **constructed** with (registration cannot relabel interned
+    /// series behind the shared handle) — build it with
+    /// [`ModelServer::named`]`(name, …)` when registering under any name
+    /// other than `"default"`, or its `/metrics` traffic lands on
+    /// `model="default"`.
     pub fn register(&self, name: &str, server: &ModelServer) -> Result<()> {
         self.insert_entry(name, server.handle(), None, None)
     }
@@ -220,7 +229,7 @@ impl ModelRegistry {
     pub fn load(&self, name: &str, path: &str) -> Result<()> {
         Self::check_name(name)?;
         let model = FittedModel::load(path)?;
-        let server = ModelServer::new(model, self.opts)?;
+        let server = ModelServer::named(name, model, self.opts)?;
         self.insert_entry(name, server.handle(), Some(Arc::new(server)), Some(path.to_string()))
     }
 

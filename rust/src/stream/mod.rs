@@ -64,10 +64,72 @@ use crate::kernels::{column_batches, Kernel};
 use crate::linalg::Mat;
 use crate::lowrank::{one_pass_recovery_threaded, OnePassSketch};
 use crate::metrics::MemoryModel;
+use crate::obs;
 use crate::rng::Pcg64;
 use crate::serve::ModelRegistry;
 use crate::sketch::{next_pow2, Srht};
 use crate::util::parallel;
+
+/// Process-wide metric handles for the streaming layer, registered once
+/// and shared by every [`StreamClusterer`] in the process (Prometheus
+/// series are global; per-instance state stays on the clusterer itself).
+/// The memory gauges put the [`MemoryModel`] *prediction* next to the
+/// bytes actually held, so model-vs-actual drift is visible on a scrape.
+struct StreamObs {
+    ingest_seconds: std::sync::Arc<obs::Histogram>,
+    refresh_seconds: std::sync::Arc<obs::Histogram>,
+    refreshes_total: std::sync::Arc<obs::Counter>,
+    points: std::sync::Arc<obs::Gauge>,
+    sketch_bytes: std::sync::Arc<obs::Gauge>,
+    buffer_bytes: std::sync::Arc<obs::Gauge>,
+    model_bytes: std::sync::Arc<obs::Gauge>,
+}
+
+fn stream_obs() -> &'static StreamObs {
+    static OBS: OnceLock<StreamObs> = OnceLock::new();
+    OBS.get_or_init(|| {
+        let r = obs::registry();
+        StreamObs {
+            ingest_seconds: r.histogram(
+                "rkc_stream_ingest_seconds",
+                "Wall time folding one ingested chunk into the running sketch.",
+                &[],
+                obs::latency_buckets(),
+            ),
+            refresh_seconds: r.histogram(
+                "rkc_stream_refresh_seconds",
+                "Wall time of one refresh (recovery + K-means).",
+                &[],
+                obs::latency_buckets(),
+            ),
+            refreshes_total: r.counter(
+                "rkc_stream_refreshes_total",
+                "Refreshes (model generations produced) across all streams.",
+                &[],
+            ),
+            points: r.gauge(
+                "rkc_stream_points",
+                "Points ingested by the most recently active stream.",
+                &[],
+            ),
+            sketch_bytes: r.gauge(
+                "rkc_stream_sketch_bytes",
+                "Bytes actually held by the running sketch state (W + operator).",
+                &[],
+            ),
+            buffer_bytes: r.gauge(
+                "rkc_stream_buffer_bytes",
+                "Bytes actually held by the retained raw point buffer.",
+                &[],
+            ),
+            model_bytes: r.gauge(
+                "rkc_stream_memory_model_bytes",
+                "MemoryModel::one_pass persistent-bytes prediction for the current stream shape.",
+                &[],
+            ),
+        }
+    })
+}
 
 /// Sub-stream of the master seed the SRHT operators draw from (the
 /// g-th redraw consumes the next draw of this one stream, so the
@@ -376,7 +438,22 @@ impl StreamClusterer {
             self.fold_chunk(n_old, m);
         }
         self.points_since_refresh += m;
-        self.fold_time += t0.elapsed();
+        let folded = t0.elapsed();
+        self.fold_time += folded;
+
+        // strictly out-of-band: nothing below feeds back into the sketch
+        let o = stream_obs();
+        o.ingest_seconds.observe(folded.as_secs_f64());
+        obs::record_span("stream.ingest", folded);
+        o.points.set(self.n as u64);
+        o.sketch_bytes.set(self.sketch_bytes() as u64);
+        o.buffer_bytes.set(self.buffer_bytes() as u64);
+        if let Some(srht) = &self.srht {
+            let predicted =
+                MemoryModel::one_pass(self.n, srht.n, self.sketch_width(), self.rank, self.batch)
+                    .persistent;
+            o.model_bytes.set(predicted as u64);
+        }
         Ok(())
     }
 
@@ -523,6 +600,7 @@ impl StreamClusterer {
             )));
         }
         let threads = self.threads_resolved();
+        let refresh_t0 = Instant::now();
         let srht = self.srht.as_ref().expect("points exist, so the operator does");
         let n_pad = srht.n;
 
@@ -564,6 +642,16 @@ impl StreamClusterer {
         self.fold_time = Duration::ZERO;
         self.points_since_refresh = 0;
         self.last_refresh = Instant::now();
+
+        // out-of-band: the refresh shares the batch pipeline's per-stage
+        // series (streaming fold time stands in for the sketch pass)
+        let o = stream_obs();
+        o.refreshes_total.inc();
+        o.refresh_seconds.observe(refresh_t0.elapsed().as_secs_f64());
+        obs::record_span("stream.refresh", refresh_t0.elapsed());
+        obs::record_stage("sketch", sketch_time);
+        obs::record_stage("recovery", recovery_time);
+        obs::record_stage("kmeans", kmeans_time);
 
         let p = self.p.expect("points buffered");
         let buf = &self.buf;

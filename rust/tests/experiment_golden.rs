@@ -19,6 +19,38 @@ fn smoke_plan_jsonl_is_byte_identical_across_reruns_and_threads() {
     assert_eq!(first.jsonl, parallel.jsonl, "threads=4 diverged from threads=1");
 }
 
+/// Observability is strictly out-of-band: the grid JSONL must be
+/// byte-identical whether metric/span recording is on or off, and a
+/// traced run must actually have filled the span ring. (Toggling the
+/// process-wide switch is safe here — integration test binaries are
+/// separate processes, and this is the only test in this binary that
+/// touches it; it restores the default before returning.)
+#[test]
+fn smoke_plan_jsonl_is_byte_identical_with_tracing_on_or_off() {
+    rkc::obs::set_enabled(true);
+    rkc::obs::clear_trace();
+    let traced = run_plan_text(SMOKE, 2).expect("run smoke plan traced");
+    let (spans, _dropped) = rkc::obs::trace_snapshot();
+    assert!(
+        !spans.is_empty(),
+        "a traced grid run must record fit spans (api.fit / pipeline.sketch_pass)"
+    );
+    assert!(
+        spans.iter().any(|s| s.name == "api.fit"),
+        "expected an api.fit span among {:?}",
+        spans.iter().map(|s| s.name).collect::<std::collections::BTreeSet<_>>()
+    );
+
+    rkc::obs::set_enabled(false);
+    let silent = run_plan_text(SMOKE, 2).expect("run smoke plan untraced");
+    rkc::obs::set_enabled(true);
+
+    assert_eq!(
+        traced.jsonl, silent.jsonl,
+        "recording on vs off changed the experiment output — obs leaked in-band"
+    );
+}
+
 #[test]
 fn smoke_plan_report_shape_matches_the_plan() {
     let Plan::Grid(grid) = Plan::parse(SMOKE).expect("parse smoke plan") else {

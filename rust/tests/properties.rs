@@ -486,3 +486,144 @@ fn property_malformed_plans_are_typed_errors_never_panics() {
         }
     }
 }
+
+// ---- observability histogram properties ----------------------------
+
+/// Linear-scan reference for the bucket an observation must land in:
+/// the first bucket whose bound is >= v, else the overflow bucket.
+fn reference_bucket(bounds: &[f64], v: f64) -> usize {
+    for (i, &b) in bounds.iter().enumerate() {
+        if v <= b {
+            return i;
+        }
+    }
+    bounds.len()
+}
+
+/// A fresh uniquely-labeled histogram series for one property case
+/// (registry series are process-global, so reuse would accumulate).
+fn fresh_hist(case_label: &str, bounds: &[f64]) -> std::sync::Arc<rkc::obs::Histogram> {
+    rkc::obs::registry().histogram(
+        "rkc_test_properties_seconds",
+        "scratch series for the histogram property tests",
+        &[("case", case_label)],
+        bounds,
+    )
+}
+
+#[test]
+fn property_histogram_bucketing_matches_linear_scan() {
+    let bounds = rkc::obs::latency_buckets();
+    let mut rng = Pcg64::seed(60);
+    for case in 0..20 {
+        let h = fresh_hist(&format!("scan{case}"), bounds);
+        let mut want = vec![0u64; bounds.len() + 1];
+        let mut sum = 0.0;
+        for _ in 0..200 {
+            // log-uniform across (and past both ends of) the bound range
+            let v = 10f64.powf(-6.0 + 8.0 * rng.next_f64());
+            want[reference_bucket(bounds, v)] += 1;
+            sum += v;
+            h.observe(v);
+        }
+        let snap = h.snapshot();
+        assert_eq!(snap.buckets, want, "case {case}");
+        assert_eq!(snap.count, 200, "case {case}: count is the bucket sum");
+        assert!(
+            (snap.sum - sum).abs() <= 1e-9 * sum.abs().max(1.0),
+            "case {case}: sum {} want {sum}",
+            snap.sum
+        );
+    }
+}
+
+#[test]
+fn property_histogram_boundary_values_land_in_their_named_bucket() {
+    // Prometheus `le` semantics: v == bound counts *in* that bucket
+    let bounds = rkc::obs::size_buckets();
+    let h = fresh_hist("boundary", bounds);
+    for &b in bounds {
+        h.observe(b);
+    }
+    // strictly past the last bound -> overflow, as does +inf
+    h.observe(bounds.last().unwrap() * 2.0);
+    h.observe(f64::INFINITY);
+    let snap = h.snapshot();
+    let (body, overflow) = snap.buckets.split_at(bounds.len());
+    assert!(body.iter().all(|&c| c == 1), "one exact hit per named bucket: {body:?}");
+    assert_eq!(overflow, &[2], "past-the-end values go to +Inf");
+    assert_eq!(snap.count, bounds.len() as u64 + 2);
+}
+
+#[test]
+fn property_histogram_merge_is_associative_and_checks_bounds() {
+    let bounds = rkc::obs::latency_buckets();
+    let mut rng = Pcg64::seed(61);
+    for case in 0..20 {
+        let mut parts = Vec::new();
+        for part in 0..3 {
+            let h = fresh_hist(&format!("merge{case}_{part}"), bounds);
+            for _ in 0..1 + rng.below(50) {
+                h.observe(10f64.powf(-6.0 + 8.0 * rng.next_f64()));
+            }
+            parts.push(h.snapshot());
+        }
+        // (a + b) + c  ==  a + (b + c): exact on counts, fp-close on sums
+        let mut left = parts[0].clone();
+        left.merge(&parts[1]).unwrap();
+        left.merge(&parts[2]).unwrap();
+        let mut bc = parts[1].clone();
+        bc.merge(&parts[2]).unwrap();
+        let mut right = parts[0].clone();
+        right.merge(&bc).unwrap();
+        assert_eq!(left.buckets, right.buckets, "case {case}");
+        assert_eq!(left.count, right.count, "case {case}");
+        assert_eq!(
+            left.count,
+            parts.iter().map(|p| p.count).sum::<u64>(),
+            "case {case}: merge preserves total count"
+        );
+        assert!(
+            (left.sum - right.sum).abs() <= 1e-9 * left.sum.abs().max(1.0),
+            "case {case}: sums diverged beyond rounding"
+        );
+    }
+    // bound mismatch is a typed error, not a silent mis-merge
+    let a = fresh_hist("mismatch_a", bounds).snapshot();
+    let mut b = fresh_hist("mismatch_b", rkc::obs::size_buckets()).snapshot();
+    assert!(matches!(b.merge(&a), Err(RkcError::InvalidConfig(_))));
+}
+
+#[test]
+fn property_histogram_quantiles_are_monotone_upper_bounds() {
+    let bounds = rkc::obs::latency_buckets();
+    let mut rng = Pcg64::seed(62);
+    for case in 0..10 {
+        let h = fresh_hist(&format!("quant{case}"), bounds);
+        let mut values = Vec::new();
+        for _ in 0..120 {
+            let v = 10f64.powf(-5.0 + 6.0 * rng.next_f64());
+            values.push(v);
+            h.observe(v);
+        }
+        values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let snap = h.snapshot();
+        let mut prev = 0.0;
+        for q in [0.0, 0.1, 0.5, 0.9, 0.95, 1.0] {
+            let est = snap.quantile(q);
+            assert!(est >= prev, "case {case}: quantile must be monotone in q");
+            prev = est;
+            // upper-bound property: the estimate is >= the true quantile
+            // (bucket bounds can only round up, except past the last
+            // finite bound where the histogram cannot resolve)
+            let idx = ((q * values.len() as f64).ceil() as usize).max(1) - 1;
+            let truth = values[idx];
+            assert!(
+                est >= truth.min(*bounds.last().unwrap()) - 1e-12,
+                "case {case}: q={q} est {est} < true {truth}"
+            );
+        }
+    }
+    // empty snapshot: quantile is 0 by definition
+    assert_eq!(fresh_hist("quant_empty", bounds).snapshot().quantile(0.5), 0.0);
+}

@@ -79,6 +79,15 @@ KEY_TIMINGS = {
     "BENCH_stream.json": ["refresh_p50_ms", "refresh_p95_ms", "acc_lag"],
 }
 
+# baseline entries keyed off a *tagged* row instead of row 0, as
+# "<file>#<tag_value>". The tagged row must exist (schema gate) and must
+# carry the listed keys on top of the file's REQUIRED set — this is how
+# the obs_overhead instrumentation-cost rows ride the regression trail.
+KEY_TIMINGS_TAGGED = {
+    "BENCH_serve.json": ("mode", "obs_overhead", ["obs_overhead_pct"]),
+    "BENCH_stream.json": ("scenario", "obs_overhead", ["obs_overhead_pct"]),
+}
+
 # warn (never fail) when a compared value drifts beyond this
 WARN_PCT = 25.0
 
@@ -117,6 +126,14 @@ def check_file(path):
             fail(path, f"row {i} missing (or null) required keys {missing}")
         for key, value in row.items():
             check_finite(path, i, key, value)
+    if base in KEY_TIMINGS_TAGGED:
+        tag_field, tag_value, keys = KEY_TIMINGS_TAGGED[base]
+        tagged = [r for r in data if r.get(tag_field) == tag_value]
+        if not tagged:
+            fail(path, f"no row with {tag_field}={tag_value!r} (required)")
+        missing = [k for k in keys if tagged[0].get(k) is None]
+        if missing:
+            fail(path, f"{tag_field}={tag_value!r} row missing keys {missing}")
     print(f"ok   {path}: {len(data)} row(s)")
     return data
 
@@ -126,14 +143,25 @@ def snapshot(paths):
     snap = {}
     for path in paths:
         base = os.path.basename(path)
-        keys = KEY_TIMINGS.get(base)
-        if not keys:
-            continue
         with open(path, encoding="utf-8") as fh:
-            row0 = json.load(fh)[0]
-        values = {k: row0[k] for k in keys if isinstance(row0.get(k), (int, float))}
-        if values:
-            snap[base] = values
+            data = json.load(fh)
+        keys = KEY_TIMINGS.get(base)
+        if keys:
+            row0 = data[0]
+            values = {k: row0[k] for k in keys if isinstance(row0.get(k), (int, float))}
+            if values:
+                snap[base] = values
+        if base in KEY_TIMINGS_TAGGED:
+            tag_field, tag_value, tagged_keys = KEY_TIMINGS_TAGGED[base]
+            rows = [r for r in data if r.get(tag_field) == tag_value]
+            if rows:
+                values = {
+                    k: rows[0][k]
+                    for k in tagged_keys
+                    if isinstance(rows[0].get(k), (int, float))
+                }
+                if values:
+                    snap[f"{base}#{tag_value}"] = values
     return snap
 
 

@@ -1,0 +1,280 @@
+#!/usr/bin/env python3
+"""Validate a `GET /metrics` scrape (Prometheus text exposition 0.0.4).
+
+Checks, per file:
+  - every non-comment line parses as `name[{labels}] value`
+  - metric and label names match the Prometheus grammar; label values
+    are double-quoted with only `\\\\`, `\\"`, and `\\n` escapes
+  - every sample's family carries `# HELP` and `# TYPE` lines *before*
+    its first sample, with a known type
+  - sample values parse as floats; counter/histogram values are finite
+    and non-negative
+  - histograms: per series (labels minus `le`), the `_bucket` counts
+    are cumulative non-decreasing, the last bucket is `le="+Inf"`, its
+    count equals the series' `_count`, and `_sum` exists
+
+Across two files (scrape-before, scrape-after):
+  - every counter / `_count` / `_bucket` series present in both must be
+    monotone non-decreasing (counters never go backwards)
+  - `--expect-grew NAME` (repeatable): the summed value of that sample
+    name must be strictly larger in the second file
+  - `--require NAME` (repeatable): the family must exist in the last
+    file given (use for coverage: serve, stream, and pipeline series)
+
+Usage:
+  check_metrics_text.py [--require NAME]... [--expect-grew NAME]... \
+      before.txt [after.txt]
+
+Exits non-zero on the first violation.
+"""
+
+import math
+import re
+import sys
+
+METRIC_NAME = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+LABEL_NAME = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")
+KNOWN_TYPES = {"counter", "gauge", "histogram", "summary", "untyped"}
+
+
+def fail(path, msg):
+    print(f"FAIL {path}: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def parse_labels(path, lineno, text):
+    """Parse the `a="b",c="d"` body of a label set (braces stripped)."""
+    labels = {}
+    i = 0
+    while i < len(text):
+        m = re.match(r"[a-zA-Z_][a-zA-Z0-9_]*", text[i:])
+        if not m:
+            fail(path, f"line {lineno}: bad label name at ...{text[i:]!r}")
+        name = m.group(0)
+        i += len(name)
+        if not text[i : i + 2] == '="':
+            fail(path, f"line {lineno}: label {name} missing '=\"'")
+        i += 2
+        value = []
+        while i < len(text):
+            ch = text[i]
+            if ch == "\\":
+                if i + 1 >= len(text) or text[i + 1] not in '\\"n':
+                    fail(path, f"line {lineno}: bad escape in label {name}")
+                value.append({"\\": "\\", '"': '"', "n": "\n"}[text[i + 1]])
+                i += 2
+            elif ch == '"':
+                i += 1
+                break
+            else:
+                value.append(ch)
+                i += 1
+        else:
+            fail(path, f"line {lineno}: unterminated value for label {name}")
+        if name in labels:
+            fail(path, f"line {lineno}: duplicate label {name}")
+        labels[name] = "".join(value)
+        if i < len(text):
+            if text[i] != ",":
+                fail(path, f"line {lineno}: expected ',' between labels")
+            i += 1
+    return labels
+
+
+def base_family(name):
+    """The family a sample belongs to (strips histogram suffixes)."""
+    for suffix in ("_bucket", "_sum", "_count"):
+        if name.endswith(suffix):
+            return name[: -len(suffix)]
+    return name
+
+
+def parse_file(path):
+    """Return (families, samples).
+
+    families: name -> {"help": bool, "type": str, declared_line: int}
+    samples:  list of (lineno, name, labels-dict, value)
+    """
+    try:
+        with open(path, encoding="utf-8") as fh:
+            lines = fh.read().splitlines()
+    except OSError as exc:
+        fail(path, f"unreadable: {exc}")
+    families = {}
+    samples = []
+    for lineno, line in enumerate(lines, start=1):
+        if not line.strip():
+            continue
+        if line.startswith("# HELP ") or line.startswith("# TYPE "):
+            kind_of_comment = line[2:6]
+            rest = line[7:]
+            parts = rest.split(" ", 1)
+            name = parts[0]
+            if not METRIC_NAME.match(name):
+                fail(path, f"line {lineno}: bad metric name {name!r}")
+            fam = families.setdefault(name, {"help": False, "type": None})
+            if kind_of_comment == "HELP":
+                if len(parts) < 2 or not parts[1].strip():
+                    fail(path, f"line {lineno}: HELP for {name} has no text")
+                fam["help"] = True
+            else:
+                if len(parts) < 2 or parts[1] not in KNOWN_TYPES:
+                    fail(path, f"line {lineno}: TYPE for {name} is not one of {sorted(KNOWN_TYPES)}")
+                fam["type"] = parts[1]
+            continue
+        if line.startswith("#"):
+            continue  # free-form comment: legal, ignored
+
+        m = re.match(r"^([a-zA-Z_:][a-zA-Z0-9_:]*)(\{(.*)\})? (\S+)$", line)
+        if not m:
+            fail(path, f"line {lineno}: unparseable sample line {line!r}")
+        name, _, label_text, value_text = m.groups()
+        labels = parse_labels(path, lineno, label_text) if label_text else {}
+        try:
+            value = float(value_text)
+        except ValueError:
+            fail(path, f"line {lineno}: value {value_text!r} is not a float")
+
+        family = base_family(name)
+        fam = families.get(family) or families.get(name)
+        if fam is None:
+            fail(path, f"line {lineno}: sample {name} has no # TYPE declaration")
+        if not fam["help"] or fam["type"] is None:
+            fail(path, f"line {lineno}: family of {name} is missing HELP or TYPE")
+        if fam["type"] in ("counter", "histogram"):
+            if not math.isfinite(value) or value < 0:
+                fail(path, f"line {lineno}: {name} = {value} (counters must be finite, >= 0)")
+        samples.append((lineno, name, labels, value))
+    return families, samples
+
+
+def series_key(name, labels, drop=()):
+    items = tuple(sorted((k, v) for k, v in labels.items() if k not in drop))
+    return (name, items)
+
+
+def check_histograms(path, families, samples):
+    """Cumulative-bucket and _count/_sum coherence per histogram series."""
+    buckets = {}  # (family, labels-minus-le) -> list of (le, value, lineno)
+    counts = {}
+    sums = {}
+    for lineno, name, labels, value in samples:
+        family = base_family(name)
+        if families.get(family, {}).get("type") != "histogram":
+            continue
+        if name == family + "_bucket":
+            if "le" not in labels:
+                fail(path, f"line {lineno}: {name} sample without an le label")
+            key = series_key(family, labels, drop=("le",))
+            buckets.setdefault(key, []).append((labels["le"], value, lineno))
+        elif name == family + "_count":
+            counts[series_key(family, labels)] = value
+        elif name == family + "_sum":
+            sums[series_key(family, labels)] = value
+        elif name == family:
+            fail(path, f"line {lineno}: bare sample {name} for a histogram family")
+
+    if not buckets and any(f.get("type") == "histogram" for f in families.values()):
+        fail(path, "histogram TYPE declared but no _bucket samples found")
+    for (family, labels), entries in buckets.items():
+        where = f"histogram {family}{dict(labels)}"
+        if entries[-1][0] != "+Inf":
+            fail(path, f"{where}: last bucket is le={entries[-1][0]!r}, want +Inf")
+        prev_le, prev_v = None, -1.0
+        for le_text, value, lineno in entries:
+            le = math.inf if le_text == "+Inf" else float(le_text)
+            if prev_le is not None and not le > prev_le:
+                fail(path, f"{where}: le bounds not increasing at line {lineno}")
+            if value < prev_v:
+                fail(path, f"{where}: cumulative count decreased at le={le_text}")
+            prev_le, prev_v = le, value
+        key = (family, labels)
+        if key not in counts:
+            fail(path, f"{where}: missing _count")
+        if key not in sums:
+            fail(path, f"{where}: missing _sum")
+        if counts[key] != entries[-1][1]:
+            fail(path, f"{where}: _count {counts[key]} != +Inf bucket {entries[-1][1]}")
+
+
+def monotone_series(path_a, path_b, fams_a, samples_a, fams_b, samples_b):
+    """Counter-ish series shared by both scrapes must never decrease."""
+
+    def counterish(samples, families):
+        out = {}
+        for _, name, labels, value in samples:
+            family = base_family(name)
+            ftype = families.get(family, {}).get("type")
+            if ftype == "counter" or (
+                ftype == "histogram" and name != family + "_sum"
+            ):
+                out[series_key(name, labels)] = value
+        return out
+
+    before = counterish(samples_a, fams_a)
+    after = counterish(samples_b, fams_b)
+    shared = sorted(set(before) & set(after))
+    for key in shared:
+        if after[key] < before[key]:
+            name, labels = key
+            fail(
+                path_b,
+                f"counter {name}{dict(labels)} went backwards: "
+                f"{before[key]} -> {after[key]} (vs {path_a})",
+            )
+    return len(shared)
+
+
+def main(argv):
+    args = argv[1:]
+    required, expect_grew, paths = [], [], []
+    i = 0
+    while i < len(args):
+        if args[i] == "--require":
+            i += 1
+            required.append(args[i])
+        elif args[i] == "--expect-grew":
+            i += 1
+            expect_grew.append(args[i])
+        else:
+            paths.append(args[i])
+        i += 1
+    if not paths or len(paths) > 2:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+
+    parsed = []
+    for path in paths:
+        families, samples = parse_file(path)
+        if not samples:
+            fail(path, "no samples at all")
+        check_histograms(path, families, samples)
+        parsed.append((path, families, samples))
+        print(f"ok   {path}: {len(families)} families, {len(samples)} samples")
+
+    last_path, last_families, last_samples = parsed[-1]
+    for name in required:
+        if name not in last_families:
+            fail(last_path, f"required family {name!r} is absent")
+        if not any(base_family(s[1]) == name for s in last_samples):
+            fail(last_path, f"required family {name!r} has no samples")
+    if required:
+        print(f"ok   {last_path}: all {len(required)} required families present")
+
+    if len(parsed) == 2:
+        (pa, fa, sa), (pb, fb, sb) = parsed
+        shared = monotone_series(pa, pb, fa, sa, fb, sb)
+        print(f"ok   {pb}: {shared} shared counter series monotone vs {pa}")
+        for name in expect_grew:
+            total_a = sum(v for _, n, _, v in sa if n == name)
+            total_b = sum(v for _, n, _, v in sb if n == name)
+            if not total_b > total_a:
+                fail(pb, f"{name} did not grow: {total_a} -> {total_b}")
+            print(f"ok   {pb}: {name} grew {total_a} -> {total_b}")
+    elif expect_grew:
+        fail(paths[0], "--expect-grew needs two files (before, after)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
