@@ -753,6 +753,7 @@ mod tests {
 
     #[test]
     fn auto_save_persists_the_fit() {
+        let _g = crate::fault::test_guard(); // saves cross a failpoint site
         let ds = data::cross_lines(&mut Pcg64::seed(16), 64);
         let dir = std::env::temp_dir().join(format!("rkc_auto_save_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();

@@ -136,6 +136,14 @@ impl FittedModel {
         &self.metrics
     }
 
+    /// Mutable metrics access. Exists so byte-level model comparisons
+    /// (crash-recovery tests, reproducibility harnesses) can zero the
+    /// wall-clock timing fields — they measure the run, not the model,
+    /// and are the only non-deterministic bytes in a `.rkc` file.
+    pub fn metrics_mut(&mut self) -> &mut FitMetrics {
+        &mut self.metrics
+    }
+
     /// Refresh generation of this model: `0` for a plain batch fit,
     /// `g ≥ 1` for the g-th model a [`StreamClusterer`](crate::stream)
     /// refresh published. Survives save/load (a `.rkc` header field;

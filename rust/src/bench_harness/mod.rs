@@ -46,6 +46,25 @@ impl MiniHttpClient {
         Some(MiniHttpClient { stream })
     }
 
+    /// `try_connect` with a bounded retry budget: up to `attempts` dials,
+    /// sleeping `backoff` (doubled each round) between failures. For
+    /// chaos/recovery tests that poll a server which is still binding or
+    /// restarting — NOT for load replays, whose dropped-attempt
+    /// accounting depends on `try_connect`'s raw single-dial semantics.
+    pub fn connect_with_retry(addr: SocketAddr, attempts: u32, backoff: Duration) -> Option<Self> {
+        let mut delay = backoff;
+        for attempt in 1..=attempts.max(1) {
+            if let Some(client) = Self::try_connect(addr) {
+                return Some(client);
+            }
+            if attempt < attempts {
+                std::thread::sleep(delay);
+                delay = delay.saturating_mul(2);
+            }
+        }
+        None
+    }
+
     /// Write raw bytes (hand-framed requests for malformed-input tests).
     pub fn send_raw(&mut self, bytes: &[u8]) {
         self.stream.write_all(bytes).expect("writing request");

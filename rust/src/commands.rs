@@ -402,7 +402,7 @@ pub fn cmd_serve(cfg: &ExperimentConfig) -> Result<()> {
 /// on `--addr` while ingestion continues.
 pub fn cmd_stream(cfg: &ExperimentConfig, data_csv: Option<&str>) -> Result<()> {
     use rkc::serve::{serve_http_registry, HttpOpts, ModelRegistry, ServeOpts};
-    use rkc::stream::StreamClusterer;
+    use rkc::stream::{CheckpointPolicy, Checkpointer, StreamClusterer};
     use std::io::Read as _;
     use std::sync::Arc;
     use std::time::Duration;
@@ -442,21 +442,49 @@ pub fn cmd_stream(cfg: &ExperimentConfig, data_csv: Option<&str>) -> Result<()> 
     };
     let total = replay.as_ref().map(|(x, _)| x.cols()).unwrap_or(cfg.n);
 
-    let mut sc = StreamClusterer::new(cfg.k)
-        .kernel(cfg.kernel)
-        .rank(cfg.rank)
-        .oversample(cfg.oversample)
-        .batch(cfg.batch)
-        .seed(cfg.seed)
-        .threads(cfg.threads)
-        .kmeans_restarts(cfg.kmeans_restarts)
-        .kmeans_iters(cfg.kmeans_iters)
-        .kmeans_tol(cfg.kmeans_tol)
-        .refresh_every_points(cfg.refresh_points)
-        // config rejects non-finite/negative values; the cap keeps any
-        // in-range f64 inside Duration::from_secs_f64's panic-free domain
-        .refresh_every(Duration::from_secs_f64(cfg.refresh_secs.min(1.0e9)))
-        .capacity(total);
+    // --- crash recovery: an existing checkpoint wins over the flags
+    // (its header carries the full fit configuration), so the exact
+    // command that crashed can simply be re-run and it picks up from
+    // the last durable `.rkcs` state instead of starting cold
+    let resumed = !cfg.checkpoint_path.is_empty()
+        && std::path::Path::new(&cfg.checkpoint_path).exists();
+    let mut sc = if resumed {
+        let sc = StreamClusterer::resume(&cfg.checkpoint_path)?;
+        println!(
+            "rkc stream: resumed from {} (n={}, {} refresh(es))",
+            cfg.checkpoint_path,
+            sc.n_points(),
+            sc.refreshes()
+        );
+        sc
+    } else {
+        StreamClusterer::new(cfg.k)
+            .kernel(cfg.kernel)
+            .rank(cfg.rank)
+            .oversample(cfg.oversample)
+            .batch(cfg.batch)
+            .seed(cfg.seed)
+            .threads(cfg.threads)
+            .kmeans_restarts(cfg.kmeans_restarts)
+            .kmeans_iters(cfg.kmeans_iters)
+            .kmeans_tol(cfg.kmeans_tol)
+            .refresh_every_points(cfg.refresh_points)
+            // config rejects non-finite/negative values; the cap keeps any
+            // in-range f64 inside Duration::from_secs_f64's panic-free domain
+            .refresh_every(Duration::from_secs_f64(cfg.refresh_secs.min(1.0e9)))
+            .capacity(total)
+    };
+    let mut ckpt = (!cfg.checkpoint_path.is_empty()).then(|| {
+        Checkpointer::new(
+            cfg.checkpoint_path.as_str(),
+            CheckpointPolicy {
+                points: (cfg.checkpoint_points > 0).then_some(cfg.checkpoint_points),
+                interval: (cfg.checkpoint_secs > 0.0)
+                    .then(|| Duration::from_secs_f64(cfg.checkpoint_secs.min(1.0e9))),
+                on_refresh: true,
+            },
+        )
+    });
 
     // the registry (and the ModelServer each publish spins up inside
     // it) only exists when something can actually query it — without
@@ -493,8 +521,25 @@ pub fn cmd_stream(cfg: &ExperimentConfig, data_csv: Option<&str>) -> Result<()> 
         cfg.refresh_secs,
     );
 
+    // Fast-forward a resumed run past what the checkpoint already holds:
+    // the replay/scenario sources are deterministic, so skipping the
+    // first `n_points()` draws re-aligns them with the saved state.
+    let already = if resumed { sc.n_points().min(total) } else { 0 };
     let mut truth: Vec<usize> = Vec::new();
     let mut fed = 0usize;
+    while fed < already {
+        let m = chunk.min(already - fed);
+        match (&mut drift, &replay) {
+            (Some(d), _) => truth.extend_from_slice(&d.chunk(m).labels),
+            (None, Some((_, labels))) => {
+                if !labels.is_empty() {
+                    truth.extend_from_slice(&labels[fed..fed + m]);
+                }
+            }
+            (None, None) => unreachable!("stream source resolved above"),
+        }
+        fed += m;
+    }
     while fed < total {
         let m = chunk.min(total - fed);
         let batch = match (&mut drift, &replay) {
@@ -515,7 +560,8 @@ pub fn cmd_stream(cfg: &ExperimentConfig, data_csv: Option<&str>) -> Result<()> 
         fed += m;
 
         let flush = fed == total && sc.pending_points() > 0;
-        if (sc.refresh_due() || flush) && sc.can_refresh() {
+        let refreshed = (sc.refresh_due() || flush) && sc.can_refresh();
+        if refreshed {
             let t0 = Instant::now();
             let generation = match &serving {
                 Some((registry, _)) => sc.publish(registry, "stream")?,
@@ -535,9 +581,29 @@ pub fn cmd_stream(cfg: &ExperimentConfig, data_csv: Option<&str>) -> Result<()> 
                 acc.map(|a| format!(" accuracy={a:.3}")).unwrap_or_default()
             );
         }
+        if let Some(c) = ckpt.as_mut() {
+            // a failed periodic checkpoint must not abort ingestion —
+            // that would lose the very state it exists to protect. The
+            // window stays open on failure, so the next chunk retries.
+            if let Err(e) = c.maybe_write(&sc, m, refreshed) {
+                eprintln!(
+                    "rkc stream: checkpoint to {} failed ({e}); continuing, \
+                     will retry at the next trigger",
+                    c.path()
+                );
+            }
+        }
+    }
+    // one final unconditional checkpoint so the saved state always
+    // reflects the completed run (a rerun then resumes as a no-op)
+    if let Some(c) = ckpt.as_mut() {
+        c.write(&sc)?;
+        println!("rkc stream: checkpointed state to {}", c.path());
     }
     println!(
-        "rkc stream: ingested {fed} points, published {} generation(s)",
+        "rkc stream: ingested {} new point(s) ({} total), published {} generation(s)",
+        fed - already,
+        sc.n_points(),
         sc.refreshes()
     );
     if let Some((_registry, http)) = serving {

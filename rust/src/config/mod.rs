@@ -168,6 +168,17 @@ pub struct ExperimentConfig {
     /// `stream` subcommand starts the registry front-end on
     /// [`serve_addr`](ExperimentConfig::serve_addr))
     pub stream_http: bool,
+    /// `.rkcs` checkpoint file for the `stream` subcommand; empty
+    /// disables checkpointing. When the file already exists at startup,
+    /// `stream` resumes from it instead of starting cold, so a crashed
+    /// (or `kill -9`ed) run continues where its last checkpoint left off
+    pub checkpoint_path: String,
+    /// checkpoint the streaming state every this many ingested points;
+    /// `0` leaves only the refresh-driven checkpoints
+    pub checkpoint_points: usize,
+    /// checkpoint the streaming state at least every this many seconds;
+    /// `0` disables the time trigger
+    pub checkpoint_secs: f64,
     /// `.plan` file the `experiment` subcommand runs (grid or load
     /// kind; see [`crate::experiment::Plan`])
     pub plan_path: String,
@@ -209,6 +220,9 @@ impl Default for ExperimentConfig {
             scenario: String::new(),
             drift: 0.05,
             stream_http: false,
+            checkpoint_path: String::new(),
+            checkpoint_points: 0,
+            checkpoint_secs: 0.0,
             plan_path: String::new(),
             out_path: String::new(),
         }
@@ -305,6 +319,18 @@ impl ExperimentConfig {
                 self.stream_http =
                     value.parse().map_err(|_| RkcError::parse("stream_http", value))?;
             }
+            "checkpoint" | "checkpoint_path" => self.checkpoint_path = value.into(),
+            "checkpoint_points" => {
+                self.checkpoint_points = uint("checkpoint_points", value)?;
+            }
+            "checkpoint_secs" => {
+                // same panic-free domain rule as refresh_secs
+                self.checkpoint_secs = value
+                    .parse()
+                    .ok()
+                    .filter(|s: &f64| s.is_finite() && *s >= 0.0)
+                    .ok_or_else(|| RkcError::parse("checkpoint_secs", value))?;
+            }
             "plan" | "plan_path" => self.plan_path = value.into(),
             "out" | "out_path" => self.out_path = value.into(),
             "method" => self.method = value.parse()?,
@@ -370,6 +396,9 @@ mod tests {
         assert_eq!(c.scenario, "");
         assert_eq!(c.drift, 0.05);
         assert!(!c.stream_http);
+        assert_eq!(c.checkpoint_path, "");
+        assert_eq!(c.checkpoint_points, 0);
+        assert_eq!(c.checkpoint_secs, 0.0);
         assert_eq!(c.plan_path, "");
         assert_eq!(c.out_path, "");
         // artifacts-dir-driven model path when no explicit override
@@ -430,6 +459,15 @@ mod tests {
         assert_eq!(c.drift, 0.3);
         c.set("stream_http", "true").unwrap();
         assert!(c.stream_http);
+        c.set("checkpoint", "/tmp/state.rkcs").unwrap();
+        assert_eq!(c.checkpoint_path, "/tmp/state.rkcs");
+        c.set("checkpoint_points", "500").unwrap();
+        assert_eq!(c.checkpoint_points, 500);
+        c.set("checkpoint_secs", "1.5").unwrap();
+        assert_eq!(c.checkpoint_secs, 1.5);
+        assert!(c.set("checkpoint_points", "-1").is_err());
+        assert!(c.set("checkpoint_secs", "inf").is_err());
+        assert!(c.set("checkpoint_secs", "-1").is_err());
         assert!(c.set("stream_http", "yep").is_err());
         assert!(c.set("drift", "lots").is_err());
         assert!(c.set("refresh_secs", "inf").is_err());

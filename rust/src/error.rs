@@ -52,6 +52,13 @@ pub enum RkcError {
         context: String,
         source: std::io::Error,
     },
+    /// A failure that is expected to clear on retry (an injected fault,
+    /// a momentarily unavailable file, a refused dial during startup).
+    /// Callers with a retry budget (registry load, PUT /models) back
+    /// off and try again; everyone else treats it like [`Io`](Self::Io).
+    Transient {
+        context: String,
+    },
     /// A saved `.rkc` model file is unreadable: bad magic, corrupt or
     /// truncated header/payload, or a checksum mismatch.
     Model {
@@ -103,6 +110,29 @@ impl RkcError {
     pub fn model(path: impl Into<String>, detail: impl Into<String>) -> Self {
         RkcError::Model { path: path.into(), detail: detail.into() }
     }
+
+    pub fn transient(context: impl Into<String>) -> Self {
+        RkcError::Transient { context: context.into() }
+    }
+
+    /// Whether a bounded-backoff retry is worth attempting: the typed
+    /// [`Transient`](Self::Transient) variant, or an [`Io`](Self::Io)
+    /// whose kind the OS itself labels as momentary.
+    pub fn is_transient(&self) -> bool {
+        use std::io::ErrorKind;
+        match self {
+            RkcError::Transient { .. } => true,
+            RkcError::Io { source, .. } => matches!(
+                source.kind(),
+                ErrorKind::Interrupted
+                    | ErrorKind::WouldBlock
+                    | ErrorKind::TimedOut
+                    | ErrorKind::ConnectionRefused
+                    | ErrorKind::ConnectionReset
+            ),
+            _ => false,
+        }
+    }
 }
 
 impl fmt::Display for RkcError {
@@ -117,6 +147,9 @@ impl fmt::Display for RkcError {
             RkcError::Backend(m) => write!(f, "{m}"),
             RkcError::Unsupported(m) => write!(f, "unsupported operation: {m}"),
             RkcError::Io { context, source } => write!(f, "{context}: {source}"),
+            RkcError::Transient { context } => {
+                write!(f, "transient failure (retryable): {context}")
+            }
             RkcError::Model { path, detail } => {
                 write!(f, "invalid model file {path}: {detail}")
             }
@@ -174,6 +207,24 @@ mod tests {
         let e = RkcError::ModelVersion { found: 9, supported: 1 };
         assert!(e.to_string().contains("version 9"));
         assert!(e.to_string().contains("supported version 1"));
+    }
+
+    #[test]
+    fn transient_classification_covers_typed_and_os_momentary() {
+        let e = RkcError::transient("injected fault at failpoint 'serve.load'");
+        assert!(e.is_transient());
+        assert!(e.to_string().contains("retryable"));
+        let momentary = RkcError::io(
+            "dialing front-end",
+            std::io::Error::new(std::io::ErrorKind::ConnectionRefused, "refused"),
+        );
+        assert!(momentary.is_transient());
+        let hard = RkcError::io(
+            "reading model",
+            std::io::Error::new(std::io::ErrorKind::NotFound, "gone"),
+        );
+        assert!(!hard.is_transient());
+        assert!(!RkcError::invalid_config("rank 0").is_transient());
     }
 
     #[test]

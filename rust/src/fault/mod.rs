@@ -1,0 +1,407 @@
+//! Process-wide failpoint injection, strictly opt-in — the chaos-side
+//! twin of [`crate::obs`].
+//!
+//! A **failpoint site** is a named hook compiled into an IO or
+//! availability edge of the system (`model_io.write`, `serve.load`,
+//! `http.accept`, …). Sites do nothing until armed: with no
+//! configuration installed, [`trip`] is a single relaxed atomic load —
+//! the same zero-overhead contract as `RKC_OBS`, and the
+//! experiment-golden byte-identity test holds with the fault layer
+//! compiled in.
+//!
+//! # Configuration
+//!
+//! Arm sites via the `RKC_FAULTS` environment variable (read once by
+//! [`init_from_env`], which the CLI calls at startup) or at runtime
+//! with [`configure`] / [`clear`]:
+//!
+//! ```text
+//! RKC_FAULTS="model_io.write=io_error:0.3,serve.load=delay_ms:50"
+//! ```
+//!
+//! Grammar: comma-separated `site=action` entries, where `action` is
+//!
+//! - `io_error:<prob>` — the site returns a typed
+//!   [`RkcError::Transient`] with probability `prob` ∈ \[0, 1\]
+//! - `delay_ms:<ms>[:<prob>]` — the site sleeps `ms` milliseconds with
+//!   probability `prob` (default 1)
+//!
+//! Unknown site names are accepted (a spec can name sites a given build
+//! doesn't compile in); malformed actions are typed errors.
+//!
+//! # Reproducible chaos
+//!
+//! Each armed site owns a dedicated [`Pcg64`] stream seeded from the
+//! FNV-1a hash of the *full spec text* and the site name, so the k-th
+//! trip decision at a site is a pure function of (spec, site, k) — two
+//! runs with the same spec and the same per-site trip order inject
+//! identical fault sequences, regardless of what other sites do.
+//!
+//! # Observability
+//!
+//! Every fired fault bumps `rkc_fault_trips_total{site,action}` in the
+//! [`crate::obs`] registry, so `/metrics` shows exactly which faults a
+//! chaos run injected (the CI chaos smoke asserts on it).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock, RwLock};
+use std::time::Duration;
+
+use crate::error::{Result, RkcError};
+use crate::rng::{Pcg64, Rng};
+
+// ---------------------------------------------------------------------------
+// site names
+//
+// One constant per compiled-in hook, so call sites and specs share the
+// exact spelling. Arbitrary names are still accepted in specs (and by
+// `trip` in tests); these are the ones wired into the crate.
+
+/// `model_io::save_model`, before the temp-file write.
+pub const MODEL_IO_WRITE: &str = "model_io.write";
+/// `model_io::save_model`, before the temp-file `sync_all`.
+pub const MODEL_IO_FSYNC: &str = "model_io.fsync";
+/// `StreamClusterer` checkpoint write, before the temp-file write.
+pub const STREAM_CHECKPOINT: &str = "stream.checkpoint";
+/// `ModelRegistry::load`, before reading the `.rkc` file (inside the
+/// transient-retry loop, so `io_error` here exercises the backoff).
+pub const SERVE_LOAD: &str = "serve.load";
+/// HTTP front-end accept loop, after `accept()` returns a connection
+/// (an `io_error` trip drops the connection unserved — a flaky NIC).
+pub const HTTP_ACCEPT: &str = "http.accept";
+
+// ---------------------------------------------------------------------------
+// global armed switch + site table
+
+/// `true` iff at least one site is armed. The only state `trip` reads
+/// on the disabled path.
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+/// What an armed site does when its probability draw fires.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultAction {
+    /// Return [`RkcError::Transient`] with probability `prob`.
+    IoError { prob: f64 },
+    /// Sleep `ms` milliseconds with probability `prob`, then proceed.
+    DelayMs { ms: u64, prob: f64 },
+}
+
+impl FaultAction {
+    fn prob(&self) -> f64 {
+        match *self {
+            FaultAction::IoError { prob } | FaultAction::DelayMs { prob, .. } => prob,
+        }
+    }
+
+    fn kind(&self) -> &'static str {
+        match self {
+            FaultAction::IoError { .. } => "io_error",
+            FaultAction::DelayMs { .. } => "delay_ms",
+        }
+    }
+}
+
+struct Site {
+    action: FaultAction,
+    /// Per-site deterministic decision stream; trips at one site are
+    /// serialized on this lock (sites sit on slow IO edges — never a
+    /// hot path).
+    rng: Mutex<Pcg64>,
+}
+
+fn sites() -> &'static RwLock<BTreeMap<String, Site>> {
+    static SITES: OnceLock<RwLock<BTreeMap<String, Site>>> = OnceLock::new();
+    SITES.get_or_init(|| RwLock::new(BTreeMap::new()))
+}
+
+/// Whether any failpoint is currently armed.
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Parse and install a fault spec, replacing any previous
+/// configuration. An empty spec (or [`clear`]) disarms everything.
+pub fn configure(spec: &str) -> Result<()> {
+    let parsed = parse_spec(spec)?;
+    let mut table = sites().write().unwrap_or_else(|p| p.into_inner());
+    table.clear();
+    let spec_seed = crate::model_io::checksum(spec.as_bytes());
+    for (name, action) in parsed {
+        let site_seed = crate::model_io::checksum(name.as_bytes());
+        table.insert(
+            name,
+            Site { action, rng: Mutex::new(Pcg64::seed_stream(spec_seed, site_seed)) },
+        );
+    }
+    ARMED.store(!table.is_empty(), Ordering::Relaxed);
+    Ok(())
+}
+
+/// Disarm every failpoint.
+pub fn clear() {
+    let mut table = sites().write().unwrap_or_else(|p| p.into_inner());
+    table.clear();
+    ARMED.store(false, Ordering::Relaxed);
+}
+
+/// Apply the `RKC_FAULTS` environment variable, if set. A malformed
+/// spec is a typed error — the CLI reports it and exits rather than
+/// running a chaos experiment with silently dropped faults.
+pub fn init_from_env() -> Result<()> {
+    match std::env::var("RKC_FAULTS") {
+        Ok(v) if !v.trim().is_empty() => configure(&v),
+        // set-but-undecodable is malformed, not unset — swallowing it
+        // would be exactly the silent degrade-to-clean-run this
+        // function exists to prevent
+        Err(std::env::VarError::NotUnicode(_)) => Err(RkcError::invalid_config(
+            "RKC_FAULTS is set but is not valid UTF-8".to_string(),
+        )),
+        _ => Ok(()),
+    }
+}
+
+fn parse_spec(spec: &str) -> Result<Vec<(String, FaultAction)>> {
+    let mut out = Vec::new();
+    for entry in spec.split(',') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let (site, action) = entry.split_once('=').ok_or_else(|| {
+            RkcError::invalid_config(format!(
+                "fault spec entry '{entry}' is not site=action (e.g. model_io.write=io_error:0.3)"
+            ))
+        })?;
+        let site = site.trim();
+        if site.is_empty() {
+            return Err(RkcError::invalid_config(format!(
+                "fault spec entry '{entry}' has an empty site name"
+            )));
+        }
+        if out.iter().any(|(s, _)| s == site) {
+            return Err(RkcError::invalid_config(format!(
+                "fault spec arms site '{site}' twice"
+            )));
+        }
+        out.push((site.to_string(), parse_action(action.trim())?));
+    }
+    Ok(out)
+}
+
+fn parse_action(action: &str) -> Result<FaultAction> {
+    let mut parts = action.split(':');
+    let kind = parts.next().unwrap_or("");
+    match kind {
+        "io_error" => {
+            let prob = parse_prob(parts.next(), action)?;
+            if parts.next().is_some() {
+                return Err(bad_action(action));
+            }
+            Ok(FaultAction::IoError { prob })
+        }
+        "delay_ms" => {
+            let ms: u64 = parts
+                .next()
+                .ok_or_else(|| bad_action(action))?
+                .parse()
+                .map_err(|_| bad_action(action))?;
+            let prob = match parts.next() {
+                Some(p) => parse_prob(Some(p), action)?,
+                None => 1.0,
+            };
+            if parts.next().is_some() {
+                return Err(bad_action(action));
+            }
+            Ok(FaultAction::DelayMs { ms, prob })
+        }
+        _ => Err(bad_action(action)),
+    }
+}
+
+fn parse_prob(p: Option<&str>, action: &str) -> Result<f64> {
+    let prob: f64 = p
+        .ok_or_else(|| bad_action(action))?
+        .parse()
+        .map_err(|_| bad_action(action))?;
+    if !(0.0..=1.0).contains(&prob) {
+        return Err(RkcError::invalid_config(format!(
+            "fault action '{action}': probability {prob} is outside [0, 1]"
+        )));
+    }
+    Ok(prob)
+}
+
+fn bad_action(action: &str) -> RkcError {
+    RkcError::invalid_config(format!(
+        "fault action '{action}' is not io_error:<prob> or delay_ms:<ms>[:<prob>]"
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// the injection point
+
+/// Evaluate the failpoint `site`. Disarmed (the normal case): one
+/// relaxed atomic load, `Ok(())`. Armed: draw from the site's
+/// deterministic stream; a firing `io_error` returns
+/// [`RkcError::Transient`], a firing `delay_ms` sleeps and returns
+/// `Ok(())`. Either firing bumps `rkc_fault_trips_total{site,action}`.
+pub fn trip(site: &str) -> Result<()> {
+    if !ARMED.load(Ordering::Relaxed) {
+        return Ok(());
+    }
+    trip_armed(site)
+}
+
+#[cold]
+fn trip_armed(site: &str) -> Result<()> {
+    let table = sites().read().unwrap_or_else(|p| p.into_inner());
+    let Some(s) = table.get(site) else { return Ok(()) };
+    let action = s.action;
+    let fire = {
+        let mut rng = s.rng.lock().unwrap_or_else(|p| p.into_inner());
+        rng.next_f64() < action.prob()
+    };
+    drop(table);
+    if !fire {
+        return Ok(());
+    }
+    crate::obs::registry()
+        .counter(
+            "rkc_fault_trips_total",
+            "Injected faults fired at failpoint sites (chaos testing only).",
+            &[("site", site), ("action", action.kind())],
+        )
+        .inc();
+    match action {
+        FaultAction::IoError { .. } => Err(RkcError::transient(format!(
+            "injected fault at failpoint '{site}'"
+        ))),
+        FaultAction::DelayMs { ms, .. } => {
+            std::thread::sleep(Duration::from_millis(ms));
+            Ok(())
+        }
+    }
+}
+
+/// Unit tests that arm/clear the process-global table serialize on this
+/// lock (same pattern as `obs::test_guard`). Public to the crate so the
+/// serve/stream/model_io unit tests that exercise injected faults can
+/// share it.
+#[cfg(test)]
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static GUARD: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    GUARD.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_site_is_inert() {
+        let _g = test_guard();
+        clear();
+        assert!(!armed());
+        for _ in 0..100 {
+            assert!(trip(MODEL_IO_WRITE).is_ok());
+        }
+    }
+
+    #[test]
+    fn spec_parses_both_actions_and_rejects_garbage() {
+        let ok = parse_spec("model_io.write=io_error:0.3, serve.load=delay_ms:50:0.5").unwrap();
+        assert_eq!(ok.len(), 2);
+        assert_eq!(ok[0].1, FaultAction::IoError { prob: 0.3 });
+        assert_eq!(ok[1].1, FaultAction::DelayMs { ms: 50, prob: 0.5 });
+        // bare delay defaults to always firing
+        assert_eq!(
+            parse_spec("a=delay_ms:7").unwrap()[0].1,
+            FaultAction::DelayMs { ms: 7, prob: 1.0 }
+        );
+        for bad in [
+            "no_equals",
+            "=io_error:0.5",
+            "s=io_error",
+            "s=io_error:2.0",
+            "s=io_error:0.1:9",
+            "s=delay_ms",
+            "s=delay_ms:abc",
+            "s=warp_drive:1",
+            "s=io_error:0.1,s=io_error:0.2",
+        ] {
+            assert!(parse_spec(bad).is_err(), "spec '{bad}' must be rejected");
+        }
+        // empty entries are tolerated (trailing commas)
+        assert!(parse_spec("a=io_error:1.0,,").unwrap().len() == 1);
+    }
+
+    #[test]
+    fn certain_io_error_always_trips_with_a_transient_error() {
+        let _g = test_guard();
+        configure("boom=io_error:1.0").unwrap();
+        assert!(armed());
+        for _ in 0..5 {
+            let err = trip("boom").unwrap_err();
+            assert!(
+                matches!(err, RkcError::Transient { .. }),
+                "fault trips must be typed Transient: {err}"
+            );
+        }
+        // unarmed sites in an armed process still pass
+        assert!(trip(MODEL_IO_FSYNC).is_ok());
+        clear();
+    }
+
+    #[test]
+    fn trip_sequence_is_deterministic_per_spec() {
+        let _g = test_guard();
+        let spec = "flaky=io_error:0.5";
+        let sample = |spec: &str| -> Vec<bool> {
+            configure(spec).unwrap();
+            let s = (0..64).map(|_| trip("flaky").is_err()).collect();
+            clear();
+            s
+        };
+        let a = sample(spec);
+        let b = sample(spec);
+        assert_eq!(a, b, "same spec must inject the same fault sequence");
+        assert!(a.iter().any(|&t| t) && a.iter().any(|&t| !t), "p=0.5 must mix outcomes");
+        // a different spec text reseeds the stream
+        let c = sample("flaky=io_error:0.5,other=delay_ms:1:0.0");
+        assert_ne!(a, c, "spec text must seed the decision stream");
+    }
+
+    #[test]
+    fn zero_probability_never_fires() {
+        let _g = test_guard();
+        configure("quiet=io_error:0.0").unwrap();
+        for _ in 0..64 {
+            assert!(trip("quiet").is_ok());
+        }
+        clear();
+    }
+
+    #[test]
+    fn delay_action_sleeps_then_proceeds() {
+        let _g = test_guard();
+        configure("slow=delay_ms:20").unwrap();
+        let t0 = std::time::Instant::now();
+        assert!(trip("slow").is_ok());
+        assert!(t0.elapsed() >= Duration::from_millis(15), "delay_ms must actually sleep");
+        clear();
+    }
+
+    #[test]
+    fn env_init_accepts_unset_and_rejects_malformed() {
+        let _g = test_guard();
+        // unset: no-op (the test runner may not have RKC_FAULTS)
+        std::env::remove_var("RKC_FAULTS");
+        init_from_env().unwrap();
+        assert!(!armed());
+        std::env::set_var("RKC_FAULTS", "a=io_error:nope");
+        assert!(init_from_env().is_err());
+        std::env::remove_var("RKC_FAULTS");
+        clear();
+    }
+}

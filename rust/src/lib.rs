@@ -68,6 +68,10 @@
 //! - [`util::parallel`] — the scoped fork-join substrate every parallel
 //!   stage shares; `threads(0)` auto-detection and the determinism
 //!   contract (`threads = 1` ≡ `threads = N`, bit for bit).
+//! - [`fault`] — failpoint injection for chaos testing: named sites on
+//!   the IO/availability edges (`model_io.write`, `serve.load`,
+//!   `http.accept`, …) armed via `RKC_FAULTS`, deterministic per-site
+//!   decision streams, a single relaxed atomic load when disarmed.
 //! - [`obs`] — process-wide observability: the metrics registry
 //!   (counters / gauges / log-bucket histograms rendered as Prometheus
 //!   text at `GET /metrics`), span tracing into a bounded lock-striped
@@ -96,6 +100,7 @@ pub mod bench_harness;
 pub mod config;
 pub mod coordinator;
 pub mod experiment;
+pub mod fault;
 pub mod metrics;
 pub mod model_io;
 pub mod obs;

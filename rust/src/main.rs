@@ -44,6 +44,9 @@ fn main() {
 
 fn real_main(args: Vec<String>) -> Result<()> {
     rkc::obs::init_from_env();
+    // a malformed RKC_FAULTS spec must abort, not silently run unfaulted
+    // (a chaos run that quietly degrades to a clean run proves nothing)
+    rkc::fault::init_from_env()?;
     let cli = Cli::parse(args, FLAGS)?;
     if cli.has_flag("help") || cli.subcommand.is_none() {
         print_help();
@@ -166,6 +169,11 @@ COMMON OPTIONS (config overrides)
   --scenario moving_blobs|label_churn (stream; synthetic drift source)
   --drift X (stream; per-chunk drift magnitude, default 0.05)
   --stream_http true (stream; serve generations on --addr while running)
+  --checkpoint state.rkcs (stream; durable state file — if it already
+                      exists the run RESUMES from it instead of starting
+                      cold, so rerunning a crashed command continues it)
+  --checkpoint_points N (stream; checkpoint every N points, 0 = off)
+  --checkpoint_secs S (stream; checkpoint every S seconds, 0 = off)
   --plan plans/file.plan (experiment; grid or load plan to run)
   --out results.jsonl (experiment; default exp_<plan-stem>.jsonl)
 
@@ -174,6 +182,16 @@ OBSERVABILITY
                       the RKC_TRACE env var does the same thing
   RKC_OBS=0           disable all metric/span recording (out-of-band
                       either way: results are bit-identical on or off)
+
+FAULT INJECTION (chaos testing)
+  RKC_FAULTS=\"site=action[:p[,...]]\"  arm named failpoints, e.g.
+      RKC_FAULTS=\"model_io.fsync=io_error:0.3,serve.load=delay_ms:50\"
+  sites: model_io.write model_io.fsync stream.checkpoint serve.load
+         http.accept
+  actions: io_error:<p> (typed transient IO error with probability p)
+           delay_ms:<ms>[:<p>] (sleep ms milliseconds, p defaults to 1)
+  unset => zero behavior change (single relaxed atomic load per site);
+  trips surface in /metrics as rkc_fault_trips_total{{site,action}}
 
 SERVING PROTOCOL (serve)
   POST /models/NAME/predict {{\"points\": [[x, ...], ...]}} -> {{\"labels\": [...]}}

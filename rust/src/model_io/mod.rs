@@ -300,26 +300,58 @@ pub fn model_from_bytes(bytes: &[u8], origin: &str) -> Result<FittedModel> {
     assemble_model(&header, mats, origin)
 }
 
-/// Write `model` to `path` in the `.rkc` format, creating parent
-/// directories as needed. The write is atomic (temp file + rename in
-/// the same directory): an interrupted save never destroys an existing
-/// good model at `path`, and a concurrent reader sees either the old
-/// file or the new one, never a torn write.
-pub fn save_model(model: &FittedModel, path: &str) -> Result<()> {
-    if let Some(parent) = std::path::Path::new(path).parent() {
-        if !parent.as_os_str().is_empty() {
-            std::fs::create_dir_all(parent).map_err(|e| {
-                RkcError::io(format!("creating model directory {}", parent.display()), e)
-            })?;
-        }
+/// Write `bytes` to `path` atomically **and durably**, creating parent
+/// directories as needed: temp file in the same directory → `fsync` the
+/// temp file → `rename` into place → best-effort `fsync` of the parent
+/// directory. An interrupted write never destroys an existing good file
+/// at `path` (a concurrent reader sees old bytes or new bytes, never a
+/// torn mix), and once this returns `Ok` the bytes survive a power cut
+/// — rename-without-fsync can leave a zero-length file after a crash.
+/// Shared by `.rkc` model saves and `.rkcs` stream checkpoints; the
+/// [`crate::fault::MODEL_IO_FSYNC`] failpoint fires between the data
+/// write and the fsync, the window a torn-write bug would hide in.
+pub fn write_durable(path: &str, bytes: &[u8]) -> Result<()> {
+    use std::io::Write as _;
+    let parent = std::path::Path::new(path)
+        .parent()
+        .filter(|p| !p.as_os_str().is_empty());
+    if let Some(parent) = parent {
+        std::fs::create_dir_all(parent).map_err(|e| {
+            RkcError::io(format!("creating directory {}", parent.display()), e)
+        })?;
     }
     let tmp = format!("{path}.tmp.{}", std::process::id());
-    std::fs::write(&tmp, model_to_bytes(model))
-        .map_err(|e| RkcError::io(format!("writing model {tmp}"), e))?;
+    let write_tmp = || -> Result<()> {
+        let mut f = std::fs::File::create(&tmp)
+            .map_err(|e| RkcError::io(format!("creating {tmp}"), e))?;
+        f.write_all(bytes).map_err(|e| RkcError::io(format!("writing {tmp}"), e))?;
+        crate::fault::trip(crate::fault::MODEL_IO_FSYNC)?;
+        f.sync_all().map_err(|e| RkcError::io(format!("fsyncing {tmp}"), e))
+    };
+    if let Err(e) = write_tmp() {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
     std::fs::rename(&tmp, path).map_err(|e| {
         let _ = std::fs::remove_file(&tmp);
         RkcError::io(format!("renaming {tmp} into place as {path}"), e)
-    })
+    })?;
+    // durability of the *name*: fsync the directory so the rename itself
+    // survives a crash. Best-effort — not every filesystem lets a
+    // directory handle sync, and the data above is already safe.
+    let dir = parent.map(|p| p.to_path_buf()).unwrap_or_else(|| ".".into());
+    if let Ok(d) = std::fs::File::open(&dir) {
+        let _ = d.sync_all();
+    }
+    Ok(())
+}
+
+/// Write `model` to `path` in the `.rkc` format via [`write_durable`]
+/// (atomic + fsynced — see there for the crash-safety contract).
+/// Failpoint site: [`crate::fault::MODEL_IO_WRITE`].
+pub fn save_model(model: &FittedModel, path: &str) -> Result<()> {
+    crate::fault::trip(crate::fault::MODEL_IO_WRITE)?;
+    write_durable(path, &model_to_bytes(model))
 }
 
 /// Read a `.rkc` model from `path`.
@@ -624,6 +656,7 @@ mod tests {
 
     #[test]
     fn save_load_file_roundtrip() {
+        let _g = crate::fault::test_guard(); // saves cross a failpoint site
         let model = fit(Method::OnePass);
         let path = std::env::temp_dir()
             .join(format!("rkc_model_io_{}.rkc", std::process::id()));
@@ -634,6 +667,34 @@ mod tests {
         let err = back.approx_error().unwrap();
         assert!(err.is_finite() && err < 1.0, "reloaded approx error {err}");
         std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn write_durable_is_atomic_under_injected_fsync_faults() {
+        let _g = crate::fault::test_guard();
+        let dir = std::env::temp_dir().join(format!("rkc_durable_{}", std::process::id()));
+        let path = dir.join("m.bin").to_str().unwrap().to_string();
+        write_durable(&path, b"generation-1").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"generation-1");
+        // a fault between write and fsync must abort the whole save:
+        // the previous file survives byte-for-byte, no temp litter
+        crate::fault::configure("model_io.fsync=io_error:1.0").unwrap();
+        let err = write_durable(&path, b"generation-2").unwrap_err();
+        assert!(err.is_transient(), "{err}");
+        crate::fault::clear();
+        assert_eq!(std::fs::read(&path).unwrap(), b"generation-1");
+        assert_eq!(
+            std::fs::read_dir(&dir).unwrap().count(),
+            1,
+            "failed write left a temp file behind"
+        );
+        // and save_model's own site aborts before any bytes move
+        crate::fault::configure("model_io.write=io_error:1.0").unwrap();
+        let err = save_model(&fit(Method::OnePass), &path).unwrap_err();
+        assert!(err.is_transient(), "{err}");
+        crate::fault::clear();
+        assert_eq!(std::fs::read(&path).unwrap(), b"generation-1");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -50,6 +50,23 @@ impl Pcg64 {
     fn next_u64_internal(&mut self) -> u64 {
         ((self.next() as u64) << 32) | self.next() as u64
     }
+
+    /// The raw `(state, increment)` pair — everything this generator
+    /// is. Exists for checkpointing: a stream's exact position survives
+    /// a save/restore round-trip through [`from_parts`](Self::from_parts)
+    /// even when the number of values consumed so far is unknowable
+    /// (rejection sampling in [`below`](crate::rng::Rng::below) draws a
+    /// variable count).
+    pub fn state_parts(&self) -> (u64, u64) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator from [`state_parts`](Self::state_parts)
+    /// output. The restored generator emits exactly the sequence the
+    /// saved one would have emitted next.
+    pub fn from_parts(state: u64, inc: u64) -> Self {
+        Pcg64 { state, inc }
+    }
 }
 
 #[cfg(test)]
@@ -63,6 +80,19 @@ mod tests {
         let mut b = root.split(2);
         let same = (0..256).filter(|_| a.next() == b.next()).count();
         assert!(same < 8, "split streams correlate: {same}/256 equal");
+    }
+
+    #[test]
+    fn state_parts_roundtrip_resumes_the_exact_sequence() {
+        let mut rng = Pcg64::seed_stream(7, 0x57cea);
+        for _ in 0..17 {
+            rng.next();
+        }
+        let (state, inc) = rng.state_parts();
+        let mut restored = Pcg64::from_parts(state, inc);
+        for _ in 0..64 {
+            assert_eq!(restored.next(), rng.next());
+        }
     }
 
     #[test]

@@ -396,6 +396,14 @@ pub fn serve_http_registry(
                         continue;
                     }
                 };
+                // chaos hook: a firing io_error here models a flaky NIC —
+                // the accepted connection drops unserved (the client sees
+                // a reset, not a response; chaos runs account for it on
+                // the client side and via rkc_fault_trips_total)
+                if crate::fault::trip(crate::fault::HTTP_ACCEPT).is_err() {
+                    drop(stream);
+                    continue;
+                }
                 if let Err(mut stream) = q.try_push(stream) {
                     // overload is exactly when operators watch the
                     // counters — sheds get their own counter (NOT
@@ -715,11 +723,28 @@ fn put_model(registry: &ModelRegistry, name: &str, body: &[u8]) -> (u16, String)
                 ("models", Json::Num(registry.len() as f64)),
             ]),
         ),
-        // a missing file is the caller naming something that isn't
-        // there; everything else (corrupt model, bad name) is a bad
-        // request
-        Err(RkcError::Io { context, source }) => (404, error_json(&format!("{context}: {source}"))),
-        Err(e) => (400, error_json(&e.to_string())),
+        // any failure past this point left the registry untouched: the
+        // previous model under this name (if any) keeps serving
+        Err(e) => match e {
+            // still transient after the registry's retry budget — the
+            // environment failed an intended swap, so the name is
+            // quarantined until a load succeeds (/healthz: degraded)
+            // and the caller is told to try again later, not to fix
+            // the request
+            ref e if e.is_transient() => {
+                registry.quarantine(name, format!("{path}: {e}"));
+                (503, error_json(&e.to_string()))
+            }
+            // a missing file is the caller naming something that
+            // isn't there; everything else (corrupt model, bad name)
+            // is a bad request — neither degrades the fleet, so
+            // neither quarantines (one typo'd PUT must not flip
+            // /healthz to degraded until the next successful load)
+            RkcError::Io { context, source } => {
+                (404, error_json(&format!("{context}: {source}")))
+            }
+            e => (400, error_json(&e.to_string())),
+        },
     }
 }
 
@@ -746,6 +771,16 @@ fn health(registry: &ModelRegistry, frontend: &FrontendCounters) -> (u16, String
             );
         }
     }
+    // models that failed to load or hot-swap, with their failures —
+    // non-empty means the fleet is serving but incomplete: status
+    // `degraded`, still 200 (the default model answers; a 503 would
+    // pull a working server out of rotation)
+    let quarantined: BTreeMap<String, Json> = registry
+        .quarantined()
+        .into_iter()
+        .map(|(n, reason)| (n, Json::Str(reason)))
+        .collect();
+    let degraded = !quarantined.is_empty();
     let mut fields: Vec<(&str, Json)> = vec![
         ("models", Json::Num(registry.len() as f64)),
         ("connections", Json::Num(fe.connections as f64)),
@@ -754,6 +789,7 @@ fn health(registry: &ModelRegistry, frontend: &FrontendCounters) -> (u16, String
         ("shed", Json::Num(fe.shed as f64)),
         ("frontend_uptime_s", Json::Num(fe.uptime_s)),
         ("latency_ms", Json::Obj(latency)),
+        ("quarantined", Json::Obj(quarantined)),
     ];
     let Some((name, handle)) = registry.default_model() else {
         fields.push(("status", Json::Str("empty".into())));
@@ -767,7 +803,13 @@ fn health(registry: &ModelRegistry, frontend: &FrontendCounters) -> (u16, String
         Some(p) => Json::Num(p as f64),
         None => Json::Null,
     };
-    let status = if closed { "shutdown" } else { "ok" };
+    let status = if closed {
+        "shutdown"
+    } else if degraded {
+        "degraded"
+    } else {
+        "ok"
+    };
     fields.extend([
         ("status", Json::Str(status.into())),
         ("default", Json::Str(name)),
@@ -881,7 +923,8 @@ fn metrics_text(registry: &ModelRegistry, frontend: &FrontendCounters) -> String
 fn error_response(e: &RkcError) -> (u16, String) {
     let status = match e {
         RkcError::InvalidConfig(_) | RkcError::Parse { .. } | RkcError::Unsupported(_) => 400,
-        RkcError::Backend(_) => 503,
+        // unavailable-now, not broken: retry-later semantics
+        RkcError::Backend(_) | RkcError::Transient { .. } => 503,
         _ => 500,
     };
     (status, error_json(&e.to_string()))
@@ -1213,6 +1256,7 @@ mod tests {
         assert_eq!(error_response(&RkcError::invalid_config("x")).0, 400);
         assert_eq!(error_response(&RkcError::unsupported("x")).0, 400);
         assert_eq!(error_response(&RkcError::backend("down")).0, 503);
+        assert_eq!(error_response(&RkcError::transient("injected fault")).0, 503);
         assert_eq!(error_response(&RkcError::dataset("x")).0, 500);
     }
 

@@ -22,11 +22,20 @@
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, RwLock};
+use std::time::Duration;
 
 use crate::api::FittedModel;
 use crate::error::{Result, RkcError};
 
 use super::{ModelServer, ServeOpts, ServeStats, ServerHandle};
+
+/// How many times [`ModelRegistry::load`] attempts a `.rkc` read whose
+/// failures classify as transient ([`RkcError::is_transient`]) before
+/// giving up, and the backoff before the first retry (doubling each
+/// attempt: 10ms, 20ms, 40ms — bounded, so a hard failure still
+/// surfaces in well under a second).
+const LOAD_ATTEMPTS: u32 = 4;
+const LOAD_BACKOFF: Duration = Duration::from_millis(10);
 
 /// One registered model: the request-submission handle plus, for models
 /// the registry loaded itself, ownership of the server (dropping it
@@ -50,6 +59,12 @@ struct Inner {
     /// monotone per name, surviving replaces and unloads, so generations
     /// observed by clients never repeat or go backwards
     generations: BTreeMap<String, u64>,
+    /// models that failed to load/replace, name → last failure. A
+    /// quarantined name keeps whatever generation was serving before
+    /// (or nothing, for startup failures); `/healthz` reports the
+    /// process `degraded` while this is non-empty. A later successful
+    /// load under the name clears its entry.
+    quarantined: BTreeMap<String, String>,
 }
 
 /// A point-in-time description of one registered model (the
@@ -122,6 +137,7 @@ impl ModelRegistry {
                 models: BTreeMap::new(),
                 default: None,
                 generations: BTreeMap::new(),
+                quarantined: BTreeMap::new(),
             }),
             opts,
         }
@@ -202,6 +218,7 @@ impl ModelRegistry {
             if inner.default.is_none() {
                 inner.default = Some(name.to_string());
             }
+            inner.quarantined.remove(name);
         }
         // dropping the displaced owned server joins its batch worker —
         // outside the lock so other routes keep flowing
@@ -226,11 +243,70 @@ impl ModelRegistry {
 
     /// Load a `.rkc` file and register it under `name` (the runtime
     /// `PUT /models/{name}` path). Replaces any model already there.
+    ///
+    /// Transient read failures ([`RkcError::is_transient`] — an
+    /// injected fault, a momentarily unavailable file) are retried with
+    /// bounded exponential backoff before surfacing; hard failures
+    /// (corrupt file, bad magic, version skew) surface immediately. A
+    /// failure at any stage leaves the registry exactly as it was: the
+    /// previous model under `name` (if any) keeps serving. Failpoint
+    /// site: [`crate::fault::SERVE_LOAD`], inside the retry loop.
     pub fn load(&self, name: &str, path: &str) -> Result<()> {
         Self::check_name(name)?;
-        let model = FittedModel::load(path)?;
+        let model = Self::read_model_with_retry(path)?;
         let server = ModelServer::named(name, model, self.opts)?;
         self.insert_entry(name, server.handle(), Some(Arc::new(server)), Some(path.to_string()))
+    }
+
+    fn read_model_with_retry(path: &str) -> Result<FittedModel> {
+        let mut delay = LOAD_BACKOFF;
+        for attempt in 1..=LOAD_ATTEMPTS {
+            let res = crate::fault::trip(crate::fault::SERVE_LOAD)
+                .and_then(|()| FittedModel::load(path));
+            match res {
+                Ok(model) => return Ok(model),
+                Err(e) if e.is_transient() && attempt < LOAD_ATTEMPTS => {
+                    crate::obs::registry()
+                        .counter(
+                            "rkc_serve_load_retries_total",
+                            "Transient model-load failures retried with backoff.",
+                            &[],
+                        )
+                        .inc();
+                    std::thread::sleep(delay);
+                    delay *= 2;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        unreachable!("the final attempt always returns")
+    }
+
+    /// Record that the model under `name` failed to load or replace —
+    /// the previous generation (if any) keeps serving, `/healthz`
+    /// reports `degraded`, and `rkc_models_quarantined_total` counts
+    /// the event. Cleared by the next successful load/insert/publish
+    /// under the same name.
+    pub fn quarantine(&self, name: &str, reason: impl Into<String>) {
+        let reason = reason.into();
+        {
+            let mut inner = self.inner.write().expect("registry lock poisoned");
+            inner.quarantined.insert(name.to_string(), reason);
+        }
+        crate::obs::registry()
+            .counter(
+                "rkc_models_quarantined_total",
+                "Models quarantined after a failed load or hot-swap.",
+                &[],
+            )
+            .inc();
+    }
+
+    /// Names currently quarantined, with the failure that put each
+    /// there (ascending by name — the `/healthz` `degraded` listing).
+    pub fn quarantined(&self) -> Vec<(String, String)> {
+        let inner = self.inner.read().expect("registry lock poisoned");
+        inner.quarantined.iter().map(|(n, r)| (n.clone(), r.clone())).collect()
     }
 
     /// Load every `*.rkc` file in `dir` (name = file stem, ascending, so
@@ -238,6 +314,12 @@ impl ModelRegistry {
     /// names loaded. A directory with no `.rkc` files is a config error —
     /// a registry that can never answer anything is a misconfiguration
     /// worth failing loudly at startup.
+    ///
+    /// Individual files that fail to load — corrupt, truncated,
+    /// unreadable, version skew, unusable name — do **not** abort the
+    /// startup: each is [quarantined](Self::quarantine) (surfacing in
+    /// `/healthz` as `degraded`) and the rest of the fleet loads. Only
+    /// a directory where *nothing* loads is an error.
     pub fn load_dir(&self, dir: &str) -> Result<Vec<String>> {
         let entries = std::fs::read_dir(dir)
             .map_err(|e| RkcError::io(format!("reading model directory {dir}"), e))?;
@@ -248,25 +330,34 @@ impl ModelRegistry {
             if path.extension().and_then(|e| e.to_str()) != Some("rkc") {
                 continue;
             }
-            let stem = path
-                .file_stem()
-                .and_then(|s| s.to_str())
-                .ok_or_else(|| RkcError::invalid_config(format!("unusable model name {path:?}")))?
-                .to_string();
-            let path = path
-                .to_str()
-                .ok_or_else(|| RkcError::invalid_config(format!("non-UTF-8 path {path:?}")))?
-                .to_string();
+            let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("").to_string();
+            let path = path.to_string_lossy().into_owned();
             paths.push((stem, path));
         }
         if paths.is_empty() {
             return Err(RkcError::invalid_config(format!("no .rkc models found in {dir}")));
         }
         paths.sort();
-        let mut names = Vec::with_capacity(paths.len());
+        let total = paths.len();
+        let mut names = Vec::with_capacity(total);
         for (name, path) in paths {
-            self.load(&name, &path)?;
-            names.push(name);
+            let res = if valid_name(&name) {
+                self.load(&name, &path)
+            } else {
+                Err(RkcError::invalid_config(format!("unusable model name for {path}")))
+            };
+            match res {
+                Ok(()) => names.push(name),
+                Err(e) => {
+                    let display = if name.is_empty() { path.clone() } else { name };
+                    self.quarantine(&display, format!("{path}: {e}"));
+                }
+            }
+        }
+        if names.is_empty() {
+            return Err(RkcError::invalid_config(format!(
+                "no loadable .rkc models in {dir}: all {total} quarantined"
+            )));
         }
         Ok(names)
     }
@@ -288,6 +379,9 @@ impl ModelRegistry {
             if inner.default.is_none() {
                 inner.default = Some(name.to_string());
             }
+            // a model serving under this name supersedes any earlier
+            // failure record
+            inner.quarantined.remove(name);
         }
         // dropping a displaced owned server joins its batch worker —
         // do that outside the lock so other routes keep flowing
@@ -295,22 +389,29 @@ impl ModelRegistry {
         Ok(())
     }
 
-    /// Unload `name`, returning whether it was present. Graceful: its
-    /// queue closes, in-flight requests still get replies, and the batch
-    /// worker is joined before this returns. Unloading the default
-    /// promotes the alphabetically-first survivor.
+    /// Unload `name`, returning whether it was present (serving, or
+    /// merely quarantined — unloading also clears the quarantine entry,
+    /// so a name nobody intends to serve cannot hold `/healthz`
+    /// degraded). Graceful: its queue closes, in-flight requests still
+    /// get replies, and the batch worker is joined before this returns.
+    /// Unloading the default promotes the alphabetically-first survivor.
     pub fn unload(&self, name: &str) -> bool {
         let removed;
+        let was_quarantined;
         {
             let mut inner = self.inner.write().expect("registry lock poisoned");
             removed = inner.models.remove(name);
+            // dropping a name withdraws the intent to serve it — a
+            // quarantine entry must not hold /healthz degraded for a
+            // model nobody expects to exist anymore
+            was_quarantined = inner.quarantined.remove(name).is_some();
             if removed.is_some() && inner.default.as_deref() == Some(name) {
                 inner.default = inner.models.keys().next().cloned();
             }
         }
         // the owned server's Drop (queue close + worker join) runs here,
         // outside the lock
-        removed.is_some()
+        removed.is_some() || was_quarantined
     }
 
     /// The submission handle for `name`, if registered.
@@ -482,6 +583,78 @@ mod tests {
         assert_eq!(reg.publish("other", fit(4, 96)).unwrap(), 1);
         reg.insert("batch", fit(5, 96)).unwrap();
         assert_eq!(reg.info("batch").unwrap().generation, 0);
+    }
+
+    #[test]
+    fn load_dir_quarantines_corrupt_files_and_serves_the_rest() {
+        let _g = crate::fault::test_guard(); // saves cross a failpoint site
+        let dir = std::env::temp_dir().join(format!("rkc_reg_quar_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let dir_str = dir.to_str().unwrap().to_string();
+        fit(9, 96).save(&format!("{dir_str}/good.rkc")).unwrap();
+        std::fs::write(format!("{dir_str}/garbage.rkc"), b"not a model at all").unwrap();
+        let mut truncated = crate::model_io::model_to_bytes(&fit(10, 96));
+        truncated.truncate(truncated.len() / 2);
+        std::fs::write(format!("{dir_str}/torn.rkc"), &truncated).unwrap();
+
+        let reg = ModelRegistry::new(ServeOpts::default());
+        let names = reg.load_dir(&dir_str).unwrap();
+        assert_eq!(names, vec!["good".to_string()], "only the intact model loads");
+        assert!(reg.get("good").is_some());
+        let quarantined = reg.quarantined();
+        let q_names: Vec<&str> = quarantined.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(q_names, vec!["garbage", "torn"]);
+        for (_, reason) in &quarantined {
+            assert!(reason.contains(".rkc"), "reason names the file: {reason}");
+        }
+        // a later successful load under a quarantined name clears it
+        reg.load("garbage", &format!("{dir_str}/good.rkc")).unwrap();
+        assert_eq!(reg.quarantined().len(), 1);
+
+        // a directory where nothing loads is still a startup error
+        let all_bad = ModelRegistry::new(ServeOpts::default());
+        std::fs::remove_file(format!("{dir_str}/good.rkc")).unwrap();
+        let err = all_bad.load_dir(&dir_str).unwrap_err();
+        assert!(err.to_string().contains("all 2 quarantined"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn load_retries_transient_faults_and_keeps_previous_model_on_failure() {
+        let _g = crate::fault::test_guard();
+        let dir = std::env::temp_dir().join(format!("rkc_reg_retry_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = format!("{}/m.rkc", dir.to_str().unwrap());
+        let old = fit(11, 96);
+        let query = data::cross_lines(&mut Pcg64::seed(55), 8).x;
+        let want_old = old.predict(&query).unwrap();
+        old.save(&path).unwrap();
+
+        let reg = ModelRegistry::new(ServeOpts::default());
+        reg.load("m", &path).unwrap();
+
+        // a fault firing on every attempt exhausts the retry budget …
+        crate::fault::configure("serve.load=io_error:1.0").unwrap();
+        let err = reg.load("m", &path).unwrap_err();
+        assert!(err.is_transient(), "{err}");
+        crate::fault::clear();
+        // … and the previous generation kept serving throughout
+        assert_eq!(reg.get("m").unwrap().predict(query.clone()).unwrap(), want_old);
+
+        // the deterministic per-site stream with p=0.5 recovers within
+        // the backoff budget: the first spec draw that passes lets the
+        // load through (seeded stream ⇒ reproducible, no flakiness)
+        crate::fault::configure("serve.load=io_error:0.5").unwrap();
+        let mut recovered = false;
+        for _ in 0..8 {
+            if reg.load("m", &path).is_ok() {
+                recovered = true;
+                break;
+            }
+        }
+        crate::fault::clear();
+        assert!(recovered, "p=0.5 must let a retried load through within 8 calls");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

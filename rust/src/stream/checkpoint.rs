@@ -1,0 +1,832 @@
+//! Durable checkpoint/resume for [`StreamClusterer`] — the `.rkcs`
+//! stream-state format.
+//!
+//! The paper's one-pass property is also its fragility: every kernel
+//! entry is touched exactly once, so a crash mid-stream loses a sketch
+//! that **cannot be recomputed from replay** without re-evaluating the
+//! kernel. Durability of the O(n·(p + r′)) state is therefore the whole
+//! recovery story — and that state is small and well-defined: the
+//! sketch rows `W`, the SRHT operator, the buffered points, and the
+//! PRNG positions. This module serializes exactly that surface.
+//!
+//! # Byte-level format (version 1)
+//!
+//! Identical framing discipline to the `.rkc` model format
+//! ([`crate::model_io`]): everything little-endian, integrity checked
+//! before version negotiation.
+//!
+//! ```text
+//! offset        size  contents
+//! 0             8     magic, the ASCII bytes "RKCSTATE"
+//! 8             4     u32 format version (currently 1)
+//! 12            4     u32 header length H in bytes
+//! 16            H     UTF-8 JSON header (see below)
+//! 16+H          8·Σ   payload: for each header `sections` entry, in
+//!                     order, `len` f64 values
+//! end−8         8     u64 FNV-1a checksum of every preceding byte
+//! ```
+//!
+//! The header carries the full builder configuration (so `resume` needs
+//! no arguments but the path) plus the scalar runtime state. `u64`
+//! values that may exceed 2⁵³ (the master seed, the SRHT PRNG state,
+//! `f64` bit patterns) travel as 16-hex-digit strings — JSON numbers
+//! are `f64` and would silently round them.
+//!
+//! Sections (flat f64 vectors, present only when non-empty): `buf`
+//! (n·p point-major points), `w` (n·r′ sketch rows — the fold
+//! accumulator), `srht_d` / `srht_idx` (the operator), `prev_labels`
+//! (the last refresh's assignment, for the warm start).
+//!
+//! # Resume determinism
+//!
+//! [`StreamClusterer::resume`] restores *everything* future computation
+//! reads: the SRHT PRNG is restored from its raw `(state, inc)` pair
+//! (its consumption count per redraw is unknowable — rejection sampling
+//! draws a variable number of words), `refreshes` keeps the cold-start
+//! K-means sub-stream aligned, and `prev_labels` keeps warm refreshes
+//! warm. The contract, enforced by the kill-and-resume test: checkpoint
+//! after chunk i, resume in a fresh process, ingest chunks i+1.., and
+//! the final [`refresh`](StreamClusterer::refresh) model is
+//! **bit-identical** to an uninterrupted run over the same chunk
+//! sequence (wall-clock timings aside — those measure the run, not the
+//! model). Not covered: the checkpoint stores state, not history, so
+//! resuming and then ingesting a *different* chunk sequence is a
+//! different stream, exactly as it would be uninterrupted.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use crate::error::{Result, RkcError};
+use crate::kernels::Kernel;
+use crate::obs;
+use crate::rng::Pcg64;
+use crate::sketch::Srht;
+use crate::util::Json;
+
+use super::{RefreshPolicy, StreamClusterer};
+
+/// The 8 magic bytes opening every `.rkcs` stream-state file.
+pub const STATE_MAGIC: [u8; 8] = *b"RKCSTATE";
+
+/// Newest `.rkcs` version this build writes (and the newest it reads).
+pub const STATE_VERSION: u32 = 1;
+
+/// magic + version + header length before the header itself
+const FIXED_PREFIX: usize = 8 + 4 + 4;
+
+fn hex64(v: u64) -> Json {
+    Json::Str(format!("{v:016x}"))
+}
+
+fn uint(v: usize) -> Json {
+    Json::Num(v as f64)
+}
+
+impl StreamClusterer {
+    /// Serialize the full stream state into the `.rkcs` byte format.
+    pub fn state_to_bytes(&self) -> Vec<u8> {
+        let rp = self.sketch_width();
+        let p = self.p.unwrap_or(0);
+
+        // borrow the O(n·(p+r')) state; only the small index/label
+        // casts materialize temporaries (a clone of buf/w would double
+        // peak memory for the duration of every checkpoint)
+        let idx_f: Vec<f64>;
+        let labels_f: Vec<f64>;
+        let mut sections: Vec<(&'static str, &[f64])> = Vec::new();
+        if !self.buf.is_empty() {
+            sections.push(("buf", &self.buf));
+        }
+        if !self.w.is_empty() {
+            sections.push(("w", &self.w));
+        }
+        if let Some(srht) = &self.srht {
+            sections.push(("srht_d", &srht.d));
+            idx_f = srht.idx.iter().map(|&i| i as f64).collect();
+            sections.push(("srht_idx", &idx_f));
+        }
+        if let Some(labels) = &self.prev_labels {
+            labels_f = labels.iter().map(|&l| l as f64).collect();
+            sections.push(("prev_labels", &labels_f));
+        }
+
+        let mut header = BTreeMap::new();
+        header.insert("format".into(), Json::Str("rkc-stream-state".into()));
+        header.insert("kernel".into(), Json::Str(self.kernel.to_string()));
+        header.insert("k".into(), uint(self.k));
+        header.insert("rank".into(), uint(self.rank));
+        header.insert("oversample".into(), uint(self.oversample));
+        header.insert("batch".into(), uint(self.batch));
+        header.insert("threads".into(), uint(self.threads));
+        header.insert("kmeans_restarts".into(), uint(self.kmeans_restarts));
+        header.insert("kmeans_iters".into(), uint(self.kmeans_iters));
+        // exact bit pattern: a JSON decimal would round the tolerance
+        // and warm/cold refits after resume would stop early differently
+        header.insert("kmeans_tol_bits".into(), hex64(self.kmeans_tol.to_bits()));
+        header.insert("seed".into(), hex64(self.seed));
+        header.insert("capacity_hint".into(), uint(self.capacity_hint));
+        if let Some(points) = self.policy.points {
+            header.insert("policy_points".into(), uint(points));
+        }
+        if let Some(interval) = self.policy.interval {
+            header.insert(
+                "policy_interval_s".into(),
+                Json::finite_num(interval.as_secs_f64()),
+            );
+        }
+        header.insert("p".into(), uint(p));
+        header.insert("n".into(), uint(self.n));
+        header.insert("rp".into(), uint(rp));
+        header.insert("refreshes".into(), hex64(self.refreshes));
+        header.insert("points_since_refresh".into(), uint(self.points_since_refresh));
+        if let Some(srht) = &self.srht {
+            header.insert("srht_n".into(), uint(srht.n));
+            let (state, inc) = self
+                .srht_rng
+                .as_ref()
+                .expect("a drawn operator implies an initialized SRHT stream")
+                .state_parts();
+            header.insert("srht_rng_state".into(), hex64(state));
+            header.insert("srht_rng_inc".into(), hex64(inc));
+        }
+        header.insert(
+            "sections".into(),
+            Json::Arr(
+                sections
+                    .iter()
+                    .map(|(name, data)| {
+                        Json::Obj(BTreeMap::from([
+                            ("name".to_string(), Json::Str((*name).into())),
+                            ("len".to_string(), uint(data.len())),
+                        ]))
+                    })
+                    .collect(),
+            ),
+        );
+
+        let header_bytes = Json::Obj(header).to_string().into_bytes();
+        let payload_len: usize = sections.iter().map(|(_, d)| 8 * d.len()).sum();
+        let mut out = Vec::with_capacity(FIXED_PREFIX + header_bytes.len() + payload_len + 8);
+        out.extend_from_slice(&STATE_MAGIC);
+        out.extend_from_slice(&STATE_VERSION.to_le_bytes());
+        out.extend_from_slice(&(header_bytes.len() as u32).to_le_bytes());
+        out.extend_from_slice(&header_bytes);
+        for (_, data) in &sections {
+            for v in data.iter() {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let ck = crate::model_io::checksum(&out);
+        out.extend_from_slice(&ck.to_le_bytes());
+        out
+    }
+
+    /// Deserialize a `.rkcs` byte buffer into a ready-to-continue
+    /// clusterer. `origin` names the source in error messages. Every
+    /// way a file can be wrong — truncation, bit flips, inconsistent
+    /// shapes, out-of-range indices — is a typed error, never a panic.
+    pub fn state_from_bytes(bytes: &[u8], origin: &str) -> Result<StreamClusterer> {
+        let bad = |d: String| RkcError::model(origin, d);
+        if bytes.len() < FIXED_PREFIX + 8 {
+            return Err(bad(format!(
+                "truncated: {} bytes is shorter than the fixed framing",
+                bytes.len()
+            )));
+        }
+        if bytes[..8] != STATE_MAGIC {
+            return Err(bad("bad magic (not an .rkcs stream-state file)".into()));
+        }
+        // integrity before version negotiation, same rationale as .rkc:
+        // the outer framing is invariant across versions, so a checksum
+        // mismatch always means corruption, never a newer format
+        let payload_end = bytes.len() - 8;
+        let stored = u64::from_le_bytes(bytes[payload_end..].try_into().unwrap());
+        let computed = crate::model_io::checksum(&bytes[..payload_end]);
+        if stored != computed {
+            return Err(bad(format!(
+                "checksum mismatch (stored {stored:#018x}, computed {computed:#018x}); \
+                 the file is corrupt"
+            )));
+        }
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        if version > STATE_VERSION {
+            return Err(RkcError::ModelVersion { found: version, supported: STATE_VERSION });
+        }
+        if version == 0 {
+            return Err(bad("format version 0 is invalid".into()));
+        }
+        let hlen = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+        if FIXED_PREFIX + hlen > payload_end {
+            return Err(bad(format!("truncated: header length {hlen} exceeds the file")));
+        }
+        let header_text = std::str::from_utf8(&bytes[FIXED_PREFIX..FIXED_PREFIX + hlen])
+            .map_err(|_| bad("header is not UTF-8".into()))?;
+        let header = Json::parse(header_text)
+            .map_err(|e| bad(format!("header is not valid JSON: {e}")))?;
+        if header.get("format").and_then(Json::as_str) != Some("rkc-stream-state") {
+            return Err(bad("header 'format' field is not 'rkc-stream-state'".into()));
+        }
+
+        let uint_of = |key: &str| {
+            header
+                .get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| bad(format!("header is missing integer field '{key}'")))
+        };
+        let hex_of = |key: &str| {
+            header
+                .get(key)
+                .and_then(Json::as_str)
+                .and_then(|s| u64::from_str_radix(s, 16).ok())
+                .ok_or_else(|| bad(format!("header field '{key}' is not a 16-hex u64")))
+        };
+
+        // payload sections (flat f64 vectors, in header order)
+        let secs = header
+            .get("sections")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| bad("header is missing the 'sections' array".into()))?;
+        let mut vecs: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+        let mut off = FIXED_PREFIX + hlen;
+        for s in secs {
+            let name = s.str_field("name").map_err(|e| bad(e.to_string()))?.to_string();
+            let len = s.usize_field("len").map_err(|e| bad(e.to_string()))?;
+            let n_bytes = len
+                .checked_mul(8)
+                .ok_or_else(|| bad(format!("section '{name}' length {len} overflows")))?;
+            let end = off.checked_add(n_bytes).filter(|&e| e <= payload_end).ok_or_else(
+                || {
+                    bad(format!(
+                        "truncated payload: section '{name}' ({len} values) runs past \
+                         the end of the file"
+                    ))
+                },
+            )?;
+            let data: Vec<f64> = bytes[off..end]
+                .chunks_exact(8)
+                .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            off = end;
+            if vecs.insert(name.clone(), data).is_some() {
+                return Err(bad(format!("duplicate section '{name}'")));
+            }
+        }
+        if off != payload_end {
+            return Err(bad(format!(
+                "payload size mismatch: {} trailing bytes after the last section",
+                payload_end - off
+            )));
+        }
+
+        // configuration
+        let kernel_spec = header
+            .get("kernel")
+            .and_then(Json::as_str)
+            .ok_or_else(|| bad("header is missing string field 'kernel'".into()))?;
+        let kernel: Kernel = kernel_spec
+            .parse()
+            .map_err(|_| bad(format!("unknown kernel spec '{kernel_spec}'")))?;
+        let k = uint_of("k")?;
+        let rank = uint_of("rank")?;
+        let oversample = uint_of("oversample")?;
+        if k == 0 || rank == 0 {
+            return Err(bad("k and rank must both be at least 1".into()));
+        }
+        let rp = uint_of("rp")?;
+        if rank.checked_add(oversample) != Some(rp) {
+            return Err(bad(format!(
+                "sketch width rp={rp} disagrees with rank {rank} + oversample {oversample}"
+            )));
+        }
+        let batch = uint_of("batch")?;
+        if batch == 0 {
+            return Err(bad("batch must be at least 1".into()));
+        }
+        let kmeans_restarts = uint_of("kmeans_restarts")?;
+        let kmeans_iters = uint_of("kmeans_iters")?;
+        let kmeans_tol = f64::from_bits(hex_of("kmeans_tol_bits")?);
+        let seed = hex_of("seed")?;
+        let policy = RefreshPolicy {
+            points: match header.get("policy_points") {
+                Some(v) => Some(v.as_usize().ok_or_else(|| {
+                    bad("header field 'policy_points' is not an integer".into())
+                })?),
+                None => None,
+            },
+            interval: match header.get("policy_interval_s").and_then(Json::as_f64) {
+                Some(s) => Some(Duration::try_from_secs_f64(s).map_err(|_| {
+                    bad(format!("policy interval {s}s is not a valid duration"))
+                })?),
+                None => None,
+            },
+        };
+
+        // runtime state
+        let p = uint_of("p")?;
+        let n = uint_of("n")?;
+        if n > 0 && p == 0 {
+            return Err(bad(format!("{n} points buffered with dimension p=0")));
+        }
+        // header-supplied sizes are untrusted even after the checksum
+        // (a re-sealed file is checksum-valid): checked arithmetic, so
+        // an absurd n/p is a typed error, never an overflow panic
+        let np = n
+            .checked_mul(p)
+            .ok_or_else(|| bad(format!("header n={n} times p={p} overflows")))?;
+        let buf = vecs.remove("buf").unwrap_or_default();
+        if buf.len() != np {
+            return Err(bad(format!(
+                "buf section holds {} values but n·p = {n}·{p} = {np}",
+                buf.len(),
+            )));
+        }
+        let nrp = n
+            .checked_mul(rp)
+            .ok_or_else(|| bad(format!("header n={n} times r'={rp} overflows")))?;
+        let w = vecs.remove("w").unwrap_or_default();
+        if w.len() != nrp {
+            return Err(bad(format!(
+                "w section holds {} values but n·r' = {n}·{rp} = {nrp}",
+                w.len(),
+            )));
+        }
+        let srht = match (vecs.remove("srht_d"), vecs.remove("srht_idx")) {
+            (Some(d), Some(idx_f)) => {
+                let cap = uint_of("srht_n")?;
+                if !cap.is_power_of_two() || cap < n.max(rp).max(1) {
+                    return Err(bad(format!(
+                        "operator capacity {cap} is not a power of two covering \
+                         n={n} and r'={rp}"
+                    )));
+                }
+                if d.len() != cap {
+                    return Err(bad(format!(
+                        "srht_d holds {} signs but the operator capacity is {cap}",
+                        d.len()
+                    )));
+                }
+                if d.iter().any(|&s| s != 1.0 && s != -1.0) {
+                    return Err(bad("srht_d carries a non-Rademacher sign".into()));
+                }
+                if idx_f.len() != rp {
+                    return Err(bad(format!(
+                        "srht_idx holds {} indices but r' = {rp}",
+                        idx_f.len()
+                    )));
+                }
+                let mut idx = Vec::with_capacity(rp);
+                for &v in &idx_f {
+                    if !(v.is_finite() && v >= 0.0 && v.fract() == 0.0 && (v as usize) < cap) {
+                        return Err(bad(format!(
+                            "srht_idx value {v} is not an index below capacity {cap}"
+                        )));
+                    }
+                    idx.push(v as usize);
+                }
+                Some(Srht { n: cap, d, idx })
+            }
+            (None, None) => {
+                if n > 0 {
+                    return Err(bad(format!(
+                        "{n} points buffered but no operator sections present"
+                    )));
+                }
+                None
+            }
+            _ => {
+                return Err(bad(
+                    "'srht_d' and 'srht_idx' sections must appear together".into(),
+                ))
+            }
+        };
+        let srht_rng = if srht.is_some() {
+            Some(Pcg64::from_parts(hex_of("srht_rng_state")?, hex_of("srht_rng_inc")?))
+        } else {
+            None
+        };
+        let prev_labels = match vecs.remove("prev_labels") {
+            Some(lf) => {
+                if lf.len() > n {
+                    return Err(bad(format!(
+                        "prev_labels holds {} labels but only {n} points are buffered",
+                        lf.len()
+                    )));
+                }
+                let mut labels = Vec::with_capacity(lf.len());
+                for &v in &lf {
+                    if !(v.is_finite() && v >= 0.0 && v.fract() == 0.0 && (v as usize) < k) {
+                        return Err(bad(format!(
+                            "prev_labels value {v} is not a cluster index below k={k}"
+                        )));
+                    }
+                    labels.push(v as usize);
+                }
+                Some(labels)
+            }
+            None => None,
+        };
+        if !vecs.is_empty() {
+            let names: Vec<&str> = vecs.keys().map(String::as_str).collect();
+            return Err(bad(format!("unknown sections {names:?}")));
+        }
+        let refreshes = hex_of("refreshes")?;
+        let points_since_refresh = uint_of("points_since_refresh")?;
+
+        let mut sc = StreamClusterer::new(k)
+            .kernel(kernel)
+            .rank(rank)
+            .oversample(oversample)
+            .batch(batch)
+            .seed(seed)
+            .threads(uint_of("threads")?)
+            .kmeans_restarts(kmeans_restarts)
+            .kmeans_iters(kmeans_iters)
+            .kmeans_tol(kmeans_tol);
+        sc.policy = policy;
+        sc.capacity_hint = uint_of("capacity_hint")?;
+        // the hint feeds next_power_of_two at the next operator draw —
+        // an absurd value must fail here, not panic there
+        if sc.capacity_hint > 1 << 48 {
+            return Err(bad(format!(
+                "capacity hint {} cannot describe a real stream",
+                sc.capacity_hint
+            )));
+        }
+        sc.p = if p == 0 { None } else { Some(p) };
+        sc.buf = buf;
+        sc.n = n;
+        sc.srht = srht;
+        sc.srht_rng = srht_rng;
+        sc.w = w;
+        sc.prev_labels = prev_labels;
+        sc.refreshes = refreshes;
+        sc.points_since_refresh = points_since_refresh;
+        sc.last_refresh = Instant::now();
+        sc.fold_time = Duration::ZERO;
+        Ok(sc)
+    }
+
+    /// Write the stream state to `path` atomically and durably
+    /// (temp file + fsync + rename + parent-directory fsync, via
+    /// [`crate::model_io::write_durable`]): a crash at any instant
+    /// leaves either the previous checkpoint or this one, never a torn
+    /// file. Failpoint site: [`crate::fault::STREAM_CHECKPOINT`].
+    pub fn checkpoint(&self, path: &str) -> Result<()> {
+        crate::fault::trip(crate::fault::STREAM_CHECKPOINT)?;
+        let t0 = Instant::now();
+        crate::model_io::write_durable(path, &self.state_to_bytes())?;
+        obs::record_span("stream.checkpoint", t0.elapsed());
+        obs::registry()
+            .counter(
+                "rkc_stream_checkpoints_total",
+                "Durable .rkcs stream-state checkpoints written.",
+                &[],
+            )
+            .inc();
+        Ok(())
+    }
+
+    /// Load a checkpoint written by [`checkpoint`](Self::checkpoint)
+    /// and continue the stream exactly where it left off (see the
+    /// module docs for the determinism contract).
+    pub fn resume(path: &str) -> Result<StreamClusterer> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| RkcError::io(format!("reading stream checkpoint {path}"), e))?;
+        Self::state_from_bytes(&bytes, path)
+    }
+}
+
+/// When a [`Checkpointer`] writes: after `points` newly ingested
+/// points, after `interval` wall time, and/or after every refresh.
+/// All unset (the default) means only explicit
+/// [`Checkpointer::write`] calls persist anything.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CheckpointPolicy {
+    /// checkpoint once this many points arrived since the last write
+    pub points: Option<usize>,
+    /// checkpoint once this much wall time passed since the last write
+    pub interval: Option<Duration>,
+    /// checkpoint after every successful refresh
+    pub on_refresh: bool,
+}
+
+/// Drives periodic checkpoints of one stream: feed it every ingest
+/// (and refresh) and it writes `.rkcs` snapshots per its
+/// [`CheckpointPolicy`]. Kept outside [`StreamClusterer`] so the
+/// clusterer itself stays a pure in-memory state machine.
+#[derive(Debug)]
+pub struct Checkpointer {
+    path: String,
+    policy: CheckpointPolicy,
+    points_since_write: usize,
+    last_write: Instant,
+}
+
+impl Checkpointer {
+    pub fn new(path: impl Into<String>, policy: CheckpointPolicy) -> Self {
+        Checkpointer {
+            path: path.into(),
+            policy,
+            points_since_write: 0,
+            last_write: Instant::now(),
+        }
+    }
+
+    /// The `.rkcs` path this checkpointer writes.
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+
+    /// Unconditional checkpoint; resets the points/interval windows.
+    pub fn write(&mut self, sc: &StreamClusterer) -> Result<()> {
+        sc.checkpoint(&self.path)?;
+        self.points_since_write = 0;
+        self.last_write = Instant::now();
+        Ok(())
+    }
+
+    /// Account `ingested` new points (and whether a refresh just
+    /// happened) against the policy; write a checkpoint if one is due.
+    /// Returns whether a checkpoint was written.
+    pub fn maybe_write(
+        &mut self,
+        sc: &StreamClusterer,
+        ingested: usize,
+        refreshed: bool,
+    ) -> Result<bool> {
+        self.points_since_write += ingested;
+        let due = (refreshed && self.policy.on_refresh)
+            || self.policy.points.is_some_and(|p| self.points_since_write >= p)
+            || self.policy.interval.is_some_and(|t| self.last_write.elapsed() >= t);
+        if due {
+            self.write(sc)?;
+        }
+        Ok(due)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::chunked;
+    use super::*;
+    use crate::data;
+
+    fn tmp_path(name: &str) -> String {
+        std::env::temp_dir()
+            .join(format!("rkc_ckpt_{name}_{}.rkcs", std::process::id()))
+            .to_str()
+            .unwrap()
+            .to_string()
+    }
+
+    /// Model bytes with the wall-clock timings zeroed — two models from
+    /// different runs can only be byte-compared after canonicalizing
+    /// the fields that measure the run instead of the model.
+    fn canonical_bytes(model: &mut crate::api::FittedModel) -> Vec<u8> {
+        let m = model.metrics_mut();
+        m.sketch_time = Duration::ZERO;
+        m.recovery_time = Duration::ZERO;
+        m.kmeans_time = Duration::ZERO;
+        crate::model_io::model_to_bytes(model)
+    }
+
+    #[test]
+    fn state_roundtrips_bit_exactly() {
+        let ds = data::cross_lines(&mut Pcg64::seed(61), 150);
+        let mut sc = StreamClusterer::new(2).oversample(9).seed(13).capacity(150);
+        let chunks = chunked(&ds.x, 50);
+        sc.ingest(&chunks[0]).unwrap();
+        sc.refresh().unwrap();
+        sc.ingest(&chunks[1]).unwrap();
+        let bytes = sc.state_to_bytes();
+        let back = StreamClusterer::state_from_bytes(&bytes, "mem").unwrap();
+        assert_eq!(back.n, sc.n);
+        assert_eq!(back.buf, sc.buf);
+        assert_eq!(back.w, sc.w, "fold accumulator must survive bit-exactly");
+        assert_eq!(back.prev_labels, sc.prev_labels);
+        assert_eq!(back.refreshes, sc.refreshes);
+        assert_eq!(back.points_since_refresh, sc.points_since_refresh);
+        let (a, b) = (back.srht.as_ref().unwrap(), sc.srht.as_ref().unwrap());
+        assert_eq!((a.n, &a.d, &a.idx), (b.n, &b.d, &b.idx));
+        assert_eq!(
+            back.srht_rng.as_ref().unwrap().state_parts(),
+            sc.srht_rng.as_ref().unwrap().state_parts()
+        );
+        assert_eq!(back.kmeans_tol.to_bits(), sc.kmeans_tol.to_bits());
+        // and a fresh stream (no ingest yet) roundtrips too
+        let empty = StreamClusterer::new(3).seed(7);
+        let back = StreamClusterer::state_from_bytes(&empty.state_to_bytes(), "mem").unwrap();
+        assert_eq!(back.n, 0);
+        assert!(back.srht.is_none() && back.srht_rng.is_none());
+    }
+
+    #[test]
+    fn kill_and_resume_model_is_bit_identical_to_uninterrupted() {
+        let _g = crate::fault::test_guard(); // checkpoints cross a failpoint site
+        let ds = data::cross_lines(&mut Pcg64::seed(62), 240);
+        let chunks = chunked(&ds.x, 48);
+        let build = || StreamClusterer::new(2).oversample(10).seed(21).capacity(240);
+
+        // uninterrupted reference: ingest all 5 chunks, refresh after
+        // chunks 2 and 5 (a warm refresh exercises prev_labels)
+        let mut full = build();
+        for (i, chunk) in chunks.iter().enumerate() {
+            full.ingest(chunk).unwrap();
+            if i == 1 {
+                full.refresh().unwrap();
+            }
+        }
+        let want = canonical_bytes(&mut full.refresh().unwrap());
+
+        // interrupted run: same schedule, checkpoint after chunk 3,
+        // drop the live clusterer (the "kill"), resume from the file
+        let path = tmp_path("bitident");
+        {
+            let mut sc = build();
+            for (i, chunk) in chunks.iter().take(3).enumerate() {
+                sc.ingest(chunk).unwrap();
+                if i == 1 {
+                    sc.refresh().unwrap();
+                }
+            }
+            sc.checkpoint(&path).unwrap();
+            // sc dropped here — the in-memory state dies with it
+        }
+        let mut resumed = StreamClusterer::resume(&path).unwrap();
+        for chunk in &chunks[3..] {
+            resumed.ingest(chunk).unwrap();
+        }
+        let got = canonical_bytes(&mut resumed.refresh().unwrap());
+        std::fs::remove_file(&path).ok();
+        assert_eq!(got, want, "resumed final model must be byte-identical");
+    }
+
+    #[test]
+    fn resume_preserves_pending_operator_redraws() {
+        let _g = crate::fault::test_guard(); // checkpoints cross a failpoint site
+        // checkpoint BEFORE a capacity crossing: the redraw after resume
+        // must consume the SRHT stream exactly where the uninterrupted
+        // run would — this is what the raw (state, inc) persistence buys
+        let ds = data::gaussian_blobs(&mut Pcg64::seed(63), 80, 3, 2, 0.4);
+        let chunks = chunked(&ds.x, 20);
+        let build = || StreamClusterer::new(2).oversample(4).seed(31); // no hint: cap 32 → 64 → 128
+        let mut full = build();
+        for chunk in &chunks {
+            full.ingest(chunk).unwrap();
+        }
+        let want = canonical_bytes(&mut full.refresh().unwrap());
+
+        let path = tmp_path("redraw");
+        {
+            let mut sc = build();
+            sc.ingest(&chunks[0]).unwrap(); // 20 points: cap 32
+            sc.checkpoint(&path).unwrap();
+        }
+        let mut resumed = StreamClusterer::resume(&path).unwrap();
+        for chunk in &chunks[1..] {
+            resumed.ingest(chunk).unwrap(); // 80 points: redraws at 128
+        }
+        let got = canonical_bytes(&mut resumed.refresh().unwrap());
+        std::fs::remove_file(&path).ok();
+        assert_eq!(got, want, "post-resume redraw must stay on the seed stream");
+    }
+
+    #[test]
+    fn corrupt_checkpoints_are_typed_errors_never_panics() {
+        let ds = data::cross_lines(&mut Pcg64::seed(64), 60);
+        let mut sc = StreamClusterer::new(2).oversample(6).seed(3).capacity(60);
+        sc.ingest(&ds.x).unwrap();
+        sc.refresh().unwrap();
+        let bytes = sc.state_to_bytes();
+
+        // bad magic
+        let mut b = bytes.clone();
+        b[0] = b'X';
+        let err = StreamClusterer::state_from_bytes(&b, "mem").unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+
+        // future version (re-sealed so the version check fires)
+        let mut b = bytes.clone();
+        b[8..12].copy_from_slice(&99u32.to_le_bytes());
+        let end = b.len() - 8;
+        let ck = crate::model_io::checksum(&b[..end]);
+        b[end..].copy_from_slice(&ck.to_le_bytes());
+        assert!(matches!(
+            StreamClusterer::state_from_bytes(&b, "mem").unwrap_err(),
+            RkcError::ModelVersion { found: 99, .. }
+        ));
+
+        // truncation at every section boundary and a sweep of interior
+        // cuts: always a typed error
+        for cut in [0, 5, FIXED_PREFIX, bytes.len() / 2, bytes.len() - 9, bytes.len() - 1] {
+            let err = StreamClusterer::state_from_bytes(&bytes[..cut], "mem").unwrap_err();
+            assert!(
+                matches!(err, RkcError::Model { .. } | RkcError::ModelVersion { .. }),
+                "cut at {cut}: {err}"
+            );
+        }
+
+        // pseudo-random interior bit flips fail the checksum
+        let mut rng = Pcg64::seed(99);
+        use crate::rng::Rng as _;
+        for _ in 0..32 {
+            let mut b = bytes.clone();
+            let at = rng.below(b.len() - 8);
+            b[at] ^= 1 << rng.below(8);
+            assert!(
+                StreamClusterer::state_from_bytes(&b, "mem").is_err(),
+                "bit flip at byte {at} must not load"
+            );
+        }
+    }
+
+    #[test]
+    fn resealed_semantic_corruption_is_caught_by_shape_checks() {
+        // checksum-valid but internally inconsistent: flip an srht_idx
+        // value beyond the capacity and re-seal
+        let ds = data::cross_lines(&mut Pcg64::seed(65), 40);
+        let mut sc = StreamClusterer::new(2).oversample(4).seed(5).capacity(40);
+        sc.ingest(&ds.x).unwrap();
+        let mut bytes = sc.state_to_bytes();
+        let hlen = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+        let text =
+            std::str::from_utf8(&bytes[FIXED_PREFIX..FIXED_PREFIX + hlen]).unwrap().to_string();
+        // the last payload section before prev_labels is srht_idx; its
+        // values sit at the very end of the payload. Overwrite the last
+        // f64 with an out-of-range index.
+        let end = bytes.len() - 8;
+        bytes[end - 8..end].copy_from_slice(&1e9f64.to_le_bytes());
+        let ck = crate::model_io::checksum(&bytes[..end]);
+        bytes[end..].copy_from_slice(&ck.to_le_bytes());
+        let err = StreamClusterer::state_from_bytes(&bytes, "mem").unwrap_err();
+        assert!(err.to_string().contains("srht_idx"), "{err}");
+        assert!(text.contains("srht_idx"), "layout assumption: {text}");
+    }
+
+    #[test]
+    fn checkpointer_policy_triggers_on_points_and_refresh() {
+        let _g = crate::fault::test_guard(); // checkpoints cross a failpoint site
+        let ds = data::gaussian_blobs(&mut Pcg64::seed(66), 90, 3, 2, 0.3);
+        let chunks = chunked(&ds.x, 30);
+        let mut sc = StreamClusterer::new(2).oversample(5).seed(2).capacity(90);
+        let path = tmp_path("policy");
+        let mut ck = Checkpointer::new(
+            &path,
+            CheckpointPolicy { points: Some(60), interval: None, on_refresh: true },
+        );
+        sc.ingest(&chunks[0]).unwrap();
+        assert!(!ck.maybe_write(&sc, 30, false).unwrap(), "30 < 60 points");
+        assert!(!std::path::Path::new(&path).exists());
+        sc.ingest(&chunks[1]).unwrap();
+        assert!(ck.maybe_write(&sc, 30, false).unwrap(), "60 >= 60 points");
+        assert!(std::path::Path::new(&path).exists());
+        sc.ingest(&chunks[2]).unwrap();
+        sc.refresh().unwrap();
+        assert!(ck.maybe_write(&sc, 30, true).unwrap(), "on_refresh fires");
+        let resumed = StreamClusterer::resume(&path).unwrap();
+        assert_eq!(resumed.n, 90);
+        assert_eq!(resumed.refreshes, 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn checkpoint_rejects_unreadable_paths_and_missing_files() {
+        let _g = crate::fault::test_guard(); // checkpoints cross a failpoint site
+        let sc = StreamClusterer::new(2);
+        // /dev/null is a file, so the parent "directory" can never exist
+        assert!(sc.checkpoint("/dev/null/x/y.rkcs").is_err());
+        assert!(matches!(
+            StreamClusterer::resume("/nonexistent/rkc.rkcs").unwrap_err(),
+            RkcError::Io { .. }
+        ));
+        // an .rkc model file is not an .rkcs checkpoint
+        let ds = data::cross_lines(&mut Pcg64::seed(67), 64);
+        let mut sc = StreamClusterer::new(2).oversample(8).capacity(64);
+        sc.ingest(&ds.x).unwrap();
+        let model = sc.refresh().unwrap();
+        let err = StreamClusterer::state_from_bytes(
+            &crate::model_io::model_to_bytes(&model),
+            "mem",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn injected_checkpoint_fault_is_transient_and_leaves_prior_file() {
+        let _g = crate::fault::test_guard();
+        let ds = data::cross_lines(&mut Pcg64::seed(68), 60);
+        let mut sc = StreamClusterer::new(2).oversample(6).seed(4).capacity(60);
+        sc.ingest(&ds.x).unwrap();
+        let path = tmp_path("fault");
+        sc.checkpoint(&path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        crate::fault::configure("stream.checkpoint=io_error:1.0").unwrap();
+        let err = sc.checkpoint(&path).unwrap_err();
+        assert!(err.is_transient(), "{err}");
+        crate::fault::clear();
+        // the injected failure never touched the previous checkpoint
+        assert_eq!(std::fs::read(&path).unwrap(), good);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -70,6 +70,9 @@ use crate::serve::ModelRegistry;
 use crate::sketch::{next_pow2, Srht};
 use crate::util::parallel;
 
+mod checkpoint;
+pub use checkpoint::{CheckpointPolicy, Checkpointer, STATE_MAGIC, STATE_VERSION};
+
 /// Process-wide metric handles for the streaming layer, registered once
 /// and shared by every [`StreamClusterer`] in the process (Prometheus
 /// series are global; per-instance state stays on the clusterer itself).
@@ -727,7 +730,7 @@ mod tests {
     use crate::clustering::accuracy;
     use crate::data;
 
-    fn chunked(x: &Mat, width: usize) -> Vec<Mat> {
+    pub(crate) fn chunked(x: &Mat, width: usize) -> Vec<Mat> {
         let (p, n) = (x.rows(), x.cols());
         let mut out = Vec::new();
         let mut j0 = 0;
@@ -885,6 +888,7 @@ mod tests {
 
     #[test]
     fn refreshed_models_roundtrip_and_predict_out_of_sample() {
+        let _g = crate::fault::test_guard(); // saves cross a failpoint site
         let ds = data::cross_lines(&mut Pcg64::seed(40), 200);
         let mut sc = StreamClusterer::new(2).oversample(10).seed(4).capacity(200);
         sc.ingest(&ds.x).unwrap();

@@ -1,0 +1,363 @@
+//! Chaos capstone: the crash-safety story end to end. Failpoints fire
+//! on the real IO edges while the PR-7 load replayer drives the live
+//! HTTP front-end, a mid-stream "kill" is recovered from a durable
+//! `.rkcs` checkpoint, and corrupt persisted bytes of both formats are
+//! swept through truncations and bit flips. The invariants:
+//!
+//! - a resumed stream's refreshed model is **bit-identical** to an
+//!   uninterrupted run over the same chunk sequence;
+//! - request accounting stays exact while connections are being
+//!   dropped (`ok + dropped + non-2xx == sent`, nothing double-counted);
+//! - a failed hot-swap quarantines the name and degrades `/healthz`
+//!   but the previous generation keeps answering;
+//! - corrupt `.rkc`/`.rkcs` bytes are typed errors, never panics;
+//! - with `RKC_FAULTS` unset the fault layer is invisible: the golden
+//!   experiment JSONL is byte-identical, armed or not.
+
+use std::net::SocketAddr;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use rkc::api::{FittedModel, KernelClusterer};
+use rkc::bench_harness::MiniHttpClient;
+use rkc::data;
+use rkc::error::RkcError;
+use rkc::experiment::{points_body, replay_scenario, run_plan_text, ReplayTarget, ScenarioMode, ScenarioSpec};
+use rkc::linalg::Mat;
+use rkc::rng::{Pcg64, Rng};
+use rkc::serve::{serve_http_registry, HttpOpts, ModelRegistry, ServeOpts};
+use rkc::stream::StreamClusterer;
+use rkc::util::Json;
+
+/// The fault table is process-global, and the crate-internal test
+/// guard is not visible to integration tests — this binary serializes
+/// every test on its own lock instead (each one either arms faults or
+/// writes through a fault-instrumented path).
+static FAULTS: Mutex<()> = Mutex::new(());
+
+fn fault_lock() -> MutexGuard<'static, ()> {
+    let guard = FAULTS.lock().unwrap_or_else(|p| p.into_inner());
+    // a previous test that failed mid-arm must not leak its faults in
+    rkc::fault::clear();
+    guard
+}
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("rkc_chaos_{name}"));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn column_slice(x: &Mat, lo: usize, m: usize) -> Mat {
+    Mat::from_fn(x.rows(), m, |i, j| x[(i, lo + j)])
+}
+
+/// `.rkc` bytes with the wall-clock timing metrics zeroed — they
+/// measure the run, not the model, and are the only bytes allowed to
+/// differ between a resumed and an uninterrupted fit.
+fn canonical_bytes(model: &mut FittedModel) -> Vec<u8> {
+    let m = model.metrics_mut();
+    m.sketch_time = Duration::ZERO;
+    m.recovery_time = Duration::ZERO;
+    m.kmeans_time = Duration::ZERO;
+    rkc::model_io::model_to_bytes(model)
+}
+
+/// One hand-framed `Connection: close` GET that tolerates the server
+/// dropping the connection (accept-faulted runs): `None` when the dial
+/// or the response never lands.
+fn try_get(addr: SocketAddr, path: &str) -> Option<(u16, String)> {
+    let mut c = MiniHttpClient::connect_with_retry(addr, 3, Duration::from_millis(5))?;
+    c.send_raw(
+        format!("GET {path} HTTP/1.1\r\nHost: t\r\nContent-Length: 0\r\nConnection: close\r\n\r\n")
+            .as_bytes(),
+    );
+    c.read_response()
+}
+
+fn healthz(addr: SocketAddr) -> Json {
+    for _ in 0..50 {
+        if let Some((status, body)) = try_get(addr, "/healthz") {
+            assert!(status == 200 || status == 503, "unexpected /healthz status {status}");
+            return Json::parse(&body).expect("healthz must be JSON");
+        }
+    }
+    panic!("/healthz never answered");
+}
+
+// ---------------------------------------------------------------------------
+
+/// Acceptance gate: with no spec armed the fault layer must be
+/// invisible — and an armed spec that names no production site must be
+/// invisible too (the armed fast path cannot leak into the math).
+#[test]
+fn golden_experiment_is_byte_identical_with_fault_layer_present() {
+    let _g = fault_lock();
+    const SMOKE: &str = include_str!(concat!(env!("CARGO_MANIFEST_DIR"), "/plans/smoke.plan"));
+    assert!(!rkc::fault::armed(), "no test may leak an armed fault table");
+    let clean = run_plan_text(SMOKE, 2).expect("clean run");
+    rkc::fault::configure("chaos.nop=io_error:1.0").unwrap();
+    assert!(rkc::fault::armed());
+    let armed = run_plan_text(SMOKE, 2).expect("armed run");
+    rkc::fault::clear();
+    assert_eq!(
+        clean.jsonl, armed.jsonl,
+        "an armed fault table with no production site must not change the experiment output"
+    );
+}
+
+/// Corruption sweep across BOTH persisted formats: every truncation and
+/// every bit flip must surface as a typed error — never a panic, never
+/// a silently wrong model/state.
+#[test]
+fn corrupt_rkc_and_rkcs_bytes_are_typed_errors_never_panics() {
+    let _g = fault_lock();
+    let ds = data::cross_lines(&mut Pcg64::seed(51), 96);
+    let model =
+        KernelClusterer::new(2).oversample(8).seed(5).threads(1).fit(&ds.x).expect("fit");
+    let mut sc = StreamClusterer::new(2).oversample(8).seed(5).threads(1).capacity(96);
+    sc.ingest(&ds.x).unwrap();
+    sc.refresh().unwrap();
+
+    let sweeps: [(&str, Vec<u8>); 2] = [
+        ("model.rkc", rkc::model_io::model_to_bytes(&model)),
+        ("state.rkcs", sc.state_to_bytes()),
+    ];
+    for (origin, bytes) in &sweeps {
+        let parse = |b: &[u8]| -> Option<String> {
+            let err = if origin.ends_with(".rkcs") {
+                StreamClusterer::state_from_bytes(b, origin).err()
+            } else {
+                rkc::model_io::model_from_bytes(b, origin).err()
+            };
+            err.map(|e| format!("{e:#}"))
+        };
+        assert!(parse(bytes).is_none(), "{origin}: pristine bytes must load");
+
+        // truncations at and around every structural boundary
+        let n = bytes.len();
+        for cut in [0, 4, 8, 12, 16, n / 4, n / 2, 3 * n / 4, n - 9, n - 1] {
+            let msg = parse(&bytes[..cut]);
+            assert!(msg.is_some(), "{origin}: truncation at {cut}/{n} must be rejected");
+        }
+        // deterministic scattered bit flips — the trailing checksum
+        // must catch every one of them
+        let mut rng = Pcg64::seed(0xf11f);
+        for _ in 0..32 {
+            let mut c = bytes.clone();
+            let bit = rng.below(n * 8);
+            c[bit / 8] ^= 1 << (bit % 8);
+            assert!(
+                parse(&c).is_some(),
+                "{origin}: flipped bit {bit} must be rejected"
+            );
+        }
+    }
+}
+
+/// Graceful degradation over the wire: a hot-swap that keeps failing
+/// under an armed `serve.load` fault answers 503, quarantines the name
+/// in a `degraded` /healthz, and leaves the previous generation
+/// serving; clearing the fault and retrying recovers to `ok`.
+#[test]
+fn failed_hot_swap_degrades_healthz_and_previous_generation_keeps_serving() {
+    let _g = fault_lock();
+    let d = tmpdir("swap");
+    let ds = data::cross_lines(&mut Pcg64::seed(61), 96);
+    let model =
+        KernelClusterer::new(2).oversample(8).seed(6).threads(1).fit(&ds.x).expect("fit");
+    let update =
+        KernelClusterer::new(2).oversample(8).seed(7).threads(1).fit(&ds.x).expect("fit");
+    let path = d.join("update.rkc");
+    rkc::model_io::save_model(&update, path.to_str().unwrap()).unwrap();
+
+    let registry = Arc::new(ModelRegistry::new(ServeOpts { threads: 1, ..Default::default() }));
+    registry.insert("m0", model).unwrap();
+    let http = serve_http_registry(
+        Arc::clone(&registry),
+        "127.0.0.1:0",
+        HttpOpts { workers: 2, ..Default::default() },
+    )
+    .unwrap();
+    let addr = http.local_addr();
+    let body = points_body(&data::cross_lines(&mut Pcg64::seed(62), 5).x);
+    let put = format!("{{\"path\":\"{}\"}}", path.display());
+
+    let mut c = MiniHttpClient::connect(addr);
+    let (status, baseline) = c.request("POST", "/models/m0/predict", &body);
+    assert_eq!(status, 200);
+
+    rkc::fault::configure("serve.load=io_error:1.0").unwrap();
+    let (status, resp) = c.request("PUT", "/models/m0", &put);
+    assert_eq!(status, 503, "exhausted transient retries must answer 503: {resp}");
+
+    // degraded, name quarantined — but the old generation still answers
+    let h = healthz(addr);
+    assert_eq!(h.str_field("status").unwrap(), "degraded", "{h}");
+    let Some(Json::Obj(q)) = h.get("quarantined") else { panic!("no quarantined field: {h}") };
+    assert!(q.contains_key("m0"), "{h}");
+    let (status, still) = c.request("POST", "/models/m0/predict", &body);
+    assert_eq!(status, 200, "previous generation must keep serving");
+    assert_eq!(still, baseline, "serving must not see a half-swapped model");
+
+    // the injected trips and the retry/quarantine counters are observable
+    let (status, metrics) = c.request("GET", "/metrics", "");
+    assert_eq!(status, 200);
+    for needle in
+        ["rkc_fault_trips_total", "rkc_serve_load_retries_total", "rkc_models_quarantined_total"]
+    {
+        assert!(metrics.contains(needle), "/metrics lost {needle}");
+    }
+
+    // clearing the fault and retrying the swap recovers to ok
+    rkc::fault::clear();
+    let (status, resp) = c.request("PUT", "/models/m0", &put);
+    assert_eq!(status, 200, "swap after clearing faults must succeed: {resp}");
+    let h = healthz(addr);
+    assert_eq!(h.str_field("status").unwrap(), "ok", "{h}");
+    http.shutdown();
+}
+
+/// Accept-fault chaos under the PR-7 load replayer: connections are
+/// dropped server-side mid-run, yet the outcome ledger stays exact —
+/// every attempt is observed exactly once, as a response or a drop.
+#[test]
+fn load_replay_accounting_is_exact_while_accept_faults_drop_connections() {
+    let _g = fault_lock();
+    let ds = data::cross_lines(&mut Pcg64::seed(71), 96);
+    let model =
+        KernelClusterer::new(2).oversample(8).seed(8).threads(1).fit(&ds.x).expect("fit");
+    let registry = Arc::new(ModelRegistry::new(ServeOpts { threads: 1, ..Default::default() }));
+    registry.insert("m0", model).unwrap();
+    let http = serve_http_registry(
+        Arc::clone(&registry),
+        "127.0.0.1:0",
+        HttpOpts { workers: 2, ..Default::default() },
+    )
+    .unwrap();
+    let target =
+        ReplayTarget { addr: http.local_addr(), paths: vec!["/models/m0/predict".to_string()] };
+    let body = points_body(&data::cross_lines(&mut Pcg64::seed(72), 4).x);
+
+    rkc::fault::configure("http.accept=io_error:0.5").unwrap();
+    let spec = ScenarioSpec {
+        name: "chaos".to_string(),
+        mode: ScenarioMode::OpenLoop,
+        clients: 4,
+        requests: 8,
+        rate_hz: 0.0,
+        keep_alive: false,
+    };
+    let out = replay_scenario(&target, &spec, &body);
+    rkc::fault::clear();
+
+    assert_eq!(out.sent, 32);
+    let answered: usize = out.statuses.values().sum();
+    assert_eq!(
+        answered + out.dropped,
+        out.sent,
+        "every attempt must be a response or a drop, exactly once: {:?}",
+        out.statuses
+    );
+    assert_eq!(out.ok, answered, "admitted requests must succeed: {:?}", out.statuses);
+    assert!(out.dropped >= 1, "p=0.5 over 32 connections must drop some");
+    assert!(out.ok >= 1, "p=0.5 over 32 connections must admit some");
+
+    // the server itself is unharmed: next connection, clean 200
+    let h = healthz(http.local_addr());
+    assert_eq!(h.str_field("status").unwrap(), "ok", "{h}");
+    http.shutdown();
+}
+
+/// The kill -9 story end to end, with delay faults stretching the
+/// durable-write windows: a stream checkpointed mid-run and "killed"
+/// resumes from the `.rkcs` file and finishes with a model that is
+/// bit-identical to an uninterrupted run — and serves byte-identical
+/// responses. A checkpoint attempt that faults leaves no file behind.
+#[test]
+fn killed_stream_resumes_bit_identical_and_serves_identically() {
+    let _g = fault_lock();
+    let d = tmpdir("resume");
+    let state = d.join("state.rkcs");
+    let state = state.to_str().unwrap();
+    let ds = data::cross_lines(&mut Pcg64::seed(81), 240);
+    let chunk = 48;
+    let build = || {
+        StreamClusterer::new(2)
+            .oversample(8)
+            .seed(34)
+            .threads(1)
+            .capacity(240)
+    };
+
+    // reference: one uninterrupted process, refreshes after chunks 2 and 5
+    let mut uninterrupted = build();
+    let mut reference: Option<FittedModel> = None;
+    for c in 0..5 {
+        uninterrupted.ingest(&column_slice(&ds.x, c * chunk, chunk)).unwrap();
+        if c == 1 || c == 4 {
+            reference = Some(uninterrupted.refresh().unwrap());
+        }
+    }
+
+    // chaos: same schedule, but the process "dies" after chunk 3 —
+    // with the durable-write failpoints armed as pure delays, so the
+    // checkpoint/fsync windows are actually open when it happens
+    rkc::fault::configure("model_io.fsync=delay_ms:1:0.5,stream.checkpoint=delay_ms:1:0.5")
+        .unwrap();
+    let mut sc = build();
+    for c in 0..3 {
+        sc.ingest(&column_slice(&ds.x, c * chunk, chunk)).unwrap();
+        if c == 1 {
+            sc.refresh().unwrap();
+        }
+    }
+    // a checkpoint that faults is a typed transient error and leaves
+    // nothing on disk
+    rkc::fault::configure("stream.checkpoint=io_error:1.0").unwrap();
+    let err = sc.checkpoint(state).unwrap_err();
+    assert!(matches!(err, RkcError::Transient { .. }), "{err}");
+    assert!(!std::path::Path::new(state).exists(), "failed checkpoint must leave no file");
+    rkc::fault::configure("model_io.fsync=delay_ms:1:0.5,stream.checkpoint=delay_ms:1:0.5")
+        .unwrap();
+    sc.checkpoint(state).unwrap();
+    drop(sc); // the kill
+
+    let mut resumed = StreamClusterer::resume(state).unwrap();
+    assert_eq!(resumed.n_points(), 3 * chunk);
+    assert_eq!(resumed.refreshes(), 1);
+    for c in 3..5 {
+        resumed.ingest(&column_slice(&ds.x, c * chunk, chunk)).unwrap();
+    }
+    let mut final_model = resumed.refresh().unwrap();
+    rkc::fault::clear();
+
+    let mut reference = reference.expect("reference refresh ran");
+    assert_eq!(
+        canonical_bytes(&mut reference),
+        canonical_bytes(&mut final_model),
+        "resumed model must be bit-identical to the uninterrupted run"
+    );
+
+    // and the two models answer the wire byte-identically
+    let query = points_body(&data::cross_lines(&mut Pcg64::seed(82), 6).x);
+    let mut responses = Vec::new();
+    for model in [reference, final_model] {
+        let registry =
+            Arc::new(ModelRegistry::new(ServeOpts { threads: 1, ..Default::default() }));
+        registry.insert("stream", model).unwrap();
+        let http = serve_http_registry(
+            Arc::clone(&registry),
+            "127.0.0.1:0",
+            HttpOpts { workers: 1, ..Default::default() },
+        )
+        .unwrap();
+        let mut c = MiniHttpClient::connect(http.local_addr());
+        let (status, resp) = c.request("POST", "/models/stream/embed", &query);
+        assert_eq!(status, 200, "{resp}");
+        responses.push(resp);
+        http.shutdown();
+    }
+    assert_eq!(responses[0], responses[1], "resumed model must serve identical bytes");
+}
