@@ -59,6 +59,66 @@ fn kmeans_row(n: usize, r: usize, k: usize, restarts: usize, threads: usize, ite
     ]))
 }
 
+/// SIMD-dispatch contribution on the assignment argmin hot loop: the
+/// pinned scalar kernel table vs the runtime-dispatched one, on the
+/// exact point-major gram layout `assign_range` consumes. Results are
+/// identical by the per-ISA determinism contract (see `rkc::simd`);
+/// only the wall clock moves. Tagged `"mode": "simd"` so
+/// check_bench_json.py's tagged-row gate can require it.
+fn simd_row(n: usize, r: usize, k: usize, iters: usize) -> Json {
+    let mut rng = Pcg64::seed(0x51d ^ (n as u64) ^ ((k as u64) << 32));
+    let y = blobs(&mut rng, n, r, k);
+    let c = Mat::from_fn(r, k, |_, _| 10.0 * rng.normal());
+    let yn: Vec<f64> =
+        (0..n).map(|j| (0..r).map(|i| y[(i, j)] * y[(i, j)]).sum::<f64>()).collect();
+    let cn: Vec<f64> =
+        (0..k).map(|cc| (0..r).map(|i| c[(i, cc)] * c[(i, cc)]).sum::<f64>()).collect();
+    let mut g = Vec::with_capacity(n * k);
+    for j in 0..n {
+        for cc in 0..k {
+            g.push((0..r).map(|i| y[(i, j)] * c[(i, cc)]).sum::<f64>());
+        }
+    }
+    let run = |table: &rkc::simd::KernelTable| {
+        let argmin = table.argmin_dist2;
+        let mut acc = 0usize;
+        for j in 0..n {
+            let (best, _) = argmin(&g[j * k..(j + 1) * k], yn[j], &cn);
+            acc ^= best;
+        }
+        acc
+    };
+    let scalar = rkc::simd::scalar_table();
+    let table = rkc::simd::dispatch();
+    let before = bench(&format!("assign argmin scalar n={n} k={k}"), 1, iters, || {
+        black_box(run(scalar))
+    });
+    let after = bench(
+        &format!("assign argmin {:<6} n={n} k={k}", table.isa.name()),
+        1,
+        iters,
+        || black_box(run(table)),
+    );
+    println!(
+        "  => {} argmin speedup {:.1}x at n={n}, k={k}",
+        table.isa.name(),
+        before.median_s / after.median_s.max(1e-12)
+    );
+    Json::Obj(BTreeMap::from([
+        ("bench".to_string(), Json::Str("kmeans_assign_argmin".to_string())),
+        ("mode".to_string(), Json::Str("simd".to_string())),
+        ("isa".to_string(), Json::Str(table.isa.name().to_string())),
+        ("n".to_string(), Json::Num(n as f64)),
+        ("r".to_string(), Json::Num(r as f64)),
+        ("k".to_string(), Json::Num(k as f64)),
+        ("restarts".to_string(), Json::Num(1.0)),
+        ("threads".to_string(), Json::Num(1.0)),
+        ("before_s".to_string(), Json::finite_num(before.median_s)),
+        ("after_s".to_string(), Json::finite_num(after.median_s)),
+        ("speedup".to_string(), Json::finite_num(before.median_s / after.median_s.max(1e-12))),
+    ]))
+}
+
 fn main() {
     let quick = quick_mode();
     let iters = if quick { 1 } else { 7 };
@@ -67,6 +127,9 @@ fn main() {
     println!("bench_kmeans: norm-identity + GEMM assignment vs pre-GEMM reference");
     if quick {
         records.push(kmeans_row(600, 2, 3, 3, 1, iters));
+        // k=8 so even quick mode drives the 4-lane (AVX2) / 2-lane
+        // (NEON) vector body, not just the scalar tail
+        records.push(simd_row(600, 2, 8, iters));
     } else {
         // the pipeline shape (tiny r, few clusters), a wider embedding,
         // and a larger-n row; threads=1 is the algorithmic comparison
@@ -77,6 +140,7 @@ fn main() {
         if auto > 1 {
             records.push(kmeans_row(4096, 8, 16, 10, auto, iters));
         }
+        records.push(simd_row(32768, 8, 16, iters));
     }
 
     write_bench_json("BENCH_kmeans.json", records);

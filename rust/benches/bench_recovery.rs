@@ -19,7 +19,7 @@ use rkc::lowrank::{
     one_pass_recovery_entrywise_reference, one_pass_recovery_threaded, OnePassSketch,
 };
 use rkc::rng::{Pcg64, Rng};
-use rkc::sketch::Srht;
+use rkc::sketch::{fwht_inplace_with, Srht};
 use rkc::util::parallel::available_threads;
 use rkc::util::Json;
 
@@ -92,6 +92,46 @@ fn recovery_row(n: usize, r: usize, rp: usize, iters: usize) -> Json {
     row("recovery_total", np, r, rp, 1, before.median_s, after.median_s)
 }
 
+/// FWHT butterfly through the pinned scalar kernel table vs the
+/// runtime-dispatched one, over an r'-column batch of length-n
+/// transforms (the `QᵀΩ` shape). Outputs are bit-identical on every
+/// ISA by the per-ISA determinism contract; only the wall clock moves.
+/// Tagged `"mode": "simd"` for check_bench_json.py's tagged-row gate.
+fn simd_fwht_row(n: usize, rp: usize, iters: usize) -> Json {
+    let mut rng = Pcg64::seed(0xf1417 ^ (n as u64));
+    let cols: Vec<Vec<f64>> =
+        (0..rp).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+    let run = |table: &rkc::simd::KernelTable| {
+        let mut work = cols.clone();
+        for col in &mut work {
+            fwht_inplace_with(col, table);
+        }
+        work
+    };
+    let scalar = rkc::simd::scalar_table();
+    let table = rkc::simd::dispatch();
+    let before = bench(&format!("fwht scalar n={n} cols={rp}"), 1, iters, || {
+        black_box(run(scalar))
+    });
+    let after = bench(
+        &format!("fwht {:<6} n={n} cols={rp}", table.isa.name()),
+        1,
+        iters,
+        || black_box(run(table)),
+    );
+    println!(
+        "  => {} butterfly speedup {:.1}x at n={n}, cols={rp}",
+        table.isa.name(),
+        before.median_s / after.median_s.max(1e-12)
+    );
+    let mut record = row("fwht_butterfly", n, 0, rp, 1, before.median_s, after.median_s);
+    if let Json::Obj(ref mut map) = record {
+        map.insert("mode".to_string(), Json::Str("simd".to_string()));
+        map.insert("isa".to_string(), Json::Str(table.isa.name().to_string()));
+    }
+    record
+}
+
 fn main() {
     let quick = quick_mode();
     let iters = if quick { 1 } else { 9 };
@@ -101,6 +141,7 @@ fn main() {
     if quick {
         records.push(qt_omega_row(256, 4, 9, 1, iters));
         records.push(recovery_row(200, 2, 6, iters));
+        records.push(simd_fwht_row(1024, 9, iters));
     } else {
         // acceptance shape first, then r'-scaling and thread rows
         records.push(qt_omega_row(4096, 8, 18, 1, iters));
@@ -111,6 +152,7 @@ fn main() {
             records.push(qt_omega_row(4096, 8, 18, auto, iters));
         }
         records.push(recovery_row(4000, 8, 18, iters.min(5)));
+        records.push(simd_fwht_row(16384, 18, iters));
     }
 
     write_bench_json("BENCH_recovery.json", records);

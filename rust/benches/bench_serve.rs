@@ -263,8 +263,71 @@ fn main() {
         vec![("obs_overhead_pct".to_string(), Json::finite_num(obs_overhead_pct))],
     );
 
+    // --- row 5: opt-in f32 serving path vs the default f64 path -----
+    // a fresh fit of the same model (fitting always stays f64);
+    // `set_precision(F32)` swaps only the embed/predict leg. The
+    // accuracy guard rides the row as `f32_max_abs_dev`: the largest
+    // |f32 − f64| embedding deviation on the bench query batch.
+    let mut model_f32 = KernelClusterer::new(2)
+        .oversample(10)
+        .seed(42)
+        .threads(0)
+        .fit(&ds.x)
+        .expect("fit f32 model");
+    let y64 = model_f32.embed(&query).expect("embed f64");
+    model_f32.set_precision(rkc::config::Precision::F32);
+    let y32 = model_f32.embed(&query).expect("embed f32");
+    let f32_max_abs_dev = y32.sub(&y64).max_abs();
+    registry.insert("f32", model_f32).expect("register f32 model");
+    let handle_f32 = registry.get("f32").expect("f32 handle");
+    // discarded warm-up: the freshly inserted server's batch worker
+    // (and any remaining lazy state) must not land inside the timed
+    // pass — the f64 comparison handle has been warm for rows 1-4
+    let _ = drive(clients, reqs, |_, lat| {
+        let h = handle_f32.clone();
+        for _ in 0..reqs {
+            let t = Instant::now();
+            h.predict(query.clone()).expect("predict");
+            lat.push(t.elapsed().as_secs_f64());
+        }
+    });
+    let (f64_s, _) = drive(clients, reqs, |_, lat| {
+        let h = handle.clone();
+        for _ in 0..reqs {
+            let t = Instant::now();
+            h.predict(query.clone()).expect("predict");
+            lat.push(t.elapsed().as_secs_f64());
+        }
+    });
+    let (f32_s, f32_lat) = drive(clients, reqs, |_, lat| {
+        let h = handle_f32.clone();
+        for _ in 0..reqs {
+            let t = Instant::now();
+            h.predict(query.clone()).expect("predict");
+            lat.push(t.elapsed().as_secs_f64());
+        }
+    });
+    let f32_speedup = f64_s / f32_s.max(1e-12);
+    println!(
+        "f32 path: {f32_s:.3}s vs f64 {f64_s:.3}s ({f32_speedup:.2}x); \
+         max |f32-f64| embedding deviation {f32_max_abs_dev:.3e}"
+    );
+    let row_f32 = record(
+        "f32_path",
+        n,
+        clients,
+        reqs,
+        points_per_req,
+        f32_s,
+        &f32_lat,
+        vec![
+            ("speedup".to_string(), Json::finite_num(f32_speedup)),
+            ("f32_max_abs_dev".to_string(), Json::finite_num(f32_max_abs_dev)),
+        ],
+    );
+
     rkc::bench_harness::write_bench_json(
         "BENCH_serve.json",
-        vec![row_inproc, row_close, row_keepalive, row_obs],
+        vec![row_inproc, row_close, row_keepalive, row_obs, row_f32],
     );
 }

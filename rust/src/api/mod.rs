@@ -43,7 +43,7 @@ use std::sync::OnceLock;
 use std::time::{Duration, Instant};
 
 use crate::clustering::{kernel_kmeans, kmeans_threaded, KmeansOpts};
-use crate::config::{Backend, ExperimentConfig, Method};
+use crate::config::{Backend, ExperimentConfig, Method, Precision};
 use crate::coordinator::{
     run_sketch_pass_sharded, xla_kmeans, xla_preferred_n_pad, FusedXlaSketchRows, XlaBlockSource,
 };
@@ -83,6 +83,9 @@ pub struct KernelClusterer {
     kmeans_iters: usize,
     kmeans_tol: f64,
     artifacts_dir: String,
+    /// serving precision stamped onto the fitted model (`F64` default;
+    /// `F32` opts embed/predict into the single-precision SIMD path)
+    precision: Precision,
     /// persist every successful fit here (path or directory); `None`
     /// means no auto-save
     auto_save: Option<String>,
@@ -110,6 +113,7 @@ impl KernelClusterer {
             kmeans_iters: 20,
             kmeans_tol: 1e-9,
             artifacts_dir: "artifacts".into(),
+            precision: Precision::F64,
             auto_save: None,
             strict: true,
         }
@@ -133,9 +137,18 @@ impl KernelClusterer {
             kmeans_iters: cfg.kmeans_iters,
             kmeans_tol: cfg.kmeans_tol,
             artifacts_dir: cfg.artifacts_dir.clone(),
+            precision: cfg.precision.unwrap_or_default(),
             auto_save: None,
             strict: false,
         }
+    }
+
+    /// Serving precision for the fitted model's `embed`/`predict`
+    /// (default [`Precision::F64`]; fitting always runs in f64 either
+    /// way — see [`Precision`]).
+    pub fn precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
     }
 
     /// Override the cluster count after construction (e.g. to adopt a
@@ -386,6 +399,8 @@ impl KernelClusterer {
                     assigner: Assigner::Input { centroids: res.centroids },
                     train_x: Some(x.clone()),
                     train_cols: OnceLock::new(),
+                    precision: self.precision,
+                    f32_state: OnceLock::new(),
                     generation: 0,
                     n_pad: n.next_power_of_two(),
                     batch: self.batch,
@@ -442,6 +457,8 @@ impl KernelClusterer {
                     assigner: Assigner::KernelClusters { sizes, self_terms },
                     train_x: Some(x.clone()),
                     train_cols: OnceLock::new(),
+                    precision: self.precision,
+                    f32_state: OnceLock::new(),
                     generation: 0,
                     n_pad: n.next_power_of_two(),
                     batch: self.batch,
@@ -561,6 +578,8 @@ impl KernelClusterer {
             assigner: Assigner::Embedded { centroids: res.centroids },
             train_x,
             train_cols: OnceLock::new(),
+            precision: self.precision,
+            f32_state: OnceLock::new(),
             generation: 0,
             n_pad,
             batch: self.batch,

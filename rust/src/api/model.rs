@@ -17,6 +17,7 @@
 
 use std::time::Duration;
 
+use crate::config::Precision;
 use crate::error::{Result, RkcError};
 use crate::kernels::{BlockSource, Kernel, NativeBlockSource};
 use crate::linalg::Mat;
@@ -97,6 +98,48 @@ pub struct FittedModel {
     /// per call — the serving hot path hits `embed`/`predict` per
     /// request. Derived state: never serialized.
     pub(crate) train_cols: std::sync::OnceLock<Vec<Vec<f64>>>,
+    /// serving precision for `embed`/`predict`: `F64` (default) keeps
+    /// the bit-exact contracts; `F32` routes the out-of-sample gram +
+    /// embed accumulation through single-precision SIMD kernels.
+    /// Persisted as a `.rkc` header field (older files load as `F64`).
+    pub(crate) precision: Precision,
+    /// lazily materialized single-precision shadow of the serving state
+    /// (train columns, point-major Yᵀ, 1/λ). Built on the first f32
+    /// `embed`/`predict`; derived state, never serialized, reset when
+    /// [`set_precision`](FittedModel::set_precision) changes mode.
+    pub(crate) f32_state: std::sync::OnceLock<F32State>,
+}
+
+/// Single-precision serving state derived from the f64 model (see
+/// [`FittedModel::f32_state`]).
+pub(crate) struct F32State {
+    /// training columns cast to f32, one contiguous slice per point
+    train_cols: Vec<Vec<f32>>,
+    /// `Y` transposed point-major: `yt[t·r ..(t+1)·r]` is point `t`'s
+    /// embedding row, so the accumulation is one contiguous axpy
+    yt: Vec<f32>,
+    /// `1/λ_i` with the same numerically-absent-direction floor as the
+    /// f64 path (computed in f64, then cast)
+    inv_lambda: Vec<f32>,
+}
+
+/// `1/λ_i` per embedding row, zeroing numerically-absent directions.
+/// The single copy of the floor rule: the f64 embed path applies these
+/// scales directly and [`FittedModel::f32_state`] casts them, so both
+/// precisions zero exactly the same eigendirections by construction.
+fn inv_lambda_scales(eigenvalues: &[f64], r: usize) -> Vec<f64> {
+    let lmax = eigenvalues.first().copied().unwrap_or(0.0).max(0.0);
+    let floor = 1e-12 * lmax.max(1e-300);
+    (0..r)
+        .map(|i| {
+            let l = eigenvalues[i];
+            if l > floor {
+                1.0 / l
+            } else {
+                0.0
+            }
+        })
+        .collect()
 }
 
 impl FittedModel {
@@ -156,6 +199,24 @@ impl FittedModel {
     /// streaming refresh loop before publishing into a registry).
     pub fn set_generation(&mut self, generation: u64) {
         self.generation = generation;
+    }
+
+    /// Serving precision of `embed`/`predict` (see
+    /// [`Precision`]): `F64` by default.
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// Switch the serving precision. `F32` opts the out-of-sample gram
+    /// and embed accumulation into single precision (the fit itself is
+    /// immutable and stays f64); `F64` restores the bit-exact path.
+    /// Survives save/load as a `.rkc` header field.
+    pub fn set_precision(&mut self, precision: Precision) {
+        if self.precision != precision {
+            self.precision = precision;
+            // derived shadow state may be stale relative to the mode
+            self.f32_state = std::sync::OnceLock::new();
+        }
     }
 
     /// The input-space dimension p that [`embed`](Self::embed) /
@@ -223,6 +284,9 @@ impl FittedModel {
         let xt = self.require_train_x()?;
         self.check_dims(xt, xq)?;
         let (m, r) = (xq.cols(), emb.rank());
+        if self.precision == Precision::F32 {
+            return Ok(self.embed_f32(xt, emb, xq));
+        }
 
         let train_cols = self.train_cols(xt);
         let mut out = Mat::zeros(r, m);
@@ -239,11 +303,9 @@ impl FittedModel {
             }
         }
         // scale row i by 1/λ_i; numerically-absent directions stay zero
-        let lmax = emb.eigenvalues.first().copied().unwrap_or(0.0).max(0.0);
-        let floor = 1e-12 * lmax.max(1e-300);
+        let scales = inv_lambda_scales(&emb.eigenvalues, r);
         for i in 0..r {
-            let l = emb.eigenvalues[i];
-            let s = if l > floor { 1.0 / l } else { 0.0 };
+            let s = scales[i];
             for v in out.row_mut(i) {
                 *v *= s;
             }
@@ -252,6 +314,11 @@ impl FittedModel {
     }
 
     /// Assign out-of-sample points `xq` (p × m) to trained clusters.
+    ///
+    /// Under [`Precision::F32`] the embedding leg runs single-precision
+    /// (via [`embed`](Self::embed)); the final nearest-centroid scan —
+    /// O(m·k·r), negligible next to the gram — and the input-space /
+    /// kernel-clusters assigners stay f64.
     pub fn predict(&self, xq: &Mat) -> Result<Vec<usize>> {
         match &self.assigner {
             Assigner::Embedded { centroids } => {
@@ -326,6 +393,64 @@ impl FittedModel {
     fn train_cols(&self, xt: &Mat) -> &[Vec<f64>] {
         self.train_cols
             .get_or_init(|| (0..xt.cols()).map(|j| xt.col(j)).collect())
+    }
+
+    /// Single-precision column-map extension `y(z) = Λ⁻¹ Y k_z`: the
+    /// same loop structure as the f64 path in [`embed`](Self::embed),
+    /// with the gram through [`Kernel::eval_f32_with`] (table resolved
+    /// once, not per evaluation) and the rank-r
+    /// accumulation through the dispatched f32 axpy. The result is cast
+    /// back to the f64 `Mat` the API returns; deviation from the f64
+    /// path is bounded by the `f32_max_abs_dev` guard the serve bench
+    /// reports.
+    fn embed_f32(&self, xt: &Mat, emb: &Embedding, xq: &Mat) -> Mat {
+        let st = self.f32_state(xt, emb);
+        let (m, r, p) = (xq.cols(), emb.rank(), xt.rows());
+        let table = crate::simd::dispatch();
+        let axpy = table.axpy_f32;
+        let mut out = Mat::zeros(r, m);
+        let mut zq = vec![0.0f32; p];
+        let mut acc = vec![0.0f32; r];
+        for j in 0..m {
+            for (i, v) in zq.iter_mut().enumerate() {
+                *v = xq[(i, j)] as f32;
+            }
+            acc.fill(0.0);
+            for (t, xcol) in st.train_cols.iter().enumerate() {
+                let kv = self.kernel.eval_f32_with(xcol, &zq, table);
+                if kv == 0.0 {
+                    continue;
+                }
+                axpy(&mut acc, kv, &st.yt[t * r..(t + 1) * r]);
+            }
+            for i in 0..r {
+                out[(i, j)] = (acc[i] * st.inv_lambda[i]) as f64;
+            }
+        }
+        out
+    }
+
+    /// The f32 serving shadow, materialized once per model. The 1/λ
+    /// floor is computed in f64 with the exact rule the f64 path uses,
+    /// so both precisions zero the same numerically-absent directions.
+    fn f32_state(&self, xt: &Mat, emb: &Embedding) -> &F32State {
+        self.f32_state.get_or_init(|| {
+            let (n, r) = (xt.cols(), emb.rank());
+            let train_cols = (0..n)
+                .map(|j| xt.col(j).iter().map(|&v| v as f32).collect())
+                .collect();
+            let mut yt = vec![0.0f32; n * r];
+            for t in 0..n {
+                for i in 0..r {
+                    yt[t * r + i] = emb.y[(i, t)] as f32;
+                }
+            }
+            let inv_lambda = inv_lambda_scales(&emb.eigenvalues, r)
+                .into_iter()
+                .map(|s| s as f32)
+                .collect();
+            F32State { train_cols, yt, inv_lambda }
+        })
     }
 
     fn require_train_x(&self) -> Result<&Mat> {

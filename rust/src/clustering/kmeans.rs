@@ -71,19 +71,11 @@ fn sq_norm(v: &[f64]) -> f64 {
     v.iter().map(|x| x * x).sum()
 }
 
-/// Clamp an identity distance at zero without scrubbing NaN:
-/// `f64::max(NaN, 0.0)` would return 0.0, letting a NaN coordinate win
-/// the restart reduction with a bogus 0.0 objective — the comparison
-/// below keeps NaN as NaN (matching the pre-GEMM path, where a NaN
-/// distance never beat `bestd` and surfaced as an infinite objective).
-#[inline]
-fn clamp_dist2(d: f64) -> f64 {
-    if d < 0.0 {
-        0.0
-    } else {
-        d
-    }
-}
+// Identity distances clamp through the single shared
+// `crate::simd::clamp_dist2` (NaN-preserving): this path and the
+// dispatched argmin kernels must round identically or the per-ISA
+// bit-identity contract splits.
+use crate::simd::clamp_dist2;
 
 /// `‖y − c‖²` via the norm identity, clamped at zero (the identity can
 /// land a few ulps negative when `y ≈ c`; when `c` was copied from `y`
@@ -162,17 +154,13 @@ fn assign_range(
     labels: &mut [usize],
     dist: &mut [f64],
 ) {
+    // dispatched argmin kernel, hoisted outside the point loop; the
+    // kernel reproduces this loop's exact semantics (clamp keeping NaN,
+    // strict <, first minimum on ties) bit-identically on every ISA
+    let argmin = crate::simd::dispatch().argmin_dist2;
     for (o, (lab, ds)) in labels.iter_mut().zip(dist.iter_mut()).enumerate() {
         let j = start + o;
-        let mut best = 0usize;
-        let mut bestd = f64::INFINITY;
-        for (c, &gv) in g[j * k..(j + 1) * k].iter().enumerate() {
-            let d = clamp_dist2(yn[j] + cn[c] - 2.0 * gv);
-            if d < bestd {
-                bestd = d;
-                best = c;
-            }
-        }
+        let (best, bestd) = argmin(&g[j * k..(j + 1) * k], yn[j], cn);
         *lab = best;
         *ds = bestd;
     }

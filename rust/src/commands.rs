@@ -345,10 +345,19 @@ pub fn cmd_serve(cfg: &ExperimentConfig) -> Result<()> {
     use std::sync::Arc;
     use std::time::Duration;
 
+    // an explicit --precision forces every hosted model onto that
+    // serving path (f64 included, so a model persisted with f32 can be
+    // forced back to double precision); unset respects each model's
+    // own persisted precision header
+    let precision_override = cfg.precision;
     let registry = Arc::new(ModelRegistry::new(ServeOpts {
         threads: cfg.threads,
+        precision: precision_override,
         ..Default::default()
     }));
+    if let Some(p) = precision_override {
+        eprintln!("serving precision forced to {p} for every hosted model");
+    }
     if cfg.models_dir.is_empty() {
         let path = cfg.resolved_model_path();
         registry.load("default", &path)?;
@@ -491,10 +500,18 @@ pub fn cmd_stream(cfg: &ExperimentConfig, data_csv: Option<&str>) -> Result<()> 
     // --stream_http a plain refresh() gives the same generations with
     // no dead server churn inside the timed loop
     let serving = if cfg.stream_http {
+        // same contract as `rkc serve`: an explicit `precision` forces
+        // every published generation onto that serving path (the
+        // registry stamps it in ModelServer::named on each publish)
+        let precision_override = cfg.precision;
         let registry = Arc::new(ModelRegistry::new(ServeOpts {
             threads: cfg.threads,
+            precision: precision_override,
             ..Default::default()
         }));
+        if let Some(p) = precision_override {
+            eprintln!("serving precision forced to {p} for every published generation");
+        }
         let http = serve_http_registry(
             Arc::clone(&registry),
             &cfg.serve_addr,

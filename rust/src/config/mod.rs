@@ -105,6 +105,43 @@ impl FromStr for Backend {
     }
 }
 
+/// Serving-side floating-point precision for `embed`/`predict`.
+///
+/// Fitting always runs in f64; `F32` opts the *serving* gram + embed
+/// accumulation into single precision (roughly 2× the SIMD lane width),
+/// justified by the paper's own error analysis: the low-rank
+/// approximation error dwarfs f32 rounding. The f64↔f32 deviation is
+/// measured and reported as `f32_max_abs_dev` in the serve BENCH rows.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Precision {
+    /// double precision everywhere (the default; bit-exact contracts)
+    #[default]
+    F64,
+    /// single-precision serving gram/embed (opt-in, fit stays f64)
+    F32,
+}
+
+impl fmt::Display for Precision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Precision::F64 => write!(f, "f64"),
+            Precision::F32 => write!(f, "f32"),
+        }
+    }
+}
+
+impl FromStr for Precision {
+    type Err = RkcError;
+
+    fn from_str(s: &str) -> Result<Precision> {
+        match s {
+            "f64" | "double" => Ok(Precision::F64),
+            "f32" | "single" => Ok(Precision::F32),
+            _ => Err(RkcError::parse("precision", s)),
+        }
+    }
+}
+
 /// A full experiment specification.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -179,6 +216,13 @@ pub struct ExperimentConfig {
     /// checkpoint the streaming state at least every this many seconds;
     /// `0` disables the time trigger
     pub checkpoint_secs: f64,
+    /// serving-side precision for `embed`/`predict`. Unset (default)
+    /// fits in f64 and lets serving respect each model's own persisted
+    /// precision header; an explicit `f64`/`f32` forces that precision
+    /// on every served model — so `precision f64` can restore double
+    /// precision over a model saved with `f32`, which a plain default
+    /// could not express.
+    pub precision: Option<Precision>,
     /// `.plan` file the `experiment` subcommand runs (grid or load
     /// kind; see [`crate::experiment::Plan`])
     pub plan_path: String,
@@ -223,6 +267,7 @@ impl Default for ExperimentConfig {
             checkpoint_path: String::new(),
             checkpoint_points: 0,
             checkpoint_secs: 0.0,
+            precision: None,
             plan_path: String::new(),
             out_path: String::new(),
         }
@@ -331,6 +376,7 @@ impl ExperimentConfig {
                     .filter(|s: &f64| s.is_finite() && *s >= 0.0)
                     .ok_or_else(|| RkcError::parse("checkpoint_secs", value))?;
             }
+            "precision" => self.precision = Some(value.parse()?),
             "plan" | "plan_path" => self.plan_path = value.into(),
             "out" | "out_path" => self.out_path = value.into(),
             "method" => self.method = value.parse()?,
@@ -399,6 +445,7 @@ mod tests {
         assert_eq!(c.checkpoint_path, "");
         assert_eq!(c.checkpoint_points, 0);
         assert_eq!(c.checkpoint_secs, 0.0);
+        assert_eq!(c.precision, None);
         assert_eq!(c.plan_path, "");
         assert_eq!(c.out_path, "");
         // artifacts-dir-driven model path when no explicit override
@@ -465,6 +512,12 @@ mod tests {
         assert_eq!(c.checkpoint_points, 500);
         c.set("checkpoint_secs", "1.5").unwrap();
         assert_eq!(c.checkpoint_secs, 1.5);
+        c.set("precision", "f32").unwrap();
+        assert_eq!(c.precision, Some(Precision::F32));
+        // explicit f64 is distinct from unset: it *forces* f64 serving
+        c.set("precision", "double").unwrap();
+        assert_eq!(c.precision, Some(Precision::F64));
+        assert!(c.set("precision", "f16").is_err());
         assert!(c.set("checkpoint_points", "-1").is_err());
         assert!(c.set("checkpoint_secs", "inf").is_err());
         assert!(c.set("checkpoint_secs", "-1").is_err());
@@ -512,6 +565,15 @@ mod tests {
             assert_eq!(b.to_string().parse::<Backend>().unwrap(), b);
         }
         assert!("gpu".parse::<Backend>().is_err());
+    }
+
+    #[test]
+    fn precision_display_fromstr_roundtrip() {
+        for p in [Precision::F64, Precision::F32] {
+            assert_eq!(p.to_string().parse::<Precision>().unwrap(), p);
+        }
+        assert_eq!(Precision::default(), Precision::F64);
+        assert!("f128".parse::<Precision>().is_err());
     }
 
     #[test]

@@ -56,6 +56,38 @@ impl Kernel {
         }
     }
 
+    /// Single-precision kernel evaluation for the opt-in f32 serving
+    /// path ([`crate::config::Precision::F32`]): for dot-product kernels
+    /// the inner product runs through the given table's `dot_f32`
+    /// kernel, the nonlinearity in f32; the RBF squared distance stays a
+    /// scalar pass (it needs `x - y`, not a dot, and the compiler
+    /// vectorizes the subtract-square-sum on its own). Accuracy is
+    /// bounded by the `f32_max_abs_dev` guard the serve bench reports,
+    /// not by the crate's f64 contracts.
+    ///
+    /// Hot loops (one call per training point per query) should resolve
+    /// the table once and use this; [`eval_f32`](Self::eval_f32) is the
+    /// dispatch-per-call convenience wrapper.
+    pub fn eval_f32_with(&self, x: &[f32], y: &[f32], table: &crate::simd::KernelTable) -> f32 {
+        debug_assert_eq!(x.len(), y.len());
+        match *self {
+            Kernel::Poly { gamma, degree } => {
+                ((table.dot_f32)(x, y) + gamma as f32).powi(degree as i32)
+            }
+            Kernel::Rbf { gamma } => {
+                let d2: f32 = x.iter().zip(y).map(|(a, b)| (a - b) * (a - b)).sum();
+                (-(gamma as f32) * d2).exp()
+            }
+            Kernel::Linear => (table.dot_f32)(x, y),
+        }
+    }
+
+    /// [`eval_f32_with`](Self::eval_f32_with) on the process-selected
+    /// kernel table.
+    pub fn eval_f32(&self, x: &[f32], y: &[f32]) -> f32 {
+        self.eval_f32_with(x, y, crate::simd::dispatch())
+    }
+
     /// `κ(x, x)` from the squared norm alone (diagonal of K).
     pub fn eval_diag(&self, norm2: f64) -> f64 {
         match *self {
@@ -324,7 +356,7 @@ pub fn column_batches(n: usize, batch: usize) -> Vec<Vec<usize>> {
 mod tests {
     use super::*;
     use crate::linalg::testutil::{assert_mat_close, random_mat};
-    use crate::rng::Pcg64;
+    use crate::rng::{Pcg64, Rng};
 
     #[test]
     fn kernel_evals() {
@@ -335,6 +367,29 @@ mod tests {
         assert_eq!(Kernel::Poly { gamma: 1.0, degree: 3 }.eval(&x, &y), 8.0);
         let rbf = Kernel::Rbf { gamma: 0.5 }.eval(&x, &y);
         assert!((rbf - (-0.5f64 * 13.0).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eval_f32_tracks_f64_within_single_precision() {
+        let mut rng = Pcg64::seed(31);
+        for kern in [
+            Kernel::Linear,
+            Kernel::paper_poly2(),
+            Kernel::Poly { gamma: 1.0, degree: 3 },
+            Kernel::Rbf { gamma: 0.7 },
+        ] {
+            // odd length exercises the dot_f32 tail
+            for _ in 0..20 {
+                let x: Vec<f64> = (0..13).map(|_| rng.normal()).collect();
+                let y: Vec<f64> = (0..13).map(|_| rng.normal()).collect();
+                let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+                let yf: Vec<f32> = y.iter().map(|&v| v as f32).collect();
+                let want = kern.eval(&x, &y);
+                let got = kern.eval_f32(&xf, &yf) as f64;
+                let tol = 1e-4 * want.abs().max(1.0);
+                assert!((got - want).abs() <= tol, "{kern:?}: {got} vs {want}");
+            }
+        }
     }
 
     #[test]

@@ -81,9 +81,19 @@
 //!   compute compiled from JAX + Pallas by `python/compile/aot.py`);
 //!   gated behind the `xla` cargo feature with a graceful native
 //!   fallback when absent.
+//! - [`simd`] — the runtime-dispatched SIMD kernel tier (AVX2+FMA /
+//!   NEON / scalar) under every dense inner loop, selected once per
+//!   process, `RKC_SIMD`-overridable, with the determinism contract
+//!   scoped per ISA.
 //! - [`lowrank`], [`sketch`], [`kernels`], [`clustering`], [`linalg`],
 //!   [`rng`], [`data`], [`metrics`], [`config`], [`bench_harness`],
 //!   [`util`] — the substrates, all implemented from scratch.
+
+// The SIMD tier is the only unsafe code in the crate; every unsafe
+// operation inside an unsafe fn must sit in its own `// SAFETY:`-
+// documented block (clippy::undocumented_unsafe_blocks enforces the
+// comments, this lint the blocks).
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod clustering;
 pub mod data;
@@ -92,6 +102,7 @@ pub mod kernels;
 pub mod linalg;
 pub mod lowrank;
 pub mod rng;
+pub mod simd;
 pub mod sketch;
 pub mod util;
 

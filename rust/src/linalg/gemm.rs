@@ -11,7 +11,7 @@
 //! matter how `B` was laid out. Threading fans disjoint row ranges of
 //! `C` out through [`crate::util::parallel`].
 //!
-//! # Determinism contract
+//! # Determinism contract (scoped per ISA)
 //!
 //! Every output element accumulates its `k`-sum in ascending-`k` order,
 //! for any thread count and either code path (single-panel fast path or
@@ -20,8 +20,18 @@
 //! `gemm(a, b, 1)` and `gemm(a, b, N)` are bit-identical — the property
 //! the crate-wide `threads=1 ≡ threads=N` contract
 //! (`tests/parallel_determinism.rs`) rests on.
+//!
+//! The axpy inner loop is dispatched through
+//! [`crate::simd::dispatch`], so the *rounding* of each `+=` depends on
+//! the kernel table the process selected (AVX2/NEON fuse the
+//! multiply-add): results are bit-identical across thread counts
+//! **within an ISA**, and agree with [`matmul_reference`] to ≤ 1e-12
+//! **across ISAs** — that oracle bound, not bit-equality, is the
+//! cross-ISA contract. `RKC_SIMD=scalar` restores the pre-dispatch
+//! bit-exact behavior on any host.
 
 use super::Mat;
+use crate::simd::KernelTable;
 use crate::util::parallel::for_each_row_chunk;
 
 /// Depth (`k` extent) of a packed panel of `B`.
@@ -32,9 +42,14 @@ const NC: usize = 128;
 
 /// `C = A · B`, cache-blocked and threaded over rows of `C`.
 pub fn gemm(a: &Mat, b: &Mat, threads: usize) -> Mat {
+    gemm_with(a, b, threads, crate::simd::dispatch())
+}
+
+/// [`gemm`] with an explicit kernel table (see [`gemm_into_with`]).
+pub fn gemm_with(a: &Mat, b: &Mat, threads: usize, table: &KernelTable) -> Mat {
     assert_eq!(a.cols(), b.rows(), "gemm shape mismatch");
     let mut c = Mat::zeros(a.rows(), b.cols());
-    gemm_into(c.data_mut(), a, b, threads);
+    gemm_into_with(c.data_mut(), a, b, threads, table);
     c
 }
 
@@ -58,12 +73,44 @@ pub fn gemm_nt(a: &Mat, b: &Mat, threads: usize) -> Mat {
 /// a larger allocation — the gram core writes the real-row prefix of a
 /// padded block without a copy.
 pub fn gemm_into(c: &mut [f64], a: &Mat, b: &Mat, threads: usize) {
+    gemm_into_with(c, a, b, threads, crate::simd::dispatch());
+}
+
+/// [`gemm_into`] with an explicit kernel table — the seam the cross-ISA
+/// property tests and `#simd` bench rows use to pin a specific axpy
+/// kernel regardless of what `dispatch()` selected for the process.
+pub fn gemm_into_with(c: &mut [f64], a: &Mat, b: &Mat, threads: usize, table: &KernelTable) {
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
     assert_eq!(k, b.rows(), "gemm shape mismatch");
     assert_eq!(c.len(), m * n, "gemm output buffer mismatch");
     if m == 0 || n == 0 || k == 0 {
         return;
     }
+    if table.isa == crate::simd::Isa::Scalar {
+        // monomorphized direct call: the fallback tier keeps the
+        // compiler's inlining + auto-vectorization of the scalar axpy
+        // instead of paying an opaque indirect call per k-step (the
+        // crate's hot shapes have n ≈ r′, so each axpy is short).
+        // Bit-identical to the fn-pointer form — every c[i] is an
+        // independent accumulation, so codegen can't reorder a sum.
+        gemm_loops(c, a, b, threads, crate::simd::axpy_scalar);
+    } else {
+        // hoisted once: the indirect call is per-axpy, never per-element
+        gemm_loops(c, a, b, threads, table.axpy);
+    }
+}
+
+/// The two blocked loop nests, generic over the axpy kernel: the
+/// scalar tier monomorphizes an inlinable copy, the vector tiers pass
+/// the dispatched fn pointer.
+fn gemm_loops(
+    c: &mut [f64],
+    a: &Mat,
+    b: &Mat,
+    threads: usize,
+    axpy: impl Fn(&mut [f64], f64, &[f64]) + Copy + Sync,
+) {
+    let (k, n) = (a.cols(), b.cols());
     let threads = threads.max(1);
     if k <= KC && n <= NC {
         // single-panel fast path: B already fits one panel, read it
@@ -95,16 +142,6 @@ pub fn gemm_into(c: &mut [f64], a: &Mat, b: &Mat, threads: usize) {
             }
         }
     });
-}
-
-/// `c += a · b`, the vectorizable inner loop shared by both paths. No
-/// zero-skip branch: on dense operands the branch costs more than the
-/// multiply it saves, and dropping it keeps the loop branch-free.
-#[inline]
-fn axpy(c: &mut [f64], a: f64, b: &[f64]) {
-    for (o, &v) in c.iter_mut().zip(b) {
-        *o += a * v;
-    }
 }
 
 /// `B` repacked into `(j-block, k-block)` panels, each `kw × jw`
@@ -205,6 +242,24 @@ mod tests {
         assert_mat_close(&gemm_tn(&a, &b, 2), &matmul_reference(&a.transpose(), &b), 1e-12);
         let c = random_mat(&mut rng, 7, 6);
         assert_mat_close(&gemm_nt(&a, &c, 2), &matmul_reference(&a, &c.transpose()), 1e-12);
+    }
+
+    #[test]
+    fn gemm_with_every_available_table_matches_reference() {
+        let mut rng = Pcg64::seed(5);
+        let a = random_mat(&mut rng, 9, KC + 3);
+        let b = random_mat(&mut rng, KC + 3, NC + 5);
+        let want = matmul_reference(&a, &b);
+        for table in crate::simd::available_tables() {
+            assert_mat_close(&gemm_with(&a, &b, 3, table), &want, 1e-12);
+            // threads=1 ≡ threads=N holds per table, not just per process
+            assert_eq!(
+                gemm_with(&a, &b, 1, table).data(),
+                gemm_with(&a, &b, 4, table).data(),
+                "thread bit-identity [{}]",
+                table.isa.name()
+            );
+        }
     }
 
     #[test]

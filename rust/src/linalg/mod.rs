@@ -17,7 +17,7 @@ mod qr;
 mod solve;
 
 pub use eig::{jacobi_eig, power_iteration, spectral_norm};
-pub use gemm::{gemm, gemm_into, gemm_nt, gemm_tn, matmul_reference};
+pub use gemm::{gemm, gemm_into, gemm_into_with, gemm_nt, gemm_tn, gemm_with, matmul_reference};
 pub use qr::{householder_qr, leading_left_singular_vectors, orthonormal_columns};
 pub use solve::{cholesky, least_squares, pinv, pinv_psd, pinv_psd_rank, solve_lower, solve_upper};
 

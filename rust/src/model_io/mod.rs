@@ -162,6 +162,7 @@ pub fn model_to_bytes(model: &FittedModel) -> Vec<u8> {
     header.insert("n_pad".into(), uint(model.n_padded()));
     header.insert("batch".into(), uint(model.batch));
     header.insert("generation".into(), uint(model.generation() as usize));
+    header.insert("precision".into(), Json::Str(model.precision().to_string()));
     header.insert("objective".into(), Json::finite_num(m.objective));
     header.insert(
         "times".into(),
@@ -405,6 +406,14 @@ fn assemble_model(
     // batch fits, i.e. generation 0
     let generation =
         header.get("generation").and_then(Json::as_usize).unwrap_or(0) as u64;
+    // absent in files written before the mixed-precision tier: f64, the
+    // mode every older model served under
+    let precision = match header.get("precision").and_then(Json::as_str) {
+        None => crate::config::Precision::F64,
+        Some(s) => s
+            .parse()
+            .map_err(|_| bad(format!("unknown precision '{s}'")))?,
+    };
     let method = str_of("method")?.to_string();
     let objective = header.get("objective").and_then(Json::as_f64).unwrap_or(f64::NAN);
     let time_of = |key: &str| {
@@ -555,6 +564,8 @@ fn assemble_model(
         assigner,
         train_x,
         train_cols: std::sync::OnceLock::new(),
+        precision,
+        f32_state: std::sync::OnceLock::new(),
         n_pad,
         batch,
         generation,
@@ -795,6 +806,46 @@ mod tests {
         out.extend_from_slice(&ck.to_le_bytes());
         let old = model_from_bytes(&out, "mem").unwrap();
         assert_eq!(old.generation(), 0);
+    }
+
+    #[test]
+    fn precision_survives_the_roundtrip_and_defaults_to_f64() {
+        use crate::config::Precision;
+        let mut model = fit(Method::OnePass);
+        assert_eq!(model.precision(), Precision::F64);
+        model.set_precision(Precision::F32);
+        let back = model_from_bytes(&model_to_bytes(&model), "mem").unwrap();
+        assert_eq!(back.precision(), Precision::F32);
+
+        // a file written before the field existed loads as f64: strip it
+        // from the header and re-seal (same surgery as the generation test)
+        let bytes = model_to_bytes(&model);
+        let hlen = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+        let text = std::str::from_utf8(&bytes[FIXED_PREFIX..FIXED_PREFIX + hlen]).unwrap();
+        let stripped = text.replace("\"precision\":\"f32\",", "");
+        assert_ne!(stripped, text, "header must have carried the field");
+        let mut out = Vec::new();
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        out.extend_from_slice(&(stripped.len() as u32).to_le_bytes());
+        out.extend_from_slice(stripped.as_bytes());
+        out.extend_from_slice(&bytes[FIXED_PREFIX + hlen..bytes.len() - 8]);
+        let ck = checksum(&out);
+        out.extend_from_slice(&ck.to_le_bytes());
+        let old = model_from_bytes(&out, "mem").unwrap();
+        assert_eq!(old.precision(), Precision::F64);
+
+        // a garbage value is a typed error, not a silent default
+        let garbled = text.replace("\"precision\":\"f32\"", "\"precision\":\"f16\"");
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&MAGIC);
+        bad.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        bad.extend_from_slice(&(garbled.len() as u32).to_le_bytes());
+        bad.extend_from_slice(garbled.as_bytes());
+        bad.extend_from_slice(&bytes[FIXED_PREFIX + hlen..bytes.len() - 8]);
+        let ck = checksum(&bad);
+        bad.extend_from_slice(&ck.to_le_bytes());
+        assert!(model_from_bytes(&bad, "mem").is_err());
     }
 
     #[test]

@@ -915,6 +915,10 @@ fn metrics_text(registry: &ModelRegistry, frontend: &FrontendCounters) -> String
         .set(registry.len() as u64);
     r.gauge("rkc_http_uptime_seconds", "Seconds since the HTTP front-end started.", &[])
         .set(frontend.started.elapsed().as_secs());
+    // the rkc_simd_isa info gauge registers on first dispatch; touch
+    // the table here so a process that scraped before any dense compute
+    // ran still reports which kernels it would use
+    let _ = crate::simd::dispatch();
     r.render()
 }
 

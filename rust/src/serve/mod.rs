@@ -61,6 +61,7 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::api::FittedModel;
+use crate::config::Precision;
 use crate::error::{Result, RkcError};
 use crate::linalg::Mat;
 use crate::obs;
@@ -79,11 +80,16 @@ pub struct ServeOpts {
     /// Worker threads a batch fans out over (`0` = auto-detect, the
     /// crate-wide convention).
     pub threads: usize,
+    /// Serving-precision override stamped onto every model this server
+    /// (or a registry built from these opts) hosts: `None` keeps each
+    /// model's own persisted [`Precision`]; `Some(p)` forces `p`
+    /// process-wide (`rkc serve --precision f32`).
+    pub precision: Option<Precision>,
 }
 
 impl Default for ServeOpts {
     fn default() -> Self {
-        ServeOpts { queue_cap: 64, max_batch: 16, threads: 0 }
+        ServeOpts { queue_cap: 64, max_batch: 16, threads: 0, precision: None }
     }
 }
 
@@ -261,7 +267,10 @@ impl ModelServer {
 
     /// [`new`](ModelServer::new), with the registry metric series for
     /// this server labeled `model="name"`.
-    pub fn named(name: &str, model: FittedModel, opts: ServeOpts) -> Result<Self> {
+    pub fn named(name: &str, mut model: FittedModel, opts: ServeOpts) -> Result<Self> {
+        if let Some(p) = opts.precision {
+            model.set_precision(p);
+        }
         let shared = Arc::new(Shared {
             model,
             queue: Batcher::new(opts.queue_cap.max(1)),

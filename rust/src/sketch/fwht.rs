@@ -6,26 +6,35 @@
 //! rust hot path fans disjoint column chunks out through the shared
 //! fork-join helper in [`crate::util::parallel`] — no locks on the data,
 //! no shared mutable state. The per-vector transform is the classic
-//! in-place butterfly: O(n log n), no allocation.
+//! in-place butterfly: O(n log n), no allocation. The butterfly layer
+//! routes through [`crate::simd::dispatch`]; being purely elementwise
+//! (`a+b` / `a−b`, no reduction) it is bit-identical to the scalar
+//! kernel on every ISA, so the FWHT keeps the crate-wide bit-exactness
+//! contract even across `RKC_SIMD` modes.
 
+use crate::simd::KernelTable;
 use crate::util::parallel::for_each_task;
 
 /// In-place unnormalized FWHT of a single power-of-two-length vector.
 pub fn fwht_inplace(x: &mut [f64]) {
+    fwht_inplace_with(x, crate::simd::dispatch());
+}
+
+/// [`fwht_inplace`] with an explicit kernel table — the seam the
+/// cross-ISA property tests and `#simd` bench rows use to pin a
+/// specific butterfly kernel regardless of the process dispatch.
+pub fn fwht_inplace_with(x: &mut [f64], table: &KernelTable) {
     let n = x.len();
     assert!(n.is_power_of_two(), "FWHT length must be a power of two");
+    let butterfly = table.butterfly;
     let mut h = 1;
     while h < n {
         let step = h * 2;
-        let mut base = 0;
-        while base < n {
-            for i in base..base + h {
-                let a = x[i];
-                let b = x[i + h];
-                x[i] = a + b;
-                x[i + h] = a - b;
-            }
-            base += step;
+        // n is a power of two and step divides it, so every chunk is
+        // exactly `step` long: lo/hi are the classic paired halves
+        for chunk in x.chunks_mut(step) {
+            let (lo, hi) = chunk.split_at_mut(h);
+            butterfly(lo, hi);
         }
         h = step;
     }
@@ -155,6 +164,22 @@ mod tests {
         fwht_columns(&mut a, 1);
         fwht_columns(&mut b, 4);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn every_available_table_is_bit_identical_to_scalar() {
+        let mut rng = Pcg64::seed(6);
+        for logn in [0usize, 1, 2, 5, 8, 10] {
+            let n = 1usize << logn;
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut want = x.clone();
+            fwht_inplace_with(&mut want, crate::simd::scalar_table());
+            for table in crate::simd::available_tables() {
+                let mut got = x.clone();
+                fwht_inplace_with(&mut got, table);
+                assert_eq!(got, want, "n={n} isa={}", table.isa.name());
+            }
+        }
     }
 
     #[test]

@@ -9,7 +9,7 @@
 
 mod fwht;
 
-pub use fwht::{fwht_inplace, fwht_parallel, fwht_columns};
+pub use fwht::{fwht_columns, fwht_inplace, fwht_inplace_with, fwht_parallel};
 
 use crate::linalg::Mat;
 use crate::rng::{normal_vec, rademacher_vec, sample_without_replacement, Pcg64};

@@ -666,6 +666,8 @@ impl StreamClusterer {
             assigner: Assigner::Embedded { centroids: res.centroids },
             train_x: Some(x),
             train_cols: OnceLock::new(),
+            precision: crate::config::Precision::F64,
+            f32_state: OnceLock::new(),
             generation: 0,
             n_pad,
             batch: self.batch,

@@ -12,13 +12,13 @@ use rkc::data;
 use rkc::error::RkcError;
 use rkc::experiment::{expand, trial_seed, GridPlan, LoadPlan, Plan, ScenarioMode, ScenarioSpec};
 use rkc::kernels::{column_batches, full_kernel_matrix, BlockSource, Kernel, NativeBlockSource};
-use rkc::linalg::{gemm, gemm_nt, gemm_tn, jacobi_eig, matmul_reference, Mat};
+use rkc::linalg::{gemm, gemm_nt, gemm_tn, gemm_with, jacobi_eig, matmul_reference, Mat};
 use rkc::lowrank::{
     exact_topr_dense, normalized_frobenius_error, one_pass_recovery, trace_norm_error_psd,
     OnePassSketch,
 };
 use rkc::rng::{Pcg64, Rng};
-use rkc::sketch::Srht;
+use rkc::sketch::{fwht_inplace_with, Srht};
 
 fn random_mat(rng: &mut Pcg64, rows: usize, cols: usize) -> Mat {
     Mat::from_fn(rows, cols, |_, _| rng.normal())
@@ -626,4 +626,163 @@ fn property_histogram_quantiles_are_monotone_upper_bounds() {
     }
     // empty snapshot: quantile is 0 by definition
     assert_eq!(fresh_hist("quant_empty", bounds).snapshot().quantile(0.5), 0.0);
+}
+
+#[test]
+fn property_every_simd_table_matches_gemm_reference_at_odd_shapes() {
+    // the cross-ISA determinism contract: every kernel table this host
+    // can run agrees with the naive oracle to ≤1e-12 and with the
+    // scalar table to ≤1e-12, at shapes that are not multiples of any
+    // lane width (2, 4, 8) and that straddle the packing panels
+    let mut rng = Pcg64::seed(70);
+    let shapes: &[(usize, usize, usize)] =
+        &[(1, 1, 1), (3, 5, 7), (13, 300, 140), (9, 257, 129), (2, 63, 31)];
+    for &(m, k, n) in shapes {
+        let a = random_mat(&mut rng, m, k);
+        let b = random_mat(&mut rng, k, n);
+        let want = matmul_reference(&a, &b);
+        let scalar = gemm_with(&a, &b, 1, rkc::simd::scalar_table());
+        for table in rkc::simd::available_tables() {
+            let got = gemm_with(&a, &b, 1, table);
+            let isa = table.isa.name();
+            let diff = got.sub(&want).max_abs();
+            assert!(diff <= 1e-12, "[{isa}] {m}x{k}x{n} vs reference: {diff}");
+            let dev = got.sub(&scalar).max_abs();
+            assert!(dev <= 1e-12, "[{isa}] {m}x{k}x{n} vs scalar: {dev}");
+            // threads=1 ≡ threads=N within the table (per-ISA contract)
+            for threads in [3usize, 8] {
+                assert_eq!(
+                    got.data(),
+                    gemm_with(&a, &b, threads, table).data(),
+                    "[{isa}] {m}x{k}x{n} threads={threads}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn property_every_simd_table_fwht_is_bit_identical_and_matches_oracle() {
+    // the butterfly is elementwise, so SIMD must be *bit*-identical to
+    // scalar on every ISA — and both must match the explicit Hadamard
+    fn slow_hadamard(x: &[f64]) -> Vec<f64> {
+        let n = x.len();
+        (0..n)
+            .map(|i| {
+                (0..n)
+                    .map(|j| {
+                        let s = if (i & j).count_ones() % 2 == 0 { 1.0 } else { -1.0 };
+                        s * x[j]
+                    })
+                    .sum()
+            })
+            .collect()
+    }
+    let mut rng = Pcg64::seed(71);
+    for logn in [0usize, 1, 2, 3, 6, 9] {
+        let n = 1usize << logn;
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut scalar = x.clone();
+        fwht_inplace_with(&mut scalar, rkc::simd::scalar_table());
+        let oracle = slow_hadamard(&x);
+        for (a, b) in scalar.iter().zip(&oracle) {
+            assert!((a - b).abs() < 1e-9 * n.max(1) as f64, "scalar vs oracle n={n}");
+        }
+        for table in rkc::simd::available_tables() {
+            let mut got = x.clone();
+            fwht_inplace_with(&mut got, table);
+            assert_eq!(got, scalar, "n={n} isa={}", table.isa.name());
+        }
+    }
+}
+
+#[test]
+fn property_argmin_kernel_is_bit_identical_to_sequential_scan() {
+    // the K-means argmin kernel must reproduce the sequential scan
+    // exactly on every ISA: same op order (no FMA), strict-< /
+    // first-minimum tie-breaking, NaN never winning. Odd k exercises
+    // the vector tails; planted ties exercise the cross-lane
+    // lexicographic reduction.
+    let mut rng = Pcg64::seed(72);
+    for k in [1usize, 2, 3, 5, 7, 9, 15, 17, 33] {
+        for case in 0..30 {
+            let mut g: Vec<f64> = (0..k).map(|_| rng.normal()).collect();
+            let mut cn: Vec<f64> = (0..k).map(|_| rng.normal().abs()).collect();
+            let yn = rng.normal().abs();
+            if case % 4 == 0 && k > 1 {
+                // exact duplicate of the row minimum at the last index:
+                // identical (g, cn) operands make the distances
+                // bit-identical, so the first occurrence must win on
+                // every ISA
+                let (mi, _) = (0..k).fold((0, f64::INFINITY), |acc, c| {
+                    let d = yn + cn[c] - 2.0 * g[c];
+                    if d < acc.1 { (c, d) } else { acc }
+                });
+                g[k - 1] = g[mi];
+                cn[k - 1] = cn[mi];
+            }
+            if case % 7 == 0 {
+                g[case % k] = f64::NAN;
+            }
+            // sequential reference: the exact pre-SIMD loop
+            let mut best = 0usize;
+            let mut bestd = f64::INFINITY;
+            for (c, &gv) in g.iter().enumerate() {
+                let d = yn + cn[c] - 2.0 * gv;
+                let d = if d < 0.0 { 0.0 } else { d };
+                if d < bestd {
+                    bestd = d;
+                    best = c;
+                }
+            }
+            for table in rkc::simd::available_tables() {
+                let (gi, gd) = (table.argmin_dist2)(&g, yn, &cn);
+                let isa = table.isa.name();
+                assert_eq!(gi, best, "[{isa}] k={k} case={case}");
+                assert!(
+                    gd == bestd || (gd.is_nan() && bestd.is_nan()),
+                    "[{isa}] k={k} case={case}: {gd} vs {bestd}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn property_f32_serving_path_deviation_is_bounded() {
+    // the opt-in f32 embed/predict path must stay within the documented
+    // guard of the f64 path on realistic models, and predictions should
+    // agree except possibly at cluster boundaries
+    let mut seeds = Pcg64::seed(73);
+    for case in 0..4 {
+        let mut rng = Pcg64::seed(seeds.next_u64());
+        let ds = data::gaussian_blobs(&mut rng, 80 + 20 * case, 3, 2 + case % 2, 0.4);
+        let kernel = if case % 2 == 0 { Kernel::paper_poly2() } else { Kernel::Rbf { gamma: 0.8 } };
+        let model = rkc::api::KernelClusterer::new(2 + case % 2)
+            .kernel(kernel)
+            .rank(2)
+            .oversample(8)
+            .seed(17 + case as u64)
+            .fit(&ds.x)
+            .unwrap();
+        let mut qrng = Pcg64::seed(99 + case as u64);
+        let query = random_mat(&mut qrng, 3, 16);
+        let y64 = model.embed(&query).unwrap();
+
+        let mut m32 = model;
+        m32.set_precision(rkc::config::Precision::F32);
+        assert_eq!(m32.precision(), rkc::config::Precision::F32);
+        let y32 = m32.embed(&query).unwrap();
+
+        // guard: f32 deviation is single-precision-sized relative to
+        // the embedding scale, orders of magnitude below the low-rank
+        // approximation error the method already accepts
+        let scale = y64.max_abs().max(1.0);
+        let dev = y32.sub(&y64).max_abs();
+        assert!(dev <= 1e-3 * scale, "case {case}: f32 dev {dev} vs scale {scale}");
+
+        // flipping back restores the bit-exact f64 path
+        m32.set_precision(rkc::config::Precision::F64);
+        assert_eq!(m32.embed(&query).unwrap().data(), y64.data(), "case {case}");
+    }
 }

@@ -79,13 +79,20 @@ KEY_TIMINGS = {
     "BENCH_stream.json": ["refresh_p50_ms", "refresh_p95_ms", "acc_lag"],
 }
 
-# baseline entries keyed off a *tagged* row instead of row 0, as
-# "<file>#<tag_value>". The tagged row must exist (schema gate) and must
-# carry the listed keys on top of the file's REQUIRED set — this is how
-# the obs_overhead instrumentation-cost rows ride the regression trail.
+# baseline entries keyed off *tagged* rows instead of row 0, as
+# "<file>#<tag_value>". Each (tag_field, tag_value, keys) triple is a
+# schema gate: the tagged row must exist and must carry the listed keys
+# on top of the file's REQUIRED set — this is how the obs_overhead
+# instrumentation-cost rows, the #simd ISA-dispatch rows, and the
+# #f32_path mixed-precision row ride the regression trail.
 KEY_TIMINGS_TAGGED = {
-    "BENCH_serve.json": ("mode", "obs_overhead", ["obs_overhead_pct"]),
-    "BENCH_stream.json": ("scenario", "obs_overhead", ["obs_overhead_pct"]),
+    "BENCH_kmeans.json": [("mode", "simd", ["before_s", "after_s", "speedup"])],
+    "BENCH_recovery.json": [("mode", "simd", ["before_s", "after_s", "speedup"])],
+    "BENCH_serve.json": [
+        ("mode", "obs_overhead", ["obs_overhead_pct"]),
+        ("mode", "f32_path", ["speedup", "f32_max_abs_dev"]),
+    ],
+    "BENCH_stream.json": [("scenario", "obs_overhead", ["obs_overhead_pct"])],
 }
 
 # warn (never fail) when a compared value drifts beyond this
@@ -126,8 +133,7 @@ def check_file(path):
             fail(path, f"row {i} missing (or null) required keys {missing}")
         for key, value in row.items():
             check_finite(path, i, key, value)
-    if base in KEY_TIMINGS_TAGGED:
-        tag_field, tag_value, keys = KEY_TIMINGS_TAGGED[base]
+    for tag_field, tag_value, keys in KEY_TIMINGS_TAGGED.get(base, []):
         tagged = [r for r in data if r.get(tag_field) == tag_value]
         if not tagged:
             fail(path, f"no row with {tag_field}={tag_value!r} (required)")
@@ -151,8 +157,7 @@ def snapshot(paths):
             values = {k: row0[k] for k in keys if isinstance(row0.get(k), (int, float))}
             if values:
                 snap[base] = values
-        if base in KEY_TIMINGS_TAGGED:
-            tag_field, tag_value, tagged_keys = KEY_TIMINGS_TAGGED[base]
+        for tag_field, tag_value, tagged_keys in KEY_TIMINGS_TAGGED.get(base, []):
             rows = [r for r in data if r.get(tag_field) == tag_value]
             if rows:
                 values = {
@@ -244,9 +249,14 @@ def main(argv):
     if write_baseline:
         snap = snapshot(paths)
         snap["_note"] = (
-            "Quick-mode (RKC_BENCH_QUICK=1) key-timing snapshot; regenerate with "
-            "`python3 tools/check_bench_json.py --write-baseline tools/bench_baseline.json "
-            "BENCH_*.json` after an intentional perf change."
+            "Quick-mode (RKC_BENCH_QUICK=1) key-timing snapshot. The CI smoke job "
+            "regenerates this file on every run (`--write-baseline`) and uploads it as "
+            "the `bench-baseline` artifact: to refresh after an intentional perf change, "
+            "download that artifact from a green run on main and commit it verbatim, or "
+            "run `RKC_BENCH_QUICK=1 cargo bench` locally followed by `python3 "
+            "tools/check_bench_json.py --write-baseline tools/bench_baseline.json "
+            "BENCH_*.json`. The compare is informational (warn-only) by design, so a "
+            "stale entry shows up as a drift warning, never a red build."
         )
         with open(write_baseline, "w", encoding="utf-8") as fh:
             json.dump(snap, fh, indent=2, sort_keys=True)
